@@ -1,0 +1,30 @@
+//! Quickstart: fine-tune a tiny pretrained encoder with C3A on a
+//! sentiment task, inspect the learned adapter's rank, and merge it.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use c3a::coordinator::run::{self, Ctx};
+use c3a::data::glue_sim::GlueTask;
+use c3a::peft::init::C3aScheme;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifact registry (python/jax ran once at build time)
+    let mut ctx = Ctx::open("artifacts")?;
+    ctx.verbose = true;
+
+    // 2. one call: pretrain (cached) -> fine-tune -> evaluate
+    let cfg = run::default_cfg("c3a_d8", 80);
+    let result = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 0, &cfg, C3aScheme::Xavier)?;
+
+    println!("\n=== quickstart result ===");
+    println!("test accuracy : {:.3}", result.metric);
+    println!("trainable     : {} params (adapter only)", result.n_params);
+    println!("step latency  : {:.1} ms", result.step_ms);
+    if let Some((frac, mean, dim)) = result.rank {
+        println!("delta ranks   : {:.0}% full-rank, mean {:.1}/{}", frac * 100.0, mean, dim);
+    }
+    let first_loss = result.losses.first().unwrap();
+    let last_loss = result.losses.last().unwrap();
+    println!("loss curve    : {first_loss:.3} -> {last_loss:.3} over {} steps", result.losses.len());
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Serving demo: fine-tune an adapter, then serve batched classification
+//! requests from a producer thread through an in-process request queue
+//! (std mpsc; tokio unavailable offline) with dynamic batching, and report
+//! latency/throughput percentiles.
+//!
+//!     cargo run --release --example serve [-- --requests 256]
+
+use c3a::coordinator::run::{self, Ctx};
+use c3a::data::glue_sim::GlueTask;
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::manifest::Manifest;
+use c3a::runtime::session::{build_init, EvalSession};
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::Tensor;
+use std::sync::mpsc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128);
+
+    let ctx = Ctx::open("artifacts")?;
+    let (model, method, task) = ("enc_tiny", "c3a_d8", GlueTask::Sst2);
+
+    // fine-tune quickly (pretrain is cached) to obtain an adapter to serve
+    eprintln!("preparing adapter ({model}/{method})...");
+    let cfg = run::default_cfg(method, 60);
+    let run_out = run::glue_run(&ctx, model, method, task, 0, &cfg, C3aScheme::Xavier)?;
+    eprintln!("adapter ready (test metric {:.3})", run_out.metric);
+
+    // build the serving session around the *trained* adapter snapshot
+    let meta = ctx.manifest.model(model)?.clone();
+    let eval_spec = ctx
+        .manifest
+        .artifact(&Manifest::artifact_name(model, method, task.head(), "eval"))?
+        .clone();
+    let backbone = run::ensure_pretrained(&ctx, model)?;
+    let mut rng = Rng::seed(1);
+    let init = build_init(&eval_spec, &backbone, Some(&run_out.trainable), &mut rng, C3aScheme::Xavier)?;
+    let session = EvalSession::new(&ctx.engine, &eval_spec, &init)?;
+    let served_params = run_out.trainable;
+
+    // producer thread enqueues single requests; the server drains the
+    // queue into dynamic batches of up to the artifact batch size.
+    let (tx, rx) = mpsc::channel::<(usize, Vec<i32>, Instant)>();
+    let splits = task.splits(meta.vocab, meta.seq, 99);
+    let producer = std::thread::spawn({
+        let tokens = splits.test.tokens.clone();
+        move || {
+            for i in 0..n_requests {
+                let t = tokens[i % tokens.len()].clone();
+                if tx.send((i, t, Instant::now())).is_err() {
+                    return;
+                }
+                if i % 16 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }
+    });
+
+    let b = eval_spec.batch;
+    let s = eval_spec.seq;
+    let t_start = Instant::now();
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut batch_sizes = Vec::new();
+    let mut correct = 0usize;
+    let mut served = 0usize;
+    let mut queue: Vec<(usize, Vec<i32>, Instant)> = Vec::new();
+    while served < n_requests {
+        while let Ok(item) = rx.try_recv() {
+            queue.push(item);
+        }
+        if queue.is_empty() {
+            std::thread::yield_now();
+            continue;
+        }
+        let take = queue.len().min(b);
+        let batch_items: Vec<_> = queue.drain(..take).collect();
+        let mut toks = vec![0i32; b * s];
+        for (slot, (_, t, _)) in batch_items.iter().enumerate() {
+            let n = t.len().min(s);
+            toks[slot * s..slot * s + n].copy_from_slice(&t[..n]);
+        }
+        let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+        let (logits, shape) = session.logits(&served_params, &batch)?;
+        let width = shape[1];
+        let now = Instant::now();
+        for (slot, (req_id, _, t0)) in batch_items.iter().enumerate() {
+            let pred = c3a::substrate::linalg::argmax(&logits[slot * width..(slot + 1) * width]);
+            if pred == splits.test.labels[req_id % splits.test.len()] as usize {
+                correct += 1;
+            }
+            latencies.push(now.duration_since(*t0).as_secs_f64() * 1e3);
+        }
+        batch_sizes.push(batch_items.len());
+        served += batch_items.len();
+    }
+    producer.join().unwrap();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total_s = t_start.elapsed().as_secs_f64();
+    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];
+    println!("\n=== serve report ===");
+    println!("requests      : {n_requests}");
+    println!("accuracy      : {:.3}", correct as f64 / n_requests as f64);
+    println!("throughput    : {:.1} req/s", n_requests as f64 / total_s);
+    println!("mean batch    : {:.1}", batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64);
+    println!("latency p50   : {:.1} ms", pct(0.50));
+    println!("latency p95   : {:.1} ms", pct(0.95));
+    println!("latency p99   : {:.1} ms", pct(0.99));
+    Ok(())
+}

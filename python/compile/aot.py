@@ -1,0 +1,361 @@
+"""AOT lowering: JAX train/eval steps -> HLO *text* artifacts + manifest.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` rust crate) rejects; the
+text parser reassigns ids and round-trips cleanly.
+
+For every (model, PEFT method, head, kind) combination this emits
+``artifacts/<name>.hlo.txt`` plus one ``artifacts/manifest.json`` that the
+rust coordinator uses to map named parameters onto positional PJRT inputs
+and to initialize adapters (init specs are declarative; rust owns the RNG).
+
+Run via ``make artifacts``; incremental — artifacts are skipped when
+already present unless ``--force``.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from dataclasses import asdict, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tensorio
+from .model import (
+    MODEL_PRESETS,
+    ModelCfg,
+    PeftCfg,
+    adapter_param_shapes,
+    base_param_shapes,
+    init_base_params,
+    make_eval_step,
+    make_train_step,
+    split_roles,
+    trainable_param_count,
+)
+
+# ---------------------------------------------------------------------------
+# Experiment inventory: which artifacts exist (DESIGN.md §4 drives this).
+# ---------------------------------------------------------------------------
+
+ENC_METHODS = {
+    "full": PeftCfg("full"),
+    "bitfit": PeftCfg("bitfit"),
+    "ia3": PeftCfg("ia3"),
+    "lora": PeftCfg("lora", rank=8, alpha=16.0),
+    "vera": PeftCfg("vera"),  # r_v resolved per model (2d)
+    "boft": PeftCfg("boft", boft_block=8),
+    "c3a_d1": PeftCfg("c3a", block=0),  # block = d ("b = d/1")
+    "c3a_d8": PeftCfg("c3a"),  # block = d/8, resolved per model
+}
+
+DEC_METHODS = {
+    "lora": PeftCfg("lora", rank=32, alpha=64.0),
+    "vera": PeftCfg("vera"),  # r_v = 4d
+    "dora": PeftCfg("dora", rank=32, alpha=64.0),
+    "c3a": PeftCfg("c3a"),  # block = d/32
+}
+
+VIT_METHODS = {
+    "head": PeftCfg("head"),
+    "full": PeftCfg("full"),
+    "lora": PeftCfg("lora", rank=16, alpha=32.0),
+    "c3a": PeftCfg("c3a"),  # block = d/8
+}
+
+MLP_VARIANTS = {
+    "dense": PeftCfg("full", mlp_mid="dense"),
+    "lora": PeftCfg("full", rank=1, mlp_mid="lora"),
+    "c3a": PeftCfg("full", block=64, mlp_mid="c3a"),
+}
+
+TRAIN_BATCH = {"encoder": 32, "decoder": 16, "mlp": 64}
+
+
+def resolve_peft(model_name: str, cfg: ModelCfg, method_name: str, peft: PeftCfg) -> PeftCfg:
+    """Fill model-dependent hyperparameters (block sizes, r_v)."""
+    if peft.method == "c3a" and peft.mlp_mid != "c3a":
+        if method_name == "c3a_d1":
+            return replace(peft, block=cfg.d)
+        if method_name == "c3a_d8":
+            return replace(peft, block=cfg.d // 8)
+        if cfg.kind == "decoder":
+            return replace(peft, block=cfg.d // 32)
+        return replace(peft, block=max(cfg.d // 8, 2))
+    if peft.method == "vera":
+        rv = 4 * cfg.d if cfg.kind == "decoder" else 2 * cfg.d
+        return replace(peft, r_v=rv)
+    return peft
+
+
+# ---------------------------------------------------------------------------
+# Init specs (declarative; rust owns the RNG)
+# ---------------------------------------------------------------------------
+
+
+def init_spec(name: str, shape):
+    if ".lora.A" in name or ".dora.A" in name:
+        return {"kind": "normal_fanin", "fan": shape[1]}
+    if ".lora.B" in name or ".boft.skew" in name:
+        return {"kind": "zeros"}
+    if ".dora.mag" in name or ".vera.lb" in name or ".ia3." in name:
+        return {"kind": "ones"}
+    if ".vera.ld" in name:
+        return {"kind": "const", "value": 0.1}
+    if ".c3a.w" in name:
+        m_, n_, b_ = shape
+        return {"kind": "c3a", "fan_in": n_ * b_, "fan_out": m_ * b_}
+    if name in ("vera.A", "vera.B"):
+        return {"kind": "normal_fanin", "fan": shape[-1], "seed": 1234}
+    return {"kind": "zeros"}
+
+
+# ---------------------------------------------------------------------------
+# Data input layouts per (kind, head)
+# ---------------------------------------------------------------------------
+
+
+def data_inputs(cfg: ModelCfg, head: str, batch: int, kind: str = "train"):
+    """Data input layout.  Eval artifacts carry only the model inputs —
+    labels/masks are unused by the forward pass and XLA would DCE the
+    parameters away, breaking the positional input contract."""
+    S = cfg.seq
+    if cfg.kind == "mlp":
+        items = [("data.x", (batch, cfg.mlp_in), "f32"), ("data.y", (batch,), "i32")]
+        return items[:1] if kind == "eval" else items
+    if cfg.kind == "decoder":
+        items = [("data.tokens", (batch, S), "i32"), ("data.loss_mask", (batch, S), "f32")]
+        return items[:1] if kind == "eval" else items
+    if head == "mlm":
+        return [
+            ("data.tokens", (batch, S), "i32"),
+            ("data.targets", (batch, S), "i32"),
+            ("data.loss_mask", (batch, S), "f32"),
+        ]
+    items = []
+    if cfg.input_mode == "vec":
+        items.append(("data.x", (batch, S, cfg.patch_dim), "f32"))
+    else:
+        items.append(("data.tokens", (batch, S), "i32"))
+    if kind != "eval":
+        items.append(("data.y", (batch,), "f32" if head == "reg" else "i32"))
+    return items
+
+
+def batch_from_leaves(cfg: ModelCfg, head: str, names, leaves):
+    return {n.split("data.", 1)[1]: v for n, v in zip(names, leaves)}
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+def build_artifact(out_dir, name, model_name, cfg, method_name, peft, head, kind, force):
+    """Lower one artifact; returns its manifest entry."""
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    eff_cfg = cfg
+    if head in ("cls", "reg", "mlm", "lm", "vec"):
+        hk = {"vec": "cls"}.get(head, head)
+        eff_cfg = replace(cfg, head_kind=hk)
+    t_shapes, f_shapes, fr_shapes = split_roles(eff_cfg, peft)
+    batch = TRAIN_BATCH[cfg.kind]
+    d_inputs = data_inputs(eff_cfg, head, batch, kind)
+    d_names = [n for n, _, _ in d_inputs]
+
+    t_names = list(t_shapes)
+    f_names = list(f_shapes) + list(fr_shapes)
+    all_f_shapes = {**f_shapes, **fr_shapes}
+
+    inputs = []
+    for n in t_names:
+        inputs.append({"name": n, "shape": list(t_shapes[n]), "dtype": "f32", "role": "trainable",
+                       "init": init_spec(n, t_shapes[n])})
+    if kind == "train":
+        for role in ("opt_m", "opt_v"):
+            for n in t_names:
+                inputs.append({"name": f"{role}:{n}", "shape": list(t_shapes[n]),
+                               "dtype": "f32", "role": role, "init": {"kind": "zeros"}})
+    for n in f_names:
+        role = "frozen_random" if n in fr_shapes else "frozen"
+        inputs.append({"name": n, "shape": list(all_f_shapes[n]), "dtype": "f32",
+                       "role": role, "init": init_spec(n, all_f_shapes[n])})
+    for n, shp, dt in d_inputs:
+        inputs.append({"name": n, "shape": list(shp), "dtype": dt, "role": "data"})
+    if kind == "train":
+        # `wd` is DCE'd from the lowered HLO when no trainable receives
+        # decoupled decay (e.g. decoder VeRA: all λ params are exempt) —
+        # emit it only when used so the positional contract holds.
+        uses_wd = any(
+            not n.endswith((".b", ".g", ".mag", ".lb", ".ld")) for n in t_names
+        )
+        scalars = ("step", "lr", "wd") if uses_wd else ("step", "lr")
+        for n in scalars:
+            inputs.append({"name": n, "shape": [], "dtype": "f32", "role": "scalar"})
+
+    if kind == "train":
+        outputs = (
+            [{"name": n, "role": "new_trainable"} for n in t_names]
+            + [{"name": f"opt_m:{n}", "role": "new_opt_m"} for n in t_names]
+            + [{"name": f"opt_v:{n}", "role": "new_opt_v"} for n in t_names]
+            + [{"name": "loss", "role": "loss"}, {"name": "metric", "role": "metric"}]
+        )
+    else:
+        outputs = [{"name": "logits", "role": "logits"}]
+
+    entry = {
+        "name": name,
+        "path": f"{name}.hlo.txt",
+        "model": model_name,
+        "method": method_name,
+        "peft": asdict(peft),
+        "kind": kind,
+        "head": head,
+        "batch": batch,
+        "seq": eff_cfg.seq,
+        "n_params": trainable_param_count(eff_cfg, peft),
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+    if os.path.exists(path) and not force:
+        return entry
+
+    nt = len(t_names)
+    nf = len(f_names)
+    nd = len(d_names)
+
+    if kind == "train":
+        step_fn = make_train_step(eff_cfg, peft, d_names)
+
+        def flat_fn(*args):
+            i = 0
+            tp = dict(zip(t_names, args[i : i + nt])); i += nt
+            m = dict(zip(t_names, args[i : i + nt])); i += nt
+            v = dict(zip(t_names, args[i : i + nt])); i += nt
+            fr = dict(zip(f_names, args[i : i + nf])); i += nf
+            batch_d = batch_from_leaves(eff_cfg, head, d_names, args[i : i + nd]); i += nd
+            scal = args[i:]
+            step, lr = scal[0], scal[1]
+            wd = scal[2] if len(scal) > 2 else jnp.float32(0.0)
+            new_p, new_m, new_v, loss, metric = step_fn(tp, m, v, fr, batch_d, step, lr, wd)
+            return (
+                tuple(new_p[n] for n in t_names)
+                + tuple(new_m[n] for n in t_names)
+                + tuple(new_v[n] for n in t_names)
+                + (loss, metric)
+            )
+    else:
+        eval_fn = make_eval_step(eff_cfg, peft)
+
+        def flat_fn(*args):
+            i = 0
+            tp = dict(zip(t_names, args[i : i + nt])); i += nt
+            fr = dict(zip(f_names, args[i : i + nf])); i += nf
+            params = {**fr, **tp}
+            batch_d = batch_from_leaves(eff_cfg, head, d_names, args[i : i + nd])
+            return (eval_fn(params, batch_d),)
+
+    specs = [_spec(tuple(e["shape"]), e["dtype"]) for e in inputs]
+    t0 = time.time()
+    lowered = jax.jit(flat_fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s", flush=True)
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Inventory assembly
+# ---------------------------------------------------------------------------
+
+
+def inventory():
+    """Yields (model_name, method_name, peft, head, kind)."""
+    jobs = []
+    # encoder GLUE-sim suites (+ tiny for tests)
+    for model in ("enc_tiny", "enc_base", "enc_large"):
+        cfg = MODEL_PRESETS[model]
+        methods = ENC_METHODS
+        heads = ("cls", "reg")
+        for mn, p in methods.items():
+            for head in heads:
+                jobs.append((model, mn, p, head, "train"))
+                jobs.append((model, mn, p, head, "eval"))
+        # MLM pretrain (full-parameter)
+        jobs.append((model, "full", ENC_METHODS["full"], "mlm", "train"))
+    # decoder instruction suites
+    for model in ("dec_small", "dec_large"):
+        for mn, p in DEC_METHODS.items():
+            jobs.append((model, mn, p, "lm", "train"))
+            jobs.append((model, mn, p, "lm", "eval"))
+        jobs.append((model, "full", PeftCfg("full"), "lm", "train"))  # LM pretrain
+    # ViT-sim suites
+    for model in ("vit_base", "vit_large"):
+        for mn, p in VIT_METHODS.items():
+            jobs.append((model, mn, p, "vec", "train"))
+            jobs.append((model, mn, p, "vec", "eval"))
+    # Fig-4 MLP variants
+    for mn, p in MLP_VARIANTS.items():
+        jobs.append(("mlp", f"mlp_{mn}", p, "cls", "train"))
+        jobs.append(("mlp", f"mlp_{mn}", p, "cls", "eval"))
+    return jobs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default="", help="substring filter on artifact names")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = []
+    models_meta = {}
+    jobs = inventory()
+    print(f"lowering {len(jobs)} artifacts -> {out_dir}")
+    for model, mn, peft0, head, kind in jobs:
+        cfg = MODEL_PRESETS[model]
+        peft = resolve_peft(model, cfg, mn, peft0)
+        name = f"{model}__{mn}__{head}__{kind}"
+        if args.only and args.only not in name:
+            continue
+        entries.append(build_artifact(out_dir, name, model, cfg, mn, peft, head, kind, args.force))
+        if model not in models_meta:
+            init_path = os.path.join(out_dir, f"{model}_init.bin")
+            if not os.path.exists(init_path) or args.force:
+                tensorio.save(init_path, init_base_params(cfg, seed=0))
+            models_meta[model] = {
+                "cfg": asdict(cfg),
+                "init": f"{model}_init.bin",
+                "base_params": {k: list(v) for k, v in base_param_shapes(cfg).items()},
+            }
+
+    manifest = {"version": 1, "models": models_meta, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts, {len(models_meta)} models")
+
+
+if __name__ == "__main__":
+    main()

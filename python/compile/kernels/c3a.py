@@ -1,0 +1,210 @@
+"""L1 — Pallas kernels for C3A block-circular convolution.
+
+The paper computes ``Δz_i = Σ_j Δw_ij ⋆ x_j`` with cuFFT.  TPUs have no FFT
+unit, so the kernel expresses the DFT as matmuls against cos/sin Fourier
+bases (see DESIGN.md §Hardware-Adaptation): every step of the operator —
+forward transform, frequency-domain block aggregation, inverse transform —
+is a (batched) matmul and therefore maps onto the MXU systolic array.  The
+frequency-domain aggregation preserves the paper's core asymptotic win:
+``O(d1·d2/b)`` instead of ``O(d1·d2)`` multiply-accumulates.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec grid over the batch dimension is still what a
+real TPU lowering would use, and the VMEM accounting in
+:func:`vmem_footprint` is derived from it.
+
+Backward passes follow the paper §3.3: both ``∂L/∂x`` and ``∂L/∂w`` are
+again block-circular convolutions with time-reversed kernels, so the same
+Pallas kernel is reused with swapped/reversed operands via
+``jax.custom_vjp`` (interpret-mode Pallas has no built-in autodiff).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "block_circular_conv",
+    "c3a_matvec",
+    "block_circular_conv_time",
+    "dft_bases",
+    "time_reverse",
+    "materialize_delta",
+    "vmem_footprint",
+]
+
+
+def dft_bases(b: int):
+    """Real DFT bases: C[k,n]=cos(2πkn/b), S[k,n]=sin(2πkn/b).
+
+    Built from ``iota`` so the lowered HLO contains no O(b²) constant blob —
+    XLA folds them at compile time, and the AOT text artifacts stay small.
+    """
+    k = jax.lax.iota(jnp.float32, b)
+    ang = (2.0 * jnp.pi / b) * (k[:, None] * k[None, :])
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _c3a_kernel(x_ref, w_ref, cos_ref, sin_ref, o_ref):
+    """One grid step: a batch tile of the frequency-domain operator.
+
+    x: [Bt, n, b]   w: [m, n, b]   cos/sin: [b, b]   o: [Bt, m, b]
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    cb = cos_ref[...]
+    sb = sin_ref[...]
+    b = x.shape[-1]
+    # Forward DFT of activations and kernels (MXU matmuls; C, S symmetric).
+    xre = jnp.einsum("Bnb,kb->Bnk", x, cb)
+    xim = -jnp.einsum("Bnb,kb->Bnk", x, sb)
+    wre = jnp.einsum("mnb,kb->mnk", w, cb)
+    wim = -jnp.einsum("mnb,kb->mnk", w, sb)
+    # Frequency-domain aggregation over input blocks (the paper's O(d1*d2/b)).
+    zre = jnp.einsum("Bnk,mnk->Bmk", xre, wre) - jnp.einsum("Bnk,mnk->Bmk", xim, wim)
+    zim = jnp.einsum("Bnk,mnk->Bmk", xre, wim) + jnp.einsum("Bnk,mnk->Bmk", xim, wre)
+    # Inverse DFT, real part.
+    o_ref[...] = (
+        jnp.einsum("Bmk,kb->Bmb", zre, cb) - jnp.einsum("Bmk,kb->Bmb", zim, sb)
+    ) / b
+
+
+def _batch_tile(batch: int) -> int:
+    """Pick a batch tile: largest divisor of ``batch`` not above 128."""
+    for t in range(min(batch, 128), 0, -1):
+        if batch % t == 0:
+            return t
+    return 1
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def block_circular_conv(xb, w):
+    """``z[B,m,b] = Σ_j w[m,j] ⋆ x[B,j]`` — block-circular convolution.
+
+    Args:
+      xb: activations, shape [B, n, b] (already split into n blocks).
+      w:  kernels, shape [m, n, b].
+    Returns:
+      [B, m, b].
+    """
+    return _pallas_conv(xb, w)
+
+
+def _pallas_conv(xb, w):
+    B, n, b = xb.shape
+    m = w.shape[0]
+    assert w.shape == (m, n, b), (xb.shape, w.shape)
+    cos_b, sin_b = dft_bases(b)
+    bt = _batch_tile(B)
+    grid = (B // bt,)
+    return pl.pallas_call(
+        _c3a_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, n, b), lambda i: (0, 0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, m, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m, b), xb.dtype),
+        interpret=True,
+    )(xb, w, cos_b, sin_b)
+
+
+def time_reverse(a):
+    """w̃[t] = w[(-t) mod b] on the last axis — adjoint kernel (paper §3.3)."""
+    return jnp.roll(jnp.flip(a, axis=-1), 1, axis=-1)
+
+
+def _conv_fwd(xb, w):
+    return _pallas_conv(xb, w), (xb, w)
+
+
+def _conv_bwd(res, g):
+    xb, w = res
+    # ∂L/∂x[B,n] = Σ_m w̃[m,n] ⋆ g[B,m]  (adjoint of C(w) is C(w̃))
+    wt = time_reverse(jnp.swapaxes(w, 0, 1))  # [n, m, b]
+    dx = _pallas_conv(g, wt)
+    # ∂L/∂w[m,n] = Σ_B g[B,m] ⋆ x̃[B,n]  (batch is the reduction axis)
+    xt = time_reverse(jnp.swapaxes(xb, 0, 1))  # [n, B, b]
+    dw = _pallas_conv(jnp.swapaxes(g, 0, 1), xt)
+    return dx, dw
+
+
+block_circular_conv.defvjp(_conv_fwd, _conv_bwd)
+
+
+def c3a_matvec(x, w):
+    """Flat-vector convenience: x [..., n*b], w [m, n, b] -> [..., m*b].
+
+    Collapses all leading axes into the kernel's batch dimension.
+    """
+    m, n, b = w.shape
+    lead = x.shape[:-1]
+    xb = x.reshape((-1, n, b))
+    out = block_circular_conv(xb, w)
+    return out.reshape(lead + (m * b,))
+
+
+def _c3a_time_kernel(x_ref, w_ref, idx_ref, o_ref):
+    """Time-domain ablation kernel: materialized circulant blocks + matmul.
+
+    idx[b,b] holds (r - c) mod b so that C(w)[r, c] = w[idx[r, c]]; the gather
+    plus dot is the 'mechanical port' baseline the DFT-matmul kernel is
+    compared against (O(d1*d2) MACs instead of O(d1*d2/b)).
+    """
+    x = x_ref[...]  # [Bt, n, b]
+    w = w_ref[...]  # [m, n, b]
+    idx = idx_ref[...]  # [b, b] int32
+    circ = w[..., idx]  # [m, n, b, b]; circ[m,n,r,c] = C(w_mn)[r,c]
+    o_ref[...] = jnp.einsum("Bnc,mnrc->Bmr", x, circ)
+
+
+def block_circular_conv_time(xb, w):
+    """Time-domain variant of :func:`block_circular_conv` (ablation only)."""
+    B, n, b = xb.shape
+    m = w.shape[0]
+    r = jax.lax.iota(jnp.int32, b)
+    idx = jnp.mod(r[:, None] - r[None, :], b)
+    bt = _batch_tile(B)
+    return pl.pallas_call(
+        _c3a_time_kernel,
+        grid=(B // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, n, b), lambda i: (0, 0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, m, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m, b), xb.dtype),
+        interpret=True,
+    )(xb, w, idx)
+
+
+def materialize_delta(w):
+    """ΔW = C_blk(Δw) via the paper's Algorithm A2 (convolve identity columns).
+
+    Returns the dense [m*b, n*b] delta matrix.  Used by merge tests; the
+    rust coordinator has its own FFT-based implementation for deployment.
+    """
+    m, n, b = w.shape
+    eye = jnp.eye(n * b, dtype=w.dtype)  # columns e_i
+    cols = c3a_matvec(eye, w)  # row i = C_blk(w) e_i  => transpose
+    return cols.T
+
+
+def vmem_footprint(batch_tile: int, m: int, n: int, b: int, bytes_per=4):
+    """Estimated VMEM bytes per grid step of the DFT-matmul kernel.
+
+    x-tile + w + two bases + out-tile + the four frequency intermediates.
+    Used by DESIGN/EXPERIMENTS for the TPU feasibility estimate.
+    """
+    x_t = batch_tile * n * b
+    w_t = m * n * b
+    bases = 2 * b * b
+    out_t = batch_tile * m * b
+    freq = 2 * batch_tile * n * b + 2 * m * n * b + 2 * batch_tile * m * b
+    return (x_t + w_t + bases + out_t + freq) * bytes_per

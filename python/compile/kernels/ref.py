@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for the C3A operator.
+
+Two independent references:
+
+* :func:`conv_fft` — the paper's Eq. (1): FFT → frequency-domain Hadamard /
+  block aggregation → inverse FFT (complex arithmetic via ``jnp.fft``).
+* :func:`conv_dense` — the literal definition: materialize every circulant
+  block ``C(Δw_ij)`` (Eq. 4) and multiply.
+
+The Pallas kernel must agree with both; the two must agree with each other.
+Also hosts small reference utilities used by the pytest suite (circulant
+construction, rank via DFT eigenvalues).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "conv_fft",
+    "conv_dense",
+    "circulant",
+    "block_circulant",
+    "circulant_rank",
+]
+
+
+def conv_fft(xb, w):
+    """Block-circular convolution via jnp.fft: xb [B,n,b], w [m,n,b] -> [B,m,b]."""
+    Xf = jnp.fft.fft(xb, axis=-1)
+    Wf = jnp.fft.fft(w, axis=-1)
+    Zf = jnp.einsum("Bnk,mnk->Bmk", Xf, Wf)
+    return jnp.fft.ifft(Zf, axis=-1).real.astype(xb.dtype)
+
+
+def circulant(w):
+    """Circulant matrix of the convolution ``z = w ⋆ x``: C[r, c] = w[(r-c) mod b].
+
+    Note on conventions: the paper (§3.2) writes C(w) with *first row* w,
+    which corresponds to circular **correlation**; its FFT identity (Eq. 1)
+    and reference implementation (Alg. A1) compute the standard circular
+    **convolution**.  The two are related by the time-reversal
+    reparameterization w ↔ w̃ (w̃[t] = w[(-t) mod b]) which the optimizer
+    absorbs; rank properties are identical (DFT zero patterns are conjugate
+    reflections).  This repo standardizes on the convolution convention:
+    first *column* is w.
+    """
+    w = np.asarray(w)
+    b = w.shape[-1]
+    r = np.arange(b)
+    idx = (r[:, None] - r[None, :]) % b
+    return w[idx]
+
+
+def block_circulant(w):
+    """C_blk(w) per paper Eq. (4): dense [m*b, n*b] from kernels [m,n,b]."""
+    w = np.asarray(w)
+    m, n, b = w.shape
+    out = np.zeros((m * b, n * b), dtype=w.dtype)
+    for i in range(m):
+        for j in range(n):
+            out[i * b : (i + 1) * b, j * b : (j + 1) * b] = circulant(w[i, j])
+    return out
+
+
+def conv_dense(xb, w):
+    """Oracle via the materialized block-circulant matrix."""
+    B, n, b = xb.shape
+    m = w.shape[0]
+    mat = block_circulant(np.asarray(w))
+    flat = np.asarray(xb).reshape(B, n * b)
+    return (flat @ mat.T).reshape(B, m, b)
+
+
+def circulant_rank(w, tol=1e-6):
+    """rank C(w) = #nonzero DFT coefficients (paper §3.2 / Ingleton 1956)."""
+    eig = np.fft.fft(np.asarray(w, dtype=np.float64))
+    scale = max(1.0, float(np.max(np.abs(eig))))
+    return int(np.sum(np.abs(eig) > tol * scale))

@@ -1,0 +1,569 @@
+"""L2 — JAX model zoo + PEFT parameterizations + in-graph AdamW.
+
+Everything here exists only on the compile path: `aot.py` jit-lowers the
+train/eval/pretrain step functions to HLO text, and the rust coordinator
+executes them through PJRT.  The C3A delta is computed by the L1 Pallas
+kernel (`kernels.c3a`), so it lowers into the same HLO module.
+
+Models (all from scratch, functional):
+  * encoder  — RoBERTa-sim: token+pos embeddings, bidirectional MHA, GELU
+               MLP, layernorm, first-token pooled head (cls or reg).
+               `vec` input mode turns it into a ViT-sim (patch vectors).
+  * decoder  — LLaMA-sim: causal MHA, RMSNorm, SwiGLU, tied LM head.
+  * mlp      — 3-layer MLP for the paper's Fig. 4 expressiveness study.
+
+PEFT methods (paper §4 baselines + C3A): full, head, bitfit, ia3, lora,
+dora, vera, boft, c3a.  Adapters attach to the q and v attention
+projections (LoRA convention; the paper's GLUE setup), or to the middle
+layer of the MLP.
+
+Parameter handling: a model is a flat ``{name: array}`` dict.  Each PEFT
+method induces a (trainable, frozen, frozen_random) split; the AdamW update
+runs in-graph over the trainable leaves only.  `aot.py` records the exact
+flattening order in the artifact manifest so rust can map buffers by name.
+"""
+
+import math
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import c3a as c3a_kernel
+
+# --------------------------------------------------------------------------
+# Configs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    kind: str  # encoder | decoder | mlp
+    vocab: int = 512
+    d: int = 128
+    layers: int = 4
+    heads: int = 4
+    seq: int = 32
+    n_out: int = 2  # classifier width (encoder) / classes (mlp)
+    head_kind: str = "cls"  # cls | reg | lm
+    input_mode: str = "tokens"  # tokens | vec (ViT-sim patch vectors)
+    patch_dim: int = 16  # vec mode: per-patch feature width
+    mlp_hidden: int = 128  # mlp kind: hidden width
+    mlp_in: int = 2  # mlp kind: input width
+
+    @property
+    def ffn(self) -> int:
+        return 4 * self.d if self.kind == "encoder" else 2 * self.d
+
+
+@dataclass(frozen=True)
+class PeftCfg:
+    method: str = "c3a"  # full|head|bitfit|ia3|lora|dora|vera|boft|c3a
+    block: int = 0  # c3a block size b (0 => d, i.e. "b=d/1")
+    rank: int = 8  # lora/dora rank r
+    alpha: float = 16.0  # lora scaling numerator (alpha/r)
+    r_v: int = 256  # vera intermediate rank
+    boft_block: int = 8  # boft orthogonal block size
+    mlp_mid: str = "dense"  # mlp kind: dense | lora | c3a (fig 4)
+
+
+# Named presets used by aot.py / the experiment harness.
+MODEL_PRESETS = {
+    "enc_tiny": ModelCfg("encoder", vocab=64, d=32, layers=2, heads=2, seq=16),
+    "enc_base": ModelCfg("encoder", vocab=512, d=128, layers=4, heads=4, seq=32),
+    "enc_large": ModelCfg("encoder", vocab=512, d=256, layers=6, heads=8, seq=32),
+    "dec_small": ModelCfg("decoder", vocab=512, d=192, layers=4, heads=4, seq=48, head_kind="lm"),
+    "dec_large": ModelCfg("decoder", vocab=512, d=320, layers=6, heads=8, seq=48, head_kind="lm"),
+    "vit_base": ModelCfg("encoder", d=128, layers=4, heads=4, seq=16, n_out=200,
+                         input_mode="vec", patch_dim=16),
+    "vit_large": ModelCfg("encoder", d=256, layers=6, heads=8, seq=16, n_out=200,
+                          input_mode="vec", patch_dim=16),
+    "mlp": ModelCfg("mlp", n_out=8, head_kind="cls"),
+}
+
+ADAPTED_PROJS = ("q", "v")  # projections carrying a delta adapter
+
+
+def c3a_block(cfg: ModelCfg, peft: PeftCfg) -> int:
+    b = peft.block if peft.block > 0 else cfg.d
+    if cfg.d % b != 0:
+        raise ValueError(f"c3a block {b} must divide d={cfg.d}")
+    return b
+
+
+# --------------------------------------------------------------------------
+# Parameter specs + init
+# --------------------------------------------------------------------------
+
+
+def base_param_shapes(cfg: ModelCfg):
+    """Backbone (pre-trained) parameter shapes, ordered."""
+    p = {}
+    if cfg.kind == "mlp":
+        h = cfg.mlp_hidden
+        p["mlp.w0"] = (cfg.mlp_in, h)
+        p["mlp.b0"] = (h,)
+        p["mlp.w1"] = (h, h)  # the replaceable middle layer
+        p["mlp.b1"] = (h,)
+        p["mlp.w2"] = (h, cfg.n_out)
+        p["mlp.b2"] = (cfg.n_out,)
+        return p
+    if cfg.input_mode == "vec":
+        p["embed.patch"] = (cfg.patch_dim, cfg.d)
+    else:
+        p["embed.tok"] = (cfg.vocab, cfg.d)
+    p["embed.pos"] = (cfg.seq, cfg.d)
+    enc = cfg.kind == "encoder"
+    for i in range(cfg.layers):
+        L = f"L{i}"
+        for proj in ("q", "k", "v", "o"):
+            p[f"{L}.attn.w{proj}"] = (cfg.d, cfg.d)
+            if enc:
+                p[f"{L}.attn.b{proj}"] = (cfg.d,)
+        if enc:
+            p[f"{L}.ln1.g"] = (cfg.d,)
+            p[f"{L}.ln1.b"] = (cfg.d,)
+            p[f"{L}.mlp.w1"] = (cfg.d, cfg.ffn)
+            p[f"{L}.mlp.b1"] = (cfg.ffn,)
+            p[f"{L}.mlp.w2"] = (cfg.ffn, cfg.d)
+            p[f"{L}.mlp.b2"] = (cfg.d,)
+            p[f"{L}.ln2.g"] = (cfg.d,)
+            p[f"{L}.ln2.b"] = (cfg.d,)
+        else:
+            p[f"{L}.rms1.g"] = (cfg.d,)
+            p[f"{L}.mlp.wg"] = (cfg.d, cfg.ffn)
+            p[f"{L}.mlp.wu"] = (cfg.d, cfg.ffn)
+            p[f"{L}.mlp.wd"] = (cfg.ffn, cfg.d)
+            p[f"{L}.rms2.g"] = (cfg.d,)
+    if enc:
+        p["final_ln.g"] = (cfg.d,)
+        p["final_ln.b"] = (cfg.d,)
+        p["head.w"] = (cfg.d, cfg.n_out)
+        p["head.b"] = (cfg.n_out,)
+    else:
+        p["final_rms.g"] = (cfg.d,)  # lm head tied to embed.tok
+    return p
+
+
+def adapter_param_shapes(cfg: ModelCfg, peft: PeftCfg):
+    """Adapter parameter shapes for the chosen method: (trainable, frozen_random)."""
+    t, fr = {}, {}
+    m = peft.method
+    if cfg.kind == "mlp":
+        h = cfg.mlp_hidden
+        if peft.mlp_mid == "lora":
+            t["mlp.mid.lora.A"] = (peft.rank, h)
+            t["mlp.mid.lora.B"] = (h, peft.rank)
+        elif peft.mlp_mid == "c3a":
+            b = peft.block if peft.block > 0 else h
+            t["mlp.mid.c3a.w"] = (h // b, h // b, b)
+        return t, fr
+    if m in ("full", "head", "bitfit"):
+        return t, fr
+    d = cfg.d
+    if m == "ia3":
+        for i in range(cfg.layers):
+            t[f"L{i}.ia3.lk"] = (d,)
+            t[f"L{i}.ia3.lv"] = (d,)
+            t[f"L{i}.ia3.lff"] = (cfg.ffn,)
+        return t, fr
+    if m == "vera":
+        fr["vera.A"] = (peft.r_v, d)
+        fr["vera.B"] = (d, peft.r_v)
+    for i in range(cfg.layers):
+        for proj in ADAPTED_PROJS:
+            k = f"L{i}.attn.{proj}"
+            if m in ("lora", "dora"):
+                t[f"{k}.lora.A"] = (peft.rank, d)
+                t[f"{k}.lora.B"] = (d, peft.rank)
+                if m == "dora":
+                    t[f"{k}.dora.mag"] = (d,)
+            elif m == "vera":
+                t[f"{k}.vera.ld"] = (peft.r_v,)
+                t[f"{k}.vera.lb"] = (d,)
+            elif m == "boft":
+                bb = peft.boft_block
+                assert d % bb == 0
+                t[f"{k}.boft.skew"] = (d // bb, bb, bb)
+            elif m == "c3a":
+                b = c3a_block(cfg, peft)
+                t[f"{k}.c3a.w"] = (d // b, d // b, b)
+            else:
+                raise ValueError(f"unknown method {m}")
+    return t, fr
+
+
+def split_roles(cfg: ModelCfg, peft: PeftCfg):
+    """Full parameter split: ordered dicts of shapes by role.
+
+    Returns (trainable, frozen, frozen_random).  The classifier head is
+    always trainable (paper: every method gets the same head; its count is
+    excluded from "# Params").
+    """
+    base = base_param_shapes(cfg)
+    adapt_t, adapt_fr = adapter_param_shapes(cfg, peft)
+    m = peft.method
+    trainable, frozen = {}, {}
+    head_names = {"head.w", "head.b"}
+    if cfg.kind == "mlp":
+        for k, v in base.items():
+            mid = k in ("mlp.w1", "mlp.b1")
+            if mid and peft.mlp_mid != "dense":
+                continue  # middle layer replaced by the adapter op
+            trainable[k] = v
+        trainable.update(adapt_t)
+        return trainable, frozen, adapt_fr
+    for k, v in base.items():
+        if m == "full":
+            trainable[k] = v
+        elif k in head_names:
+            trainable[k] = v
+        elif m == "bitfit" and (k.endswith(".b") or ".attn.b" in k or k.endswith(".b1") or k.endswith(".b2")):
+            trainable[k] = v
+        else:
+            frozen[k] = v
+    trainable.update(adapt_t)
+    return trainable, frozen, adapt_fr
+
+
+def trainable_param_count(cfg: ModelCfg, peft: PeftCfg, include_head=False):
+    """#Params as the paper reports it (classifier head excluded)."""
+    t, _, _ = split_roles(cfg, peft)
+    total = 0
+    for k, shp in t.items():
+        if not include_head and k in ("head.w", "head.b"):
+            continue
+        total += int(np.prod(shp)) if shp else 1
+    return total
+
+
+def init_base_params(cfg: ModelCfg, seed: int = 0):
+    """Backbone init (the 'pre-pretraining' starting point)."""
+    rng = np.random.RandomState(seed)
+    out = {}
+    for k, shp in base_param_shapes(cfg).items():
+        if k.endswith(".g"):
+            out[k] = np.ones(shp, np.float32)
+        elif k.endswith(".b") or k.startswith("L") and ".attn.b" in k or k.endswith(".b1") or k.endswith(".b2") or k.endswith(".b0"):
+            out[k] = np.zeros(shp, np.float32)
+        elif k == "embed.pos":
+            out[k] = (0.02 * rng.randn(*shp)).astype(np.float32)
+        else:
+            fan_in = shp[0] if len(shp) > 1 else shp[0]
+            std = 1.0 / math.sqrt(max(1, fan_in))
+            out[k] = (std * rng.randn(*shp)).astype(np.float32)
+    return out
+
+
+def init_adapter_params(cfg: ModelCfg, peft: PeftCfg, seed: int = 0, scheme: str = "default"):
+    """Adapter init.  `scheme` feeds the paper's Fig. 3 ablation:
+    default | zero | gaussian | kaiming | xavier (C3A kernels only).
+    """
+    rng = np.random.RandomState(seed + 7)
+    t, fr = adapter_param_shapes(cfg, peft)
+    out = {}
+    for k, shp in t.items():
+        if ".lora.A" in k:
+            out[k] = (rng.randn(*shp) / math.sqrt(shp[1])).astype(np.float32)
+        elif ".lora.B" in k:
+            out[k] = np.zeros(shp, np.float32)
+        elif ".dora.mag" in k or ".vera.lb" in k:
+            out[k] = np.ones(shp, np.float32)
+        elif ".vera.ld" in k:
+            out[k] = np.full(shp, 0.1, np.float32)
+        elif ".ia3." in k:
+            out[k] = np.ones(shp, np.float32)
+        elif ".boft.skew" in k:
+            out[k] = np.zeros(shp, np.float32)
+        elif ".c3a.w" in k:
+            m_, n_, b_ = shp
+            fan = n_ * b_
+            if scheme in ("default", "xavier"):
+                lim = math.sqrt(6.0 / (m_ * b_ + fan))
+                out[k] = rng.uniform(-lim, lim, shp).astype(np.float32)
+            elif scheme == "zero":
+                out[k] = np.zeros(shp, np.float32)
+            elif scheme == "gaussian":
+                out[k] = (0.02 * rng.randn(*shp)).astype(np.float32)
+            elif scheme == "kaiming":
+                lim = math.sqrt(3.0 / fan) * math.sqrt(2.0)
+                out[k] = rng.uniform(-lim, lim, shp).astype(np.float32)
+            else:
+                raise ValueError(f"unknown init scheme {scheme}")
+        else:
+            out[k] = np.zeros(shp, np.float32)
+    rng_fr = np.random.RandomState(1234)  # fixed seed: VeRA shares frozen projections
+    for k, shp in fr.items():
+        out[k] = (rng_fr.randn(*shp) / math.sqrt(shp[-1])).astype(np.float32)
+    return out
+
+
+# --------------------------------------------------------------------------
+# PEFT delta application
+# --------------------------------------------------------------------------
+
+
+def _adapted_linear(params, key, x, w0, b0, peft: PeftCfg):
+    """y = x @ w0 (+b0) + delta(x) for the q/v projections.
+
+    x: [..., d_in]; w0: [d_in, d_out].
+    """
+    y = x @ w0
+    m = peft.method
+    if m in ("lora", "dora"):
+        A = params[f"{key}.lora.A"]  # [r, d_in]
+        B = params[f"{key}.lora.B"]  # [d_out, r]
+        scale = peft.alpha / peft.rank
+        if m == "lora":
+            y = y + scale * ((x @ A.T) @ B.T)
+        else:
+            # DoRA: magnitude * column-normalized (W0 + scale*BA)
+            w = w0 + scale * (B @ A).T  # [d_in, d_out]
+            norm = jnp.sqrt(jnp.sum(w * w, axis=0, keepdims=True) + 1e-6)
+            mag = params[f"{key}.dora.mag"]  # [d_out]
+            y = x @ (w / norm * mag[None, :])
+    elif m == "vera":
+        A = params["vera.A"]  # [r_v, d_in] frozen
+        B = params["vera.B"]  # [d_out, r_v] frozen
+        ld = params[f"{key}.vera.ld"]
+        lb = params[f"{key}.vera.lb"]
+        y = y + ((x @ A.T) * ld[None, :]) @ B.T * lb[None, :]
+    elif m == "boft":
+        S = params[f"{key}.boft.skew"]  # [nb, bb, bb]
+        skew = 0.5 * (S - jnp.swapaxes(S, -1, -2))
+        # Orthogonal-ish rotation via a truncated matrix exponential of the
+        # skew part (order 4).  The exact Cayley transform needs a matrix
+        # solve, which lowers to a typed-FFI LAPACK custom call that the
+        # pinned xla_extension 0.5.1 runtime cannot execute (see DESIGN.md
+        # §substitutions); exp(skew) is solve-free, exactly identity at
+        # init, and orthogonal to O(||S||^5).
+        eye = jnp.eye(S.shape[-1], dtype=S.dtype)[None]
+        s2 = skew @ skew
+        R = eye + skew + s2 / 2.0 + (s2 @ skew) / 6.0 + (s2 @ s2) / 24.0
+        d_out = y.shape[-1]
+        yb = y.reshape(y.shape[:-1] + (S.shape[0], S.shape[-1]))
+        yb = jnp.einsum("...nb,nbc->...nc", yb, R)
+        y = yb.reshape(y.shape[:-1] + (d_out,))
+    elif m == "c3a":
+        w = params[f"{key}.c3a.w"]  # [m, n, b] — the L1 Pallas kernel
+        y = y + c3a_kernel.c3a_matvec(x, w)
+    if b0 is not None:
+        y = y + b0
+    return y
+
+
+# --------------------------------------------------------------------------
+# Model forward passes
+# --------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _rmsnorm(x, g):
+    return x / jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * g
+
+
+def _attention(params, cfg: ModelCfg, peft: PeftCfg, i: int, x, mask):
+    """MHA with PEFT deltas on q/v (and IA3 rescales on k/v)."""
+    L = f"L{i}"
+    d, H = cfg.d, cfg.heads
+    hd = d // H
+    enc = cfg.kind == "encoder"
+    bias = (lambda p: params[f"{L}.attn.b{p}"]) if enc else (lambda p: None)
+    q = _adapted_linear(params, f"{L}.attn.q", x, params[f"{L}.attn.wq"], bias("q"), peft)
+    k = x @ params[f"{L}.attn.wk"]
+    if enc:
+        k = k + bias("k")
+    v = _adapted_linear(params, f"{L}.attn.v", x, params[f"{L}.attn.wv"], bias("v"), peft)
+    if peft.method == "ia3":
+        k = k * params[f"{L}.ia3.lk"][None, None, :]
+        v = v * params[f"{L}.ia3.lv"][None, None, :]
+    B, S = x.shape[0], x.shape[1]
+
+    def heads(t):
+        return t.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd)
+    att = att + mask
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh).transpose(0, 2, 1, 3).reshape(B, S, d)
+    out = out @ params[f"{L}.attn.wo"]
+    if enc:
+        out = out + params[f"{L}.attn.bo"]
+    return out
+
+
+def _ffn(params, cfg, peft, i, x):
+    L = f"L{i}"
+    if cfg.kind == "encoder":
+        h = jax.nn.gelu(x @ params[f"{L}.mlp.w1"] + params[f"{L}.mlp.b1"])
+        if peft.method == "ia3":
+            h = h * params[f"{L}.ia3.lff"][None, None, :]
+        return h @ params[f"{L}.mlp.w2"] + params[f"{L}.mlp.b2"]
+    g = jax.nn.silu(x @ params[f"{L}.mlp.wg"])
+    u = x @ params[f"{L}.mlp.wu"]
+    h = g * u
+    if peft.method == "ia3":
+        h = h * params[f"{L}.ia3.lff"][None, None, :]
+    return h @ params[f"{L}.mlp.wd"]
+
+
+def encoder_fwd(params, cfg: ModelCfg, peft: PeftCfg, tokens_or_vecs):
+    """Returns (pooled logits [B, n_out], final hidden [B,S,d])."""
+    if cfg.input_mode == "vec":
+        x = tokens_or_vecs @ params["embed.patch"]
+        pad = jnp.zeros(tokens_or_vecs.shape[:2], bool)
+    else:
+        tokens = tokens_or_vecs
+        x = params["embed.tok"][tokens]
+        pad = tokens == 0
+    S = x.shape[1]
+    x = x + params["embed.pos"][None, :S, :]
+    mask = jnp.where(pad[:, None, None, :], -1e9, 0.0)
+    for i in range(cfg.layers):
+        x = _layernorm(x + _attention(params, cfg, peft, i, x, mask),
+                       params[f"L{i}.ln1.g"], params[f"L{i}.ln1.b"])
+        x = _layernorm(x + _ffn(params, cfg, peft, i, x),
+                       params[f"L{i}.ln2.g"], params[f"L{i}.ln2.b"])
+    x = _layernorm(x, params["final_ln.g"], params["final_ln.b"])
+    pooled = x[:, 0, :]
+    logits = pooled @ params["head.w"] + params["head.b"]
+    return logits, x
+
+
+def decoder_fwd(params, cfg: ModelCfg, peft: PeftCfg, tokens):
+    """Returns token logits [B, S, V] (tied LM head)."""
+    x = params["embed.tok"][tokens]
+    S = x.shape[1]
+    x = x + params["embed.pos"][None, :S, :]
+    causal = jnp.triu(jnp.full((S, S), -1e9), k=1)[None, None]
+    pad = (tokens == 0)
+    mask = causal + jnp.where(pad[:, None, None, :], -1e9, 0.0)
+    for i in range(cfg.layers):
+        x = x + _attention(params, cfg, peft, i, _rmsnorm(x, params[f"L{i}.rms1.g"]), mask)
+        x = x + _ffn(params, cfg, peft, i, _rmsnorm(x, params[f"L{i}.rms2.g"]))
+    x = _rmsnorm(x, params["final_rms.g"])
+    return x @ params["embed.tok"].T
+
+
+def mlp_fwd(params, cfg: ModelCfg, peft: PeftCfg, x):
+    """Fig. 4 network: in -> h -> (middle op) -> h -> classes."""
+    h = jax.nn.relu(x @ params["mlp.w0"] + params["mlp.b0"])
+    if peft.mlp_mid == "dense":
+        h2 = h @ params["mlp.w1"] + params["mlp.b1"]
+    elif peft.mlp_mid == "lora":
+        A = params["mlp.mid.lora.A"]
+        B = params["mlp.mid.lora.B"]
+        h2 = (h @ A.T) @ B.T
+    elif peft.mlp_mid == "c3a":
+        h2 = c3a_kernel.c3a_matvec(h, params["mlp.mid.c3a.w"])
+    else:
+        raise ValueError(peft.mlp_mid)
+    h2 = jax.nn.relu(h2)
+    return h2 @ params["mlp.w2"] + params["mlp.b2"]
+
+
+# --------------------------------------------------------------------------
+# Losses + steps
+# --------------------------------------------------------------------------
+
+
+def _ce(logits, labels):
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+
+
+def task_loss(cfg: ModelCfg, peft: PeftCfg, params, batch):
+    """Returns (loss, metric_numerator) for one batch."""
+    if cfg.kind == "mlp":
+        logits = mlp_fwd(params, cfg, peft, batch["x"])
+        loss = jnp.mean(_ce(logits, batch["y"]))
+        correct = jnp.sum((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+        return loss, correct
+    if cfg.kind == "decoder":
+        logits = decoder_fwd(params, cfg, peft, batch["tokens"])
+        targets = jnp.concatenate(
+            [batch["tokens"][:, 1:], jnp.zeros_like(batch["tokens"][:, :1])], axis=1)
+        ce = _ce(logits, targets)
+        m = batch["loss_mask"]
+        loss = jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+        pred = jnp.argmax(logits, -1)
+        correct = jnp.sum((pred == targets).astype(jnp.float32) * m)
+        return loss, correct
+    # encoder
+    inp = batch["x"] if cfg.input_mode == "vec" else batch["tokens"]
+    logits, hidden = encoder_fwd(params, cfg, peft, inp)
+    if cfg.head_kind == "reg":
+        pred = logits[:, 0]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, jnp.sum(pred)  # numerator unused for reg; PCC computed in rust
+    if cfg.head_kind == "mlm":
+        # masked-token pretraining: predict original token at masked slots
+        voc_logits = hidden @ params["embed.tok"].T
+        ce = _ce(voc_logits, batch["targets"])
+        m = batch["loss_mask"]
+        loss = jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+        correct = jnp.sum((jnp.argmax(voc_logits, -1) == batch["targets"]).astype(jnp.float32) * m)
+        return loss, correct
+    loss = jnp.mean(_ce(logits, batch["y"]))
+    correct = jnp.sum((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, correct
+
+
+def adamw_update(t_params, grads, m, v, step, lr, wd,
+                 beta1=0.9, beta2=0.999, eps=1e-8):
+    """Standard AdamW (decoupled decay) over the trainable dict."""
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    for k in t_params:
+        g = grads[k]
+        nm = beta1 * m[k] + (1 - beta1) * g
+        nv = beta2 * v[k] + (1 - beta2) * (g * g)
+        upd = (nm / bc1) / (jnp.sqrt(nv / bc2) + eps)
+        decay = 0.0 if k.endswith((".b", ".g", ".mag", ".lb", ".ld")) else wd
+        new_p[k] = t_params[k] - lr * (upd + decay * t_params[k])
+        new_m[k] = nm
+        new_v[k] = nv
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg: ModelCfg, peft: PeftCfg, data_keys):
+    """Builds train_step(t_params, m, v, frozen, batch, step, lr, wd).
+
+    Returns (new_t, new_m, new_v, loss, metric).  `data_keys` fixes the
+    batch dict layout so the flattened signature is stable.
+    """
+
+    def step_fn(t_params, m, v, frozen, batch, step, lr, wd):
+        def loss_fn(tp):
+            params = dict(frozen)
+            params.update(tp)
+            return task_loss(cfg, peft, params, batch)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(t_params)
+        new_p, new_m, new_v = adamw_update(t_params, grads, m, v, step, lr, wd)
+        return new_p, new_m, new_v, loss, metric
+
+    return step_fn
+
+
+def make_eval_step(cfg: ModelCfg, peft: PeftCfg):
+    """eval_step(params, batch) -> logits (encoder/mlp) or token logits (decoder)."""
+
+    def eval_fn(params, batch):
+        if cfg.kind == "mlp":
+            return mlp_fwd(params, cfg, peft, batch["x"])
+        if cfg.kind == "decoder":
+            return decoder_fwd(params, cfg, peft, batch["tokens"])
+        inp = batch["x"] if cfg.input_mode == "vec" else batch["tokens"]
+        logits, _ = encoder_fwd(params, cfg, peft, inp)
+        return logits
+
+    return eval_fn

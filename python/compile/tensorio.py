@@ -1,0 +1,66 @@
+"""C3AT tensor container — the interchange/checkpoint binary format.
+
+Written by the build path (initial model parameters) and by the rust
+coordinator (checkpoints); read by both.  Layout (little-endian):
+
+    magic   b"C3AT"
+    u32     version (1)
+    u32     tensor count
+    per tensor:
+        u32   name length, then name bytes (utf-8)
+        u8    dtype: 0 = f32, 1 = i32
+        u32   ndim, then ndim × u64 dims
+        raw   data (product(dims) × 4 bytes, LE)
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"C3AT"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save(path, tensors):
+    """Write an ordered ``{name: np.ndarray}`` mapping."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            shape = np.asarray(arr).shape
+            # NB: ascontiguousarray promotes 0-d arrays to 1-d; keep the
+            # recorded shape authoritative
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _CODES[arr.dtype]))
+            f.write(struct.pack("<I", len(shape)))
+            for d in shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    """Read back a ``{name: np.ndarray}`` dict (insertion-ordered)."""
+    out = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != 1:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = tuple(struct.unpack(f"<{ndim}Q", f.read(8 * ndim))) if ndim else ()
+            dt = _DTYPES[code]
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), dtype=dt).reshape(dims)
+            out[name] = data.copy()
+    return out

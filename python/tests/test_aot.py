@@ -1,0 +1,124 @@
+"""AOT layer tests: manifest contract, tensor container interop, init
+specs — validated against the real artifacts/ directory when present."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import tensorio
+from compile.aot import (
+    DEC_METHODS,
+    ENC_METHODS,
+    data_inputs,
+    init_spec,
+    inventory,
+    resolve_peft,
+)
+from compile.model import MODEL_PRESETS, PeftCfg, split_roles
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def test_inventory_names_unique():
+    jobs = inventory()
+    names = [f"{m}__{mn}__{h}__{k}" for m, mn, _, h, k in jobs]
+    assert len(names) == len(set(names))
+    assert len(names) > 100  # the full suite
+
+
+def test_resolve_peft_blocks_divide():
+    for model, cfg in MODEL_PRESETS.items():
+        if cfg.kind != "encoder":
+            continue
+        for mn, p in ENC_METHODS.items():
+            r = resolve_peft(model, cfg, mn, p)
+            if r.method == "c3a":
+                assert cfg.d % r.block == 0, (model, mn, r.block)
+    for model in ("dec_small", "dec_large"):
+        cfg = MODEL_PRESETS[model]
+        r = resolve_peft(model, cfg, "c3a", DEC_METHODS["c3a"])
+        assert cfg.d % r.block == 0
+        assert r.block == cfg.d // 32  # the paper's b = d/32 setting
+
+
+def test_eval_inputs_drop_labels():
+    cfg = MODEL_PRESETS["enc_base"]
+    train = data_inputs(cfg, "cls", 32, "train")
+    ev = data_inputs(cfg, "cls", 32, "eval")
+    assert [n for n, _, _ in train] == ["data.tokens", "data.y"]
+    assert [n for n, _, _ in ev] == ["data.tokens"]
+    dec = MODEL_PRESETS["dec_small"]
+    assert len(data_inputs(dec, "lm", 16, "eval")) == 1
+
+
+def test_init_specs_cover_all_adapter_params():
+    for method in ("lora", "dora", "vera", "boft", "ia3", "c3a"):
+        peft = PeftCfg(method, block=16, rank=4, r_v=32)
+        t, f, fr = split_roles(MODEL_PRESETS["enc_base"], peft)
+        for name, shape in {**t, **fr}.items():
+            spec = init_spec(name, shape)
+            assert "kind" in spec, name
+
+
+def test_tensorio_roundtrip_matches_numpy():
+    path = "/tmp/c3a_tio_test.bin"
+    data = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "ids": np.array([1, -2, 3], dtype=np.int32),
+        "scalar": np.float32(7.5).reshape(()),
+    }
+    tensorio.save(path, data)
+    back = tensorio.load(path)
+    assert list(back) == sorted(data) or list(back) == list(data)
+    np.testing.assert_array_equal(back["a"], data["a"])
+    np.testing.assert_array_equal(back["ids"], data["ids"])
+    assert back["scalar"].shape == ()
+
+
+@needs_artifacts
+def test_manifest_contract():
+    m = json.load(open(MANIFEST))
+    assert m["version"] == 1
+    assert set(m["models"]) >= {"enc_tiny", "enc_base", "dec_small", "mlp"}
+    by_name = {a["name"]: a for a in m["artifacts"]}
+    # train/eval pairing
+    for a in m["artifacts"]:
+        if a["kind"] == "train" and a["head"] != "mlm":
+            twin = a["name"].replace("__train", "__eval")
+            if a["method"] == "full" and a["head"] == "lm":
+                continue  # decoder pretrain has no eval twin
+            assert twin in by_name, twin
+    # positional contract: roles appear in fixed block order
+    order = ["trainable", "opt_m", "opt_v", "frozen", "frozen_random", "data", "scalar"]
+    for a in m["artifacts"]:
+        roles = [i["role"] for i in a["inputs"]]
+        idx = [order.index(r) for r in roles]
+        assert idx == sorted(idx), a["name"]
+
+
+@needs_artifacts
+def test_init_bins_match_declared_shapes():
+    m = json.load(open(MANIFEST))
+    for name, meta in m["models"].items():
+        bin_path = os.path.join(ART, meta["init"])
+        tensors = tensorio.load(bin_path)
+        for pname, shape in meta["base_params"].items():
+            assert pname in tensors, (name, pname)
+            assert list(tensors[pname].shape) == shape
+            assert np.all(np.isfinite(tensors[pname]))
+
+
+@needs_artifacts
+def test_artifact_files_exist_and_nonempty():
+    m = json.load(open(MANIFEST))
+    for a in m["artifacts"]:
+        p = os.path.join(ART, a["path"])
+        assert os.path.exists(p), a["name"]
+        assert os.path.getsize(p) > 1000

@@ -1,0 +1,226 @@
+"""L1 kernel correctness: Pallas block-circular conv vs two oracles.
+
+The core correctness signal of the whole stack — every HLO artifact embeds
+this kernel, so any disagreement here poisons everything downstream.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import c3a, ref
+
+ATOL = 2e-4
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.randn(*shape), jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "B,m,n,b",
+    [
+        (1, 1, 1, 1),
+        (2, 1, 1, 8),
+        (4, 2, 2, 16),
+        (8, 3, 5, 12),  # non-square block grid, non-pow2 b
+        (16, 4, 4, 32),
+        (3, 2, 2, 7),  # prime b
+        (128, 1, 1, 64),  # batch > tile
+    ],
+)
+def test_pallas_vs_oracles(B, m, n, b):
+    rng = np.random.RandomState(B * 1000 + m * 100 + n * 10 + b)
+    xb = rand(rng, B, n, b)
+    w = rand(rng, m, n, b)
+    got = c3a.block_circular_conv(xb, w)
+    want_fft = ref.conv_fft(xb, w)
+    want_dense = jnp.asarray(ref.conv_dense(xb, w))
+    np.testing.assert_allclose(got, want_fft, atol=ATOL)
+    np.testing.assert_allclose(got, want_dense, atol=ATOL)
+    np.testing.assert_allclose(want_fft, want_dense, atol=ATOL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    B=st.integers(1, 9),
+    m=st.integers(1, 4),
+    n=st.integers(1, 4),
+    b=st.sampled_from([1, 2, 3, 4, 5, 8, 11, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_vs_fft_hypothesis(B, m, n, b, seed):
+    rng = np.random.RandomState(seed)
+    xb = rand(rng, B, n, b)
+    w = rand(rng, m, n, b)
+    got = c3a.block_circular_conv(xb, w)
+    want = ref.conv_fft(xb, w)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+def test_time_domain_variant_matches():
+    rng = np.random.RandomState(0)
+    xb = rand(rng, 8, 3, 16)
+    w = rand(rng, 2, 3, 16)
+    np.testing.assert_allclose(
+        c3a.block_circular_conv_time(xb, w), ref.conv_fft(xb, w), atol=ATOL
+    )
+
+
+def test_single_block_equals_plain_circular_conv():
+    """m = n = 1 degenerates to the paper's §3.2 square case."""
+    rng = np.random.RandomState(3)
+    x = rand(rng, 5, 1, 24)
+    w = rand(rng, 1, 1, 24)
+    got = np.asarray(c3a.block_circular_conv(x, w))[:, 0]
+    C = ref.circulant(np.asarray(w)[0, 0])
+    want = np.asarray(x)[:, 0] @ C.T
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+def test_commutativity():
+    """w ⋆ x = x ⋆ w (paper §3.3 uses this for the backward pass)."""
+    rng = np.random.RandomState(4)
+    a = rand(rng, 1, 1, 32)
+    b_ = rand(rng, 1, 1, 32)
+    z1 = c3a.block_circular_conv(a, b_)  # [1,1,32] is both a batch and a kernel
+    z2 = c3a.block_circular_conv(b_, a)
+    np.testing.assert_allclose(z1, z2, atol=ATOL)
+
+
+def test_linearity_in_both_args():
+    rng = np.random.RandomState(5)
+    x1, x2 = rand(rng, 4, 2, 8), rand(rng, 4, 2, 8)
+    w = rand(rng, 3, 2, 8)
+    lhs = c3a.block_circular_conv(x1 + 2.0 * x2, w)
+    rhs = c3a.block_circular_conv(x1, w) + 2.0 * c3a.block_circular_conv(x2, w)
+    np.testing.assert_allclose(lhs, rhs, atol=ATOL)
+
+
+def test_identity_kernel_is_noop():
+    """w = e_0 in every diagonal block, zero off-diagonal -> z = x."""
+    rng = np.random.RandomState(6)
+    n, b = 3, 16
+    x = rand(rng, 4, n, b)
+    w = np.zeros((n, n, b), np.float32)
+    for i in range(n):
+        w[i, i, 0] = 1.0
+    np.testing.assert_allclose(c3a.block_circular_conv(x, jnp.asarray(w)), x, atol=ATOL)
+
+
+def test_shift_kernel_rolls():
+    """w = e_1 circularly shifts each block by one (convolution direction)."""
+    rng = np.random.RandomState(7)
+    b = 8
+    x = rand(rng, 2, 1, b)
+    w = np.zeros((1, 1, b), np.float32)
+    w[0, 0, 1] = 1.0
+    got = np.asarray(c3a.block_circular_conv(x, jnp.asarray(w)))
+    want = np.roll(np.asarray(x), 1, axis=-1)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+# --------------------------- gradients ---------------------------
+
+
+def test_custom_vjp_matches_fft_autodiff():
+    rng = np.random.RandomState(8)
+    B, m, n, b = 6, 3, 2, 12
+    xb, w = rand(rng, B, n, b), rand(rng, m, n, b)
+    t = rand(rng, B, m, b)
+
+    def loss_k(w_, x_):
+        return jnp.mean((c3a.block_circular_conv(x_, w_) - t) ** 2)
+
+    def loss_r(w_, x_):
+        return jnp.mean((ref.conv_fft(x_, w_) - t) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(w, xb)
+    gr = jax.grad(loss_r, argnums=(0, 1))(w, xb)
+    np.testing.assert_allclose(gk[0], gr[0], atol=ATOL)
+    np.testing.assert_allclose(gk[1], gr[1], atol=ATOL)
+
+
+def test_grad_numerical():
+    """Finite-difference check on a tiny case."""
+    rng = np.random.RandomState(9)
+    xb, w = rand(rng, 2, 1, 4), rand(rng, 1, 1, 4)
+
+    def f(w_):
+        return float(jnp.sum(c3a.block_circular_conv(xb, w_) ** 3))
+
+    g = jax.grad(lambda w_: jnp.sum(c3a.block_circular_conv(xb, w_) ** 3))(w)
+    eps = 1e-3
+    for i in range(4):
+        wp = np.asarray(w).copy()
+        wp[0, 0, i] += eps
+        wm = np.asarray(w).copy()
+        wm[0, 0, i] -= eps
+        num = (f(jnp.asarray(wp)) - f(jnp.asarray(wm))) / (2 * eps)
+        assert abs(num - float(g[0, 0, i])) < 5e-2, (i, num, float(g[0, 0, i]))
+
+
+def test_grad_through_second_order_not_required_but_jit_safe():
+    """jit(grad(...)) of the kernel lowers and executes."""
+    rng = np.random.RandomState(10)
+    xb, w = rand(rng, 4, 2, 8), rand(rng, 2, 2, 8)
+    g = jax.jit(jax.grad(lambda w_: jnp.sum(c3a.block_circular_conv(xb, w_) ** 2)))(w)
+    assert g.shape == w.shape and bool(jnp.all(jnp.isfinite(g)))
+
+
+# --------------------------- structure ---------------------------
+
+
+def test_materialize_delta_matches_block_circulant():
+    rng = np.random.RandomState(11)
+    w = rand(rng, 3, 2, 8)
+    np.testing.assert_allclose(
+        np.asarray(c3a.materialize_delta(w)), ref.block_circulant(np.asarray(w)), atol=ATOL
+    )
+
+
+def test_matvec_flattening_equivalence():
+    rng = np.random.RandomState(12)
+    w = rand(rng, 2, 3, 8)
+    x = rand(rng, 5, 3 * 8)
+    y1 = np.asarray(c3a.c3a_matvec(x, w))
+    y2 = np.asarray(x) @ ref.block_circulant(np.asarray(w)).T
+    np.testing.assert_allclose(y1, y2, atol=ATOL)
+
+
+def test_matvec_leading_axes():
+    rng = np.random.RandomState(13)
+    w = rand(rng, 2, 2, 8)
+    x = rand(rng, 3, 5, 16)
+    y = c3a.c3a_matvec(x, w)
+    assert y.shape == (3, 5, 16)
+    y2 = c3a.c3a_matvec(x.reshape(15, 16), w).reshape(3, 5, 16)
+    np.testing.assert_allclose(y, y2, atol=ATOL)
+
+
+def test_rank_full_for_generic_kernel():
+    rng = np.random.RandomState(14)
+    w = rng.randn(64)
+    assert ref.circulant_rank(w) == 64
+
+
+def test_rank_deficient_kernels():
+    # constant kernel -> rank 1 (only DC coefficient nonzero)
+    assert ref.circulant_rank(np.ones(16)) == 1
+    # zero-mean kernel kills the DC coefficient
+    w = np.random.RandomState(15).randn(16)
+    w -= w.mean()
+    assert ref.circulant_rank(w) == 15
+    # alternating +1/-1 -> single nonzero bin at Nyquist
+    alt = np.array([1.0, -1.0] * 8)
+    assert ref.circulant_rank(alt) == 1
+
+
+def test_vmem_footprint_fits_budget():
+    """The DESIGN.md TPU feasibility estimate: base config fits 16 MiB VMEM."""
+    # enc_base c3a_d8: d=128, b=16, m=n=8, batch tile 32
+    assert c3a.vmem_footprint(32, 8, 8, 16) < 16 * 2**20
+    # dec_large c3a: d=320, b=10, m=n=32
+    assert c3a.vmem_footprint(16, 32, 32, 10) < 16 * 2**20

@@ -1,0 +1,97 @@
+//! Operator-level benchmark (paper Table 1, measured half): dense matvec
+//! vs LoRA vs VeRA vs C3A block-circulant FFT matvec across dimensions.
+//! `harness = false` (criterion unavailable offline) — a seeded, warmup +
+//! repeated-timing harness with median-of-runs reporting.
+
+use c3a::substrate::circulant::BlockCirculant;
+use c3a::substrate::fft::Plan;
+use c3a::substrate::linalg::{matvec_into, LoRaDelta, VeraDelta};
+use c3a::substrate::prng::Rng;
+use std::time::Instant;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let mut times = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t0.elapsed().as_secs_f64() * 1e6 / iters as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = times[2];
+    println!("{name:<38} {med:>12.2} us/op");
+    med
+}
+
+fn main() {
+    println!("== bench_operator: Table 1 measured (single core) ==");
+    for d in [256usize, 1024, 4096] {
+        let mut rng = Rng::seed(d as u64);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        println!("\n-- d = {d} --");
+
+        // dense d x d matvec (the merged-weight upper bound)
+        let w: Vec<f64> = (0..d * d).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; d];
+        let dense = bench(&format!("dense {d}x{d}"), 20, || matvec_into(&w, d, d, &x, &mut y));
+
+        // lora r=8
+        let r = 8;
+        let lora = LoRaDelta {
+            a: (0..r * d).map(|_| rng.normal()).collect(),
+            b: (0..d * r).map(|_| rng.normal()).collect(),
+            r,
+            d_in: d,
+            d_out: d,
+            scale: 1.0,
+        };
+        let mut h = vec![0.0; r];
+        let lora_us = bench("lora r=8 delta", 100, || lora.matvec_into(&x, &mut h, &mut y));
+
+        // c3a at b = d/8 (same param budget as 2x lora) and b = d
+        for div in [1usize, 8] {
+            let b = d / div / 8 * 8; // keep divisible
+            let b = if b == 0 { d } else { d / div };
+            let m = d / b;
+            let bc = BlockCirculant::new(m, m, b, (0..m * m * b).map(|_| rng.normal()).collect());
+            let p = bc.prepared();
+            let mut out = vec![0.0; d];
+            bench(&format!("c3a b=d/{div} ({} params)", bc.param_count()), 50, || {
+                p.matvec_into(&x, &mut out)
+            });
+        }
+
+        // vera r_v = d
+        let rv = d;
+        let vera = VeraDelta {
+            a: (0..rv * d).map(|_| rng.normal()).collect(),
+            b: (0..d * rv).map(|_| rng.normal()).collect(),
+            ld: vec![0.1; rv],
+            lb: vec![1.0; d],
+            r_v: rv,
+            d_in: d,
+            d_out: d,
+        };
+        let vera_us = bench(&format!("vera r_v={rv} delta"), 10, || {
+            let _ = vera.matvec(&x);
+        });
+
+        // raw FFT throughput at the block size the paper favours
+        let b = d / 8;
+        let plan = Plan::new(b);
+        let sig: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+        bench(&format!("fft len {b}"), 200, || {
+            let _ = c3a::substrate::fft::rfft(&plan, &sig);
+        });
+
+        println!(
+            "ratios: vera/lora = {:.1}x, dense/lora = {:.1}x  (paper: vera >> lora ~ c3a)",
+            vera_us / lora_us,
+            dense / lora_us
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! End-to-end bench: train-step latency + eval throughput for each PEFT
+//! method on the real AOT artifacts — the measured backing for the
+//! paper's Table 2/3 efficiency columns.  `harness = false`.
+//!
+//! Skips gracefully when artifacts haven't been built.
+
+use c3a::coordinator::lr::Schedule;
+use c3a::coordinator::run::{self, Ctx};
+use c3a::coordinator::TrainCfg;
+use c3a::data::glue_sim::GlueTask;
+use c3a::peft::init::C3aScheme;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_tables: run `make artifacts` first");
+        return Ok(());
+    }
+    let ctx = Ctx::open("artifacts")?;
+    let steps = 12;
+    println!("== bench_tables: train-step latency (enc_base, {steps} steps each) ==");
+    println!("{:<10} {:>10} {:>12} {:>12}", "method", "#params", "ms/step", "vs lora");
+    let cfg = TrainCfg {
+        steps,
+        lr: 1e-3,
+        weight_decay: 0.0,
+        schedule: Schedule::Constant,
+        eval_every: 0,
+        patience: 0,
+        verbose: false,
+    };
+    let mut lora_ms = None;
+    for method in ["lora", "vera", "boft", "c3a_d1", "c3a_d8", "bitfit", "ia3", "full"] {
+        let r = run::glue_run(&ctx, "enc_base", method, GlueTask::Sst2, 0, &cfg, C3aScheme::Xavier)?;
+        if method == "lora" {
+            lora_ms = Some(r.step_ms);
+        }
+        println!(
+            "{:<10} {:>10} {:>12.1} {:>12.2}",
+            method,
+            r.n_params,
+            r.step_ms,
+            r.step_ms / lora_ms.unwrap_or(r.step_ms)
+        );
+    }
+    println!("\npaper shape: c3a within ~1.2x of lora; vera/boft/full slower.");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Typed run configuration, loadable from TOML-subset files (configs/).
+//!
+//! A config file fully describes one fine-tuning run — the `c3a train
+//! --config <file>` path used for scripted/reproducible runs, mirroring
+//! the flags of the ad-hoc CLI.
+
+use crate::coordinator::lr::Schedule;
+use crate::coordinator::trainer::TrainCfg;
+use crate::substrate::toml::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One declarative fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub method: String,
+    /// task spec, e.g. "glue:sst2", "mc:boolq", "gen:gsm_sim", "vision:pets"
+    pub task: String,
+    pub seed: u64,
+    pub init_scheme: String,
+    pub train: TrainCfg,
+}
+
+impl RunConfig {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<RunConfig> {
+        let doc = toml::parse(text)?;
+        let top = doc.get("").cloned().unwrap_or_default();
+        let gets = |m: &std::collections::BTreeMap<String, Value>, k: &str| -> Option<String> {
+            m.get(k).and_then(|v| v.as_str().map(str::to_string))
+        };
+        let model = gets(&top, "model").context("config: `model` required")?;
+        let method = gets(&top, "method").context("config: `method` required")?;
+        let task = gets(&top, "task").context("config: `task` required")?;
+        let seed = top.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+        let init_scheme = gets(&top, "init").unwrap_or_else(|| "xavier".into());
+
+        let t = doc.get("train").cloned().unwrap_or_default();
+        let mut train = crate::coordinator::run::default_cfg(&method, 100);
+        if let Some(v) = t.get("steps").and_then(|v| v.as_i64()) {
+            train.steps = v as usize;
+        }
+        if let Some(v) = t.get("lr").and_then(|v| v.as_f64()) {
+            train.lr = v;
+        }
+        if let Some(v) = t.get("weight_decay").and_then(|v| v.as_f64()) {
+            train.weight_decay = v;
+        }
+        if let Some(v) = t.get("eval_every").and_then(|v| v.as_i64()) {
+            train.eval_every = v as usize;
+        }
+        if let Some(v) = t.get("patience").and_then(|v| v.as_i64()) {
+            train.patience = v as usize;
+        }
+        if let Some(sched) = t.get("schedule").and_then(|v| v.as_str()) {
+            let warmup = t.get("warmup_frac").and_then(|v| v.as_f64()).unwrap_or(0.06);
+            train.schedule = Schedule::parse(sched, warmup)
+                .with_context(|| format!("unknown schedule {sched}"))?;
+        }
+        if train.steps == 0 {
+            bail!("config: steps must be > 0");
+        }
+        Ok(RunConfig { model, method, task, seed, init_scheme, train })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+model = "enc_tiny"
+method = "c3a_d8"
+task = "glue:sst2"
+seed = 3
+init = "kaiming"
+
+[train]
+steps = 120
+lr = 0.05
+weight_decay = 0.01
+schedule = "cosine"
+warmup_frac = 0.1
+eval_every = 40
+patience = 2
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let c = RunConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.model, "enc_tiny");
+        assert_eq!(c.method, "c3a_d8");
+        assert_eq!(c.task, "glue:sst2");
+        assert_eq!(c.seed, 3);
+        assert_eq!(c.init_scheme, "kaiming");
+        assert_eq!(c.train.steps, 120);
+        assert_eq!(c.train.lr, 0.05);
+        assert_eq!(c.train.patience, 2);
+        assert_eq!(c.train.schedule, Schedule::Cosine { warmup_frac: 0.1 });
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = RunConfig::parse("model = \"m\"\nmethod = \"lora\"\ntask = \"glue:rte\"").unwrap();
+        assert_eq!(c.seed, 0);
+        assert_eq!(c.init_scheme, "xavier");
+        assert!(c.train.steps > 0);
+        assert_eq!(c.train.lr, crate::coordinator::run::default_lr("lora"));
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(RunConfig::parse("model = \"m\"").is_err());
+        assert!(RunConfig::parse("model = \"m\"\nmethod = \"x\"\ntask = \"t\"\n[train]\nsteps = 0").is_err());
+    }
+
+    #[test]
+    fn bad_schedule_rejected() {
+        let bad = "model=\"m\"\nmethod=\"lora\"\ntask=\"glue:rte\"\n[train]\nschedule = \"warp\"";
+        assert!(RunConfig::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,56 @@
+//! Checkpoint I/O: pretrained backbones and adapter snapshots, in the
+//! C3AT container (substrate::tensor).  Atomic writes; versioned names.
+
+use crate::substrate::tensor::{self, TensorMap};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Where a model's pretrained backbone checkpoint lives.
+pub fn pretrained_path(artifacts_dir: &Path, model: &str) -> PathBuf {
+    artifacts_dir.join(format!("{model}_pretrained.bin"))
+}
+
+pub fn save(path: &Path, tensors: &TensorMap) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    tensor::save(path, tensors)
+}
+
+pub fn load(path: &Path) -> Result<TensorMap> {
+    tensor::load(path)
+}
+
+/// Load the pretrained backbone for `model`, falling back to the python
+/// init bin when no pretraining run has happened yet.
+pub fn load_backbone(artifacts_dir: &Path, model: &str, init_path: &Path) -> Result<(TensorMap, bool)> {
+    let pre = pretrained_path(artifacts_dir, model);
+    if pre.exists() {
+        Ok((load(&pre)?, true))
+    } else {
+        Ok((load(init_path)?, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::tensor::Tensor;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("c3a_ckpt_test");
+        let p = dir.join("x.bin");
+        let mut m = TensorMap::new();
+        m.insert("w".into(), Tensor::from_f32(vec![2], &[1.0, 2.0]));
+        save(&p, &m).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back["w"].as_f32(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn pretrained_path_convention() {
+        let p = pretrained_path(Path::new("artifacts"), "enc_base");
+        assert_eq!(p, Path::new("artifacts/enc_base_pretrained.bin"));
+    }
+}

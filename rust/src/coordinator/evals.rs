@@ -1,0 +1,169 @@
+//! Task-family evaluation drivers: batch the test split through an
+//! EvalSession and compute the paper's metric on the host.
+
+use crate::data::gen_sim::GenDataset;
+use crate::data::glue_sim::GlueTask;
+use crate::data::instr_sim::{McDataset, OPT0};
+use crate::data::vision_sim::VisionDataset;
+use crate::data::{ClsDataset, PAD};
+use crate::metrics;
+use crate::runtime::session::EvalSession;
+use crate::substrate::tensor::{Tensor, TensorMap};
+use anyhow::Result;
+
+/// Evaluate an encoder classification/regression dataset; returns the
+/// task's paper metric (acc / MCC / PCC).
+pub fn eval_glue(
+    session: &EvalSession,
+    trainable: &TensorMap,
+    ds: &ClsDataset,
+    task: GlueTask,
+) -> Result<f64> {
+    let b = session.spec().batch;
+    let s = session.spec().seq;
+    let n = ds.len();
+    let mut preds_c = Vec::with_capacity(n);
+    let mut preds_r = Vec::with_capacity(n);
+    let mut start = 0;
+    while start < n {
+        let idx: Vec<usize> = (start..(start + b).min(n)).collect();
+        let count = idx.len();
+        let batch = ds.eval_batch(&idx, b, s);
+        let (logits, shape) = session.logits(trainable, &batch)?;
+        let width = shape[1];
+        for slot in 0..count {
+            let row = &logits[slot * width..(slot + 1) * width];
+            if task.is_regression() {
+                preds_r.push(row[0] as f64);
+            } else {
+                preds_c.push(crate::substrate::linalg::argmax(row));
+            }
+        }
+        start += b;
+    }
+    let golds: Vec<usize> = ds.labels.iter().map(|&v| v as usize).collect();
+    Ok(match task {
+        GlueTask::Cola => metrics::mcc(&preds_c, &golds),
+        GlueTask::Stsb => {
+            let gold_f: Vec<f64> = ds.labels.iter().map(|&v| v as f64).collect();
+            metrics::pearson(&preds_r, &gold_f)
+        }
+        _ => metrics::accuracy(&preds_c, &golds),
+    })
+}
+
+/// Multiple-choice accuracy: score option-token logits at the answer slot.
+pub fn eval_mc(session: &EvalSession, trainable: &TensorMap, ds: &McDataset) -> Result<f64> {
+    let b = session.spec().batch;
+    let s = session.spec().seq;
+    let n = ds.len();
+    let mut correct = 0usize;
+    let mut start = 0;
+    while start < n {
+        let idx: Vec<usize> = (start..(start + b).min(n)).collect();
+        let count = idx.len();
+        let batch = ds.eval_batch(&idx, b, s);
+        let (logits, shape) = session.logits(trainable, &batch)?;
+        let (seq_len, vocab) = (shape[1], shape[2]);
+        for (slot, &i) in idx.iter().enumerate().take(count) {
+            let ex = &ds.examples[i];
+            if ex.answer_pos == 0 || ex.answer_pos > seq_len {
+                continue;
+            }
+            // logits at the position predicting the answer token
+            let pos = ex.answer_pos - 1;
+            let row = &logits[(slot * seq_len + pos) * vocab..(slot * seq_len + pos + 1) * vocab];
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for o in 0..ex.n_options {
+                let v = row[(OPT0 as usize) + o];
+                if v > best.0 {
+                    best = (v, o);
+                }
+            }
+            if best.1 == ex.gold {
+                correct += 1;
+            }
+        }
+        start += b;
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Greedy-decode exact match (math/code-sim Pass@1).  Decodes exactly
+/// `answer.len()` tokens per example by iterative forward passes.
+pub fn eval_gen(session: &EvalSession, trainable: &TensorMap, ds: &GenDataset) -> Result<f64> {
+    let b = session.spec().batch;
+    let s = session.spec().seq;
+    let n = ds.len();
+    let mut preds = Vec::with_capacity(n);
+    let mut golds = Vec::with_capacity(n);
+    let mut start = 0;
+    while start < n {
+        let idx: Vec<usize> = (start..(start + b).min(n)).collect();
+        let count = idx.len();
+        // working token buffer seeded with prompts only
+        let mut toks = vec![PAD; b * s];
+        let mut cursor = vec![0usize; b]; // next position to fill
+        let mut remaining = vec![0usize; b];
+        for (slot, &i) in idx.iter().enumerate() {
+            let ex = &ds.examples[i];
+            let np = ex.prompt.len().min(s);
+            toks[slot * s..slot * s + np].copy_from_slice(&ex.prompt[..np]);
+            cursor[slot] = np;
+            remaining[slot] = ex.answer.len().min(s - np);
+        }
+        let max_steps = remaining.iter().copied().max().unwrap_or(0);
+        let mut decoded: Vec<Vec<i32>> = vec![Vec::new(); b];
+        for _ in 0..max_steps {
+            let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+            let (logits, shape) = session.logits(trainable, &batch)?;
+            let (seq_len, vocab) = (shape[1], shape[2]);
+            for slot in 0..count {
+                if remaining[slot] == 0 {
+                    continue;
+                }
+                let pos = cursor[slot] - 1; // predict token at cursor from pos
+                let row = &logits[(slot * seq_len + pos) * vocab..(slot * seq_len + pos + 1) * vocab];
+                // never emit PAD/CLS: restrict to ids >= 4
+                let mut best = (f32::NEG_INFINITY, 4usize);
+                for (t, &v) in row.iter().enumerate().skip(4) {
+                    if v > best.0 {
+                        best = (v, t);
+                    }
+                }
+                toks[slot * s + cursor[slot]] = best.1 as i32;
+                decoded[slot].push(best.1 as i32);
+                cursor[slot] += 1;
+                remaining[slot] -= 1;
+            }
+        }
+        for (slot, &i) in idx.iter().enumerate().take(count) {
+            preds.push(decoded[slot].clone());
+            golds.push(ds.examples[i].answer.clone());
+        }
+        start += b;
+    }
+    Ok(metrics::exact_match(&preds, &golds))
+}
+
+/// Vision-sim accuracy.
+pub fn eval_vision(session: &EvalSession, trainable: &TensorMap, ds: &VisionDataset) -> Result<f64> {
+    let b = session.spec().batch;
+    let n = ds.len();
+    let mut preds = Vec::with_capacity(n);
+    let mut start = 0;
+    while start < n {
+        let idx: Vec<usize> = (start..(start + b).min(n)).collect();
+        let count = idx.len();
+        let batch = ds.eval_batch(&idx, b);
+        let (logits, shape) = session.logits(trainable, &batch)?;
+        let width = shape[1];
+        for slot in 0..count {
+            preds.push(crate::substrate::linalg::argmax(
+                &logits[slot * width..slot * width + ds.n_classes],
+            ));
+        }
+        start += b;
+    }
+    Ok(metrics::accuracy(&preds, &ds.labels))
+}

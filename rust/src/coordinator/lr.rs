@@ -1,0 +1,92 @@
+//! Learning-rate schedules (computed host-side; the scalar is a step input
+//! to the AOT train step, so one artifact serves every schedule).
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// linear warmup then linear decay to zero (paper's GLUE setup)
+    LinearWarmup { warmup_frac: f64 },
+    /// linear warmup then cosine decay (paper's instruction setup)
+    Cosine { warmup_frac: f64 },
+}
+
+impl Schedule {
+    pub fn parse(s: &str, warmup_frac: f64) -> Option<Schedule> {
+        Some(match s {
+            "constant" | "none" => Schedule::Constant,
+            "linear" => Schedule::LinearWarmup { warmup_frac },
+            "cosine" => Schedule::Cosine { warmup_frac },
+            _ => return None,
+        })
+    }
+
+    /// LR multiplier at `step` (0-based) of `total` steps.
+    pub fn factor(&self, step: usize, total: usize) -> f64 {
+        let total = total.max(1);
+        let t = step as f64 / total as f64;
+        match *self {
+            Schedule::Constant => 1.0,
+            Schedule::LinearWarmup { warmup_frac } => {
+                if t < warmup_frac {
+                    (t / warmup_frac.max(1e-9)).min(1.0)
+                } else {
+                    ((1.0 - t) / (1.0 - warmup_frac).max(1e-9)).max(0.0)
+                }
+            }
+            Schedule::Cosine { warmup_frac } => {
+                if t < warmup_frac {
+                    (t / warmup_frac.max(1e-9)).min(1.0)
+                } else {
+                    let u = (t - warmup_frac) / (1.0 - warmup_frac).max(1e-9);
+                    0.5 * (1.0 + (std::f64::consts::PI * u).cos())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        assert_eq!(Schedule::Constant.factor(5, 100), 1.0);
+    }
+
+    #[test]
+    fn linear_warms_and_decays() {
+        let s = Schedule::LinearWarmup { warmup_frac: 0.1 };
+        assert!(s.factor(0, 100) < 0.05);
+        assert!((s.factor(10, 100) - 1.0).abs() < 0.01);
+        assert!(s.factor(99, 100) < 0.05);
+        // monotone decay after warmup
+        let mut prev = s.factor(10, 100);
+        for step in 11..100 {
+            let f = s.factor(step, 100);
+            assert!(f <= prev + 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn cosine_ends_near_zero() {
+        let s = Schedule::Cosine { warmup_frac: 0.05 };
+        assert!(s.factor(99, 100) < 0.01);
+        assert!((s.factor(5, 100) - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn factors_bounded() {
+        for sched in [
+            Schedule::Constant,
+            Schedule::LinearWarmup { warmup_frac: 0.06 },
+            Schedule::Cosine { warmup_frac: 0.03 },
+        ] {
+            for step in 0..200 {
+                let f = sched.factor(step, 200);
+                assert!((0.0..=1.0 + 1e-12).contains(&f));
+            }
+        }
+    }
+}

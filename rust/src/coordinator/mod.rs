@@ -1,0 +1,10 @@
+//! L3 coordinator: the training/evaluation orchestrator that drives the
+//! AOT artifacts through PJRT.  Python never runs here.
+
+pub mod checkpoint;
+pub mod evals;
+pub mod lr;
+pub mod run;
+pub mod trainer;
+
+pub use trainer::{TrainCfg, TrainOutcome, Trainer};

@@ -1,0 +1,101 @@
+//! The paper's Fig. 4 / Fig. A1 synthetic dataset: 8 Gaussian clusters on
+//! a 2-D plane, 30 points each, classified by a 3-layer MLP whose middle
+//! layer is dense / LoRA(r=1) / C3A(b=128/2).
+
+use crate::substrate::prng::Rng;
+use crate::substrate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct ClusterData {
+    pub x: Vec<[f32; 2]>,
+    pub y: Vec<usize>,
+    pub centers: Vec<[f32; 2]>,
+}
+
+/// Paper setup: 8 centers, 30 samples each.
+pub fn generate(seed: u64) -> ClusterData {
+    generate_with(seed, 8, 30, 2.5, 0.35)
+}
+
+pub fn generate_with(seed: u64, k: usize, per: usize, radius: f64, sigma: f64) -> ClusterData {
+    let mut rng = Rng::seed(seed ^ 0xC1u64);
+    let centers: Vec<[f32; 2]> = (0..k)
+        .map(|i| {
+            let ang = 2.0 * std::f64::consts::PI * i as f64 / k as f64;
+            [(radius * ang.cos()) as f32, (radius * ang.sin()) as f32]
+        })
+        .collect();
+    let mut x = Vec::with_capacity(k * per);
+    let mut y = Vec::with_capacity(k * per);
+    for (c, ctr) in centers.iter().enumerate() {
+        for _ in 0..per {
+            x.push([
+                ctr[0] + (rng.normal() * sigma) as f32,
+                ctr[1] + (rng.normal() * sigma) as f32,
+            ]);
+            y.push(c);
+        }
+    }
+    // shuffle
+    let perm = rng.permutation(x.len());
+    let x = perm.iter().map(|&i| x[i]).collect();
+    let y = perm.iter().map(|&i| y[i]).collect();
+    ClusterData { x, y, centers }
+}
+
+impl ClusterData {
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    /// Batch -> (x [B,2] f32, y [B] i32); wraps indices cyclically.
+    pub fn batch(&self, start: usize, b: usize) -> Vec<Tensor> {
+        let mut xs = vec![0f32; b * 2];
+        let mut ys = vec![0i32; b];
+        for s in 0..b {
+            let i = (start + s) % self.len();
+            xs[2 * s] = self.x[i][0];
+            xs[2 * s + 1] = self.x[i][1];
+            ys[s] = self.y[i] as i32;
+        }
+        vec![Tensor::from_f32(vec![b, 2], &xs), Tensor::from_i32(vec![b], &ys)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape() {
+        let d = generate(0);
+        assert_eq!(d.len(), 240);
+        assert_eq!(d.centers.len(), 8);
+        let mut counts = [0usize; 8];
+        for &c in &d.y {
+            counts[c] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 30));
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        let d = generate(1);
+        // every point is closer to its own center than to the opposite one
+        let mut ok = 0;
+        for (p, &c) in d.x.iter().zip(&d.y) {
+            let own = d.centers[c];
+            let opp = d.centers[(c + 4) % 8];
+            let d_own = (p[0] - own[0]).powi(2) + (p[1] - own[1]).powi(2);
+            let d_opp = (p[0] - opp[0]).powi(2) + (p[1] - opp[1]).powi(2);
+            if d_own < d_opp {
+                ok += 1;
+            }
+        }
+        assert!(ok as f64 / d.len() as f64 > 0.99);
+    }
+}

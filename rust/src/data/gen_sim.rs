@@ -1,0 +1,230 @@
+//! Generation-sim: math-reasoning and code-synthesis proxies for the
+//! paper's Table 4 (GSM8K / MATH, HumanEval / MBPP ± Plus).
+//!
+//! Each example is a prompt followed by a multi-token answer region; the
+//! LM is fine-tuned with loss over the answer tokens and evaluated by
+//! greedy decoding + exact match — the same protocol shape as the paper's
+//! chain-of-thought / Pass@1 evaluation.
+//!
+//! Digits are tokens DIGIT0..DIGIT0+9; operators come after.
+
+use super::{Splits, CLS, PAD, SEP};
+use crate::substrate::prng::Rng;
+use crate::substrate::tensor::Tensor;
+
+pub const DIGIT0: i32 = 4; // digits 0-9 at ids 4..14
+pub const OP_ADD: i32 = 14;
+pub const OP_MUL: i32 = 15;
+pub const OP_EQ: i32 = 16;
+pub const SYM0: i32 = 20; // code-sim symbol band
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GenTask {
+    /// GSM8K-sim: a + b*c, two-digit operands
+    Gsm,
+    /// MATH-sim: (a + b*c) mod 10 chain, longer
+    Math,
+    /// HumanEval-sim: reverse the symbol sequence
+    HumanEval,
+    /// HumanEval+-sim: reverse, longer sequences (stricter)
+    HumanEvalPlus,
+    /// MBPP-sim: duplicate each symbol
+    Mbpp,
+    /// MBPP+-sim: duplicate, longer
+    MbppPlus,
+}
+
+impl GenTask {
+    pub const MATH_ALL: [GenTask; 2] = [GenTask::Gsm, GenTask::Math];
+    pub const CODE_ALL: [GenTask; 4] =
+        [GenTask::HumanEval, GenTask::HumanEvalPlus, GenTask::Mbpp, GenTask::MbppPlus];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GenTask::Gsm => "gsm_sim",
+            GenTask::Math => "math_sim",
+            GenTask::HumanEval => "humaneval_sim",
+            GenTask::HumanEvalPlus => "humaneval_plus_sim",
+            GenTask::Mbpp => "mbpp_sim",
+            GenTask::MbppPlus => "mbpp_plus_sim",
+        }
+    }
+}
+
+/// Prompt + gold answer tokens.
+#[derive(Clone, Debug)]
+pub struct GenExample {
+    /// prompt tokens, ending with OP_EQ / SEP
+    pub prompt: Vec<i32>,
+    /// gold answer tokens (not part of the prompt)
+    pub answer: Vec<i32>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct GenDataset {
+    pub examples: Vec<GenExample>,
+}
+
+impl GenDataset {
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// Train batch: (tokens [B,S] = prompt ++ answer, loss_mask over the
+    /// positions that *predict* answer tokens).
+    pub fn batch(&self, idx: &[usize], b: usize, s: usize) -> Vec<Tensor> {
+        let mut toks = vec![PAD; b * s];
+        let mut mask = vec![0f32; b * s];
+        for slot in 0..b {
+            let &i = idx.get(slot).unwrap_or(&idx[0]);
+            let ex = &self.examples[i];
+            let mut seqv = ex.prompt.clone();
+            seqv.extend(&ex.answer);
+            let n = seqv.len().min(s);
+            toks[slot * s..slot * s + n].copy_from_slice(&seqv[..n]);
+            let a0 = ex.prompt.len();
+            for j in a0..n {
+                mask[slot * s + j - 1] = 1.0; // predicting token j from j-1
+            }
+        }
+        vec![Tensor::from_i32(vec![b, s], &toks), Tensor::from_f32(vec![b, s], &mask)]
+    }
+}
+
+fn digits_of(mut v: i64) -> Vec<i32> {
+    if v == 0 {
+        return vec![DIGIT0];
+    }
+    let mut out = Vec::new();
+    while v > 0 {
+        out.push(DIGIT0 + (v % 10) as i32);
+        v /= 10;
+    }
+    out.reverse();
+    out
+}
+
+fn generate(task: GenTask, rng: &mut Rng) -> GenExample {
+    match task {
+        GenTask::Gsm | GenTask::Math => {
+            let hi = if task == GenTask::Gsm { 50 } else { 90 };
+            let a = rng.below(hi) as i64;
+            let b = rng.below(9) as i64 + 1;
+            let c = rng.below(9) as i64 + 1;
+            let mut prompt = vec![CLS];
+            prompt.extend(digits_of(a));
+            prompt.push(OP_ADD);
+            prompt.extend(digits_of(b));
+            prompt.push(OP_MUL);
+            prompt.extend(digits_of(c));
+            let mut result = a + b * c;
+            if task == GenTask::Math {
+                // extra step: multiply by d then keep mod 100 (harder carry)
+                let d = rng.below(9) as i64 + 1;
+                prompt.push(OP_MUL);
+                prompt.extend(digits_of(d));
+                result = (result * d) % 100;
+            }
+            prompt.push(OP_EQ);
+            GenExample { prompt, answer: digits_of(result) }
+        }
+        GenTask::HumanEval | GenTask::HumanEvalPlus | GenTask::Mbpp | GenTask::MbppPlus => {
+            let plus = matches!(task, GenTask::HumanEvalPlus | GenTask::MbppPlus);
+            let len = if plus { 6 + rng.below(5) } else { 3 + rng.below(4) };
+            let sym: Vec<i32> = (0..len).map(|_| SYM0 + rng.below(12) as i32).collect();
+            let answer: Vec<i32> = match task {
+                GenTask::HumanEval | GenTask::HumanEvalPlus => sym.iter().rev().copied().collect(),
+                _ => sym.iter().flat_map(|&t| [t, t]).collect(),
+            };
+            let mut prompt = vec![CLS];
+            prompt.extend(&sym);
+            prompt.push(SEP);
+            GenExample { prompt, answer }
+        }
+    }
+}
+
+pub fn splits(task: GenTask, seed: u64, n_train: usize) -> Splits<GenDataset> {
+    let mut rng = Rng::seed(seed ^ (task as u64).wrapping_mul(0x2545F4914F6CDD1D));
+    let gen = |n: usize, rng: &mut Rng| GenDataset {
+        examples: (0..n).map(|_| generate(task, rng)).collect(),
+    };
+    Splits {
+        train: gen(n_train, &mut rng),
+        val: gen(96, &mut rng),
+        test: gen(192, &mut rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gsm_answers_are_correct_arithmetic() {
+        let s = splits(GenTask::Gsm, 0, 100);
+        for ex in &s.train.examples {
+            // parse back: CLS d+ OP_ADD d+ OP_MUL d+ OP_EQ
+            let body = &ex.prompt[1..ex.prompt.len() - 1];
+            let parts: Vec<Vec<i64>> = body
+                .split(|&t| t == OP_ADD || t == OP_MUL)
+                .map(|p| p.iter().map(|&d| (d - DIGIT0) as i64).collect())
+                .collect();
+            let num = |ds: &Vec<i64>| ds.iter().fold(0i64, |a, &d| a * 10 + d);
+            let want = num(&parts[0]) + num(&parts[1]) * num(&parts[2]);
+            let got = ex.answer.iter().fold(0i64, |a, &d| a * 10 + (d - DIGIT0) as i64);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn code_tasks_transform_correctly() {
+        let s = splits(GenTask::HumanEval, 1, 50);
+        for ex in &s.train.examples {
+            let sym = &ex.prompt[1..ex.prompt.len() - 1];
+            let want: Vec<i32> = sym.iter().rev().copied().collect();
+            assert_eq!(ex.answer, want);
+        }
+        let s = splits(GenTask::Mbpp, 2, 50);
+        for ex in &s.train.examples {
+            let sym = &ex.prompt[1..ex.prompt.len() - 1];
+            let want: Vec<i32> = sym.iter().flat_map(|&t| [t, t]).collect();
+            assert_eq!(ex.answer, want);
+        }
+    }
+
+    #[test]
+    fn plus_variants_are_longer() {
+        let a = splits(GenTask::HumanEval, 3, 200);
+        let b = splits(GenTask::HumanEvalPlus, 3, 200);
+        let mean = |d: &GenDataset| {
+            d.examples.iter().map(|e| e.answer.len()).sum::<usize>() as f64 / d.len() as f64
+        };
+        assert!(mean(&b.train) > mean(&a.train));
+    }
+
+    #[test]
+    fn batch_mask_covers_answers_only() {
+        let s = splits(GenTask::Gsm, 4, 8);
+        let b = s.train.batch(&(0..8).collect::<Vec<_>>(), 8, 48);
+        let toks = b[0].as_i32();
+        let mask = b[1].as_f32();
+        for (slot, ex) in s.train.examples.iter().enumerate() {
+            let total = ex.prompt.len() + ex.answer.len();
+            let masked: usize =
+                (0..48).filter(|&j| mask[slot * 48 + j] > 0.0).count();
+            assert_eq!(masked, ex.answer.len().min(48 - ex.prompt.len()));
+            // mask positions predict answer tokens
+            for j in 0..48 {
+                if mask[slot * 48 + j] > 0.0 {
+                    assert!(j + 1 >= ex.prompt.len() && j + 1 < total);
+                    assert_ne!(toks[slot * 48 + j + 1], PAD);
+                }
+            }
+        }
+    }
+}

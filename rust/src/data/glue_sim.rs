@@ -1,0 +1,297 @@
+//! GLUE-sim: six procedural tasks mirroring the paper's Table 2 columns
+//! (SST-2, MRPC, CoLA, QNLI, RTE, STS-B) — same task types and metrics.
+//!
+//! Every task is *learnable from token statistics alone* (the latent rule
+//! is a deterministic function of token ids under a seeded permutation),
+//! so a small pretrained encoder separates methods by adapter capacity —
+//! which is what Table 2 compares.
+
+use super::{sample_content, ClsDataset, Splits, CLS, CONTENT0, SEP};
+use crate::substrate::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GlueTask {
+    Sst2,
+    Mrpc,
+    Cola,
+    Qnli,
+    Rte,
+    Stsb,
+}
+
+impl GlueTask {
+    pub const ALL: [GlueTask; 6] =
+        [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Cola, GlueTask::Qnli, GlueTask::Rte, GlueTask::Stsb];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GlueTask::Sst2 => "sst2",
+            GlueTask::Mrpc => "mrpc",
+            GlueTask::Cola => "cola",
+            GlueTask::Qnli => "qnli",
+            GlueTask::Rte => "rte",
+            GlueTask::Stsb => "stsb",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GlueTask> {
+        Self::ALL.into_iter().find(|t| t.name() == s)
+    }
+
+    /// Paper metric for this task.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            GlueTask::Cola => "mcc",
+            GlueTask::Stsb => "pcc",
+            _ => "acc",
+        }
+    }
+
+    pub fn is_regression(self) -> bool {
+        self == GlueTask::Stsb
+    }
+
+    /// Artifact head for this task.
+    pub fn head(self) -> &'static str {
+        if self.is_regression() {
+            "reg"
+        } else {
+            "cls"
+        }
+    }
+
+    /// Generate the standard splits.
+    pub fn splits(self, vocab: usize, seq: usize, seed: u64) -> Splits<ClsDataset> {
+        let mut rng = Rng::seed(seed ^ g_hash(self.name()));
+        let gen = |rng: &mut Rng, n: usize| generate(self, vocab, seq, n, rng);
+        Splits {
+            train: gen(&mut rng, super::GLUE_TRAIN),
+            val: gen(&mut rng, super::GLUE_VAL),
+            test: gen(&mut rng, super::GLUE_TEST),
+        }
+    }
+}
+
+/// FNV-1a over the task name: decorrelates per-task RNG streams.
+fn g_hash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn generate(task: GlueTask, vocab: usize, seq: usize, n: usize, rng: &mut Rng) -> ClsDataset {
+    let mut ds = ClsDataset {
+        regression: task.is_regression(),
+        n_classes: 2,
+        ..Default::default()
+    };
+    // hidden per-token valence in {-1, 0, +1}: a seeded permutation of ids
+    let content = vocab - CONTENT0 as usize;
+    let mut val_rng = Rng::seed(0xC3A0 ^ task as u64);
+    let valence: Vec<i32> = (0..content).map(|_| val_rng.below(3) as i32 - 1).collect();
+    let max_body = seq - 1;
+
+    for _ in 0..n {
+        match task {
+            GlueTask::Sst2 => {
+                // sentiment = sign of summed valence (resample ties)
+                loop {
+                    let len = 5 + rng.below(max_body - 5);
+                    let toks = sample_content(rng, vocab, len);
+                    let score: i32 =
+                        toks.iter().map(|&t| valence[(t - CONTENT0) as usize]).sum();
+                    if score == 0 {
+                        continue;
+                    }
+                    let mut s = vec![CLS];
+                    s.extend(toks);
+                    ds.tokens.push(s);
+                    ds.labels.push(if score > 0 { 1.0 } else { 0.0 });
+                    break;
+                }
+            }
+            GlueTask::Mrpc => {
+                // paraphrase: B reuses A's tokens (shuffled) vs B drawn fresh —
+                // detectable from cross-segment token overlap
+                let la = 4 + rng.below((max_body - 3) / 2 - 4);
+                let a = sample_content(rng, vocab, la);
+                let pos = rng.below(2) == 1;
+                let b = if pos {
+                    let p = rng.permutation(a.len());
+                    p.into_iter().map(|i| a[i]).collect()
+                } else {
+                    // fresh tokens, guaranteed disjoint from A
+                    let mut b = Vec::with_capacity(la);
+                    while b.len() < la {
+                        let t = sample_content(rng, vocab, 1)[0];
+                        if !a.contains(&t) {
+                            b.push(t);
+                        }
+                    }
+                    b
+                };
+                let mut s = vec![CLS];
+                s.extend(&a);
+                s.push(SEP);
+                s.extend(&b);
+                ds.tokens.push(s);
+                ds.labels.push(pos as i32 as f32);
+            }
+            GlueTask::Cola => {
+                // "grammar": a seeded 12.5% of the vocabulary is ungrammatical
+                // ("agreement violations"); a sentence is acceptable iff it
+                // contains none of them.  MCC metric as in the paper.
+                let banned = |t: i32| (t - CONTENT0) % 8 == 3;
+                let len = 6 + rng.below(max_body - 6);
+                let ok = rng.below(2) == 1;
+                let mut toks = Vec::with_capacity(len);
+                while toks.len() < len {
+                    let t = sample_content(rng, vocab, 1)[0];
+                    if !banned(t) {
+                        toks.push(t);
+                    }
+                }
+                if !ok {
+                    // inject 1-2 violations
+                    for _ in 0..1 + rng.below(2) {
+                        let p = rng.below(len);
+                        let mut t;
+                        loop {
+                            t = sample_content(rng, vocab, 1)[0];
+                            if banned(t) {
+                                break;
+                            }
+                        }
+                        toks[p] = t;
+                    }
+                }
+                let mut s = vec![CLS];
+                s.extend(toks);
+                ds.tokens.push(s);
+                ds.labels.push(ok as i32 as f32);
+            }
+            GlueTask::Qnli => {
+                // question token q; passage "answers" q iff partner(q) present
+                let lp = 6 + rng.below(max_body - 3 - 6);
+                let mut passage = sample_content(rng, vocab, lp);
+                let q = sample_content(rng, vocab, 1)[0];
+                let pos = rng.below(2) == 1;
+                passage.retain(|&t| t != q);
+                if pos {
+                    let at = rng.below(passage.len().max(1));
+                    passage.insert(at.min(passage.len()), q);
+                }
+                let mut s = vec![CLS, q, SEP];
+                s.extend(passage);
+                ds.tokens.push(s);
+                ds.labels.push(pos as i32 as f32);
+            }
+            GlueTask::Rte => {
+                // entailment: hypothesis ⊆ premise  vs  hypothesis ⊄ premise
+                let lp = 8 + rng.below((max_body - 1) / 2 - 6);
+                let premise = sample_content(rng, vocab, lp);
+                let lh = 2 + rng.below(2);
+                let pos = rng.below(2) == 1;
+                let hyp: Vec<i32> = if pos {
+                    rng.choose(premise.len(), lh).into_iter().map(|i| premise[i]).collect()
+                } else {
+                    // every hypothesis token novel — "new information"
+                    let mut h = Vec::with_capacity(lh);
+                    while h.len() < lh {
+                        let t = sample_content(rng, vocab, 1)[0];
+                        if !premise.contains(&t) {
+                            h.push(t);
+                        }
+                    }
+                    h
+                };
+                let mut s = vec![CLS];
+                s.extend(&premise);
+                s.push(SEP);
+                s.extend(&hyp);
+                ds.tokens.push(s);
+                ds.labels.push(pos as i32 as f32);
+            }
+            GlueTask::Stsb => {
+                // similarity score in [0,5]: 5 × |A∩B| / |A∪B| of content sets
+                let la = 5 + rng.below((max_body - 1) / 2 - 5);
+                let a = sample_content(rng, vocab, la);
+                let keep = rng.below(la + 1);
+                let kept: Vec<i32> =
+                    rng.choose(la, keep).into_iter().map(|i| a[i]).collect();
+                let mut b = kept.clone();
+                b.extend(sample_content(rng, vocab, la - keep));
+                use std::collections::BTreeSet;
+                let sa: BTreeSet<i32> = a.iter().copied().collect();
+                let sb: BTreeSet<i32> = b.iter().copied().collect();
+                let inter = sa.intersection(&sb).count() as f32;
+                let union = sa.union(&sb).count() as f32;
+                let score = 5.0 * inter / union.max(1.0);
+                let mut s = vec![CLS];
+                s.extend(&a);
+                s.push(SEP);
+                s.extend(&b);
+                ds.tokens.push(s);
+                ds.labels.push(score);
+            }
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_balanced_learnable_data() {
+        for task in GlueTask::ALL {
+            let s = task.splits(512, 32, 0);
+            assert_eq!(s.train.len(), super::super::GLUE_TRAIN);
+            assert_eq!(s.val.len(), super::super::GLUE_VAL);
+            assert_eq!(s.test.len(), super::super::GLUE_TEST);
+            for seq in &s.train.tokens {
+                assert!(seq[0] == CLS && seq.len() <= 32, "{task:?}");
+            }
+            if !task.is_regression() {
+                let pos: f32 = s.train.labels.iter().sum::<f32>() / s.train.len() as f32;
+                assert!((0.3..0.7).contains(&pos), "{task:?} imbalanced: {pos}");
+            } else {
+                let lo = s.train.labels.iter().cloned().fold(f32::MAX, f32::min);
+                let hi = s.train.labels.iter().cloned().fold(f32::MIN, f32::max);
+                assert!(lo >= 0.0 && hi <= 5.0 && hi - lo > 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rte_negatives_contain_novel_token() {
+        let s = GlueTask::Rte.splits(512, 32, 1);
+        for (toks, &y) in s.train.tokens.iter().zip(&s.train.labels).take(200) {
+            let sep = toks.iter().position(|&t| t == SEP).unwrap();
+            let premise: std::collections::BTreeSet<i32> = toks[1..sep].iter().copied().collect();
+            let hyp = &toks[sep + 1..];
+            let subset = hyp.iter().all(|t| premise.contains(t));
+            assert_eq!(subset, y == 1.0);
+        }
+    }
+
+    #[test]
+    fn splits_are_deterministic_per_seed() {
+        let a = GlueTask::Sst2.splits(512, 32, 5);
+        let b = GlueTask::Sst2.splits(512, 32, 5);
+        assert_eq!(a.train.tokens, b.train.tokens);
+        let c = GlueTask::Sst2.splits(512, 32, 6);
+        assert_ne!(a.train.tokens, c.train.tokens);
+    }
+
+    #[test]
+    fn task_streams_differ() {
+        let a = GlueTask::Sst2.splits(512, 32, 5);
+        let b = GlueTask::Cola.splits(512, 32, 5);
+        assert_ne!(a.train.tokens, b.train.tokens);
+    }
+}

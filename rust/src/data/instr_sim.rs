@@ -1,0 +1,293 @@
+//! Instruction-sim: eight multiple-choice "commonsense" datasets mirroring
+//! the paper's Table 3 columns (BoolQ, PIQA, SIQA, HellaSwag, WinoGrande,
+//! ARC-e, ARC-c, OBQA).
+//!
+//! Every example is a prompt ending in an ANSWER slot; the gold answer is
+//! one of `n_options` dedicated option tokens.  Fine-tuning minimizes LM
+//! cross-entropy at the answer position; evaluation scores the option
+//! tokens' logits there (the paper's first-keyword protocol, made exact).
+
+use super::{Splits, CLS, CONTENT0, PAD, SEP};
+use crate::substrate::prng::Rng;
+use crate::substrate::tensor::Tensor;
+
+/// Option tokens live in a reserved band right after the specials.
+pub const OPT0: i32 = CONTENT0; // options = OPT0..OPT0+n_options
+pub const ITEM0: i32 = CONTENT0 + 8; // content band for prompts
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum McTask {
+    BoolQ,
+    Piqa,
+    Siqa,
+    HellaSwag,
+    WinoGrande,
+    ArcE,
+    ArcC,
+    Obqa,
+}
+
+impl McTask {
+    pub const ALL: [McTask; 8] = [
+        McTask::BoolQ,
+        McTask::Piqa,
+        McTask::Siqa,
+        McTask::HellaSwag,
+        McTask::WinoGrande,
+        McTask::ArcE,
+        McTask::ArcC,
+        McTask::Obqa,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            McTask::BoolQ => "boolq",
+            McTask::Piqa => "piqa",
+            McTask::Siqa => "siqa",
+            McTask::HellaSwag => "hellaswag",
+            McTask::WinoGrande => "winogrande",
+            McTask::ArcE => "arc_e",
+            McTask::ArcC => "arc_c",
+            McTask::Obqa => "obqa",
+        }
+    }
+
+    pub fn n_options(self) -> usize {
+        match self {
+            McTask::BoolQ | McTask::WinoGrande | McTask::Piqa => 2,
+            McTask::Siqa => 3,
+            _ => 4,
+        }
+    }
+}
+
+/// One MC example: full token sequence (answer token included at
+/// `answer_pos`), LM loss mask selecting only the answer prediction.
+#[derive(Clone, Debug)]
+pub struct McExample {
+    pub tokens: Vec<i32>,
+    pub answer_pos: usize,
+    pub gold: usize,
+    pub n_options: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct McDataset {
+    pub examples: Vec<McExample>,
+}
+
+impl McDataset {
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// LM train batch: (tokens [B,S], loss_mask [B,S]) — mask only at the
+    /// position *predicting* the answer token (answer_pos - 1).
+    pub fn batch(&self, idx: &[usize], b: usize, s: usize) -> Vec<Tensor> {
+        let mut toks = vec![PAD; b * s];
+        let mut mask = vec![0f32; b * s];
+        for slot in 0..b {
+            let &i = idx.get(slot).unwrap_or(&idx[0]);
+            let ex = &self.examples[i];
+            let n = ex.tokens.len().min(s);
+            toks[slot * s..slot * s + n].copy_from_slice(&ex.tokens[..n]);
+            if ex.answer_pos < s {
+                mask[slot * s + ex.answer_pos - 1] = 1.0;
+            }
+        }
+        vec![Tensor::from_i32(vec![b, s], &toks), Tensor::from_f32(vec![b, s], &mask)]
+    }
+
+    /// Eval batch (tokens only — eval artifacts carry no loss mask), with
+    /// the answer token *removed* (PAD) so scoring is honest.
+    pub fn eval_batch(&self, idx: &[usize], b: usize, s: usize) -> Vec<Tensor> {
+        let out = self.batch(idx, b, s);
+        let mut toks = out[0].as_i32();
+        for slot in 0..b {
+            let &i = idx.get(slot).unwrap_or(&idx[0]);
+            let ex = &self.examples[i];
+            if ex.answer_pos < s {
+                toks[slot * s + ex.answer_pos] = PAD;
+            }
+        }
+        vec![Tensor::from_i32(vec![b, s], &toks)]
+    }
+}
+
+/// Generate one task's splits: `n_train` plus fixed val/test.
+pub fn splits(task: McTask, vocab: usize, seq: usize, seed: u64, n_train: usize) -> Splits<McDataset> {
+    let mut rng = Rng::seed(seed ^ (task as u64).wrapping_mul(0x9e3779b9));
+    let gen = |n: usize, rng: &mut Rng| McDataset {
+        examples: (0..n).map(|_| generate(task, vocab, seq, rng)).collect(),
+    };
+    Splits {
+        train: gen(n_train, &mut rng),
+        val: gen(128, &mut rng),
+        test: gen(256, &mut rng),
+    }
+}
+
+fn generate(task: McTask, vocab: usize, seq: usize, rng: &mut Rng) -> McExample {
+    let k = task.n_options();
+    let body_max = seq - 4;
+    // difficulty knobs: ARC-c & HellaSwag use longer bodies + more noise
+    let (body_len, noise) = match task {
+        McTask::ArcC => (10 + rng.below(body_max - 10), 2),
+        McTask::HellaSwag => (8 + rng.below(body_max - 8), 1),
+        _ => (5 + rng.below((body_max / 2).max(6)), 0),
+    };
+    let content = |rng: &mut Rng| (ITEM0 as usize + rng.below(vocab - ITEM0 as usize)) as i32;
+    let mut body: Vec<i32> = (0..body_len).map(|_| content(rng)).collect();
+    let gold = rng.below(k);
+
+    // The latent rule, per task family: the gold option index is a simple
+    // deterministic function of the prompt that the model must discover.
+    match task {
+        McTask::BoolQ => {
+            // yes iff marker token present
+            let marker = ITEM0 + 1;
+            body.retain(|&t| t != marker);
+            if gold == 1 {
+                let at = rng.below(body.len());
+                body.insert(at, marker);
+            }
+        }
+        McTask::Piqa | McTask::WinoGrande => {
+            // parity of the first content token selects among 2
+            loop {
+                if (body[0] % 2) as usize == gold {
+                    break;
+                }
+                body[0] = content(rng);
+            }
+        }
+        McTask::Siqa => {
+            // first token's residue mod 3 selects among the options
+            let base = body[0] - (body[0] - ITEM0).rem_euclid(3);
+            let mut t = base + gold as i32;
+            if t >= vocab as i32 {
+                t -= 3;
+            }
+            body[0] = t;
+        }
+        McTask::HellaSwag | McTask::ArcE | McTask::ArcC | McTask::Obqa => {
+            // residue of the *last* content token mod k ("which continuation
+            // fits the ending") — positional retrieval, learnable
+            let last = body.len() - 1;
+            loop {
+                if ((body[last] - ITEM0).rem_euclid(k as i32)) as usize == gold {
+                    break;
+                }
+                body[last] = content(rng);
+            }
+        }
+    }
+    for _ in 0..noise {
+        if body.len() > 2 {
+            let at = 1 + rng.below(body.len() - 2); // keep first/last intact
+            body[at] = content(rng);
+        }
+    }
+    // re-fix after noise for the positional rules
+    match task {
+        McTask::Piqa | McTask::WinoGrande => loop {
+            if (body[0] % 2) as usize == gold {
+                break;
+            }
+            body[0] = content(rng);
+        },
+        McTask::HellaSwag | McTask::ArcE | McTask::ArcC | McTask::Obqa => {
+            let last = body.len() - 1;
+            loop {
+                if ((body[last] - ITEM0).rem_euclid(k as i32)) as usize == gold {
+                    break;
+                }
+                body[last] = content(rng);
+            }
+        }
+        _ => {}
+    }
+
+    let mut tokens = vec![CLS];
+    tokens.extend(&body);
+    tokens.push(SEP);
+    let answer_pos = tokens.len();
+    tokens.push(OPT0 + gold as i32);
+    McExample { tokens, answer_pos, gold, n_options: k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for task in McTask::ALL {
+            let s = splits(task, 512, 48, 0, 64);
+            assert_eq!(s.train.len(), 64);
+            for ex in &s.train.examples {
+                assert!(ex.tokens.len() <= 48);
+                assert_eq!(ex.tokens[ex.answer_pos], OPT0 + ex.gold as i32);
+                assert!(ex.gold < task.n_options());
+            }
+        }
+    }
+
+    #[test]
+    fn boolq_rule_holds() {
+        let s = splits(McTask::BoolQ, 512, 48, 1, 200);
+        for ex in &s.train.examples {
+            let has = ex.tokens[1..ex.answer_pos - 1].contains(&(ITEM0 + 1));
+            assert_eq!(has, ex.gold == 1);
+        }
+    }
+
+    #[test]
+    fn parity_rule_holds() {
+        let s = splits(McTask::Piqa, 512, 48, 2, 200);
+        for ex in &s.train.examples {
+            let body = &ex.tokens[1..ex.answer_pos - 1];
+            assert_eq!((body[0] % 2) as usize, ex.gold);
+        }
+    }
+
+    #[test]
+    fn last_token_rule_holds() {
+        let s = splits(McTask::Obqa, 512, 48, 5, 200);
+        for ex in &s.train.examples {
+            let body = &ex.tokens[1..ex.answer_pos - 1];
+            let last = *body.last().unwrap();
+            assert_eq!(((last - ITEM0).rem_euclid(4)) as usize, ex.gold);
+        }
+    }
+
+    #[test]
+    fn eval_batch_hides_answer() {
+        let s = splits(McTask::Obqa, 512, 48, 3, 8);
+        let idx: Vec<usize> = (0..8).collect();
+        let b = s.train.eval_batch(&idx, 8, 48);
+        let toks = b[0].as_i32();
+        for (slot, ex) in s.train.examples.iter().enumerate() {
+            assert_eq!(toks[slot * 48 + ex.answer_pos], PAD);
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        for task in [McTask::BoolQ, McTask::Obqa] {
+            let s = splits(task, 512, 48, 4, 512);
+            let k = task.n_options();
+            let mut counts = vec![0usize; k];
+            for ex in &s.train.examples {
+                counts[ex.gold] += 1;
+            }
+            for &c in &counts {
+                assert!(c > 512 / k / 2, "{task:?} {counts:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Figure 1 — relative-to-LoRA radar: accuracy (commonsense / math /
+//! code), parameter efficiency, and memory efficiency, derived from the
+//! table2/3/4 results files.
+
+use super::ExpOpt;
+use crate::substrate::json::{self, Json};
+use anyhow::Result;
+
+fn avg_of(rows: &Json, method: &str) -> Option<(f64, f64)> {
+    // returns (avg score, params% — 0 when the table has no params column)
+    for r in rows.as_arr()? {
+        if r.get("method").and_then(|m| m.as_str()) == Some(method) {
+            let avg = r.get("avg")?.as_f64()?;
+            let p = r
+                .get("params_pct")
+                .and_then(|v| v.as_f64())
+                .or_else(|| r.get("params").and_then(|v| v.as_f64()))
+                .unwrap_or(0.0);
+            return Some((avg, p));
+        }
+    }
+    None
+}
+
+pub fn run(opt: &ExpOpt) -> Result<()> {
+    let t3 = super::read_results(opt, "table3")?;
+    let t4 = super::read_results(opt, "table4")?;
+    let t2 = super::read_results(opt, "table2").ok();
+    println!("== Fig 1: relative to LoRA (=1.0), higher is better ==");
+    println!("{:<8} {:>12} {:>12} {:>14} {:>14}", "method", "commonsense", "math+code", "param-eff", "mem-eff");
+    let (l3, lp3) = avg_of(&t3, "lora").ok_or_else(|| anyhow::anyhow!("no lora row in table3"))?;
+    let (l4, _) = avg_of(&t4, "lora").ok_or_else(|| anyhow::anyhow!("no lora row in table4"))?;
+    let lora_mem = t2
+        .as_ref()
+        .and_then(|t| {
+            t.as_arr()?.iter().find(|r| r.get("method").and_then(|m| m.as_str()) == Some("lora"))
+                .and_then(|r| r.get("mem_mb")?.as_f64())
+        })
+        .unwrap_or(1.0);
+    let mut rows = Vec::new();
+    for method in ["lora", "vera", "dora", "c3a"] {
+        let Some((a3, p3)) = avg_of(&t3, method) else { continue };
+        let Some((a4, _)) = avg_of(&t4, method) else { continue };
+        let mem = t2
+            .as_ref()
+            .and_then(|t| {
+                let name = if method == "c3a" { "c3a_d8" } else { method };
+                t.as_arr()?.iter().find(|r| r.get("method").and_then(|m| m.as_str()) == Some(name))
+                    .and_then(|r| r.get("mem_mb")?.as_f64())
+            })
+            .unwrap_or(lora_mem);
+        let row = [a3 / l3, a4 / l4.max(1e-9), lp3 / p3.max(1e-9), lora_mem / mem.max(1e-9)];
+        println!("{:<8} {:>12.3} {:>12.3} {:>14.3} {:>14.3}", method, row[0], row[1], row[2], row[3]);
+        rows.push(json::obj(vec![
+            ("method", json::s(method)),
+            ("commonsense", json::num(row[0])),
+            ("math_code", json::num(row[1])),
+            ("param_eff", json::num(row[2])),
+            ("mem_eff", json::num(row[3])),
+        ]));
+    }
+    println!("\npaper shape: c3a dominates lora on every axis (all > 1.0).");
+    super::write_results(opt, "fig1", &json::arr(rows))
+}

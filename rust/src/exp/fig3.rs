@@ -1,0 +1,68 @@
+//! Figure 3 — initialization ablation: C3A under zero / gaussian /
+//! kaiming / xavier kernels, several seeds × tasks.  Prints the violin
+//! summary (mean ± std + min/max per scheme).
+
+use super::ExpOpt;
+use crate::coordinator::run::{self, Ctx};
+use crate::data::glue_sim::GlueTask;
+use crate::metrics::Stats;
+use crate::peft::init::C3aScheme;
+use crate::substrate::json;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
+    // The ablation is about *relative* sensitivity, so the tiny encoder is
+    // the right tool on a single core; --full uses enc_base.
+    let (model, method) = if opt.fast { ("enc_tiny", "c3a_d8") } else { ("enc_base", "c3a_d8") };
+    let tasks: Vec<GlueTask> = if opt.fast {
+        vec![GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Cola, GlueTask::Qnli, GlueTask::Rte]
+            .into_iter()
+            .filter(|t| {
+                // enc_tiny only has cls artifacts
+                !t.is_regression()
+            })
+            .collect()
+    } else {
+        vec![GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Cola, GlueTask::Qnli, GlueTask::Rte]
+    };
+    let steps = opt.steps.unwrap_or(if opt.fast { 60 } else { 200 });
+    let seeds = opt.seeds.max(if opt.fast { 3 } else { 5 });
+
+    println!("== Fig 3 ({model}): C3A init ablation, {} tasks x {} seeds ==", tasks.len(), seeds);
+    println!("{:<10} {:>8} {:>8} {:>8} {:>8}", "init", "mean", "std", "min", "max");
+    let mut rows = Vec::new();
+    let mut means = Vec::new();
+    for scheme in C3aScheme::ALL {
+        let mut all = Stats::default();
+        let mut per_run = Vec::new();
+        for &task in &tasks {
+            for seed in 0..seeds as u64 {
+                let cfg = run::default_cfg(method, steps);
+                let r = run::glue_run(ctx, model, method, task, seed, &cfg, scheme)?;
+                all.push(r.metric);
+                per_run.push(json::obj(vec![
+                    ("task", json::s(task.name())),
+                    ("seed", json::num(seed as f64)),
+                    ("metric", json::num(r.metric)),
+                ]));
+            }
+        }
+        let (lo, hi) = (
+            all.values.iter().cloned().fold(f64::MAX, f64::min),
+            all.values.iter().cloned().fold(f64::MIN, f64::max),
+        );
+        println!("{:<10} {:>8.4} {:>8.4} {:>8.4} {:>8.4}", scheme.name(), all.mean(), all.std(), lo, hi);
+        means.push(all.mean());
+        rows.push(json::obj(vec![
+            ("scheme", json::s(scheme.name())),
+            ("mean", json::num(all.mean())),
+            ("std", json::num(all.std())),
+            ("runs", json::arr(per_run)),
+        ]));
+    }
+    let spread = means.iter().cloned().fold(f64::MIN, f64::max)
+        - means.iter().cloned().fold(f64::MAX, f64::min);
+    println!("\nmean spread across schemes: {spread:.4}");
+    println!("paper shape: spread within run-to-run std — init choice doesn't matter.");
+    super::write_results(opt, "fig3", &json::arr(rows))
+}

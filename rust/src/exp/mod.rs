@@ -1,0 +1,65 @@
+//! Experiment harness — one module per table/figure of the paper
+//! (DESIGN.md §4 maps ids to modules).  Every experiment prints the
+//! paper-shaped rows and writes `results/<id>.json`.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table34;
+pub mod table_a2;
+
+use crate::substrate::json::Json;
+use anyhow::Result;
+use std::path::Path;
+
+/// Options shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct ExpOpt {
+    /// fine-tuning steps per run (None = experiment default)
+    pub steps: Option<usize>,
+    /// seeds per cell
+    pub seeds: usize,
+    /// reduced grids for the single-core testbed (the default); `--full`
+    /// restores the paper's full grid
+    pub fast: bool,
+    /// substring filters on method/task names
+    pub filter: Vec<String>,
+    pub results_dir: String,
+}
+
+impl Default for ExpOpt {
+    fn default() -> Self {
+        Self { steps: None, seeds: 1, fast: true, filter: Vec::new(), results_dir: "results".into() }
+    }
+}
+
+impl ExpOpt {
+    pub fn keep(&self, name: &str) -> bool {
+        self.filter.is_empty() || self.filter.iter().any(|f| name.contains(f.as_str()))
+    }
+}
+
+/// Write `results/<id>.json`.
+pub fn write_results(opt: &ExpOpt, id: &str, value: &Json) -> Result<()> {
+    std::fs::create_dir_all(&opt.results_dir)?;
+    let path = Path::new(&opt.results_dir).join(format!("{id}.json"));
+    std::fs::write(&path, value.to_string_compact())?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Load a previously written results file (fig1 derives from tables 3/4).
+pub fn read_results(opt: &ExpOpt, id: &str) -> Result<Json> {
+    let path = Path::new(&opt.results_dir).join(format!("{id}.json"));
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("{}: {e} (run `c3a exp {id}` first)", path.display()))?;
+    Json::parse(&text)
+}
+
+/// Format a parameter count the way the paper does (0.018M style).
+pub fn fmt_params(n: usize) -> String {
+    format!("{:.3}M", n as f64 / 1e6)
+}

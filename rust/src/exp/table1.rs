@@ -1,0 +1,94 @@
+//! Table 1 — time & space complexity of LoRA / VeRA / C3A.
+//!
+//! Two halves: the paper's analytic columns (from `peft::accounting`) and
+//! *measured* single-core operator timings from the rust substrates
+//! (dense LoRA matvec vs FFT block-circulant matvec vs VeRA), sweeping d.
+//! The measured half is what `cargo bench --bench bench_operator` also
+//! runs; here we print a compact version.
+
+use super::ExpOpt;
+use crate::peft::accounting::ProjSpec;
+use crate::substrate::circulant::BlockCirculant;
+use crate::substrate::linalg::{LoRaDelta, VeraDelta};
+use crate::substrate::{json, prng::Rng};
+use anyhow::Result;
+use std::time::Instant;
+
+fn time_us(mut f: impl FnMut(), iters: usize) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+}
+
+pub fn run(opt: &ExpOpt) -> Result<()> {
+    println!("== Table 1: complexity (analytic + measured) ==");
+    println!("{:<6} {:>10} {:>12} {:>12} | {:>12} {:>12} {:>12}",
+             "d", "method", "#param", "#other", "MACs(model)", "us/matvec", "ratio_vs_lora");
+    let mut rows = Vec::new();
+    let dims: &[usize] = if opt.fast { &[256, 1024, 4096] } else { &[256, 512, 1024, 2048, 4096, 8192] };
+    for &d in dims {
+        let mut rng = Rng::seed(d as u64);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let r = 8usize;
+        let b = (d / 8).max(1);
+
+        let lora_spec = ProjSpec::lora(d, r);
+        let lora = LoRaDelta {
+            a: (0..r * d).map(|_| rng.normal()).collect(),
+            b: (0..d * r).map(|_| rng.normal()).collect(),
+            r,
+            d_in: d,
+            d_out: d,
+            scale: 1.0,
+        };
+        let mut hidden = vec![0.0; r];
+        let mut y = vec![0.0; d];
+        let lora_us = time_us(|| lora.matvec_into(&x, &mut hidden, &mut y), 50);
+
+        let c3a_spec = ProjSpec::c3a(d, b);
+        let m = d / b;
+        let bc = BlockCirculant::new(m, m, b, (0..m * m * b).map(|_| rng.normal()).collect());
+        let prepared = bc.prepared();
+        let mut out = vec![0.0; d];
+        let c3a_us = time_us(|| prepared.matvec_into(&x, &mut out), 50);
+
+        let rv = d; // VeRA needs r_v >= d for high rank
+        let vera_spec = ProjSpec::vera(d, rv);
+        let vera = VeraDelta {
+            a: (0..rv * d).map(|_| rng.normal()).collect(),
+            b: (0..d * rv).map(|_| rng.normal()).collect(),
+            ld: vec![0.1; rv],
+            lb: vec![1.0; d],
+            r_v: rv,
+            d_in: d,
+            d_out: d,
+        };
+        let vera_us = time_us(|| { let _ = vera.matvec(&x); }, 10);
+
+        for (name, spec, us) in [
+            ("lora", lora_spec, lora_us),
+            ("vera", vera_spec, vera_us),
+            ("c3a", c3a_spec, c3a_us),
+        ] {
+            println!(
+                "{:<6} {:>10} {:>12} {:>12} | {:>12.0} {:>12.1} {:>12.2}",
+                d, name, spec.params(), spec.aux_floats(), spec.time_macs(), us, us / lora_us
+            );
+            rows.push(json::obj(vec![
+                ("d", json::num(d as f64)),
+                ("method", json::s(name)),
+                ("params", json::num(spec.params() as f64)),
+                ("aux", json::num(spec.aux_floats() as f64)),
+                ("macs", json::num(spec.time_macs())),
+                ("us", json::num(us)),
+            ]));
+        }
+    }
+    println!("\npaper shape: C3A params ≈ d²/b (≪ dense), aux ≈ p·b (tiny);");
+    println!("VeRA aux = r_v(d1+d2) and time ≫ LoRA — reproduced iff ratios above grow with d.");
+    super::write_results(opt, "table1", &json::arr(rows))
+}

@@ -1,0 +1,102 @@
+//! Table 2 — GLUE-sim: RoBERTa-sim Base/Large × PEFT methods × 6 tasks.
+//! Also prints the §4.1 rank measurement ("most ΔW are full rank") and the
+//! modeled memory column.
+
+use super::{fmt_params, ExpOpt};
+use crate::coordinator::run::{self, Ctx};
+use crate::data::glue_sim::GlueTask;
+use crate::metrics::Stats;
+use crate::peft::accounting::{transformer_account, ProjSpec};
+use crate::peft::init::C3aScheme;
+use crate::substrate::json::{self, Json};
+use anyhow::Result;
+
+pub const METHODS: [&str; 8] =
+    ["full", "bitfit", "ia3", "lora", "vera", "boft", "c3a_d1", "c3a_d8"];
+
+fn mem_bytes(ctx: &Ctx, model: &str, method: &str) -> Result<usize> {
+    let meta = ctx.manifest.model(model)?;
+    let backbone: usize = 30 * meta.d * meta.d * meta.layers; // rough dense count
+    let act = 32 * meta.seq * meta.d * meta.layers;
+    let d = meta.d;
+    let acc = transformer_account(meta.layers, d, backbone, act, |dd| match method {
+        "lora" => ProjSpec::lora(dd, 8),
+        "vera" => ProjSpec::vera(dd, 2 * dd),
+        "c3a_d1" => ProjSpec::c3a(dd, dd),
+        "c3a_d8" => ProjSpec::c3a(dd, dd / 8),
+        "boft" => ProjSpec { method: crate::peft::Method::Boft, ..ProjSpec::lora(dd, 0) },
+        "ia3" => ProjSpec { method: crate::peft::Method::Ia3, ..ProjSpec::lora(dd, 0) },
+        "bitfit" => ProjSpec { method: crate::peft::Method::BitFit, ..ProjSpec::lora(dd, 0) },
+        _ => ProjSpec { method: crate::peft::Method::Full, ..ProjSpec::lora(dd, 0) },
+    });
+    let mut bytes = acc.train_bytes();
+    if method == "full" {
+        bytes += 3 * 4 * backbone; // grads + adam states for the whole model
+    }
+    Ok(bytes)
+}
+
+pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
+    // fast mode uses the tiny encoder: the single-core budget cannot push
+    // enc_base through enough steps for any method to move off majority
+    // class (see EXPERIMENTS.md); the method *comparison* is preserved.
+    let models: Vec<&str> = if opt.fast { vec!["enc_tiny"] } else { vec!["enc_base", "enc_large"] };
+    let steps = opt.steps.unwrap_or(if opt.fast { 250 } else { 300 });
+    let mut out_rows = Vec::new();
+    for model in models {
+        println!("\n== Table 2 ({model}): GLUE-sim, {steps} steps, {} seed(s) ==", opt.seeds);
+        println!(
+            "{:<8} {:>9} {:>9} | {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} | {:>6} {:>9}",
+            "method", "#params", "mem(MB)", "sst2", "mrpc", "cola", "qnli", "rte", "stsb", "avg", "fullrank%"
+        );
+        for method in METHODS {
+            if !opt.keep(method) {
+                continue;
+            }
+            let mut per_task = Vec::new();
+            let mut n_params = 0usize;
+            let mut rank_frac = None;
+            for task in GlueTask::ALL {
+                if !opt.keep(task.name()) && opt.filter.iter().any(|f| GlueTask::parse(f).is_some()) {
+                    per_task.push(f64::NAN);
+                    continue;
+                }
+                let mut stats = Stats::default();
+                for seed in 0..opt.seeds as u64 {
+                    let cfg = run::default_cfg(method, steps);
+                    let r = run::glue_run(ctx, model, method, task, seed, &cfg, C3aScheme::Xavier)?;
+                    stats.push(r.metric);
+                    n_params = r.n_params;
+                    if let Some((f, _, _)) = r.rank {
+                        rank_frac = Some(f);
+                    }
+                }
+                per_task.push(stats.mean());
+            }
+            let valid: Vec<f64> = per_task.iter().copied().filter(|v| !v.is_nan()).collect();
+            let avg = valid.iter().sum::<f64>() / valid.len().max(1) as f64;
+            let mem = mem_bytes(ctx, model, method)? as f64 / 1e6;
+            println!(
+                "{:<8} {:>9} {:>9.1} | {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>7.3} | {:>6.3} {:>9}",
+                method,
+                fmt_params(n_params),
+                mem,
+                per_task[0], per_task[1], per_task[2], per_task[3], per_task[4], per_task[5],
+                avg,
+                rank_frac.map(|f| format!("{:.0}%", 100.0 * f)).unwrap_or_else(|| "-".into()),
+            );
+            out_rows.push(json::obj(vec![
+                ("model", json::s(model)),
+                ("method", json::s(method)),
+                ("params", json::num(n_params as f64)),
+                ("mem_mb", json::num(mem)),
+                ("scores", json::arr(per_task.iter().map(|&v| json::num(v)).collect())),
+                ("avg", json::num(avg)),
+                ("full_rank_frac", rank_frac.map(json::num).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+    println!("\npaper shape: c3a_d1 ≈ baselines with ~16x fewer params; c3a_d8 tops avg;");
+    println!("mem: bitfit < c3a < lora < vera; most C3A deltas full-rank.");
+    super::write_results(opt, "table2", &json::arr(out_rows))
+}

@@ -1,0 +1,58 @@
+//! Table A2 — vision-sim: ViT-sim Base/Large × {head, full, lora16, c3a}
+//! on six patch-classification datasets.
+
+use super::{fmt_params, ExpOpt};
+use crate::coordinator::run::{self, Ctx};
+use crate::data::vision_sim::VisionTask;
+use crate::substrate::json;
+use anyhow::Result;
+
+pub const METHODS: [&str; 4] = ["head", "full", "lora", "c3a"];
+
+pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
+    let models: Vec<&str> = if opt.fast { vec!["vit_base"] } else { vec!["vit_base", "vit_large"] };
+    let tasks: Vec<VisionTask> = if opt.fast {
+        vec![VisionTask::Pets, VisionTask::EuroSat, VisionTask::Cars]
+    } else {
+        VisionTask::ALL.to_vec()
+    };
+    let steps = opt.steps.unwrap_or(if opt.fast { 60 } else { 300 });
+    let mut rows = Vec::new();
+    for model in &models {
+        println!("\n== Table A2 ({model}): vision-sim, {steps} steps ==");
+        print!("{:<8} {:>9}", "method", "#params");
+        for t in &tasks {
+            print!(" {:>9}", t.name());
+        }
+        println!(" {:>7}", "avg");
+        for method in METHODS {
+            if !opt.keep(method) {
+                continue;
+            }
+            let mut scores = Vec::new();
+            let mut n_params = 0;
+            for &task in &tasks {
+                let cfg = run::default_cfg(method, steps);
+                let r = run::vision_run(ctx, model, method, task, 0, &cfg)?;
+                scores.push(r.metric);
+                n_params = r.n_params;
+            }
+            let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+            print!("{:<8} {:>9}", method, fmt_params(n_params));
+            for s in &scores {
+                print!(" {:>9.3}", s);
+            }
+            println!(" {:>7.3}", avg);
+            rows.push(json::obj(vec![
+                ("model", json::s(model)),
+                ("method", json::s(method)),
+                ("params", json::num(n_params as f64)),
+                ("tasks", json::arr(tasks.iter().map(|t| json::s(t.name())).collect())),
+                ("scores", json::arr(scores.iter().map(|&v| json::num(v)).collect())),
+                ("avg", json::num(avg)),
+            ]));
+        }
+    }
+    println!("\npaper shape: lora/c3a ≈ full >> head; c3a matches lora at half the params.");
+    super::write_results(opt, "table_a2", &json::arr(rows))
+}

@@ -1,0 +1,9 @@
+//! C3A — Parameter-Efficient Fine-Tuning via Circular Convolution.
+pub mod runtime;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod data;
+pub mod metrics;
+pub mod peft;
+pub mod substrate;

@@ -1,0 +1,283 @@
+//! `c3a` — the framework launcher (hand-rolled CLI; clap unavailable
+//! offline).
+//!
+//! Subcommands:
+//!   info                      manifest / model / artifact inventory
+//!   pretrain --model M        (re)build a backbone checkpoint
+//!   train ...                 one fine-tuning run (any task family)
+//!   exp <id> [--full] ...     regenerate a paper table/figure
+//!   rank --block B --dim D    rank analysis demo of random kernels
+//!
+//! Run `c3a help` for flags.
+
+use anyhow::{bail, Context, Result};
+use c3a::coordinator::run::{self, Ctx};
+use c3a::data::gen_sim::GenTask;
+use c3a::data::glue_sim::GlueTask;
+use c3a::data::instr_sim::McTask;
+use c3a::data::vision_sim::VisionTask;
+use c3a::exp::{self, ExpOpt};
+use c3a::peft::init::C3aScheme;
+use c3a::substrate::{circulant, polynomial};
+
+/// Tiny flag parser: positional args + `--key value` + `--switch`.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = argv.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false);
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const HELP: &str = "\
+c3a — Parameter-Efficient Fine-Tuning via Circular Convolution (reproduction)
+
+USAGE: c3a <command> [flags]
+
+COMMANDS
+  info                           list models and artifacts from the manifest
+  pretrain --model M [--force]   build/refresh a backbone checkpoint
+  train --model M --method X --task T [--steps N] [--seed S] [--lr F]
+        [--config F]             one fine-tuning run; tasks: glue:<t>, mc:<t>,
+                                 gen:<t>, vision:<t>, mlp:<variant>; or load
+                                 a declarative run from configs/*.toml
+  exp <id> [--full] [--steps N] [--seeds K] [--only SUBSTR]
+                                 regenerate a paper table/figure; ids:
+                                 table1 table2 table3 table4 table_a2
+                                 fig1 fig3 fig4 fig5 all
+  rank --dim D [--block B]       circulant rank analysis (numeric + exact)
+  help                           this text
+
+FLAGS
+  --artifacts DIR   artifact directory (default: artifacts)
+  --results DIR     results directory (default: results)
+  --verbose         chatty progress
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "info" => info(&args),
+        "pretrain" => pretrain(&args),
+        "train" => train(&args),
+        "exp" => experiment(&args),
+        "rank" => rank_demo(&args),
+        other => bail!("unknown command {other} (try `c3a help`)"),
+    }
+}
+
+fn open_ctx(args: &Args) -> Result<Ctx> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let mut ctx = Ctx::open(dir)?;
+    ctx.verbose = args.has("verbose");
+    Ok(ctx)
+}
+
+fn info(args: &Args) -> Result<()> {
+    let ctx = open_ctx(args)?;
+    println!("models:");
+    for (name, m) in &ctx.manifest.models {
+        println!("  {name:<12} kind={:<8} d={:<4} L={:<2} vocab={:<4} seq={}", m.kind, m.d, m.layers, m.vocab, m.seq);
+    }
+    println!("\nartifacts ({}):", ctx.manifest.artifacts.len());
+    for (name, a) in &ctx.manifest.artifacts {
+        println!("  {name:<44} {:>9} params  batch={}", a.n_params, a.batch);
+    }
+    Ok(())
+}
+
+fn pretrain(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let ctx = open_ctx(args)?;
+    if args.has("force") {
+        let p = c3a::coordinator::checkpoint::pretrained_path(&ctx.artifacts_dir, model);
+        let _ = std::fs::remove_file(p);
+    }
+    let map = run::ensure_pretrained(&ctx, model)?;
+    println!("backbone ready: {} tensors", map.len());
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    // --config <file> loads a declarative run; explicit flags override it
+    let file_cfg = match args.get("config") {
+        Some(p) => Some(c3a::config::RunConfig::load(p)?),
+        None => None,
+    };
+    let model = args
+        .get("model")
+        .map(str::to_string)
+        .or_else(|| file_cfg.as_ref().map(|c| c.model.clone()))
+        .context("--model or --config required")?;
+    let method = args
+        .get("method")
+        .map(str::to_string)
+        .or_else(|| file_cfg.as_ref().map(|c| c.method.clone()))
+        .context("--method or --config required")?;
+    let task = args
+        .get("task")
+        .map(str::to_string)
+        .or_else(|| file_cfg.as_ref().map(|c| c.task.clone()))
+        .context("--task or --config required (e.g. glue:sst2)")?;
+    let seed = args
+        .get_usize("seed")
+        .map(|s| s as u64)
+        .or_else(|| file_cfg.as_ref().map(|c| c.seed))
+        .unwrap_or(0);
+    let scheme = file_cfg
+        .as_ref()
+        .and_then(|c| C3aScheme::parse(&c.init_scheme))
+        .unwrap_or(C3aScheme::Xavier);
+    let mut cfg = file_cfg
+        .as_ref()
+        .map(|c| c.train.clone())
+        .unwrap_or_else(|| run::default_cfg(&method, 100));
+    if let Some(steps) = args.get_usize("steps") {
+        cfg.steps = steps;
+    }
+    if let Some(lr) = args.get("lr").and_then(|v| v.parse::<f64>().ok()) {
+        cfg.lr = lr;
+    }
+    cfg.verbose = true;
+    let ctx = open_ctx(args)?;
+    let (kind, name) = task.split_once(':').unwrap_or(("glue", task.as_str()));
+    let r = match kind {
+        "glue" => {
+            let t = GlueTask::parse(name).context("unknown glue task")?;
+            run::glue_run(&ctx, &model, &method, t, seed, &cfg, scheme)?
+        }
+        "mc" => {
+            let t = McTask::ALL.into_iter().find(|t| t.name() == name).context("unknown mc task")?;
+            run::mc_run(&ctx, &model, &method, t, seed, &cfg, 512)?
+        }
+        "gen" => {
+            let t = GenTask::MATH_ALL
+                .into_iter()
+                .chain(GenTask::CODE_ALL)
+                .find(|t| t.name() == name)
+                .context("unknown gen task")?;
+            run::gen_run(&ctx, &model, &method, t, seed, &cfg, 768)?
+        }
+        "vision" => {
+            let t = VisionTask::ALL.into_iter().find(|t| t.name() == name).context("unknown vision task")?;
+            run::vision_run(&ctx, &model, &method, t, seed, &cfg)?
+        }
+        "mlp" => run::mlp_run(&ctx, &format!("mlp_{name}"), seed, &cfg)?,
+        other => bail!("unknown task kind {other}"),
+    };
+    println!(
+        "test metric {:.4} (val {:.4})  #params {}  step {:.1} ms  wall {} ms",
+        r.metric, r.val_metric, r.n_params, r.step_ms, r.wall_ms
+    );
+    if let Some((frac, mean, dim)) = r.rank {
+        println!("C3A delta ranks: {:.0}% full rank, mean {:.1} of {}", 100.0 * frac, mean, dim);
+    }
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(|s| s.as_str()).context("exp id required")?;
+    let opt = ExpOpt {
+        steps: args.get_usize("steps"),
+        seeds: args.get_usize("seeds").unwrap_or(1),
+        fast: !args.has("full"),
+        filter: args
+            .get("only")
+            .map(|s| s.split(',').map(str::to_string).collect())
+            .unwrap_or_default(),
+        results_dir: args.get("results").unwrap_or("results").to_string(),
+    };
+    let needs_ctx = id != "table1" && id != "fig1";
+    let ctx = if needs_ctx || id == "all" { Some(open_ctx(args)?) } else { None };
+    let dispatch = |id: &str| -> Result<()> {
+        match id {
+            "table1" => exp::table1::run(&opt),
+            "table2" => exp::table2::run(ctx.as_ref().unwrap(), &opt),
+            "table3" => exp::table34::table3(ctx.as_ref().unwrap(), &opt),
+            "table4" => exp::table34::table4(ctx.as_ref().unwrap(), &opt),
+            "table_a2" => exp::table_a2::run(ctx.as_ref().unwrap(), &opt),
+            "fig1" => exp::fig1::run(&opt),
+            "fig3" => exp::fig3::run(ctx.as_ref().unwrap(), &opt),
+            "fig4" => exp::fig4::run(ctx.as_ref().unwrap(), &opt),
+            "fig5" => exp::fig5::run(ctx.as_ref().unwrap(), &opt),
+            other => bail!("unknown experiment {other}"),
+        }
+    };
+    if id == "all" {
+        for id in ["table1", "fig4", "table2", "fig3", "table3", "table4", "fig5", "table_a2", "fig1"] {
+            println!("\n######## exp {id} ########");
+            dispatch(id)?;
+        }
+        Ok(())
+    } else {
+        dispatch(id)
+    }
+}
+
+fn rank_demo(args: &Args) -> Result<()> {
+    let d = args.get_usize("dim").unwrap_or(64);
+    let b = args.get_usize("block").unwrap_or(d);
+    let mut rng = c3a::substrate::prng::Rng::seed(0);
+    let m = d / b;
+    let w: Vec<f64> = (0..m * m * b).map(|_| rng.normal()).collect();
+    let bc = circulant::BlockCirculant::new(m, m, b, w);
+    let mat = bc.materialize();
+    let rank = circulant::dense_rank(&mat, d, d, 1e-9);
+    println!("random C3A kernels: d={d} b={b} params={} -> rank {rank}/{d}", bc.param_count());
+    println!("block ranks: {:?}", bc.block_ranks(1e-9));
+    // exact cross-check on an integer kernel
+    let wi: Vec<i64> = (0..b as i64).map(|i| (i * 7 + 3) % 11 - 5).collect();
+    let exact = polynomial::circulant_rank_exact(&wi);
+    let wf: Vec<f64> = wi.iter().map(|&v| v as f64).collect();
+    let numeric = circulant::circulant_rank(&wf, 1e-9);
+    println!("integer kernel len {b}: exact rank {exact}, numeric rank {numeric}");
+    println!("LoRA with the same budget ({} params) would cap at rank {}", bc.param_count(), bc.param_count() / (2 * d));
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Adapter merging: fold a learned delta into the frozen weight so the
+//! deployed model has **zero inference overhead** — the delta-weight
+//! family's signature property (paper §2.1).
+//!
+//! C3A merging uses the paper's Algorithm A2 (convolve identity columns)
+//! through the rust FFT substrate; LoRA merging is a rank-r outer-product
+//! update.  Weight layout matches the JAX side: W[d_in][d_out], y = x·W.
+
+use crate::substrate::circulant::BlockCirculant;
+
+/// W_merged = W0 + ΔW^T where ΔW = C_blk(w) maps [d_in] -> [d_out].
+///
+/// `w0` is row-major [d_in][d_out] (JAX layout, y = x·W); the circulant
+/// operator computes z = C·x with C [d_out][d_in], so its transpose is
+/// added.  `kernels` is [m][n][b] with m·b = d_out, n·b = d_in.
+pub fn merge_c3a(w0: &[f32], d_in: usize, d_out: usize, kernels: &[f32], m: usize, n: usize, b: usize) -> Vec<f32> {
+    assert_eq!(w0.len(), d_in * d_out);
+    assert_eq!(m * b, d_out);
+    assert_eq!(n * b, d_in);
+    let bc = BlockCirculant::new(m, n, b, kernels.iter().map(|&v| v as f64).collect());
+    let delta = bc.materialize(); // [d_out][d_in]
+    let mut out = w0.to_vec();
+    for r in 0..d_out {
+        for c in 0..d_in {
+            out[c * d_out + r] += delta[r * d_in + c] as f32;
+        }
+    }
+    out
+}
+
+/// W_merged = W0 + scale·(B·A)^T; A [r][d_in], B [d_out][r].
+pub fn merge_lora(w0: &[f32], d_in: usize, d_out: usize, a: &[f32], bmat: &[f32], r: usize, scale: f32) -> Vec<f32> {
+    assert_eq!(w0.len(), d_in * d_out);
+    assert_eq!(a.len(), r * d_in);
+    assert_eq!(bmat.len(), d_out * r);
+    let mut out = w0.to_vec();
+    for i in 0..d_out {
+        for j in 0..d_in {
+            let mut acc = 0.0f32;
+            for k in 0..r {
+                acc += bmat[i * r + k] * a[k * d_in + j];
+            }
+            out[j * d_out + i] += scale * acc;
+        }
+    }
+    out
+}
+
+/// Unmerged inference check: y = x·W0 + C_blk(w)·x computed two ways.
+pub fn c3a_forward_unmerged(w0: &[f32], d_in: usize, d_out: usize, kernels: &[f32], m: usize, n: usize, b: usize, x: &[f32]) -> Vec<f32> {
+    let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let w0f: Vec<f64> = w0.iter().map(|&v| v as f64).collect();
+    // y = x·W0: treat W0^T as [d_out][d_in]
+    let mut y = vec![0.0f64; d_out];
+    for c in 0..d_in {
+        let xv = xf[c];
+        if xv == 0.0 {
+            continue;
+        }
+        for r in 0..d_out {
+            y[r] += w0f[c * d_out + r] * xv;
+        }
+    }
+    let bc = BlockCirculant::new(m, n, b, kernels.iter().map(|&v| v as f64).collect());
+    let dz = bc.matvec(&xf);
+    y.iter().zip(&dz).map(|(a, b)| (a + b) as f32).collect()
+}
+
+/// Dense forward through a merged weight (y = x·W).
+pub fn dense_forward(w: &[f32], d_in: usize, d_out: usize, x: &[f32]) -> Vec<f32> {
+    let wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+    let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    // y_o = Σ_i x_i W[i][o]
+    let mut y = vec![0.0; d_out];
+    for i in 0..d_in {
+        let xv = xf[i];
+        let row = &wf[i * d_out..(i + 1) * d_out];
+        for o in 0..d_out {
+            y[o] += xv * row[o];
+        }
+    }
+    y.iter().map(|&v| v as f32).collect()
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::linalg;
+    use crate::substrate::prng::Rng;
+
+    #[test]
+    fn merged_equals_unmerged_c3a() {
+        let mut rng = Rng::seed(1);
+        let (m, n, b) = (2usize, 3usize, 8usize);
+        let (d_out, d_in) = (m * b, n * b);
+        let w0: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() as f32 * 0.1).collect();
+        let k: Vec<f32> = (0..m * n * b).map(|_| rng.normal() as f32 * 0.1).collect();
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+        let merged = merge_c3a(&w0, d_in, d_out, &k, m, n, b);
+        let y1 = dense_forward(&merged, d_in, d_out, &x);
+        let y2 = c3a_forward_unmerged(&w0, d_in, d_out, &k, m, n, b, &x);
+        for (a, bv) in y1.iter().zip(&y2) {
+            assert!((a - bv).abs() < 1e-4, "{a} vs {bv}");
+        }
+    }
+
+    #[test]
+    fn merged_equals_unmerged_lora() {
+        let mut rng = Rng::seed(2);
+        let (d_in, d_out, r) = (12usize, 10usize, 3usize);
+        let w0: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() as f32 * 0.1).collect();
+        let a: Vec<f32> = (0..r * d_in).map(|_| rng.normal() as f32 * 0.1).collect();
+        let bm: Vec<f32> = (0..d_out * r).map(|_| rng.normal() as f32 * 0.1).collect();
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal() as f32).collect();
+        let scale = 2.0f32;
+        let merged = merge_lora(&w0, d_in, d_out, &a, &bm, r, scale);
+        let y1 = dense_forward(&merged, d_in, d_out, &x);
+        // reference: x·W0 + scale·B(Ax)
+        let delta = linalg::LoRaDelta {
+            a: a.iter().map(|&v| v as f64).collect(),
+            b: bm.iter().map(|&v| v as f64).collect(),
+            r,
+            d_in,
+            d_out,
+            scale: scale as f64,
+        };
+        let base = dense_forward(&w0, d_in, d_out, &x);
+        let dz = delta.matvec(&x.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        for o in 0..d_out {
+            let want = base[o] + dz[o] as f32;
+            assert!((y1[o] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn zero_kernel_merge_is_identity() {
+        let mut rng = Rng::seed(3);
+        let (m, n, b) = (2usize, 2usize, 4usize);
+        let (d_out, d_in) = (m * b, n * b);
+        let w0: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() as f32).collect();
+        let k = vec![0.0f32; m * n * b];
+        assert_eq!(merge_c3a(&w0, d_in, d_out, &k, m, n, b), w0);
+    }
+}

@@ -1,0 +1,52 @@
+//! PEFT method registry: parameter/memory/FLOP accounting (paper Table 1),
+//! adapter initialization schemes (paper Fig. 3), and adapter merging.
+
+pub mod accounting;
+pub mod init;
+pub mod merge;
+
+/// The PEFT methods the paper evaluates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Full,
+    Head,
+    BitFit,
+    Ia3,
+    Lora,
+    Dora,
+    Vera,
+    Boft,
+    C3a,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "full" => Method::Full,
+            "head" => Method::Head,
+            "bitfit" => Method::BitFit,
+            "ia3" => Method::Ia3,
+            "lora" => Method::Lora,
+            "dora" => Method::Dora,
+            "vera" => Method::Vera,
+            "boft" => Method::Boft,
+            s if s.starts_with("c3a") => Method::C3a,
+            s if s.starts_with("mlp_") => Method::Full,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::Head => "head",
+            Method::BitFit => "bitfit",
+            Method::Ia3 => "ia3",
+            Method::Lora => "lora",
+            Method::Dora => "dora",
+            Method::Vera => "vera",
+            Method::Boft => "boft",
+            Method::C3a => "c3a",
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Artifact manifest (artifacts/manifest.json, written by python aot.py).
+//!
+//! The manifest is the single source of truth for how named model
+//! parameters map onto the positional PJRT inputs/outputs of each AOT
+//! artifact, and how adapters are initialized.
+
+use crate::peft::init::InitSpec;
+use crate::substrate::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Trainable,
+    OptM,
+    OptV,
+    Frozen,
+    FrozenRandom,
+    Data,
+    Scalar,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "trainable" => Role::Trainable,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "frozen" => Role::Frozen,
+            "frozen_random" => Role::FrozenRandom,
+            "data" => Role::Data,
+            "scalar" => Role::Scalar,
+            other => bail!("unknown role {other}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub i32_dtype: bool,
+    pub role: Role,
+    pub init: Option<InitSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PeftParams {
+    pub method: String,
+    pub block: usize,
+    pub rank: usize,
+    pub r_v: usize,
+    pub alpha: f64,
+    pub mlp_mid: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub model: String,
+    pub method: String,
+    pub peft: PeftParams,
+    /// "train" or "eval"
+    pub kind: String,
+    /// cls | reg | lm | mlm | vec
+    pub head: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// paper-style trainable count (head excluded)
+    pub n_params: usize,
+    pub inputs: Vec<InputSpec>,
+    /// trainable names in positional order
+    pub trainable_order: Vec<String>,
+    pub frozen_order: Vec<String>,
+    pub data_order: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub init_path: PathBuf,
+    pub d: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub n_out: usize,
+    pub kind: String,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models").and_then(|v| v.as_obj()).context("manifest: models")? {
+            let cfg = m.get("cfg").context("model cfg")?;
+            let gi = |k: &str| cfg.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    init_path: dir.join(m.get("init").and_then(|v| v.as_str()).context("init path")?),
+                    d: gi("d"),
+                    layers: gi("layers"),
+                    vocab: gi("vocab"),
+                    seq: gi("seq"),
+                    n_out: gi("n_out"),
+                    kind: cfg.get("kind").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.get("artifacts").and_then(|v| v.as_arr()).context("manifest: artifacts")? {
+            let spec = parse_artifact(&dir, a)?;
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { dir, models, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).with_context(|| format!("model {name} not in manifest"))
+    }
+
+    /// Conventional artifact name.
+    pub fn artifact_name(model: &str, method: &str, head: &str, kind: &str) -> String {
+        format!("{model}__{method}__{head}__{kind}")
+    }
+}
+
+fn parse_artifact(dir: &Path, a: &Json) -> Result<ArtifactSpec> {
+    let gets = |k: &str| -> Result<String> {
+        Ok(a.get(k).and_then(|v| v.as_str()).with_context(|| format!("artifact field {k}"))?.to_string())
+    };
+    let name = gets("name")?;
+    let peft_j = a.get("peft").context("peft")?;
+    let peft = PeftParams {
+        method: peft_j.get("method").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+        block: peft_j.get("block").and_then(|v| v.as_usize()).unwrap_or(0),
+        rank: peft_j.get("rank").and_then(|v| v.as_usize()).unwrap_or(0),
+        r_v: peft_j.get("r_v").and_then(|v| v.as_usize()).unwrap_or(0),
+        alpha: peft_j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        mlp_mid: peft_j.get("mlp_mid").and_then(|v| v.as_str()).unwrap_or("dense").to_string(),
+    };
+    let mut inputs = Vec::new();
+    for inp in a.get("inputs").and_then(|v| v.as_arr()).context("inputs")? {
+        let iname = inp.get("name").and_then(|v| v.as_str()).context("input name")?.to_string();
+        let shape = inp
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .context("input shape")?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let role = Role::parse(inp.get("role").and_then(|v| v.as_str()).context("role")?)?;
+        let init = match inp.get("init") {
+            Some(j) => Some(InitSpec::from_json(j)?),
+            None => None,
+        };
+        inputs.push(InputSpec {
+            name: iname,
+            shape,
+            i32_dtype: inp.get("dtype").and_then(|v| v.as_str()) == Some("i32"),
+            role,
+            init,
+        });
+    }
+    let order = |role: Role| {
+        inputs.iter().filter(|i| i.role == role).map(|i| i.name.clone()).collect::<Vec<_>>()
+    };
+    let mut frozen_order = order(Role::Frozen);
+    frozen_order.extend(order(Role::FrozenRandom));
+    Ok(ArtifactSpec {
+        path: dir.join(gets("path")?),
+        model: gets("model")?,
+        method: gets("method")?,
+        kind: gets("kind")?,
+        head: gets("head")?,
+        batch: a.get("batch").and_then(|v| v.as_usize()).context("batch")?,
+        seq: a.get("seq").and_then(|v| v.as_usize()).unwrap_or(0),
+        n_params: a.get("n_params").and_then(|v| v.as_usize()).unwrap_or(0),
+        trainable_order: order(Role::Trainable),
+        data_order: order(Role::Data),
+        frozen_order,
+        peft,
+        inputs,
+        name,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = manifest_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("enc_tiny"));
+        let a = m.artifact("enc_tiny__c3a_d8__cls__train").unwrap();
+        assert_eq!(a.kind, "train");
+        assert_eq!(a.head, "cls");
+        assert!(a.n_params > 0);
+        // input ordering invariant: trainable block comes first
+        assert_eq!(a.inputs[0].role, Role::Trainable);
+        // scalars last
+        assert_eq!(a.inputs.last().unwrap().role, Role::Scalar);
+        // every trainable has an init spec
+        assert!(a
+            .inputs
+            .iter()
+            .filter(|i| i.role == Role::Trainable)
+            .all(|i| i.init.is_some()));
+        // train artifact has matching m/v counts
+        let nt = a.trainable_order.len();
+        let nm = a.inputs.iter().filter(|i| i.role == Role::OptM).count();
+        assert_eq!(nt, nm);
+    }
+
+    #[test]
+    fn artifact_name_convention() {
+        assert_eq!(
+            Manifest::artifact_name("enc_base", "lora", "cls", "train"),
+            "enc_base__lora__cls__train"
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile, execute.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module is the
+//! only bridge between the rust coordinator and the compiled XLA programs.
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+pub mod manifest;
+pub mod session;
+
+/// A compiled XLA program plus its PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    /// compile cache: artifact path -> loaded executable
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile with caching (experiments reuse artifacts heavily;
+    /// PJRT compilation costs seconds per artifact).
+    pub fn load_cached<P: AsRef<Path>>(&self, path: P) -> Result<Rc<Executable>> {
+        let key = path.as_ref().to_string_lossy().into_owned();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let exe = Rc::new(self.load_hlo_text(path)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened tuple outputs.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        let mut out = self.exe.execute::<L>(inputs)?;
+        let first = out
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .context("executable returned no outputs")?;
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device buffers, keeping outputs on device.
+    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        Ok(out.pop().context("no outputs")?)
+    }
+}

@@ -1,0 +1,262 @@
+//! Training / evaluation sessions: bind a compiled artifact to live
+//! parameter state and drive PJRT execution.
+//!
+//! A `TrainSession` owns the trainable parameters + AdamW state as XLA
+//! literals, rebuilt from each step's tuple output; frozen backbone
+//! parameters are uploaded once.  An `EvalSession` borrows the trainable
+//! state to produce logits for the rust-side metric computation.
+
+use super::manifest::{ArtifactSpec, Role};
+use super::Engine;
+use crate::peft::init::C3aScheme;
+use crate::substrate::prng::Rng;
+use crate::substrate::tensor::{DType, Tensor, TensorMap};
+use anyhow::{bail, Context, Result};
+
+/// Convert a host tensor to an XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = match t.dtype {
+        DType::F32 => {
+            let v = t.as_f32();
+            if t.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(&v).reshape(&t.dims_i64())?
+            }
+        }
+        DType::I32 => {
+            let v = t.as_i32();
+            if t.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(&v).reshape(&t.dims_i64())?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+/// Convert a literal back to a host tensor (f32 only — parameter state).
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let v = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_f32(shape.to_vec(), &v))
+}
+
+/// Materialized initial state for one artifact.
+pub struct SessionInit {
+    /// name -> tensor for trainable params
+    pub trainable: TensorMap,
+    /// name -> tensor for frozen params (backbone + frozen_random)
+    pub frozen: TensorMap,
+}
+
+/// Build initial state: frozen params from the pretrained checkpoint (or
+/// init bin), trainables from manifest init specs (or a warm checkpoint).
+pub fn build_init(
+    spec: &ArtifactSpec,
+    pretrained: &TensorMap,
+    warm_trainable: Option<&TensorMap>,
+    rng: &mut Rng,
+    scheme: C3aScheme,
+) -> Result<SessionInit> {
+    let mut trainable = TensorMap::new();
+    let mut frozen = TensorMap::new();
+    for inp in &spec.inputs {
+        match inp.role {
+            Role::Trainable => {
+                let t = if let Some(w) = warm_trainable.and_then(|m| m.get(&inp.name)) {
+                    w.clone()
+                } else if let Some(p) = pretrained.get(&inp.name) {
+                    // e.g. `full` fine-tuning or the always-trainable head
+                    p.clone()
+                } else {
+                    let init = inp.init.as_ref().with_context(|| format!("no init for {}", inp.name))?;
+                    init.materialize(&inp.shape, rng, scheme)
+                };
+                if t.shape != inp.shape {
+                    bail!("{}: shape {:?} != manifest {:?}", inp.name, t.shape, inp.shape);
+                }
+                trainable.insert(inp.name.clone(), t);
+            }
+            Role::Frozen | Role::FrozenRandom => {
+                let t = if let Some(p) = pretrained.get(&inp.name) {
+                    p.clone()
+                } else {
+                    let init = inp.init.as_ref().with_context(|| format!("no init for {}", inp.name))?;
+                    init.materialize(&inp.shape, rng, scheme)
+                };
+                frozen.insert(inp.name.clone(), t);
+            }
+            _ => {}
+        }
+    }
+    Ok(SessionInit { trainable, frozen })
+}
+
+/// One batch of data inputs, in the artifact's `data_order`.
+pub type Batch = Vec<Tensor>;
+
+pub struct TrainSession {
+    spec: ArtifactSpec,
+    exe: std::rc::Rc<super::Executable>,
+    /// literals for trainable params (manifest order)
+    t_state: Vec<xla::Literal>,
+    /// AdamW first/second moments
+    m_state: Vec<xla::Literal>,
+    v_state: Vec<xla::Literal>,
+    /// frozen params, uploaded once (manifest order)
+    f_state: Vec<xla::Literal>,
+    /// trainable shapes for checkpoint extraction
+    t_shapes: Vec<Vec<usize>>,
+    pub steps_done: usize,
+}
+
+impl TrainSession {
+    pub fn new(engine: &Engine, spec: &ArtifactSpec, init: &SessionInit) -> Result<TrainSession> {
+        if spec.kind != "train" {
+            bail!("{} is not a train artifact", spec.name);
+        }
+        let exe = engine.load_cached(&spec.path)?;
+        let mut t_state = Vec::new();
+        let mut t_shapes = Vec::new();
+        for name in &spec.trainable_order {
+            let t = init.trainable.get(name).with_context(|| format!("missing trainable {name}"))?;
+            t_shapes.push(t.shape.clone());
+            t_state.push(tensor_to_literal(t)?);
+        }
+        let zeros = |shapes: &[Vec<usize>]| -> Result<Vec<xla::Literal>> {
+            shapes.iter().map(|s| tensor_to_literal(&Tensor::zeros_f32(s.clone()))).collect()
+        };
+        let m_state = zeros(&t_shapes)?;
+        let v_state = zeros(&t_shapes)?;
+        let mut f_state = Vec::new();
+        for name in &spec.frozen_order {
+            let t = init.frozen.get(name).with_context(|| format!("missing frozen {name}"))?;
+            f_state.push(tensor_to_literal(t)?);
+        }
+        Ok(TrainSession { spec: spec.clone(), exe, t_state, m_state, v_state, f_state, t_shapes, steps_done: 0 })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute one optimizer step; returns (loss, metric numerator).
+    pub fn step(&mut self, batch: &Batch, lr: f32, wd: f32) -> Result<(f32, f32)> {
+        if batch.len() != self.spec.data_order.len() {
+            bail!("batch arity {} != {}", batch.len(), self.spec.data_order.len());
+        }
+        let data_lits: Vec<xla::Literal> =
+            batch.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        // scalar inputs are manifest-driven: `wd` is absent from artifacts
+        // whose trainables are all decay-exempt (XLA DCE; see aot.py)
+        let scalar_lits: Vec<xla::Literal> = self
+            .spec
+            .inputs
+            .iter()
+            .filter(|i| i.role == Role::Scalar)
+            .map(|i| {
+                xla::Literal::scalar(match i.name.as_str() {
+                    "step" => (self.steps_done + 1) as f32,
+                    "lr" => lr,
+                    _ => wd,
+                })
+            })
+            .collect();
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
+            3 * self.t_state.len() + self.f_state.len() + data_lits.len() + 3,
+        );
+        inputs.extend(self.t_state.iter());
+        inputs.extend(self.m_state.iter());
+        inputs.extend(self.v_state.iter());
+        inputs.extend(self.f_state.iter());
+        inputs.extend(data_lits.iter());
+        inputs.extend(scalar_lits.iter());
+
+        let mut outs = self.exe.run(&inputs)?;
+        let nt = self.t_state.len();
+        if outs.len() != 3 * nt + 2 {
+            bail!("{}: expected {} outputs, got {}", self.spec.name, 3 * nt + 2, outs.len());
+        }
+        let metric = outs.pop().unwrap().get_first_element::<f32>()?;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()?;
+        self.v_state = outs.split_off(2 * nt);
+        self.m_state = outs.split_off(nt);
+        self.t_state = outs;
+        self.steps_done += 1;
+        Ok((loss, metric))
+    }
+
+    /// Snapshot the trainable parameters (checkpoint / merge / eval).
+    pub fn trainable_tensors(&self) -> Result<TensorMap> {
+        let mut out = TensorMap::new();
+        for ((name, lit), shape) in
+            self.spec.trainable_order.iter().zip(&self.t_state).zip(&self.t_shapes)
+        {
+            out.insert(name.clone(), literal_to_tensor(lit, shape)?);
+        }
+        Ok(out)
+    }
+
+    /// Overwrite trainable state (restore from checkpoint).
+    pub fn load_trainable(&mut self, t: &TensorMap) -> Result<()> {
+        for (i, name) in self.spec.trainable_order.clone().iter().enumerate() {
+            let ten = t.get(name).with_context(|| format!("missing {name}"))?;
+            self.t_state[i] = tensor_to_literal(ten)?;
+        }
+        Ok(())
+    }
+}
+
+pub struct EvalSession {
+    spec: ArtifactSpec,
+    exe: std::rc::Rc<super::Executable>,
+    f_state: Vec<xla::Literal>,
+}
+
+impl EvalSession {
+    pub fn new(engine: &Engine, spec: &ArtifactSpec, init: &SessionInit) -> Result<EvalSession> {
+        if spec.kind != "eval" {
+            bail!("{} is not an eval artifact", spec.name);
+        }
+        let exe = engine.load_cached(&spec.path)?;
+        let mut f_state = Vec::new();
+        for name in &spec.frozen_order {
+            let t = init.frozen.get(name).with_context(|| format!("missing frozen {name}"))?;
+            f_state.push(tensor_to_literal(t)?);
+        }
+        Ok(EvalSession { spec: spec.clone(), exe, f_state })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Forward pass: returns flattened logits + their shape.
+    pub fn logits(&self, trainable: &TensorMap, batch: &Batch) -> Result<(Vec<f32>, Vec<usize>)> {
+        let mut t_lits = Vec::new();
+        for name in &self.spec.trainable_order {
+            let t = trainable.get(name).with_context(|| format!("missing trainable {name}"))?;
+            t_lits.push(tensor_to_literal(t)?);
+        }
+        let data_lits: Vec<xla::Literal> =
+            batch.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(t_lits.iter());
+        inputs.extend(self.f_state.iter());
+        inputs.extend(data_lits.iter());
+        let mut outs = self.exe.run(&inputs)?;
+        if outs.len() != 1 {
+            bail!("eval artifact returned {} outputs", outs.len());
+        }
+        let lit = outs.pop().unwrap();
+        let shape: Vec<usize> = lit
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        Ok((lit.to_vec::<f32>()?, shape))
+    }
+}

@@ -1,0 +1,354 @@
+//! Circulant / block-circulant algebra — the paper's ΔW = C_blk(Δw).
+//!
+//! Mirrors the L1 Pallas kernel semantics exactly (convolution convention:
+//! first *column* of C(w) is w; see python/compile/kernels/ref.py for the
+//! note on the paper's first-row convention).  Used for:
+//!   * adapter **merging** (Algorithm A2: ΔW columns = Δw ⋆ e_i),
+//!   * host-side inference of merged/unmerged adapters (`serve`),
+//!   * the paper's §4.1 *rank* measurements of learned kernels,
+//!   * the Table 1 operator benchmarks.
+
+use super::fft::{self, c_mul, Plan, C};
+
+/// Kernels of a block-circular operator: `m × n` blocks, each length `b`.
+#[derive(Clone, Debug)]
+pub struct BlockCirculant {
+    pub m: usize,
+    pub n: usize,
+    pub b: usize,
+    /// row-major [m][n][b]
+    pub w: Vec<f64>,
+}
+
+impl BlockCirculant {
+    pub fn new(m: usize, n: usize, b: usize, w: Vec<f64>) -> Self {
+        assert_eq!(w.len(), m * n * b);
+        Self { m, n, b, w }
+    }
+
+    pub fn zeros(m: usize, n: usize, b: usize) -> Self {
+        Self { m, n, b, w: vec![0.0; m * n * b] }
+    }
+
+    #[inline]
+    pub fn kernel(&self, i: usize, j: usize) -> &[f64] {
+        let o = (i * self.n + j) * self.b;
+        &self.w[o..o + self.b]
+    }
+
+    /// Trainable parameter count: d1·d2/b (paper §3.4).
+    pub fn param_count(&self) -> usize {
+        self.m * self.n * self.b
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.m * self.b
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.n * self.b
+    }
+
+    /// Δz = C_blk(Δw)·x via per-block FFT (the paper's Eq. 1 + §3.4).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let plan = Plan::new(self.b);
+        self.matvec_with(&plan, x)
+    }
+
+    /// FFT matvec with a reusable plan and precomputed kernel spectra.
+    pub fn matvec_with(&self, plan: &Plan, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.d_in());
+        let b = self.b;
+        // forward transforms of the n input blocks
+        let xf: Vec<Vec<C>> = (0..self.n).map(|j| fft::rfft(plan, &x[j * b..(j + 1) * b])).collect();
+        let mut out = vec![0.0; self.d_out()];
+        let mut acc = vec![(0.0, 0.0); b];
+        for i in 0..self.m {
+            for z in acc.iter_mut() {
+                *z = (0.0, 0.0);
+            }
+            for j in 0..self.n {
+                let wf = fft::rfft(plan, self.kernel(i, j));
+                for k in 0..b {
+                    let p = c_mul(wf[k], xf[j][k]);
+                    acc[k].0 += p.0;
+                    acc[k].1 += p.1;
+                }
+            }
+            let zi = fft::irfft_real(plan, &acc);
+            out[i * b..(i + 1) * b].copy_from_slice(&zi);
+        }
+        out
+    }
+
+    /// Precompute kernel spectra once; then matvecs skip the per-call
+    /// kernel FFTs — the production inference path.
+    pub fn prepared(&self) -> PreparedBlockCirculant {
+        let plan = Plan::new(self.b);
+        let spectra = (0..self.m * self.n)
+            .map(|ij| fft::rfft(&plan, &self.w[ij * self.b..(ij + 1) * self.b]))
+            .collect();
+        PreparedBlockCirculant { m: self.m, n: self.n, b: self.b, plan, spectra }
+    }
+
+    /// Materialize the dense ΔW [d_out × d_in], via the paper's
+    /// Algorithm A2: column i of ΔW equals Δw ⋆ e_i.
+    pub fn materialize(&self) -> Vec<f64> {
+        let (d_out, d_in, b) = (self.d_out(), self.d_in(), self.b);
+        let plan = Plan::new(b);
+        let prepared = self.prepared();
+        let mut out = vec![0.0; d_out * d_in];
+        let mut e = vec![0.0; d_in];
+        for col in 0..d_in {
+            e[col] = 1.0;
+            let z = prepared.matvec(&e);
+            e[col] = 0.0;
+            for row in 0..d_out {
+                out[row * d_in + col] = z[row];
+            }
+        }
+        let _ = plan;
+        out
+    }
+
+    /// Ranks of every block C(Δw_ij) via DFT-eigenvalue counting.
+    pub fn block_ranks(&self, tol: f64) -> Vec<usize> {
+        let plan = Plan::new(self.b);
+        (0..self.m * self.n)
+            .map(|ij| circulant_rank_with(&plan, &self.w[ij * self.b..(ij + 1) * self.b], tol))
+            .collect()
+    }
+}
+
+/// Spectra-cached operator for the inference hot path.
+pub struct PreparedBlockCirculant {
+    pub m: usize,
+    pub n: usize,
+    pub b: usize,
+    plan: Plan,
+    /// [m*n] spectra, each of length b
+    spectra: Vec<Vec<C>>,
+}
+
+impl PreparedBlockCirculant {
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.m * self.b];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free variant used by the bench/serve hot loops.
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        let b = self.b;
+        assert_eq!(x.len(), self.n * b);
+        assert_eq!(out.len(), self.m * b);
+        let xf: Vec<Vec<C>> =
+            (0..self.n).map(|j| fft::rfft(&self.plan, &x[j * b..(j + 1) * b])).collect();
+        let mut acc = vec![(0.0, 0.0); b];
+        for i in 0..self.m {
+            for z in acc.iter_mut() {
+                *z = (0.0, 0.0);
+            }
+            for j in 0..self.n {
+                let wf = &self.spectra[i * self.n + j];
+                for k in 0..b {
+                    let p = c_mul(wf[k], xf[j][k]);
+                    acc[k].0 += p.0;
+                    acc[k].1 += p.1;
+                }
+            }
+            let zi = fft::irfft_real(&self.plan, &acc);
+            out[i * b..(i + 1) * b].copy_from_slice(&zi);
+        }
+    }
+}
+
+/// Dense circulant matrix of a single kernel: C[r][c] = w[(r-c) mod b].
+pub fn circulant_matrix(w: &[f64]) -> Vec<f64> {
+    let b = w.len();
+    let mut out = vec![0.0; b * b];
+    for r in 0..b {
+        for c in 0..b {
+            out[r * b + c] = w[(r + b - c) % b];
+        }
+    }
+    out
+}
+
+/// rank C(w) = #nonzero DFT coefficients (Ingleton 1956; paper §3.2).
+pub fn circulant_rank(w: &[f64], tol: f64) -> usize {
+    circulant_rank_with(&Plan::new(w.len()), w, tol)
+}
+
+pub fn circulant_rank_with(plan: &Plan, w: &[f64], tol: f64) -> usize {
+    let spec = fft::rfft(plan, w);
+    let scale = spec.iter().map(|z| (z.0 * z.0 + z.1 * z.1).sqrt()).fold(1.0f64, f64::max);
+    spec.iter().filter(|z| (z.0 * z.0 + z.1 * z.1).sqrt() > tol * scale).count()
+}
+
+/// Rank of the full ΔW via Gaussian elimination on the materialized matrix
+/// (cross-check for `block_ranks`; O(d³), test/analysis use only).
+pub fn dense_rank(mat: &[f64], rows: usize, cols: usize, tol: f64) -> usize {
+    let mut a = mat.to_vec();
+    let mut rank = 0;
+    let mut row = 0;
+    for col in 0..cols {
+        // find pivot
+        let mut piv = row;
+        let mut best = 0.0;
+        for r in row..rows {
+            let v = a[r * cols + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best <= tol {
+            continue;
+        }
+        if piv != row {
+            for c in 0..cols {
+                a.swap(row * cols + c, piv * cols + c);
+            }
+        }
+        let p = a[row * cols + col];
+        for r in (row + 1)..rows {
+            let f = a[r * cols + col] / p;
+            if f != 0.0 {
+                for c in col..cols {
+                    a[r * cols + c] -= f * a[row * cols + c];
+                }
+            }
+        }
+        rank += 1;
+        row += 1;
+        if row == rows {
+            break;
+        }
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Rng;
+
+    fn rand_bc(rng: &mut Rng, m: usize, n: usize, b: usize) -> BlockCirculant {
+        BlockCirculant::new(m, n, b, (0..m * n * b).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn matvec_matches_materialized() {
+        let mut rng = Rng::seed(1);
+        for &(m, n, b) in &[(1usize, 1usize, 8usize), (2, 3, 5), (4, 4, 16), (3, 2, 7)] {
+            let bc = rand_bc(&mut rng, m, n, b);
+            let x: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            let got = bc.matvec(&x);
+            let mat = bc.materialize();
+            let (d_out, d_in) = (m * b, n * b);
+            for r in 0..d_out {
+                let want: f64 = (0..d_in).map(|c| mat[r * d_in + c] * x[c]).sum();
+                assert!((got[r] - want).abs() < 1e-9, "r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_matches_unprepared() {
+        let mut rng = Rng::seed(2);
+        let bc = rand_bc(&mut rng, 3, 2, 12);
+        let x: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let a = bc.matvec(&x);
+        let b = bc.prepared().matvec(&x);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn single_block_is_circulant_matrix() {
+        let mut rng = Rng::seed(3);
+        let w: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let bc = BlockCirculant::new(1, 1, 6, w.clone());
+        let mat = bc.materialize();
+        let want = circulant_matrix(&w);
+        for (a, b) in mat.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn identity_kernel_materializes_identity() {
+        let n = 3;
+        let b = 4;
+        let mut bc = BlockCirculant::zeros(n, n, b);
+        for i in 0..n {
+            bc.w[(i * n + i) * b] = 1.0;
+        }
+        let mat = bc.materialize();
+        let d = n * b;
+        for r in 0..d {
+            for c in 0..d {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((mat[r * d + c] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_generic_kernel_is_full() {
+        let mut rng = Rng::seed(4);
+        let w: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        assert_eq!(circulant_rank(&w, 1e-9), 64);
+    }
+
+    #[test]
+    fn rank_constant_kernel_is_one() {
+        assert_eq!(circulant_rank(&vec![2.5; 16], 1e-9), 1);
+    }
+
+    #[test]
+    fn rank_matches_dense_rank() {
+        let mut rng = Rng::seed(5);
+        for b in [4usize, 8, 12] {
+            // random kernel: full rank
+            let w: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+            let dft_rank = circulant_rank(&w, 1e-9);
+            let mat = circulant_matrix(&w);
+            assert_eq!(dft_rank, dense_rank(&mat, b, b, 1e-9));
+            // zero-mean kernel: rank b-1
+            let mut wz = w.clone();
+            let mean: f64 = wz.iter().sum::<f64>() / b as f64;
+            for v in wz.iter_mut() {
+                *v -= mean;
+            }
+            let r1 = circulant_rank(&wz, 1e-9);
+            let r2 = dense_rank(&circulant_matrix(&wz), b, b, 1e-7);
+            assert_eq!(r1, b - 1);
+            assert_eq!(r1, r2);
+        }
+    }
+
+    #[test]
+    fn block_rank_can_exceed_param_budget_rank() {
+        // The paper's core claim: with d params (b = d), ΔW can be full
+        // rank d, while LoRA with the same budget is capped at rank ~1/2.
+        let mut rng = Rng::seed(6);
+        let d = 32;
+        let bc = BlockCirculant::new(1, 1, d, (0..d).map(|_| rng.normal()).collect());
+        let mat = bc.materialize();
+        assert_eq!(dense_rank(&mat, d, d, 1e-9), d); // full rank from d params
+    }
+
+    #[test]
+    fn matvec_into_no_alloc_path_matches() {
+        let mut rng = Rng::seed(7);
+        let bc = rand_bc(&mut rng, 2, 2, 16).prepared();
+        let x: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; 32];
+        bc.matvec_into(&x, &mut out);
+        let want = bc.matvec(&x);
+        assert_eq!(out, want);
+    }
+}

@@ -1,0 +1,296 @@
+//! Complex FFT: iterative radix-2 with Bluestein fallback for arbitrary n.
+//!
+//! This is the rust-side realization of the paper's cuFFT dependency
+//! (§3.5): circulant matvecs, rank analysis, and adapter merging all run
+//! through here.  Real-input convenience wrappers operate on interleaved
+//! `(re, im)` slices to stay allocation-free on the hot path.
+
+use std::f64::consts::PI;
+
+/// A complex number as (re, im) — kept trivially copyable.
+pub type C = (f64, f64);
+
+#[inline]
+pub fn c_add(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+
+#[inline]
+pub fn c_sub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+
+#[inline]
+pub fn c_mul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// Twiddle-factor table for a radix-2 FFT of size `n` (power of two).
+pub struct Plan {
+    pub n: usize,
+    /// twiddles[k] = exp(-2πik/n) for k < n/2
+    twiddles: Vec<C>,
+    /// bit-reversal permutation
+    rev: Vec<u32>,
+    /// Bluestein scratch (None when n is a power of two)
+    bluestein: Option<Bluestein>,
+}
+
+struct Bluestein {
+    /// padded power-of-two size m >= 2n-1
+    m: usize,
+    /// chirp[k] = exp(-iπk²/n), k < n
+    chirp: Vec<C>,
+    /// FFT_m of the zero-padded conjugate chirp
+    b_hat: Vec<C>,
+    inner: Box<Plan>,
+}
+
+impl Plan {
+    /// Build a plan for any n >= 1.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        if n.is_power_of_two() {
+            let mut twiddles = Vec::with_capacity(n / 2);
+            for k in 0..n / 2 {
+                let ang = -2.0 * PI * (k as f64) / (n as f64);
+                twiddles.push((ang.cos(), ang.sin()));
+            }
+            let bits = n.trailing_zeros();
+            let rev = (0..n as u32)
+                .map(|i| if bits == 0 { 0 } else { i.reverse_bits() >> (32 - bits) })
+                .collect();
+            Plan { n, twiddles, rev, bluestein: None }
+        } else {
+            let m = (2 * n - 1).next_power_of_two();
+            let mut chirp = Vec::with_capacity(n);
+            for k in 0..n {
+                // k² mod 2n keeps the angle argument bounded (exact for integer k)
+                let kk = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
+                let ang = -PI * kk / (n as f64);
+                chirp.push((ang.cos(), ang.sin()));
+            }
+            let inner = Box::new(Plan::new(m));
+            let mut b = vec![(0.0, 0.0); m];
+            b[0] = (chirp[0].0, -chirp[0].1);
+            for k in 1..n {
+                let conj = (chirp[k].0, -chirp[k].1);
+                b[k] = conj;
+                b[m - k] = conj;
+            }
+            inner.fft_in_place(&mut b);
+            Plan {
+                n,
+                twiddles: Vec::new(),
+                rev: Vec::new(),
+                bluestein: Some(Bluestein { m, chirp, b_hat: b, inner }),
+            }
+        }
+    }
+
+    /// Forward DFT in place: X[k] = Σ x[j]·exp(-2πijk/n).
+    pub fn fft_in_place(&self, data: &mut [C]) {
+        assert_eq!(data.len(), self.n);
+        match &self.bluestein {
+            None => self.radix2(data),
+            Some(bs) => self.bluestein_fft(bs, data),
+        }
+    }
+
+    /// Inverse DFT in place (normalized by 1/n).
+    pub fn ifft_in_place(&self, data: &mut [C]) {
+        // conj -> fft -> conj, scale
+        for z in data.iter_mut() {
+            z.1 = -z.1;
+        }
+        self.fft_in_place(data);
+        let s = 1.0 / self.n as f64;
+        for z in data.iter_mut() {
+            *z = (z.0 * s, -z.1 * s);
+        }
+    }
+
+    fn radix2(&self, data: &mut [C]) {
+        let n = self.n;
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            let mut i = 0;
+            while i < n {
+                for k in 0..half {
+                    let w = self.twiddles[k * step];
+                    let u = data[i + k];
+                    let t = c_mul(w, data[i + k + half]);
+                    data[i + k] = c_add(u, t);
+                    data[i + k + half] = c_sub(u, t);
+                }
+                i += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    fn bluestein_fft(&self, bs: &Bluestein, data: &mut [C]) {
+        let n = self.n;
+        let mut a = vec![(0.0, 0.0); bs.m];
+        for k in 0..n {
+            a[k] = c_mul(data[k], bs.chirp[k]);
+        }
+        bs.inner.fft_in_place(&mut a);
+        for (x, y) in a.iter_mut().zip(bs.b_hat.iter()) {
+            *x = c_mul(*x, *y);
+        }
+        bs.inner.ifft_in_place(&mut a);
+        for k in 0..n {
+            data[k] = c_mul(a[k], bs.chirp[k]);
+        }
+    }
+}
+
+/// Forward DFT of a real signal; returns complex spectrum.
+pub fn rfft(plan: &Plan, x: &[f64]) -> Vec<C> {
+    let mut buf: Vec<C> = x.iter().map(|&v| (v, 0.0)).collect();
+    plan.fft_in_place(&mut buf);
+    buf
+}
+
+/// Inverse DFT, returning only the real part.
+pub fn irfft_real(plan: &Plan, spec: &[C]) -> Vec<f64> {
+    let mut buf = spec.to_vec();
+    plan.ifft_in_place(&mut buf);
+    buf.into_iter().map(|z| z.0).collect()
+}
+
+/// Naive O(n²) DFT — the test oracle for the fast paths.
+pub fn dft_naive(x: &[C]) -> Vec<C> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = (0.0, 0.0);
+            for (j, &v) in x.iter().enumerate() {
+                let ang = -2.0 * PI * (j as f64) * (k as f64) / (n as f64);
+                acc = c_add(acc, c_mul(v, (ang.cos(), ang.sin())));
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Circular convolution of two real signals via FFT (any length).
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let plan = Plan::new(a.len());
+    circular_convolve_with(&plan, a, b)
+}
+
+/// Same, reusing a prebuilt plan (hot path).
+pub fn circular_convolve_with(plan: &Plan, a: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut fa = rfft(plan, a);
+    let fb = rfft(plan, b);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = c_mul(*x, *y);
+    }
+    irfft_real(plan, &fa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[C], b: &[C], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x.0 - y.0).abs() < tol && (x.1 - y.1).abs() < tol, "{x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn radix2_matches_naive() {
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let x: Vec<C> = (0..n).map(|i| ((i as f64 * 0.7).sin(), (i as f64 * 0.3).cos())).collect();
+            let want = dft_naive(&x);
+            let plan = Plan::new(n);
+            let mut got = x.clone();
+            plan.fft_in_place(&mut got);
+            assert_close(&got, &want, 1e-9 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn bluestein_matches_naive() {
+        for n in [3usize, 5, 6, 7, 12, 48, 100, 192, 320, 768] {
+            let x: Vec<C> = (0..n).map(|i| ((i as f64 * 1.1).sin(), (i as f64 * 0.5).sin())).collect();
+            let want = dft_naive(&x);
+            let plan = Plan::new(n);
+            let mut got = x.clone();
+            plan.fft_in_place(&mut got);
+            assert_close(&got, &want, 1e-8 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn ifft_inverts_fft() {
+        for n in [4usize, 7, 16, 100] {
+            let x: Vec<C> = (0..n).map(|i| (i as f64, -(i as f64) * 0.5)).collect();
+            let plan = Plan::new(n);
+            let mut y = x.clone();
+            plan.fft_in_place(&mut y);
+            plan.ifft_in_place(&mut y);
+            assert_close(&y, &x, 1e-8 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let n = 128;
+        let x: Vec<C> = (0..n).map(|i| ((i as f64).sin(), 0.0)).collect();
+        let e_time: f64 = x.iter().map(|z| z.0 * z.0 + z.1 * z.1).sum();
+        let plan = Plan::new(n);
+        let mut y = x;
+        plan.fft_in_place(&mut y);
+        let e_freq: f64 = y.iter().map(|z| z.0 * z.0 + z.1 * z.1).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-8);
+    }
+
+    #[test]
+    fn convolution_theorem_vs_direct() {
+        // property-style: seeded sweep over sizes incl non-pow2
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            (seed as f64 / u64::MAX as f64) - 0.5
+        };
+        for n in [1usize, 2, 3, 8, 13, 32, 60] {
+            let a: Vec<f64> = (0..n).map(|_| next()).collect();
+            let b: Vec<f64> = (0..n).map(|_| next()).collect();
+            let got = circular_convolve(&a, &b);
+            for t in 0..n {
+                let mut want = 0.0;
+                for tau in 0..n {
+                    want += a[tau] * b[(t + n - tau) % n];
+                }
+                assert!((got[t] - want).abs() < 1e-9, "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn impulse_response() {
+        let plan = Plan::new(16);
+        let mut x = vec![(0.0, 0.0); 16];
+        x[0] = (1.0, 0.0);
+        plan.fft_in_place(&mut x);
+        for z in &x {
+            assert!((z.0 - 1.0).abs() < 1e-12 && z.1.abs() < 1e-12);
+        }
+    }
+}

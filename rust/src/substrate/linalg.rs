@@ -1,0 +1,242 @@
+//! Minimal dense linear algebra for baselines and the Table 1 benches:
+//! LoRA / VeRA delta matvecs, dense matmul, norms.  Row-major f64.
+
+/// y = A·x where A is rows×cols row-major.
+pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(x.len(), cols);
+    let mut y = vec![0.0; rows];
+    matvec_into(a, rows, cols, x, &mut y);
+    y
+}
+
+/// Allocation-free matvec for hot loops.
+pub fn matvec_into(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        let mut acc = 0.0;
+        for (v, xv) in row.iter().zip(x.iter()) {
+            acc += v * xv;
+        }
+        y[r] = acc;
+    }
+}
+
+/// C = A·B, A is m×k, B is k×n (row-major).
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// LoRA delta matvec: y = B·(A·x); A r×d_in, B d_out×r.
+pub struct LoRaDelta {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    pub r: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub scale: f64,
+}
+
+impl LoRaDelta {
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let hidden = matvec(&self.a, self.r, self.d_in, x);
+        let mut y = matvec(&self.b, self.d_out, self.r, &hidden);
+        for v in y.iter_mut() {
+            *v *= self.scale;
+        }
+        y
+    }
+
+    pub fn matvec_into(&self, x: &[f64], hidden: &mut [f64], y: &mut [f64]) {
+        matvec_into(&self.a, self.r, self.d_in, x, hidden);
+        matvec_into(&self.b, self.d_out, self.r, hidden, y);
+        for v in y.iter_mut() {
+            *v *= self.scale;
+        }
+    }
+
+    /// Materialized ΔW = scale·B·A (d_out × d_in).
+    pub fn materialize(&self) -> Vec<f64> {
+        let mut m = matmul(&self.b, &self.a, self.d_out, self.r, self.d_in);
+        for v in m.iter_mut() {
+            *v *= self.scale;
+        }
+        m
+    }
+}
+
+/// VeRA delta matvec: y = λb ∘ (B·(λd ∘ (A·x))); frozen A (r_v×d_in), B (d_out×r_v).
+pub struct VeraDelta {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    pub ld: Vec<f64>,
+    pub lb: Vec<f64>,
+    pub r_v: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl VeraDelta {
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut h = matvec(&self.a, self.r_v, self.d_in, x);
+        for (v, s) in h.iter_mut().zip(&self.ld) {
+            *v *= s;
+        }
+        let mut y = matvec(&self.b, self.d_out, self.r_v, &h);
+        for (v, s) in y.iter_mut().zip(&self.lb) {
+            *v *= s;
+        }
+        y
+    }
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// argmax of a slice (first max wins).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically-stable softmax in place.
+pub fn softmax_inplace(xs: &mut [f64]) {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for v in xs.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::circulant::dense_rank;
+    use crate::substrate::prng::Rng;
+
+    #[test]
+    fn matvec_identity() {
+        let d = 4;
+        let mut eye = vec![0.0; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 1.0;
+        }
+        let x = vec![1.0, -2.0, 3.0, 0.5];
+        assert_eq!(matvec(&eye, d, d, &x), x);
+    }
+
+    #[test]
+    fn matmul_associative_with_matvec() {
+        let mut rng = Rng::seed(1);
+        let (m, k, n) = (3, 4, 5);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ab = matmul(&a, &b, m, k, n);
+        let y1 = matvec(&ab, m, n, &x);
+        let y2 = matvec(&a, m, k, &matvec(&b, k, n, &x));
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lora_rank_capped_by_r() {
+        // The paper's motivating limitation: rank(BA) <= r.
+        let mut rng = Rng::seed(2);
+        let (d, r) = (16, 2);
+        let delta = LoRaDelta {
+            a: (0..r * d).map(|_| rng.normal()).collect(),
+            b: (0..d * r).map(|_| rng.normal()).collect(),
+            r,
+            d_in: d,
+            d_out: d,
+            scale: 1.0,
+        };
+        let m = delta.materialize();
+        assert_eq!(dense_rank(&m, d, d, 1e-9), r);
+    }
+
+    #[test]
+    fn lora_matvec_matches_materialized() {
+        let mut rng = Rng::seed(3);
+        let (d_in, d_out, r) = (6, 8, 3);
+        let delta = LoRaDelta {
+            a: (0..r * d_in).map(|_| rng.normal()).collect(),
+            b: (0..d_out * r).map(|_| rng.normal()).collect(),
+            r,
+            d_in,
+            d_out,
+            scale: 0.5,
+        };
+        let x: Vec<f64> = (0..d_in).map(|_| rng.normal()).collect();
+        let y1 = delta.matvec(&x);
+        let y2 = matvec(&delta.materialize(), d_out, d_in, &x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn vera_matvec_shape_and_scaling() {
+        let mut rng = Rng::seed(4);
+        let (d, rv) = (8, 16);
+        let v = VeraDelta {
+            a: (0..rv * d).map(|_| rng.normal()).collect(),
+            b: (0..d * rv).map(|_| rng.normal()).collect(),
+            ld: vec![0.0; rv],
+            lb: vec![1.0; d],
+            r_v: rv,
+            d_in: d,
+            d_out: d,
+        };
+        // zero λd kills the delta
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        assert!(norm2(&v.matvec(&x)) < 1e-12);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -100.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+}

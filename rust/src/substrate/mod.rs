@@ -1,0 +1,16 @@
+//! From-scratch substrates the coordinator depends on.
+//!
+//! Nothing here touches XLA; these are the pure-rust building blocks for
+//! the paper's evaluation: FFT-based circulant algebra (the operator the
+//! paper contributes), exact rank analysis, PRNG for adapter/projection
+//! initialization, dense linear algebra for baselines, and the JSON /
+//! config parsers (no serde available offline — see DESIGN.md §3).
+
+pub mod circulant;
+pub mod fft;
+pub mod json;
+pub mod linalg;
+pub mod polynomial;
+pub mod prng;
+pub mod tensor;
+pub mod toml;

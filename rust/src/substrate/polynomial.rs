@@ -1,0 +1,263 @@
+//! Exact circulant rank via polynomial gcd over the rationals.
+//!
+//! The paper cites Ingleton (1956): rank C(w) = d − deg(gcd(f_w(x), x^d−1))
+//! where f_w is the polynomial with coefficients w.  For integer/rational
+//! kernels we can evaluate this *exactly* (i64 rationals with gcd
+//! normalization), giving an independent cross-check of the numeric
+//! DFT-eigenvalue rank in `circulant.rs`.
+
+/// A rational number kept in lowest terms (i128 to absorb the coefficient
+/// growth of the rational Euclid chain; remainders are also content-
+/// normalized in `Poly::gcd`, which keeps magnitudes small in practice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rat {
+    pub num: i128,
+    pub den: i128, // > 0
+}
+
+fn gcd_i128(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Rat {
+    pub fn int(n: i64) -> Self {
+        Self { num: n as i128, den: 1 }
+    }
+
+    pub fn new(num: i128, den: i128) -> Self {
+        assert!(den != 0);
+        let sign = if den < 0 { -1 } else { 1 };
+        let g = gcd_i128(num, den).max(1);
+        Self { num: sign * num / g, den: sign * den / g }
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.num == 0
+    }
+
+    pub fn add(self, o: Rat) -> Rat {
+        Rat::new(self.num * o.den + o.num * self.den, self.den * o.den)
+    }
+
+    pub fn sub(self, o: Rat) -> Rat {
+        Rat::new(self.num * o.den - o.num * self.den, self.den * o.den)
+    }
+
+    pub fn mul(self, o: Rat) -> Rat {
+        Rat::new(self.num * o.num, self.den * o.den)
+    }
+
+    pub fn div(self, o: Rat) -> Rat {
+        assert!(!o.is_zero());
+        Rat::new(self.num * o.den, self.den * o.num)
+    }
+}
+
+/// Dense polynomial over Q; coeffs[i] multiplies x^i.  Always trimmed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Poly {
+    pub coeffs: Vec<Rat>,
+}
+
+impl Poly {
+    pub fn new(mut coeffs: Vec<Rat>) -> Self {
+        while coeffs.len() > 1 && coeffs.last().is_some_and(|c| c.is_zero()) {
+            coeffs.pop();
+        }
+        if coeffs.is_empty() {
+            coeffs.push(Rat::int(0));
+        }
+        Self { coeffs }
+    }
+
+    pub fn from_ints(v: &[i64]) -> Self {
+        Self::new(v.iter().map(|&n| Rat::int(n)).collect())
+    }
+
+    pub fn zero() -> Self {
+        Self::from_ints(&[0])
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.coeffs.len() == 1 && self.coeffs[0].is_zero()
+    }
+
+    pub fn degree(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    /// x^d − 1.
+    pub fn xd_minus_1(d: usize) -> Self {
+        let mut c = vec![Rat::int(0); d + 1];
+        c[0] = Rat::int(-1);
+        c[d] = Rat::int(1);
+        Self::new(c)
+    }
+
+    /// Normalize to a monic polynomial (gcd canonical form).
+    pub fn monic(mut self) -> Self {
+        if self.is_zero() {
+            return self;
+        }
+        let lead = *self.coeffs.last().unwrap();
+        for c in self.coeffs.iter_mut() {
+            *c = c.div(lead);
+        }
+        self
+    }
+
+    /// Polynomial remainder self mod other (other nonzero).
+    pub fn rem(&self, other: &Poly) -> Poly {
+        assert!(!other.is_zero());
+        let mut r = self.coeffs.clone();
+        let do_ = other.degree();
+        let lead = *other.coeffs.last().unwrap();
+        while r.len() > do_ && !(r.len() == 1 && r[0].is_zero()) {
+            let dr = r.len() - 1;
+            if dr < do_ {
+                break;
+            }
+            let f = r[dr].div(lead);
+            if !f.is_zero() {
+                for i in 0..=do_ {
+                    let idx = dr - do_ + i;
+                    r[idx] = r[idx].sub(f.mul(other.coeffs[i]));
+                }
+            }
+            r.pop();
+            while r.len() > 1 && r.last().is_some_and(|c| c.is_zero()) {
+                r.pop();
+            }
+        }
+        Poly::new(r)
+    }
+
+    /// Scale so coefficients are coprime integers (gcd is defined up to a
+    /// scalar; this bounds coefficient growth along the Euclid chain).
+    pub fn normalize_content(mut self) -> Self {
+        if self.is_zero() {
+            return self;
+        }
+        let mut den_lcm: i128 = 1;
+        for c in &self.coeffs {
+            den_lcm = den_lcm / gcd_i128(den_lcm, c.den) * c.den;
+        }
+        let mut num_gcd: i128 = 0;
+        let ints: Vec<i128> = self.coeffs.iter().map(|c| c.num * (den_lcm / c.den)).collect();
+        for &v in &ints {
+            num_gcd = gcd_i128(num_gcd, v);
+        }
+        let num_gcd = num_gcd.max(1);
+        for (c, &v) in self.coeffs.iter_mut().zip(&ints) {
+            *c = Rat { num: v / num_gcd, den: 1 };
+        }
+        self
+    }
+
+    /// Monic gcd via Euclid with content normalization.
+    pub fn gcd(a: &Poly, b: &Poly) -> Poly {
+        let (mut a, mut b) = (a.clone().normalize_content(), b.clone().normalize_content());
+        while !b.is_zero() {
+            let r = a.rem(&b).normalize_content();
+            a = b;
+            b = r;
+        }
+        a.monic()
+    }
+}
+
+/// Exact rank of C(w) for an integer kernel (paper §3.2, Ingleton 1956).
+pub fn circulant_rank_exact(w: &[i64]) -> usize {
+    let d = w.len();
+    let f = Poly::from_ints(w);
+    if f.is_zero() {
+        return 0;
+    }
+    let g = Poly::gcd(&f, &Poly::xd_minus_1(d));
+    d - g.degree()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::circulant;
+
+    #[test]
+    fn rat_arithmetic() {
+        let a = Rat::new(1, 2);
+        let b = Rat::new(1, 3);
+        assert_eq!(a.add(b), Rat::new(5, 6));
+        assert_eq!(a.mul(b), Rat::new(1, 6));
+        assert_eq!(a.sub(b), Rat::new(1, 6));
+        assert_eq!(a.div(b), Rat::new(3, 2));
+        assert_eq!(Rat::new(-2, -4), Rat::new(1, 2));
+        assert_eq!(Rat::new(2, -4), Rat::new(-1, 2));
+    }
+
+    #[test]
+    fn poly_rem_and_gcd() {
+        // (x-1)(x+1) = x² - 1; gcd with (x-1)(x+2) is x-1
+        let a = Poly::from_ints(&[-1, 0, 1]);
+        let b = Poly::from_ints(&[-2, 1, 1]);
+        let g = Poly::gcd(&a, &b);
+        assert_eq!(g, Poly::from_ints(&[-1, 1]).monic());
+    }
+
+    #[test]
+    fn constant_kernel_rank_one() {
+        // f = c(1 + x + ... + x^{d-1}); gcd with x^d - 1 has degree d-1
+        assert_eq!(circulant_rank_exact(&[3, 3, 3, 3]), 1);
+        assert_eq!(circulant_rank_exact(&[1; 8]), 1);
+    }
+
+    #[test]
+    fn generic_kernel_full_rank() {
+        assert_eq!(circulant_rank_exact(&[1, 2, 3, 4, 5]), 5);
+        assert_eq!(circulant_rank_exact(&[7, 1, 0, 0, 2, 9]), 6);
+    }
+
+    #[test]
+    fn alternating_kernel() {
+        // [1,-1,1,-1]: f(x) = 1 - x + x² - x³ = (1-x)(1+x²); shares
+        // x+1? f(-1)=4≠0... roots of x^4-1 are ±1, ±i; f(1)=0, f(i)=1-i+(-1)...
+        // evaluate via the exact routine and cross-check numerically below.
+        let w = [1i64, -1, 1, -1];
+        let exact = circulant_rank_exact(&w);
+        let num = circulant::circulant_rank(&[1.0, -1.0, 1.0, -1.0], 1e-9);
+        assert_eq!(exact, num);
+    }
+
+    #[test]
+    fn exact_matches_numeric_on_random_integer_kernels() {
+        use crate::substrate::prng::Rng;
+        let mut rng = Rng::seed(99);
+        for d in [4usize, 6, 8, 12] {
+            for _ in 0..20 {
+                // small ints, frequently degenerate
+                let w: Vec<i64> = (0..d).map(|_| rng.below(5) as i64 - 2).collect();
+                let exact = circulant_rank_exact(&w);
+                let wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+                if wf.iter().all(|&v| v == 0.0) {
+                    assert_eq!(exact, 0);
+                    continue;
+                }
+                let num = circulant::circulant_rank(&wf, 1e-9);
+                assert_eq!(exact, num, "w={w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_bound_is_d() {
+        for d in 2..10usize {
+            let w: Vec<i64> = (0..d as i64).collect();
+            assert!(circulant_rank_exact(&w) <= d);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Shaped host tensors + the C3AT binary container (checkpoints and the
+//! python→rust initial-parameter handoff; format spec in
+//! python/compile/tensorio.py).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+}
+
+/// A host tensor: shape + raw little-endian storage.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// f32 storage (bit-cast for i32)
+    data: Vec<u32>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
+        Self { dtype: DType::F32, shape, data: values.iter().map(|v| v.to_bits()).collect() }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
+        Self { dtype: DType::I32, shape, data: values.iter().map(|&v| v as u32).collect() }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        Self { dtype: DType::F32, shape, data: vec![0u32; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data.iter().map(|&b| f32::from_bits(b)).collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data.iter().map(|&b| b as i32).collect()
+    }
+
+    /// Dimensions as i64 (what the xla crate's reshape wants).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Ordered named-tensor container.
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+const MAGIC: &[u8; 4] = b"C3AT";
+
+/// Save a tensor map in the C3AT format.
+pub fn save<P: AsRef<Path>>(path: P, tensors: &TensorMap) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.push(t.dtype.code());
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &w in &t.data {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    let tmp = path.as_ref().with_extension("tmp");
+    std::fs::File::create(&tmp)?.write_all(&buf)?;
+    std::fs::rename(&tmp, path.as_ref())?;
+    Ok(())
+}
+
+/// Load a C3AT tensor map.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<TensorMap> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?
+        .read_to_end(&mut bytes)?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated C3AT file");
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 4)? != MAGIC {
+        bail!("bad magic");
+    }
+    let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if version != 1 {
+        bail!("unsupported version {version}");
+    }
+    let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())?;
+        let dtype = DType::from_code(take(&mut pos, 1)?[0])?;
+        let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+        }
+        let n = shape.iter().product::<usize>().max(1);
+        let raw = take(&mut pos, 4 * n)?;
+        let data = raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        out.insert(name, Tensor { dtype, shape, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = TensorMap::new();
+        m.insert("a.w".into(), Tensor::from_f32(vec![2, 3], &[1.0, -2.0, 3.5, 0.0, 1e-8, 7.0]));
+        m.insert("b.ids".into(), Tensor::from_i32(vec![4], &[1, -1, 1 << 20, 0]));
+        m.insert("scalar".into(), Tensor::from_f32(vec![], &[42.0]));
+        let dir = std::env::temp_dir().join("c3a_tensor_test.bin");
+        save(&dir, &m).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back["a.w"].as_f32(), m["a.w"].as_f32());
+        assert_eq!(back["a.w"].shape, vec![2, 3]);
+        assert_eq!(back["b.ids"].as_i32(), m["b.ids"].as_i32());
+        assert_eq!(back["scalar"].as_f32(), vec![42.0]);
+    }
+
+    #[test]
+    fn reads_python_written_file() {
+        // The python build path writes *_init.bin in the same format; if
+        // artifacts exist, verify interop.
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/enc_tiny_init.bin");
+        if !p.exists() {
+            eprintln!("skipping: {} missing (run `make artifacts`)", p.display());
+            return;
+        }
+        let m = load(&p).unwrap();
+        assert!(m.contains_key("embed.tok"));
+        let t = &m["embed.tok"];
+        assert_eq!(t.dtype, DType::F32);
+        assert_eq!(t.shape.len(), 2);
+        assert!(t.as_f32().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = std::env::temp_dir().join("c3a_badmagic.bin");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! TOML-subset parser for run configs (no serde/toml crates offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous inline arrays, `#` comments.  That covers
+//! every config in configs/ — nested tables and datetimes intentionally
+//! out of scope.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value; top-level keys live in section "".
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name.strip_suffix(']').with_context(|| format!("line {}: bad section", lineno + 1))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        doc.get_mut(&section).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // honor '#' only outside strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\n", "\n").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            // no nested arrays/strings-with-commas needed for our configs
+            for part in trimmed.split(',') {
+                let p = part.trim();
+                if !p.is_empty() {
+                    items.push(parse_value(p)?);
+                }
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = parse(
+            r#"
+# run config
+name = "table2"   # experiment id
+seeds = [0, 1, 2]
+
+[train]
+steps = 300
+lr = 0.02
+use_best = true
+tasks = ["sst2", "stsb"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], Value::Str("table2".into()));
+        assert_eq!(doc[""]["seeds"], Value::Arr(vec![Value::Int(0), Value::Int(1), Value::Int(2)]));
+        assert_eq!(doc["train"]["steps"], Value::Int(300));
+        assert_eq!(doc["train"]["lr"].as_f64(), Some(0.02));
+        assert_eq!(doc["train"]["use_best"], Value::Bool(true));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse(r#"k = "a#b" # comment"#).unwrap();
+        assert_eq!(doc[""]["k"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = @?!").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.5\nc = -2e-3").unwrap();
+        assert_eq!(doc[""]["a"], Value::Int(3));
+        assert_eq!(doc[""]["b"], Value::Float(3.5));
+        assert_eq!(doc[""]["c"].as_f64(), Some(-0.002));
+    }
+}

@@ -1,0 +1,90 @@
+//! End-to-end integration over real artifacts: pretrain -> fine-tune ->
+//! eval -> merge parity.  Skipped when `make artifacts` hasn't run.
+
+use c3a::coordinator::lr::Schedule;
+use c3a::coordinator::run::{self, Ctx};
+use c3a::coordinator::TrainCfg;
+use c3a::data::glue_sim::GlueTask;
+use c3a::peft::init::C3aScheme;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<String> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_string_lossy().into_owned())
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn quick_cfg(lr: f64, steps: usize) -> TrainCfg {
+    TrainCfg {
+        steps,
+        lr,
+        weight_decay: 0.0,
+        schedule: Schedule::LinearWarmup { warmup_frac: 0.1 },
+        eval_every: steps / 2,
+        patience: 0,
+        verbose: false,
+    }
+}
+
+#[test]
+fn tiny_c3a_finetune_learns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = Ctx::open(&dir).unwrap();
+    let r = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 0,
+                          &quick_cfg(5e-2, 60), C3aScheme::Xavier).unwrap();
+    // loss must drop and the metric must beat chance
+    let first = r.losses[..5].iter().sum::<f32>() / 5.0;
+    let last = r.losses[r.losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(r.metric > 0.55, "metric {}", r.metric);
+    assert!(r.n_params > 0);
+    // C3A rank measurement present and high (the paper's §4.1 claim)
+    let (full_frac, mean_rank, dim) = r.rank.expect("rank summary");
+    assert!(dim > 0 && mean_rank > 0.0);
+    assert!(full_frac >= 0.5, "full-rank fraction {full_frac}");
+}
+
+#[test]
+fn tiny_lora_finetune_learns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = Ctx::open(&dir).unwrap();
+    let r = run::glue_run(&ctx, "enc_tiny", "lora", GlueTask::Sst2, 0,
+                          &quick_cfg(5e-3, 60), C3aScheme::Xavier).unwrap();
+    let first = r.losses[..5].iter().sum::<f32>() / 5.0;
+    let last = r.losses[r.losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(r.rank.is_none()); // no c3a kernels in a lora run
+}
+
+#[test]
+fn pretraining_is_cached_and_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = Ctx::open(&dir).unwrap();
+    let t0 = std::time::Instant::now();
+    let m1 = run::ensure_pretrained(&ctx, "enc_tiny").unwrap();
+    let first_ms = t0.elapsed().as_millis();
+    let t1 = std::time::Instant::now();
+    let m2 = run::ensure_pretrained(&ctx, "enc_tiny").unwrap();
+    let second_ms = t1.elapsed().as_millis();
+    assert_eq!(m1.len(), m2.len());
+    // cached path must be much faster than (re)training
+    assert!(second_ms < first_ms.max(10), "{second_ms} !< {first_ms}");
+    assert!(m1.contains_key("embed.tok"));
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = Ctx::open(&dir).unwrap();
+    let cfg = quick_cfg(5e-2, 10);
+    let a = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 3, &cfg, C3aScheme::Xavier).unwrap();
+    let b = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 3, &cfg, C3aScheme::Xavier).unwrap();
+    assert_eq!(a.losses, b.losses);
+    assert_eq!(a.metric, b.metric);
+    let c = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 4, &cfg, C3aScheme::Xavier).unwrap();
+    assert_ne!(a.losses, c.losses);
+}
