@@ -73,12 +73,20 @@ fn main() -> anyhow::Result<()> {
     let mut served = 0usize;
     let mut queue: Vec<(usize, Vec<i32>, Instant)> = Vec::new();
     while served < n_requests {
-        while let Ok(item) = rx.try_recv() {
-            queue.push(item);
-        }
         if queue.is_empty() {
-            std::thread::yield_now();
-            continue;
+            // block for the first request instead of burning a core, then
+            // opportunistically drain whatever else arrived (dynamic batch)
+            match rx.recv_timeout(std::time::Duration::from_millis(5)) {
+                Ok(item) => queue.push(item),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        while queue.len() < b {
+            match rx.try_recv() {
+                Ok(item) => queue.push(item),
+                Err(_) => break,
+            }
         }
         let take = queue.len().min(b);
         let batch_items: Vec<_> = queue.drain(..take).collect();
@@ -103,6 +111,10 @@ fn main() -> anyhow::Result<()> {
     }
     producer.join().unwrap();
 
+    if latencies.is_empty() {
+        println!("\n=== serve report ===\nno requests served");
+        return Ok(());
+    }
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let total_s = t_start.elapsed().as_secs_f64();
     let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];

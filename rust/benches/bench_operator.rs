@@ -54,8 +54,8 @@ fn main() {
 
         // c3a at b = d/8 (same param budget as 2x lora) and b = d
         for div in [1usize, 8] {
-            let b = d / div / 8 * 8; // keep divisible
-            let b = if b == 0 { d } else { d / div };
+            let b = d / div;
+            assert!(b > 0 && d % b == 0, "block size {b} must divide d={d}");
             let m = d / b;
             let bc = BlockCirculant::new(m, m, b, (0..m * m * b).map(|_| rng.normal()).collect());
             let p = bc.prepared();

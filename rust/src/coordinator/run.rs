@@ -26,15 +26,23 @@ pub struct Ctx {
     pub manifest: Manifest,
     pub artifacts_dir: PathBuf,
     pub verbose: bool,
+    /// Override the per-model pretraining budget (tests / quick runs).
+    pub pretrain_steps: Option<usize>,
 }
 
 impl Ctx {
+    /// Open the artifact registry.  With a python-built `manifest.json`
+    /// the artifacts are loaded as-is; otherwise the same inventory is
+    /// synthesized in Rust and executed on the substrate backend.
     pub fn open(artifacts_dir: &str) -> Result<Ctx> {
+        let manifest = Manifest::load_or_synthesize(artifacts_dir)?;
+        let engine = Engine::for_manifest(&manifest)?;
         Ok(Ctx {
-            engine: Engine::cpu()?,
-            manifest: Manifest::load(artifacts_dir)?,
+            engine,
+            manifest,
             artifacts_dir: PathBuf::from(artifacts_dir),
             verbose: false,
+            pretrain_steps: None,
         })
     }
 }
@@ -70,11 +78,18 @@ pub fn pretrain_budget(model: &str) -> (usize, f64) {
 /// No-op when the checkpoint already exists.
 pub fn ensure_pretrained(ctx: &Ctx, model: &str) -> Result<TensorMap> {
     let meta = ctx.manifest.model(model)?.clone();
-    let ckpt = checkpoint::pretrained_path(&ctx.artifacts_dir, model);
+    let (default_steps, lr) = pretrain_budget(model);
+    let steps = ctx.pretrain_steps.unwrap_or(default_steps);
+    // A non-default budget gets its own cache file so a short-budget
+    // checkpoint never poisons later full-budget runs (and vice versa).
+    let ckpt = if steps == default_steps {
+        checkpoint::pretrained_path(&ctx.artifacts_dir, model)
+    } else {
+        ctx.artifacts_dir.join(format!("{model}_pretrained_s{steps}.bin"))
+    };
     if ckpt.exists() {
         return checkpoint::load(&ckpt);
     }
-    let (steps, lr) = pretrain_budget(model);
     let (art_name, is_vit) = if meta.kind == "decoder" {
         (Manifest::artifact_name(model, "full", "lm", "train"), false)
     } else if model.starts_with("vit") {
@@ -83,7 +98,7 @@ pub fn ensure_pretrained(ctx: &Ctx, model: &str) -> Result<TensorMap> {
         (Manifest::artifact_name(model, "full", "mlm", "train"), false)
     };
     let spec = ctx.manifest.artifact(&art_name)?.clone();
-    let init_map = checkpoint::load(&meta.init_path)?;
+    let init_map = ctx.manifest.init_params(model)?;
     let mut rng = Rng::seed(0x9E7);
     let init = build_init(&spec, &init_map, None, &mut rng, C3aScheme::Xavier)?;
     let mut session = TrainSession::new(&ctx.engine, &spec, &init)?;
@@ -326,8 +341,7 @@ pub fn mlp_run(ctx: &Ctx, variant: &str, seed: u64, cfg: &TrainCfg) -> Result<Ru
         .manifest
         .artifact(&Manifest::artifact_name("mlp", variant, "cls", "eval"))?
         .clone();
-    let meta = ctx.manifest.model("mlp")?.clone();
-    let init_map = checkpoint::load(&meta.init_path)?;
+    let init_map = ctx.manifest.init_params("mlp")?;
     let mut rng = Rng::seed(seed.wrapping_mul(0x51ed) ^ 0xF16);
     let init = build_init(&train_spec, &init_map, None, &mut rng, C3aScheme::Xavier)?;
     let mut session = TrainSession::new(&ctx.engine, &train_spec, &init)?;
@@ -346,8 +360,6 @@ pub fn mlp_run(ctx: &Ctx, variant: &str, seed: u64, cfg: &TrainCfg) -> Result<Ru
         },
         |t| {
             // train-set accuracy (the paper's Fig. 4 shows training curves)
-            let batch = data.batch(0, b);
-            let _ = &batch;
             let mut correct = 0usize;
             let mut i = 0;
             while i < data.len() {

@@ -74,12 +74,7 @@ impl GlueTask {
 
 /// FNV-1a over the task name: decorrelates per-task RNG streams.
 fn g_hash(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::substrate::prng::fnv1a(s)
 }
 
 fn generate(task: GlueTask, vocab: usize, seq: usize, n: usize, rng: &mut Rng) -> ClsDataset {

@@ -1,4 +1,10 @@
 //! C3A — Parameter-Efficient Fine-Tuning via Circular Convolution.
+
+/// Re-export of the execution-literal crate (the in-tree shim by default,
+/// real PJRT bindings when vendored) so tests and downstream tools can
+/// construct `xla::Literal`s without a direct dependency.
+pub use xla;
+
 pub mod runtime;
 pub mod config;
 pub mod coordinator;

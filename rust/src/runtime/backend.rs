@@ -1,0 +1,125 @@
+//! Execution backends — the seam between the coordinator and whatever
+//! actually runs an artifact.
+//!
+//! Two implementations exist:
+//!
+//! * [`SubstrateBackend`] (default): interprets the artifact spec on CPU
+//!   through the tape autodiff + FFT substrate.  Needs no HLO files, no
+//!   python, no network — this is what makes tier-1 pass offline.
+//! * [`PjrtBackend`] (`--features pjrt`): compiles the artifact's HLO text
+//!   through the `xla` PJRT bindings.  With the in-tree shim those entry
+//!   points report that real bindings must be vendored; the backend
+//!   structure (and the session/coordinator code above it) is identical
+//!   either way.
+
+use super::interp::InterpExecutable;
+use super::manifest::{ArtifactSpec, ModelMeta};
+use anyhow::{Context, Result};
+
+/// A loaded artifact, ready to execute on host literals.
+pub trait Executor {
+    /// Execute with positional inputs; returns the flattened outputs.
+    fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>>;
+
+    /// Buffer-path execution.  Contract: returns the executable's output
+    /// buffers as PJRT hands them back — for this repo's artifacts
+    /// (lowered with `return_tuple=True`, see aot.py) that is a single
+    /// tuple buffer, which callers unpack via `to_literal_sync().to_tuple()`.
+    /// The default round-trips through host literals (correct for the
+    /// host-resident fallback backend); HLO executors override it to keep
+    /// outputs on device.
+    fn execute_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|b| b.to_literal_sync()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let outs = self.execute(&refs)?;
+        Ok(vec![xla::PjRtBuffer::from_literal(xla::Literal::tuple(outs))])
+    }
+}
+
+/// Loads artifact specs into executors.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn load(&self, spec: &ArtifactSpec, meta: &ModelMeta) -> Result<Box<dyn Executor>>;
+}
+
+// ---------------------------------------------------------------------------
+// Substrate (pure-Rust) backend
+// ---------------------------------------------------------------------------
+
+pub struct SubstrateBackend;
+
+impl Backend for SubstrateBackend {
+    fn name(&self) -> &'static str {
+        "substrate"
+    }
+
+    fn load(&self, spec: &ArtifactSpec, meta: &ModelMeta) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(InterpExecutable::new(spec, meta)?))
+    }
+}
+
+impl Executor for InterpExecutable {
+    fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        InterpExecutable::execute(self, inputs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (compiled HLO) backend
+// ---------------------------------------------------------------------------
+
+/// Executes a compiled HLO module through the `xla` crate.  Also used by
+/// `Engine::load_hlo_text` for ad-hoc HLO files.
+pub struct HloExecutor {
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor for HloExecutor {
+    fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut out = self.exe.execute(inputs)?;
+        let first = out
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .context("executable returned no outputs")?;
+        let lit = first.to_literal_sync()?;
+        lit.to_tuple()
+    }
+
+    /// Keep outputs on device (the PJRT keep-on-device semantics).
+    fn execute_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b(inputs)?;
+        out.pop().context("no outputs")
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new(client: xla::PjRtClient) -> PjrtBackend {
+        PjrtBackend { client }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&self, spec: &ArtifactSpec, _meta: &ModelMeta) -> Result<Box<dyn Executor>> {
+        let path = spec.path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.path.display()))?;
+        Ok(Box::new(HloExecutor { exe }))
+    }
+}

@@ -1,0 +1,739 @@
+//! Artifact catalog — a pure-Rust port of the python AOT inventory
+//! (python/compile/aot.py + model.py parameter bookkeeping).
+//!
+//! When `artifacts/manifest.json` exists (python/JAX ran at build time)
+//! the runtime loads it for bit-compatible interop.  When it does not —
+//! the offline default — this module synthesizes the *same* inventory:
+//! model metadata, per-artifact input/output contracts, declarative init
+//! specs, and paper-style parameter counts.  The substrate fallback
+//! backend executes these specs directly, so no HLO files are needed.
+//!
+//! Ordering matters: `inputs` follows the python flattening contract
+//! [trainable..., opt_m..., opt_v..., frozen..., frozen_random..., data...,
+//! scalars...], which is what `TrainSession` / `EvalSession` feed
+//! positionally.
+
+use super::manifest::{ArtifactSpec, InputSpec, Manifest, ModelMeta, PeftParams, Role};
+use crate::peft::init::InitSpec;
+use crate::substrate::prng::Rng;
+use crate::substrate::tensor::{Tensor, TensorMap};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Model configuration (mirrors python ModelCfg).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub kind: &'static str, // encoder | decoder | mlp
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub n_out: usize,
+    pub input_mode: &'static str, // tokens | vec
+    pub patch_dim: usize,
+    pub mlp_hidden: usize,
+    pub mlp_in: usize,
+}
+
+impl ModelCfg {
+    fn base(kind: &'static str) -> ModelCfg {
+        ModelCfg {
+            kind,
+            vocab: 512,
+            d: 128,
+            layers: 4,
+            heads: 4,
+            seq: 32,
+            n_out: 2,
+            input_mode: "tokens",
+            patch_dim: 16,
+            mlp_hidden: 128,
+            mlp_in: 2,
+        }
+    }
+
+    pub fn ffn(&self) -> usize {
+        if self.kind == "encoder" {
+            4 * self.d
+        } else {
+            2 * self.d
+        }
+    }
+}
+
+/// The named presets of python MODEL_PRESETS, in declaration order.
+pub fn model_presets() -> Vec<(&'static str, ModelCfg)> {
+    let enc = |d, layers, heads, seq, vocab| ModelCfg {
+        d,
+        layers,
+        heads,
+        seq,
+        vocab,
+        ..ModelCfg::base("encoder")
+    };
+    let vit = |d, layers, heads| ModelCfg {
+        d,
+        layers,
+        heads,
+        seq: 16,
+        n_out: 200,
+        input_mode: "vec",
+        ..ModelCfg::base("encoder")
+    };
+    let dec = |d, layers, heads| ModelCfg { d, layers, heads, seq: 48, ..ModelCfg::base("decoder") };
+    vec![
+        ("enc_tiny", enc(32, 2, 2, 16, 64)),
+        ("enc_base", enc(128, 4, 4, 32, 512)),
+        ("enc_large", enc(256, 6, 8, 32, 512)),
+        ("dec_small", dec(192, 4, 4)),
+        ("dec_large", dec(320, 6, 8)),
+        ("vit_base", vit(128, 4, 4)),
+        ("vit_large", vit(256, 6, 8)),
+        ("mlp", ModelCfg { n_out: 8, ..ModelCfg::base("mlp") }),
+    ]
+}
+
+pub fn preset(name: &str) -> Option<ModelCfg> {
+    model_presets().into_iter().find(|(n, _)| *n == name).map(|(_, c)| c)
+}
+
+fn cfg_from_meta(meta: &ModelMeta) -> ModelCfg {
+    // Presets carry 'static strs; metas loaded from JSON map onto the
+    // same fields.  kind/input_mode are matched back to static names.
+    let kind = match meta.kind.as_str() {
+        "decoder" => "decoder",
+        "mlp" => "mlp",
+        _ => "encoder",
+    };
+    let input_mode = if meta.input_mode == "vec" { "vec" } else { "tokens" };
+    ModelCfg {
+        kind,
+        vocab: meta.vocab,
+        d: meta.d,
+        layers: meta.layers,
+        heads: meta.heads,
+        seq: meta.seq,
+        n_out: meta.n_out,
+        input_mode,
+        patch_dim: meta.patch_dim,
+        mlp_hidden: meta.mlp_hidden,
+        mlp_in: meta.mlp_in,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter inventories (ordered — mirrors python dict insertion order)
+// ---------------------------------------------------------------------------
+
+pub type Shapes = Vec<(String, Vec<usize>)>;
+
+/// Backbone (pre-trained) parameter shapes, ordered.
+pub fn base_param_shapes(cfg: &ModelCfg) -> Shapes {
+    let mut p: Shapes = Vec::new();
+    let mut push = |k: String, v: Vec<usize>| p.push((k, v));
+    if cfg.kind == "mlp" {
+        let h = cfg.mlp_hidden;
+        push("mlp.w0".into(), vec![cfg.mlp_in, h]);
+        push("mlp.b0".into(), vec![h]);
+        push("mlp.w1".into(), vec![h, h]);
+        push("mlp.b1".into(), vec![h]);
+        push("mlp.w2".into(), vec![h, cfg.n_out]);
+        push("mlp.b2".into(), vec![cfg.n_out]);
+        return p;
+    }
+    if cfg.input_mode == "vec" {
+        push("embed.patch".into(), vec![cfg.patch_dim, cfg.d]);
+    } else {
+        push("embed.tok".into(), vec![cfg.vocab, cfg.d]);
+    }
+    push("embed.pos".into(), vec![cfg.seq, cfg.d]);
+    let enc = cfg.kind == "encoder";
+    for i in 0..cfg.layers {
+        let l = format!("L{i}");
+        for proj in ["q", "k", "v", "o"] {
+            push(format!("{l}.attn.w{proj}"), vec![cfg.d, cfg.d]);
+            if enc {
+                push(format!("{l}.attn.b{proj}"), vec![cfg.d]);
+            }
+        }
+        if enc {
+            push(format!("{l}.ln1.g"), vec![cfg.d]);
+            push(format!("{l}.ln1.b"), vec![cfg.d]);
+            push(format!("{l}.mlp.w1"), vec![cfg.d, cfg.ffn()]);
+            push(format!("{l}.mlp.b1"), vec![cfg.ffn()]);
+            push(format!("{l}.mlp.w2"), vec![cfg.ffn(), cfg.d]);
+            push(format!("{l}.mlp.b2"), vec![cfg.d]);
+            push(format!("{l}.ln2.g"), vec![cfg.d]);
+            push(format!("{l}.ln2.b"), vec![cfg.d]);
+        } else {
+            push(format!("{l}.rms1.g"), vec![cfg.d]);
+            push(format!("{l}.mlp.wg"), vec![cfg.d, cfg.ffn()]);
+            push(format!("{l}.mlp.wu"), vec![cfg.d, cfg.ffn()]);
+            push(format!("{l}.mlp.wd"), vec![cfg.ffn(), cfg.d]);
+            push(format!("{l}.rms2.g"), vec![cfg.d]);
+        }
+    }
+    if enc {
+        push("final_ln.g".into(), vec![cfg.d]);
+        push("final_ln.b".into(), vec![cfg.d]);
+        push("head.w".into(), vec![cfg.d, cfg.n_out]);
+        push("head.b".into(), vec![cfg.n_out]);
+    } else {
+        push("final_rms.g".into(), vec![cfg.d]); // lm head tied to embed.tok
+    }
+    p
+}
+
+/// Adapter parameter shapes: (trainable, frozen_random), ordered.
+pub fn adapter_param_shapes(cfg: &ModelCfg, peft: &PeftParams) -> (Shapes, Shapes) {
+    let mut t: Shapes = Vec::new();
+    let mut fr: Shapes = Vec::new();
+    let m = peft.method.as_str();
+    if cfg.kind == "mlp" {
+        let h = cfg.mlp_hidden;
+        if peft.mlp_mid == "lora" {
+            t.push(("mlp.mid.lora.A".into(), vec![peft.rank, h]));
+            t.push(("mlp.mid.lora.B".into(), vec![h, peft.rank]));
+        } else if peft.mlp_mid == "c3a" {
+            let b = if peft.block > 0 { peft.block } else { h };
+            t.push(("mlp.mid.c3a.w".into(), vec![h / b, h / b, b]));
+        }
+        return (t, fr);
+    }
+    if matches!(m, "full" | "head" | "bitfit") {
+        return (t, fr);
+    }
+    let d = cfg.d;
+    if m == "ia3" {
+        for i in 0..cfg.layers {
+            t.push((format!("L{i}.ia3.lk"), vec![d]));
+            t.push((format!("L{i}.ia3.lv"), vec![d]));
+            t.push((format!("L{i}.ia3.lff"), vec![cfg.ffn()]));
+        }
+        return (t, fr);
+    }
+    if m == "vera" {
+        fr.push(("vera.A".into(), vec![peft.r_v, d]));
+        fr.push(("vera.B".into(), vec![d, peft.r_v]));
+    }
+    for i in 0..cfg.layers {
+        for proj in ["q", "v"] {
+            let k = format!("L{i}.attn.{proj}");
+            match m {
+                "lora" | "dora" => {
+                    t.push((format!("{k}.lora.A"), vec![peft.rank, d]));
+                    t.push((format!("{k}.lora.B"), vec![d, peft.rank]));
+                    if m == "dora" {
+                        t.push((format!("{k}.dora.mag"), vec![d]));
+                    }
+                }
+                "vera" => {
+                    t.push((format!("{k}.vera.ld"), vec![peft.r_v]));
+                    t.push((format!("{k}.vera.lb"), vec![d]));
+                }
+                "boft" => {
+                    let bb = peft.boft_block;
+                    assert_eq!(d % bb, 0, "boft block {bb} must divide d={d}");
+                    t.push((format!("{k}.boft.skew"), vec![d / bb, bb, bb]));
+                }
+                "c3a" => {
+                    let b = if peft.block > 0 { peft.block } else { d };
+                    assert_eq!(d % b, 0, "c3a block {b} must divide d={d}");
+                    t.push((format!("{k}.c3a.w"), vec![d / b, d / b, b]));
+                }
+                other => panic!("unknown method {other}"),
+            }
+        }
+    }
+    (t, fr)
+}
+
+/// Full role split: (trainable, frozen, frozen_random), ordered.
+pub fn split_roles(cfg: &ModelCfg, peft: &PeftParams) -> (Shapes, Shapes, Shapes) {
+    let base = base_param_shapes(cfg);
+    let (adapt_t, adapt_fr) = adapter_param_shapes(cfg, peft);
+    let m = peft.method.as_str();
+    let mut trainable: Shapes = Vec::new();
+    let mut frozen: Shapes = Vec::new();
+    if cfg.kind == "mlp" {
+        for (k, v) in base {
+            let mid = k == "mlp.w1" || k == "mlp.b1";
+            if mid && peft.mlp_mid != "dense" {
+                continue; // middle layer replaced by the adapter op
+            }
+            trainable.push((k, v));
+        }
+        trainable.extend(adapt_t);
+        return (trainable, frozen, adapt_fr);
+    }
+    for (k, v) in base {
+        let is_head = k == "head.w" || k == "head.b";
+        let is_bias = k.ends_with(".b")
+            || k.contains(".attn.b")
+            || k.ends_with(".b1")
+            || k.ends_with(".b2");
+        if m == "full" || is_head || (m == "bitfit" && is_bias) {
+            trainable.push((k, v));
+        } else {
+            frozen.push((k, v));
+        }
+    }
+    trainable.extend(adapt_t);
+    (trainable, frozen, adapt_fr)
+}
+
+/// #Params as the paper reports it (classifier head excluded).
+pub fn trainable_param_count(cfg: &ModelCfg, peft: &PeftParams) -> usize {
+    let (t, _, _) = split_roles(cfg, peft);
+    t.iter()
+        .filter(|(k, _)| k != "head.w" && k != "head.b")
+        .map(|(_, s)| s.iter().product::<usize>().max(1))
+        .sum()
+}
+
+/// Declarative init spec per parameter (mirrors aot.py `init_spec`).
+pub fn init_spec(name: &str, shape: &[usize]) -> InitSpec {
+    // DoRA reuses the `.lora.A/.lora.B` parameter names, so one arm
+    // covers both (the python side's `.dora.A` clause is unreachable).
+    if name.contains(".lora.A") {
+        return InitSpec::NormalFanin { fan: shape[1], seed: None };
+    }
+    if name.contains(".lora.B") || name.contains(".boft.skew") {
+        return InitSpec::Zeros;
+    }
+    if name.contains(".dora.mag") || name.contains(".vera.lb") || name.contains(".ia3.") {
+        return InitSpec::Ones;
+    }
+    if name.contains(".vera.ld") {
+        return InitSpec::Const(0.1);
+    }
+    if name.contains(".c3a.w") {
+        let (m, n, b) = (shape[0], shape[1], shape[2]);
+        return InitSpec::C3a { fan_in: n * b, fan_out: m * b };
+    }
+    if name == "vera.A" || name == "vera.B" {
+        return InitSpec::NormalFanin { fan: *shape.last().unwrap_or(&1), seed: Some(1234) };
+    }
+    InitSpec::Zeros
+}
+
+/// Data input layout per (kind, head): (name, shape, is_i32).
+pub fn data_inputs(
+    cfg: &ModelCfg,
+    head: &str,
+    batch: usize,
+    kind: &str,
+) -> Vec<(String, Vec<usize>, bool)> {
+    let s = cfg.seq;
+    let mut items: Vec<(String, Vec<usize>, bool)> = Vec::new();
+    if cfg.kind == "mlp" {
+        items.push(("data.x".into(), vec![batch, cfg.mlp_in], false));
+        items.push(("data.y".into(), vec![batch], true));
+        if kind == "eval" {
+            items.truncate(1);
+        }
+        return items;
+    }
+    if cfg.kind == "decoder" {
+        items.push(("data.tokens".into(), vec![batch, s], true));
+        items.push(("data.loss_mask".into(), vec![batch, s], false));
+        if kind == "eval" {
+            items.truncate(1);
+        }
+        return items;
+    }
+    if head == "mlm" {
+        return vec![
+            ("data.tokens".into(), vec![batch, s], true),
+            ("data.targets".into(), vec![batch, s], true),
+            ("data.loss_mask".into(), vec![batch, s], false),
+        ];
+    }
+    if cfg.input_mode == "vec" {
+        items.push(("data.x".into(), vec![batch, s, cfg.patch_dim], false));
+    } else {
+        items.push(("data.tokens".into(), vec![batch, s], true));
+    }
+    if kind != "eval" {
+        // data.y: f32 score for regression, i32 class index otherwise
+        items.push(("data.y".into(), vec![batch], head != "reg"));
+    }
+    items
+}
+
+/// Fill model-dependent hyperparameters (mirrors aot.py `resolve_peft`).
+pub fn resolve_peft(cfg: &ModelCfg, method_name: &str, peft: &PeftParams) -> PeftParams {
+    let mut p = peft.clone();
+    if p.method == "c3a" && p.mlp_mid != "c3a" {
+        p.block = if method_name == "c3a_d1" {
+            cfg.d
+        } else if method_name == "c3a_d8" {
+            cfg.d / 8
+        } else if cfg.kind == "decoder" {
+            cfg.d / 32
+        } else {
+            (cfg.d / 8).max(2)
+        };
+    } else if p.method == "vera" {
+        p.r_v = if cfg.kind == "decoder" { 4 * cfg.d } else { 2 * cfg.d };
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Method suites (mirrors aot.py dictionaries, in declaration order)
+// ---------------------------------------------------------------------------
+
+fn pp(method: &str) -> PeftParams {
+    PeftParams { method: method.to_string(), ..PeftParams::default() }
+}
+
+fn enc_methods() -> Vec<(&'static str, PeftParams)> {
+    vec![
+        ("full", pp("full")),
+        ("bitfit", pp("bitfit")),
+        ("ia3", pp("ia3")),
+        ("lora", PeftParams { rank: 8, alpha: 16.0, ..pp("lora") }),
+        ("vera", pp("vera")),
+        ("boft", PeftParams { boft_block: 8, ..pp("boft") }),
+        ("c3a_d1", PeftParams { block: 0, ..pp("c3a") }),
+        ("c3a_d8", pp("c3a")),
+    ]
+}
+
+fn dec_methods() -> Vec<(&'static str, PeftParams)> {
+    vec![
+        ("lora", PeftParams { rank: 32, alpha: 64.0, ..pp("lora") }),
+        ("vera", pp("vera")),
+        ("dora", PeftParams { rank: 32, alpha: 64.0, ..pp("dora") }),
+        ("c3a", pp("c3a")),
+    ]
+}
+
+fn vit_methods() -> Vec<(&'static str, PeftParams)> {
+    vec![
+        ("head", pp("head")),
+        ("full", pp("full")),
+        ("lora", PeftParams { rank: 16, alpha: 32.0, ..pp("lora") }),
+        ("c3a", pp("c3a")),
+    ]
+}
+
+fn mlp_variants() -> Vec<(&'static str, PeftParams)> {
+    vec![
+        ("mlp_dense", PeftParams { mlp_mid: "dense".into(), ..pp("full") }),
+        ("mlp_lora", PeftParams { rank: 1, mlp_mid: "lora".into(), ..pp("full") }),
+        ("mlp_c3a", PeftParams { block: 64, mlp_mid: "c3a".into(), ..pp("full") }),
+    ]
+}
+
+fn train_batch(kind: &str) -> usize {
+    match kind {
+        "encoder" => 32,
+        "decoder" => 16,
+        _ => 64,
+    }
+}
+
+/// The full artifact inventory: (model, method_name, peft, head, kind).
+pub fn inventory() -> Vec<(&'static str, String, PeftParams, &'static str, &'static str)> {
+    let mut jobs = Vec::new();
+    for model in ["enc_tiny", "enc_base", "enc_large"] {
+        for (mn, p) in enc_methods() {
+            for head in ["cls", "reg"] {
+                jobs.push((model, mn.to_string(), p.clone(), head, "train"));
+                jobs.push((model, mn.to_string(), p.clone(), head, "eval"));
+            }
+        }
+        jobs.push((model, "full".to_string(), pp("full"), "mlm", "train"));
+    }
+    for model in ["dec_small", "dec_large"] {
+        for (mn, p) in dec_methods() {
+            jobs.push((model, mn.to_string(), p.clone(), "lm", "train"));
+            jobs.push((model, mn.to_string(), p.clone(), "lm", "eval"));
+        }
+        jobs.push((model, "full".to_string(), pp("full"), "lm", "train"));
+    }
+    for model in ["vit_base", "vit_large"] {
+        for (mn, p) in vit_methods() {
+            jobs.push((model, mn.to_string(), p.clone(), "vec", "train"));
+            jobs.push((model, mn.to_string(), p.clone(), "vec", "eval"));
+        }
+    }
+    for (mn, p) in mlp_variants() {
+        jobs.push(("mlp", mn.to_string(), p.clone(), "cls", "train"));
+        jobs.push(("mlp", mn.to_string(), p.clone(), "cls", "eval"));
+    }
+    jobs
+}
+
+// ---------------------------------------------------------------------------
+// Spec assembly
+// ---------------------------------------------------------------------------
+
+/// Build one artifact spec (mirrors aot.py `build_artifact` manifest entry).
+pub fn build_spec(
+    dir: &Path,
+    model: &str,
+    cfg: &ModelCfg,
+    method_name: &str,
+    peft: &PeftParams,
+    head: &str,
+    kind: &str,
+) -> ArtifactSpec {
+    let peft = resolve_peft(cfg, method_name, peft);
+    let (t_shapes, f_shapes, fr_shapes) = split_roles(cfg, &peft);
+    let batch = train_batch(cfg.kind);
+    let d_inputs = data_inputs(cfg, head, batch, kind);
+
+    let mut inputs: Vec<InputSpec> = Vec::new();
+    for (n, s) in &t_shapes {
+        inputs.push(InputSpec {
+            name: n.clone(),
+            shape: s.clone(),
+            i32_dtype: false,
+            role: Role::Trainable,
+            init: Some(init_spec(n, s)),
+        });
+    }
+    if kind == "train" {
+        for (role, tag) in [(Role::OptM, "opt_m"), (Role::OptV, "opt_v")] {
+            for (n, s) in &t_shapes {
+                inputs.push(InputSpec {
+                    name: format!("{tag}:{n}"),
+                    shape: s.clone(),
+                    i32_dtype: false,
+                    role,
+                    init: Some(InitSpec::Zeros),
+                });
+            }
+        }
+    }
+    for (n, s) in &f_shapes {
+        inputs.push(InputSpec {
+            name: n.clone(),
+            shape: s.clone(),
+            i32_dtype: false,
+            role: Role::Frozen,
+            init: Some(init_spec(n, s)),
+        });
+    }
+    for (n, s) in &fr_shapes {
+        inputs.push(InputSpec {
+            name: n.clone(),
+            shape: s.clone(),
+            i32_dtype: false,
+            role: Role::FrozenRandom,
+            init: Some(init_spec(n, s)),
+        });
+    }
+    for (n, s, i32_dtype) in &d_inputs {
+        inputs.push(InputSpec {
+            name: n.clone(),
+            shape: s.clone(),
+            i32_dtype: *i32_dtype,
+            role: Role::Data,
+            init: None,
+        });
+    }
+    if kind == "train" {
+        // `wd` exists only when some trainable receives decoupled decay
+        // (mirrors the python DCE note in aot.py).
+        let uses_wd = t_shapes.iter().any(|(n, _)| {
+            !(n.ends_with(".b")
+                || n.ends_with(".g")
+                || n.ends_with(".mag")
+                || n.ends_with(".lb")
+                || n.ends_with(".ld"))
+        });
+        let scalars: &[&str] = if uses_wd { &["step", "lr", "wd"] } else { &["step", "lr"] };
+        for n in scalars {
+            inputs.push(InputSpec {
+                name: n.to_string(),
+                shape: Vec::new(),
+                i32_dtype: false,
+                role: Role::Scalar,
+                init: None,
+            });
+        }
+    }
+
+    let name = Manifest::artifact_name(model, method_name, head, kind);
+    let trainable_order: Vec<String> = t_shapes.iter().map(|(n, _)| n.clone()).collect();
+    let mut frozen_order: Vec<String> = f_shapes.iter().map(|(n, _)| n.clone()).collect();
+    frozen_order.extend(fr_shapes.iter().map(|(n, _)| n.clone()));
+    let data_order: Vec<String> = d_inputs.iter().map(|(n, _, _)| n.clone()).collect();
+    ArtifactSpec {
+        path: dir.join(format!("{name}.hlo.txt")),
+        model: model.to_string(),
+        method: method_name.to_string(),
+        kind: kind.to_string(),
+        head: head.to_string(),
+        batch,
+        seq: cfg.seq,
+        n_params: trainable_param_count(cfg, &peft),
+        trainable_order,
+        data_order,
+        frozen_order,
+        peft,
+        inputs,
+        name,
+    }
+}
+
+fn meta_of(dir: &Path, name: &str, cfg: &ModelCfg) -> ModelMeta {
+    ModelMeta {
+        name: name.to_string(),
+        init_path: dir.join(format!("{name}_init.bin")),
+        d: cfg.d,
+        layers: cfg.layers,
+        vocab: cfg.vocab,
+        seq: cfg.seq,
+        n_out: cfg.n_out,
+        kind: cfg.kind.to_string(),
+        heads: cfg.heads,
+        input_mode: cfg.input_mode.to_string(),
+        patch_dim: cfg.patch_dim,
+        mlp_hidden: cfg.mlp_hidden,
+        mlp_in: cfg.mlp_in,
+    }
+}
+
+/// Synthesize the full manifest for `dir` without python.  Init bins are
+/// generated lazily by `Manifest::init_params`, so this is cheap.
+pub fn synthesize(dir: &Path) -> Result<Manifest> {
+    std::fs::create_dir_all(dir)?;
+    let mut models: BTreeMap<String, ModelMeta> = BTreeMap::new();
+    let mut artifacts: BTreeMap<String, ArtifactSpec> = BTreeMap::new();
+    for (model, method_name, peft, head, kind) in inventory() {
+        let cfg = preset(model).expect("inventory model has a preset");
+        let spec = build_spec(dir, model, &cfg, &method_name, &peft, head, kind);
+        artifacts.insert(spec.name.clone(), spec);
+        models
+            .entry(model.to_string())
+            .or_insert_with(|| meta_of(dir, model, &cfg));
+    }
+    Ok(Manifest { dir: dir.to_path_buf(), models, artifacts })
+}
+
+// ---------------------------------------------------------------------------
+// Backbone initialization (mirrors model.py `init_base_params`)
+// ---------------------------------------------------------------------------
+
+/// The 'pre-pretraining' starting point for a model's backbone.
+pub fn init_base_params(meta: &ModelMeta) -> TensorMap {
+    let cfg = cfg_from_meta(meta);
+    let mut rng = Rng::seed(crate::substrate::prng::fnv1a(&meta.name) ^ 0x1417_B005);
+    let mut out = TensorMap::new();
+    for (k, shp) in base_param_shapes(&cfg) {
+        let n: usize = shp.iter().product::<usize>().max(1);
+        let is_gain = k.ends_with(".g");
+        let is_bias = k.ends_with(".b")
+            || (k.starts_with('L') && k.contains(".attn.b"))
+            || k.ends_with(".b1")
+            || k.ends_with(".b2")
+            || k.ends_with(".b0");
+        let values: Vec<f32> = if is_gain {
+            vec![1.0; n]
+        } else if is_bias {
+            vec![0.0; n]
+        } else if k == "embed.pos" {
+            rng.normal_vec(n, 0.02)
+        } else {
+            let fan_in = *shp.first().unwrap_or(&1);
+            rng.normal_vec(n, 1.0 / (fan_in.max(1) as f64).sqrt())
+        };
+        out.insert(k, Tensor::from_f32(shp, &values));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_matches_python_count() {
+        // 3 encoders * (8 methods * 2 heads * 2 kinds + 1 mlm)
+        // + 2 decoders * (4 methods * 2 + 1)
+        // + 2 vits * (4 methods * 2) + 3 mlp variants * 2
+        let want = 3 * (8 * 2 * 2 + 1) + 2 * (4 * 2 + 1) + 2 * (4 * 2) + 3 * 2;
+        assert_eq!(inventory().len(), want);
+    }
+
+    #[test]
+    fn synthesized_manifest_contract() {
+        let dir = std::env::temp_dir().join("c3a_catalog_test");
+        let m = synthesize(&dir).unwrap();
+        assert!(m.models.contains_key("enc_tiny"));
+        let a = m.artifact("enc_tiny__c3a_d8__cls__train").unwrap();
+        assert_eq!(a.kind, "train");
+        assert_eq!(a.head, "cls");
+        assert!(a.n_params > 0);
+        // input ordering invariant: trainable block first, scalars last
+        assert_eq!(a.inputs[0].role, Role::Trainable);
+        assert_eq!(a.inputs.last().unwrap().role, Role::Scalar);
+        // every trainable has an init spec
+        assert!(a
+            .inputs
+            .iter()
+            .filter(|i| i.role == Role::Trainable)
+            .all(|i| i.init.is_some()));
+        // train artifact has matching m/v counts
+        let nt = a.trainable_order.len();
+        let nm = a.inputs.iter().filter(|i| i.role == Role::OptM).count();
+        assert_eq!(nt, nm);
+        // c3a_d8 on enc_tiny: block = d/8 = 4
+        assert_eq!(a.peft.block, 4);
+    }
+
+    #[test]
+    fn eval_artifacts_have_no_labels_or_scalars() {
+        let dir = std::env::temp_dir().join("c3a_catalog_test2");
+        let m = synthesize(&dir).unwrap();
+        let e = m.artifact("enc_tiny__lora__cls__eval").unwrap();
+        assert!(e.inputs.iter().all(|i| i.role != Role::Scalar && i.role != Role::OptM));
+        assert_eq!(e.data_order, vec!["data.tokens".to_string()]);
+    }
+
+    #[test]
+    fn wd_scalar_dce_mirrored() {
+        // decoder VeRA: every trainable is decay-exempt except head-less
+        // decoders have no head params; λd/λb end with .ld/.lb
+        let dir = std::env::temp_dir().join("c3a_catalog_test3");
+        let m = synthesize(&dir).unwrap();
+        let vera = m.artifact("dec_small__vera__lm__train").unwrap();
+        assert!(!vera.inputs.iter().any(|i| i.name == "wd"), "vera decoder should drop wd");
+        let lora = m.artifact("dec_small__lora__lm__train").unwrap();
+        assert!(lora.inputs.iter().any(|i| i.name == "wd"));
+    }
+
+    #[test]
+    fn param_counts_match_paper_structure() {
+        let cfg = preset("enc_base").unwrap();
+        // c3a_d8: per adapted proj (q,v) per layer: (d/b)^2 * b = d^2/b
+        let p = resolve_peft(&cfg, "c3a_d8", &pp("c3a"));
+        let n = trainable_param_count(&cfg, &p);
+        let b = cfg.d / 8;
+        assert_eq!(n, cfg.layers * 2 * (cfg.d / b) * (cfg.d / b) * b);
+        // lora: 2 * r * d per proj
+        let lp = PeftParams { rank: 8, alpha: 16.0, ..pp("lora") };
+        let nl = trainable_param_count(&cfg, &lp);
+        assert_eq!(nl, cfg.layers * 2 * 2 * 8 * cfg.d);
+    }
+
+    #[test]
+    fn init_base_params_is_deterministic_and_shaped() {
+        let dir = std::env::temp_dir().join("c3a_catalog_test4");
+        let m = synthesize(&dir).unwrap();
+        let meta = m.model("enc_tiny").unwrap();
+        let a = init_base_params(meta);
+        let b = init_base_params(meta);
+        assert_eq!(a["embed.tok"].as_f32(), b["embed.tok"].as_f32());
+        assert_eq!(a["embed.tok"].shape, vec![64, 32]);
+        assert!(a["L0.ln1.g"].as_f32().iter().all(|&v| v == 1.0));
+        assert!(a["L0.attn.bq"].as_f32().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,1240 @@
+//! Reverse-mode tape autodiff over dense f32 host tensors — the numeric
+//! core of the substrate fallback backend.
+//!
+//! The op set is exactly what the C3A model zoo needs (matmul with
+//! optional rhs transpose, numpy-style broadcast add/mul, fused layer/rms
+//! norm, last-dim softmax, embedding gather, attention head split/merge,
+//! the FFT block-circular C3A operator, and BOFT block rotation).  Each op
+//! stores only its input node ids; values live on the tape, gradients are
+//! materialized during [`Tape::backward`].
+//!
+//! Gradients only flow into nodes marked `needs` (trainable leaves and
+//! anything downstream of one), so frozen-backbone runs skip the dominant
+//! backward matmuls automatically.
+
+use crate::substrate::fft::{self, Plan, C};
+
+/// Dense row-major f32 array.  Scalars have an empty shape.
+#[derive(Clone, Debug)]
+pub struct Arr {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Arr {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Arr {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Arr { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Arr {
+        let n = shape.iter().product::<usize>().max(1);
+        Arr { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Product of all dims but the last (row count for last-dim ops).
+    fn rows(&self) -> usize {
+        let w = self.width();
+        if w == 0 {
+            0
+        } else {
+            self.data.len() / w
+        }
+    }
+
+    /// Last dim.
+    fn width(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+}
+
+/// Node id on the tape.
+pub type V = usize;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Act {
+    Gelu,
+    Silu,
+    Relu,
+}
+
+enum Op {
+    Leaf,
+    Add(V, V),
+    Mul(V, V),
+    Scale(V, f32),
+    Matmul { a: V, b: V, trans_b: bool },
+    Activation { x: V, kind: Act },
+    SoftmaxLast(V),
+    LayerNorm { x: V, g: V, b: V },
+    RmsNorm { x: V, g: V },
+    Gather { table: V, ids: Vec<usize>, prefix: Vec<usize> },
+    SliceFirst(V),
+    SplitHeads { x: V, heads: usize },
+    MergeHeads(V),
+    Transpose2(V),
+    SumAxis0(V),
+    Rsqrt { x: V, eps: f32 },
+    Reshape(V),
+    C3a { x: V, w: V },
+    BlockRotate { x: V, r: V },
+}
+
+struct Node {
+    val: Arr,
+    op: Op,
+    needs: bool,
+}
+
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+// ---------------------------------------------------------------------------
+// Dense helpers
+// ---------------------------------------------------------------------------
+
+/// C[m,n] = A[m,k] · B[k,n], row-major.
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+fn transpose(x: &[f32], r: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = x[i * c + j];
+        }
+    }
+    out
+}
+
+/// Numpy-style (align-right) broadcast shape of two shapes.
+fn broadcast_shape(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        assert!(da == db || da == 1 || db == 1, "broadcast mismatch {a:?} vs {b:?}");
+        out[i] = da.max(db);
+    }
+    out
+}
+
+/// Element strides of `shape` as seen from broadcast result `out`
+/// (0 where the dim is broadcast).
+fn bcast_strides(shape: &[usize], out: &[usize]) -> Vec<usize> {
+    let rank = out.len();
+    let off = rank - shape.len();
+    // native strides of `shape`
+    let mut native = vec![0usize; shape.len()];
+    let mut acc = 1usize;
+    for i in (0..shape.len()).rev() {
+        native[i] = acc;
+        acc *= shape[i];
+    }
+    let mut s = vec![0usize; rank];
+    for i in 0..rank {
+        if i >= off && shape[i - off] != 1 {
+            s[i] = native[i - off];
+        }
+    }
+    s
+}
+
+/// Iterate a broadcast result, yielding (out_idx, a_idx, b_idx).
+fn bcast_apply(out_shape: &[usize], sa: &[usize], sb: &[usize], mut f: impl FnMut(usize, usize, usize)) {
+    let n: usize = out_shape.iter().product::<usize>().max(1);
+    let rank = out_shape.len();
+    let mut coords = vec![0usize; rank];
+    let mut ia = 0usize;
+    let mut ib = 0usize;
+    for i in 0..n {
+        f(i, ia, ib);
+        // odometer increment
+        for d in (0..rank).rev() {
+            coords[d] += 1;
+            ia += sa[d];
+            ib += sb[d];
+            if coords[d] < out_shape[d] {
+                break;
+            }
+            ia -= sa[d] * out_shape[d];
+            ib -= sb[d] * out_shape[d];
+            coords[d] = 0;
+        }
+    }
+}
+
+fn act_fwd(kind: Act, x: f32) -> f32 {
+    match kind {
+        Act::Relu => x.max(0.0),
+        Act::Silu => x / (1.0 + (-x).exp()),
+        Act::Gelu => {
+            // tanh approximation (jax.nn.gelu default)
+            let c = (2.0f32 / std::f32::consts::PI).sqrt();
+            let u = c * (x + 0.044715 * x * x * x);
+            0.5 * x * (1.0 + u.tanh())
+        }
+    }
+}
+
+fn act_bwd(kind: Act, x: f32) -> f32 {
+    match kind {
+        Act::Relu => {
+            if x > 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        Act::Silu => {
+            let s = 1.0 / (1.0 + (-x).exp());
+            s * (1.0 + x * (1.0 - s))
+        }
+        Act::Gelu => {
+            let c = (2.0f32 / std::f32::consts::PI).sqrt();
+            let u = c * (x + 0.044715 * x * x * x);
+            let t = u.tanh();
+            let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+            0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tape
+// ---------------------------------------------------------------------------
+
+impl Default for Tape {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape { nodes: Vec::new() }
+    }
+
+    pub fn leaf(&mut self, arr: Arr, needs: bool) -> V {
+        self.nodes.push(Node { val: arr, op: Op::Leaf, needs });
+        self.nodes.len() - 1
+    }
+
+    pub fn val(&self, v: V) -> &Arr {
+        &self.nodes[v].val
+    }
+
+    pub fn needs(&self, v: V) -> bool {
+        self.nodes[v].needs
+    }
+
+    fn push(&mut self, val: Arr, op: Op, needs: bool) -> V {
+        self.nodes.push(Node { val, op, needs });
+        self.nodes.len() - 1
+    }
+
+    // -- binary broadcast ops ------------------------------------------------
+
+    pub fn add(&mut self, a: V, b: V) -> V {
+        let out_shape = broadcast_shape(&self.val(a).shape, &self.val(b).shape);
+        let sa = bcast_strides(&self.val(a).shape, &out_shape);
+        let sb = bcast_strides(&self.val(b).shape, &out_shape);
+        let mut out = Arr::zeros(out_shape.clone());
+        {
+            let (av, bv) = (&self.val(a).data, &self.val(b).data);
+            let data = &mut out.data;
+            bcast_apply(&out_shape, &sa, &sb, |o, ia, ib| data[o] = av[ia] + bv[ib]);
+        }
+        let needs = self.needs(a) || self.needs(b);
+        self.push(out, Op::Add(a, b), needs)
+    }
+
+    pub fn mul(&mut self, a: V, b: V) -> V {
+        let out_shape = broadcast_shape(&self.val(a).shape, &self.val(b).shape);
+        let sa = bcast_strides(&self.val(a).shape, &out_shape);
+        let sb = bcast_strides(&self.val(b).shape, &out_shape);
+        let mut out = Arr::zeros(out_shape.clone());
+        {
+            let (av, bv) = (&self.val(a).data, &self.val(b).data);
+            let data = &mut out.data;
+            bcast_apply(&out_shape, &sa, &sb, |o, ia, ib| data[o] = av[ia] * bv[ib]);
+        }
+        let needs = self.needs(a) || self.needs(b);
+        self.push(out, Op::Mul(a, b), needs)
+    }
+
+    pub fn scale(&mut self, a: V, c: f32) -> V {
+        let mut out = self.val(a).clone();
+        for v in out.data.iter_mut() {
+            *v *= c;
+        }
+        let needs = self.needs(a);
+        self.push(out, Op::Scale(a, c), needs)
+    }
+
+    /// a - b (broadcast).
+    pub fn sub(&mut self, a: V, b: V) -> V {
+        let nb = self.scale(b, -1.0);
+        self.add(a, nb)
+    }
+
+    // -- matmul --------------------------------------------------------------
+
+    /// Batched matmul over the last two dims of `a`.
+    ///
+    /// * rhs rank 2: shared weight `[k,n]` (`[n,k]` with `trans_b`); `a` is
+    ///   collapsed to `[·, k]`.
+    /// * rhs rank > 2: leading dims must equal `a`'s; per-batch matmul.
+    pub fn matmul(&mut self, a: V, b: V, trans_b: bool) -> V {
+        let (va, vb) = (self.val(a), self.val(b));
+        let ra = va.shape.len();
+        assert!(ra >= 2, "matmul lhs rank {ra}");
+        let k = va.shape[ra - 1];
+        let (out, _kn) = if vb.shape.len() == 2 {
+            let (bk, bn) = if trans_b {
+                (vb.shape[1], vb.shape[0])
+            } else {
+                (vb.shape[0], vb.shape[1])
+            };
+            assert_eq!(k, bk, "matmul inner dim {k} vs {bk}");
+            let b_eff = if trans_b {
+                transpose(&vb.data, vb.shape[0], vb.shape[1])
+            } else {
+                vb.data.clone()
+            };
+            let rows = va.data.len() / k;
+            let data = mm(&va.data, &b_eff, rows, k, bn);
+            let mut shape = va.shape.clone();
+            *shape.last_mut().unwrap() = bn;
+            (Arr::new(shape, data), bn)
+        } else {
+            assert_eq!(vb.shape.len(), ra, "batched matmul rank mismatch");
+            assert_eq!(&vb.shape[..ra - 2], &va.shape[..ra - 2], "batch dims differ");
+            let m = va.shape[ra - 2];
+            let (bk, bn) = if trans_b {
+                (vb.shape[ra - 1], vb.shape[ra - 2])
+            } else {
+                (vb.shape[ra - 2], vb.shape[ra - 1])
+            };
+            assert_eq!(k, bk, "batched matmul inner dim {k} vs {bk}");
+            let batches: usize = va.shape[..ra - 2].iter().product();
+            let mut data = vec![0f32; batches * m * bn];
+            let (bm2, bn2) = (vb.shape[ra - 2], vb.shape[ra - 1]);
+            for t in 0..batches {
+                let asl = &va.data[t * m * k..(t + 1) * m * k];
+                let bsl = &vb.data[t * bm2 * bn2..(t + 1) * bm2 * bn2];
+                let b_eff = if trans_b { transpose(bsl, bm2, bn2) } else { bsl.to_vec() };
+                let c = mm(asl, &b_eff, m, k, bn);
+                data[t * m * bn..(t + 1) * m * bn].copy_from_slice(&c);
+            }
+            let mut shape = va.shape.clone();
+            shape[ra - 1] = bn;
+            (Arr::new(shape, data), bn)
+        };
+        let needs = self.needs(a) || self.needs(b);
+        self.push(out, Op::Matmul { a, b, trans_b }, needs)
+    }
+
+    // -- unary / fused ops ---------------------------------------------------
+
+    pub fn activation(&mut self, x: V, kind: Act) -> V {
+        let vx = self.val(x);
+        let data = vx.data.iter().map(|&v| act_fwd(kind, v)).collect();
+        let out = Arr::new(vx.shape.clone(), data);
+        let needs = self.needs(x);
+        self.push(out, Op::Activation { x, kind }, needs)
+    }
+
+    pub fn softmax_last(&mut self, x: V) -> V {
+        let vx = self.val(x);
+        let w = vx.width();
+        let mut data = vx.data.clone();
+        for row in data.chunks_mut(w) {
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        let out = Arr::new(vx.shape.clone(), data);
+        let needs = self.needs(x);
+        self.push(out, Op::SoftmaxLast(x), needs)
+    }
+
+    pub fn layernorm(&mut self, x: V, g: V, b: V) -> V {
+        let (vx, vg, vb) = (self.val(x), self.val(g), self.val(b));
+        let d = vx.width();
+        assert_eq!(vg.data.len(), d);
+        assert_eq!(vb.data.len(), d);
+        let mut data = vec![0f32; vx.data.len()];
+        for (r, row) in vx.data.chunks(d).enumerate() {
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for j in 0..d {
+                data[r * d + j] = (row[j] - mu) * inv * vg.data[j] + vb.data[j];
+            }
+        }
+        let out = Arr::new(vx.shape.clone(), data);
+        let needs = self.needs(x) || self.needs(g) || self.needs(b);
+        self.push(out, Op::LayerNorm { x, g, b }, needs)
+    }
+
+    pub fn rmsnorm(&mut self, x: V, g: V) -> V {
+        let (vx, vg) = (self.val(x), self.val(g));
+        let d = vx.width();
+        assert_eq!(vg.data.len(), d);
+        let mut data = vec![0f32; vx.data.len()];
+        for (r, row) in vx.data.chunks(d).enumerate() {
+            let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + 1e-6).sqrt();
+            for j in 0..d {
+                data[r * d + j] = row[j] * inv * vg.data[j];
+            }
+        }
+        let out = Arr::new(vx.shape.clone(), data);
+        let needs = self.needs(x) || self.needs(g);
+        self.push(out, Op::RmsNorm { x, g }, needs)
+    }
+
+    /// Row gather: out[prefix.., :] = table[ids[r], :].
+    pub fn gather(&mut self, table: V, ids: &[usize], prefix: &[usize]) -> V {
+        let vt = self.val(table);
+        assert_eq!(vt.shape.len(), 2);
+        assert_eq!(prefix.iter().product::<usize>().max(1), ids.len());
+        let cols = vt.shape[1];
+        let rows_v = vt.shape[0];
+        let mut data = vec![0f32; ids.len() * cols];
+        for (r, &id) in ids.iter().enumerate() {
+            assert!(id < rows_v, "gather id {id} out of range {rows_v}");
+            data[r * cols..(r + 1) * cols].copy_from_slice(&vt.data[id * cols..(id + 1) * cols]);
+        }
+        let mut shape = prefix.to_vec();
+        shape.push(cols);
+        let out = Arr::new(shape, data);
+        let needs = self.needs(table);
+        self.push(out, Op::Gather { table, ids: ids.to_vec(), prefix: prefix.to_vec() }, needs)
+    }
+
+    /// [B,S,D] -> [B,D] (token 0 pooling).
+    pub fn slice_first(&mut self, x: V) -> V {
+        let vx = self.val(x);
+        assert_eq!(vx.shape.len(), 3);
+        let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+        let mut data = vec![0f32; bsz * d];
+        for bi in 0..bsz {
+            data[bi * d..(bi + 1) * d].copy_from_slice(&vx.data[bi * s * d..bi * s * d + d]);
+        }
+        let out = Arr::new(vec![bsz, d], data);
+        let needs = self.needs(x);
+        self.push(out, Op::SliceFirst(x), needs)
+    }
+
+    /// [B,S,H*hd] -> [B,H,S,hd].
+    pub fn split_heads(&mut self, x: V, heads: usize) -> V {
+        let vx = self.val(x);
+        assert_eq!(vx.shape.len(), 3);
+        let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+        assert_eq!(d % heads, 0);
+        let hd = d / heads;
+        let mut data = vec![0f32; vx.data.len()];
+        for bi in 0..bsz {
+            for si in 0..s {
+                for h in 0..heads {
+                    let src = (bi * s + si) * d + h * hd;
+                    let dst = ((bi * heads + h) * s + si) * hd;
+                    data[dst..dst + hd].copy_from_slice(&vx.data[src..src + hd]);
+                }
+            }
+        }
+        let out = Arr::new(vec![bsz, heads, s, hd], data);
+        let needs = self.needs(x);
+        self.push(out, Op::SplitHeads { x, heads }, needs)
+    }
+
+    /// [B,H,S,hd] -> [B,S,H*hd].
+    pub fn merge_heads(&mut self, x: V) -> V {
+        let vx = self.val(x);
+        assert_eq!(vx.shape.len(), 4);
+        let (bsz, heads, s, hd) = (vx.shape[0], vx.shape[1], vx.shape[2], vx.shape[3]);
+        let d = heads * hd;
+        let mut data = vec![0f32; vx.data.len()];
+        for bi in 0..bsz {
+            for h in 0..heads {
+                for si in 0..s {
+                    let src = ((bi * heads + h) * s + si) * hd;
+                    let dst = (bi * s + si) * d + h * hd;
+                    data[dst..dst + hd].copy_from_slice(&vx.data[src..src + hd]);
+                }
+            }
+        }
+        let out = Arr::new(vec![bsz, s, d], data);
+        let needs = self.needs(x);
+        self.push(out, Op::MergeHeads(x), needs)
+    }
+
+    /// Swap the last two dims (any leading batch).
+    pub fn transpose2(&mut self, x: V) -> V {
+        let vx = self.val(x);
+        let rank = vx.shape.len();
+        assert!(rank >= 2);
+        let (r, c) = (vx.shape[rank - 2], vx.shape[rank - 1]);
+        let batches: usize = vx.shape[..rank - 2].iter().product();
+        let mut data = vec![0f32; vx.data.len()];
+        for t in 0..batches {
+            let src = &vx.data[t * r * c..(t + 1) * r * c];
+            data[t * r * c..(t + 1) * r * c].copy_from_slice(&transpose(src, r, c));
+        }
+        let mut shape = vx.shape.clone();
+        shape.swap(rank - 2, rank - 1);
+        let out = Arr::new(shape, data);
+        let needs = self.needs(x);
+        self.push(out, Op::Transpose2(x), needs)
+    }
+
+    /// 2-D [r,c] -> [c] column sums.
+    pub fn sum_axis0(&mut self, x: V) -> V {
+        let vx = self.val(x);
+        assert_eq!(vx.shape.len(), 2);
+        let (r, c) = (vx.shape[0], vx.shape[1]);
+        let mut data = vec![0f32; c];
+        for i in 0..r {
+            for j in 0..c {
+                data[j] += vx.data[i * c + j];
+            }
+        }
+        let out = Arr::new(vec![c], data);
+        let needs = self.needs(x);
+        self.push(out, Op::SumAxis0(x), needs)
+    }
+
+    /// 1/sqrt(x + eps), elementwise.
+    pub fn rsqrt(&mut self, x: V, eps: f32) -> V {
+        let vx = self.val(x);
+        let data = vx.data.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
+        let out = Arr::new(vx.shape.clone(), data);
+        let needs = self.needs(x);
+        self.push(out, Op::Rsqrt { x, eps }, needs)
+    }
+
+    pub fn reshape(&mut self, x: V, shape: Vec<usize>) -> V {
+        let vx = self.val(x);
+        assert_eq!(shape.iter().product::<usize>().max(1), vx.data.len());
+        let out = Arr::new(shape, vx.data.clone());
+        let needs = self.needs(x);
+        self.push(out, Op::Reshape(x), needs)
+    }
+
+    /// C3A block-circular conv: x [..., n*b] ⋆ w [m,n,b] -> [..., m*b]
+    /// (per-block FFT; same convention as `substrate::circulant`).
+    pub fn c3a(&mut self, x: V, w: V) -> V {
+        let (vx, vw) = (self.val(x), self.val(w));
+        assert_eq!(vw.shape.len(), 3);
+        let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
+        assert_eq!(vx.width(), n * b, "c3a input width");
+        let rows = vx.rows();
+        let plan = Plan::new(b);
+        // kernel spectra, computed once per call
+        let wf: Vec<Vec<C>> = (0..m * n)
+            .map(|ij| {
+                let k: Vec<f64> = vw.data[ij * b..(ij + 1) * b].iter().map(|&v| v as f64).collect();
+                fft::rfft(&plan, &k)
+            })
+            .collect();
+        let mut data = vec![0f32; rows * m * b];
+        let mut xf: Vec<Vec<C>> = Vec::with_capacity(n);
+        for r in 0..rows {
+            let xrow = &vx.data[r * n * b..(r + 1) * n * b];
+            xf.clear();
+            for j in 0..n {
+                let xj: Vec<f64> = xrow[j * b..(j + 1) * b].iter().map(|&v| v as f64).collect();
+                xf.push(fft::rfft(&plan, &xj));
+            }
+            for i in 0..m {
+                let mut acc = vec![(0f64, 0f64); b];
+                for j in 0..n {
+                    let wij = &wf[i * n + j];
+                    for k in 0..b {
+                        let p = fft::c_mul(wij[k], xf[j][k]);
+                        acc[k].0 += p.0;
+                        acc[k].1 += p.1;
+                    }
+                }
+                let z = fft::irfft_real(&plan, &acc);
+                for k in 0..b {
+                    data[r * m * b + i * b + k] = z[k] as f32;
+                }
+            }
+        }
+        let mut shape = vx.shape.clone();
+        *shape.last_mut().unwrap() = m * b;
+        let out = Arr::new(shape, data);
+        let needs = self.needs(x) || self.needs(w);
+        self.push(out, Op::C3a { x, w }, needs)
+    }
+
+    /// BOFT rotation: out[..., n, c] = Σ_b x[..., n, b] · r[n, b, c]
+    /// with x [..., nb*bb] viewed blockwise and r [nb, bb, bb].
+    pub fn block_rotate(&mut self, x: V, r: V) -> V {
+        let (vx, vr) = (self.val(x), self.val(r));
+        assert_eq!(vr.shape.len(), 3);
+        let (nb, bb, bb2) = (vr.shape[0], vr.shape[1], vr.shape[2]);
+        assert_eq!(bb, bb2);
+        assert_eq!(vx.width(), nb * bb, "block_rotate width");
+        let rows = vx.rows();
+        let mut data = vec![0f32; vx.data.len()];
+        for row in 0..rows {
+            let xrow = &vx.data[row * nb * bb..(row + 1) * nb * bb];
+            let orow = &mut data[row * nb * bb..(row + 1) * nb * bb];
+            for nbi in 0..nb {
+                let rblk = &vr.data[nbi * bb * bb..(nbi + 1) * bb * bb];
+                for c in 0..bb {
+                    let mut acc = 0f32;
+                    for bi in 0..bb {
+                        acc += xrow[nbi * bb + bi] * rblk[bi * bb + c];
+                    }
+                    orow[nbi * bb + c] = acc;
+                }
+            }
+        }
+        let out = Arr::new(vx.shape.clone(), data);
+        let needs = self.needs(x) || self.needs(r);
+        self.push(out, Op::BlockRotate { x, r }, needs)
+    }
+
+    // -- backward ------------------------------------------------------------
+
+    /// Reverse pass from `root` seeded with `seed` (same length as the
+    /// root's value).  Returns per-node gradients (None where not needed).
+    pub fn backward(&self, root: V, seed: Vec<f32>) -> Vec<Option<Vec<f32>>> {
+        assert_eq!(seed.len(), self.val(root).len());
+        let mut grads: Vec<Option<Vec<f32>>> = vec![None; self.nodes.len()];
+        grads[root] = Some(seed);
+        for id in (0..self.nodes.len()).rev() {
+            if grads[id].is_none() || !self.nodes[id].needs {
+                continue;
+            }
+            let go = grads[id].take().unwrap();
+            let contributions = self.op_backward(id, &go);
+            grads[id] = Some(go);
+            for (v, g) in contributions {
+                if !self.nodes[v].needs {
+                    continue;
+                }
+                match &mut grads[v] {
+                    Some(acc) => {
+                        for (a, b) in acc.iter_mut().zip(g.iter()) {
+                            *a += b;
+                        }
+                    }
+                    slot => *slot = Some(g),
+                }
+            }
+        }
+        grads
+    }
+
+    /// Gradient contributions of node `id` into its inputs.
+    fn op_backward(&self, id: V, go: &[f32]) -> Vec<(V, Vec<f32>)> {
+        let out_val = &self.nodes[id].val;
+        match &self.nodes[id].op {
+            Op::Leaf => Vec::new(),
+            Op::Scale(a, c) => {
+                vec![(*a, go.iter().map(|&g| g * c).collect())]
+            }
+            Op::Add(a, b) => {
+                let mut outs = Vec::new();
+                for &(v, _other) in &[(*a, *b), (*b, *a)] {
+                    if !self.nodes[v].needs {
+                        continue;
+                    }
+                    let sv = bcast_strides(&self.val(v).shape, &out_val.shape);
+                    let s0 = vec![0usize; out_val.shape.len()];
+                    let mut g = vec![0f32; self.val(v).len()];
+                    bcast_apply(&out_val.shape, &sv, &s0, |o, iv, _| g[iv] += go[o]);
+                    outs.push((v, g));
+                }
+                outs
+            }
+            Op::Mul(a, b) => {
+                let mut outs = Vec::new();
+                for &(v, other) in &[(*a, *b), (*b, *a)] {
+                    if !self.nodes[v].needs {
+                        continue;
+                    }
+                    let sv = bcast_strides(&self.val(v).shape, &out_val.shape);
+                    let so = bcast_strides(&self.val(other).shape, &out_val.shape);
+                    let ov = &self.val(other).data;
+                    let mut g = vec![0f32; self.val(v).len()];
+                    bcast_apply(&out_val.shape, &sv, &so, |o, iv, io| g[iv] += go[o] * ov[io]);
+                    outs.push((v, g));
+                }
+                outs
+            }
+            Op::Matmul { a, b, trans_b } => self.matmul_backward(*a, *b, *trans_b, go),
+            Op::Activation { x, kind } => {
+                let vx = &self.val(*x).data;
+                let g = vx.iter().zip(go.iter()).map(|(&xv, &gv)| gv * act_bwd(*kind, xv)).collect();
+                vec![(*x, g)]
+            }
+            Op::SoftmaxLast(x) => {
+                let y = &out_val.data;
+                let w = out_val.width();
+                let mut g = vec![0f32; y.len()];
+                for r in 0..y.len() / w {
+                    let yr = &y[r * w..(r + 1) * w];
+                    let gr = &go[r * w..(r + 1) * w];
+                    let dot: f32 = yr.iter().zip(gr.iter()).map(|(&a, &b)| a * b).sum();
+                    for j in 0..w {
+                        g[r * w + j] = yr[j] * (gr[j] - dot);
+                    }
+                }
+                vec![(*x, g)]
+            }
+            Op::LayerNorm { x, g, b } => self.layernorm_backward(*x, *g, *b, go),
+            Op::RmsNorm { x, g } => self.rmsnorm_backward(*x, *g, go),
+            Op::Gather { table, ids, prefix: _ } => {
+                let vt = self.val(*table);
+                let cols = vt.shape[1];
+                let mut g = vec![0f32; vt.len()];
+                for (r, &idx) in ids.iter().enumerate() {
+                    for j in 0..cols {
+                        g[idx * cols + j] += go[r * cols + j];
+                    }
+                }
+                vec![(*table, g)]
+            }
+            Op::SliceFirst(x) => {
+                let vx = self.val(*x);
+                let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+                let mut g = vec![0f32; vx.len()];
+                for bi in 0..bsz {
+                    g[bi * s * d..bi * s * d + d].copy_from_slice(&go[bi * d..(bi + 1) * d]);
+                }
+                vec![(*x, g)]
+            }
+            Op::SplitHeads { x, heads } => {
+                let vx = self.val(*x);
+                let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+                let hd = d / heads;
+                let mut g = vec![0f32; vx.len()];
+                for bi in 0..bsz {
+                    for si in 0..s {
+                        for h in 0..*heads {
+                            let dst = (bi * s + si) * d + h * hd;
+                            let src = ((bi * heads + h) * s + si) * hd;
+                            g[dst..dst + hd].copy_from_slice(&go[src..src + hd]);
+                        }
+                    }
+                }
+                vec![(*x, g)]
+            }
+            Op::MergeHeads(x) => {
+                let vx = self.val(*x);
+                let (bsz, heads, s, hd) = (vx.shape[0], vx.shape[1], vx.shape[2], vx.shape[3]);
+                let d = heads * hd;
+                let mut g = vec![0f32; vx.len()];
+                for bi in 0..bsz {
+                    for h in 0..heads {
+                        for si in 0..s {
+                            let dst = ((bi * heads + h) * s + si) * hd;
+                            let src = (bi * s + si) * d + h * hd;
+                            g[dst..dst + hd].copy_from_slice(&go[src..src + hd]);
+                        }
+                    }
+                }
+                vec![(*x, g)]
+            }
+            Op::Transpose2(x) => {
+                let vx = self.val(*x);
+                let rank = vx.shape.len();
+                let (r, c) = (vx.shape[rank - 2], vx.shape[rank - 1]);
+                let batches: usize = vx.shape[..rank - 2].iter().product();
+                let mut g = vec![0f32; vx.len()];
+                for t in 0..batches {
+                    // out is [c,r] per batch; transpose back to [r,c]
+                    let src = &go[t * r * c..(t + 1) * r * c];
+                    g[t * r * c..(t + 1) * r * c].copy_from_slice(&transpose(src, c, r));
+                }
+                vec![(*x, g)]
+            }
+            Op::SumAxis0(x) => {
+                let vx = self.val(*x);
+                let (r, c) = (vx.shape[0], vx.shape[1]);
+                let mut g = vec![0f32; r * c];
+                for i in 0..r {
+                    g[i * c..(i + 1) * c].copy_from_slice(go);
+                }
+                vec![(*x, g)]
+            }
+            Op::Rsqrt { x, eps: _ } => {
+                // y = (x+eps)^-1/2 -> dy/dx = -y^3 / 2
+                let y = &out_val.data;
+                let g = y.iter().zip(go.iter()).map(|(&yv, &gv)| -0.5 * yv * yv * yv * gv).collect();
+                vec![(*x, g)]
+            }
+            Op::Reshape(x) => vec![(*x, go.to_vec())],
+            Op::C3a { x, w } => self.c3a_backward(*x, *w, go),
+            Op::BlockRotate { x, r } => {
+                let (vx, vr) = (self.val(*x), self.val(*r));
+                let (nb, bb) = (vr.shape[0], vr.shape[1]);
+                let rows = vx.rows();
+                let mut outs = Vec::new();
+                if self.nodes[*x].needs {
+                    let mut gx = vec![0f32; vx.len()];
+                    for row in 0..rows {
+                        for nbi in 0..nb {
+                            let rblk = &vr.data[nbi * bb * bb..(nbi + 1) * bb * bb];
+                            for bi in 0..bb {
+                                let mut acc = 0f32;
+                                for c in 0..bb {
+                                    acc += go[row * nb * bb + nbi * bb + c] * rblk[bi * bb + c];
+                                }
+                                gx[row * nb * bb + nbi * bb + bi] = acc;
+                            }
+                        }
+                    }
+                    outs.push((*x, gx));
+                }
+                if self.nodes[*r].needs {
+                    let mut gr = vec![0f32; vr.len()];
+                    for row in 0..rows {
+                        for nbi in 0..nb {
+                            for bi in 0..bb {
+                                let xv = vx.data[row * nb * bb + nbi * bb + bi];
+                                if xv == 0.0 {
+                                    continue;
+                                }
+                                for c in 0..bb {
+                                    gr[nbi * bb * bb + bi * bb + c] +=
+                                        xv * go[row * nb * bb + nbi * bb + c];
+                                }
+                            }
+                        }
+                    }
+                    outs.push((*r, gr));
+                }
+                outs
+            }
+        }
+    }
+
+    fn matmul_backward(&self, a: V, b: V, trans_b: bool, go: &[f32]) -> Vec<(V, Vec<f32>)> {
+        let (va, vb) = (self.val(a), self.val(b));
+        let ra = va.shape.len();
+        let k = va.shape[ra - 1];
+        let mut outs = Vec::new();
+        if vb.shape.len() == 2 {
+            let (r0, c0) = (vb.shape[0], vb.shape[1]);
+            let n = if trans_b { r0 } else { c0 };
+            let rows = va.data.len() / k;
+            if self.nodes[a].needs {
+                // da = dY · B_eff^T; B_eff^T is [n,k]
+                let b_eff_t = if trans_b {
+                    vb.data.clone() // stored [n,k] already
+                } else {
+                    transpose(&vb.data, r0, c0)
+                };
+                let da = mm(go, &b_eff_t, rows, n, k);
+                outs.push((a, da));
+            }
+            if self.nodes[b].needs {
+                // dB_eff = A^T · dY  ([k,n]); transpose back if stored [n,k]
+                let at = transpose(&va.data, rows, k);
+                let db_eff = mm(&at, go, k, rows, n);
+                let db = if trans_b { transpose(&db_eff, k, n) } else { db_eff };
+                outs.push((b, db));
+            }
+        } else {
+            let m = va.shape[ra - 2];
+            let (bm, bn) = (vb.shape[ra - 2], vb.shape[ra - 1]);
+            let n = if trans_b { bm } else { bn };
+            let batches: usize = va.shape[..ra - 2].iter().product();
+            let mut da = vec![0f32; va.len()];
+            let mut db = vec![0f32; vb.len()];
+            for t in 0..batches {
+                let gsl = &go[t * m * n..(t + 1) * m * n];
+                let asl = &va.data[t * m * k..(t + 1) * m * k];
+                let bsl = &vb.data[t * bm * bn..(t + 1) * bm * bn];
+                if self.nodes[a].needs {
+                    let b_eff_t = if trans_b { bsl.to_vec() } else { transpose(bsl, bm, bn) };
+                    let d = mm(gsl, &b_eff_t, m, n, k);
+                    da[t * m * k..(t + 1) * m * k].copy_from_slice(&d);
+                }
+                if self.nodes[b].needs {
+                    let at = transpose(asl, m, k);
+                    let d_eff = mm(&at, gsl, k, m, n);
+                    let d = if trans_b { transpose(&d_eff, k, n) } else { d_eff };
+                    db[t * bm * bn..(t + 1) * bm * bn].copy_from_slice(&d);
+                }
+            }
+            if self.nodes[a].needs {
+                outs.push((a, da));
+            }
+            if self.nodes[b].needs {
+                outs.push((b, db));
+            }
+        }
+        outs
+    }
+
+    fn layernorm_backward(&self, x: V, g: V, b: V, go: &[f32]) -> Vec<(V, Vec<f32>)> {
+        let (vx, vg) = (self.val(x), self.val(g));
+        let d = vx.width();
+        let rows = vx.rows();
+        let mut gx = vec![0f32; vx.len()];
+        let mut gg = vec![0f32; d];
+        let mut gb = vec![0f32; d];
+        for r in 0..rows {
+            let row = &vx.data[r * d..(r + 1) * d];
+            let gor = &go[r * d..(r + 1) * d];
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            // xhat and dy*g reductions
+            let mut mean_dyg = 0f32;
+            let mut mean_dyg_xhat = 0f32;
+            for j in 0..d {
+                let xhat = (row[j] - mu) * inv;
+                let dyg = gor[j] * vg.data[j];
+                mean_dyg += dyg;
+                mean_dyg_xhat += dyg * xhat;
+                gg[j] += gor[j] * xhat;
+                gb[j] += gor[j];
+            }
+            mean_dyg /= d as f32;
+            mean_dyg_xhat /= d as f32;
+            for j in 0..d {
+                let xhat = (row[j] - mu) * inv;
+                let dyg = gor[j] * vg.data[j];
+                gx[r * d + j] = inv * (dyg - mean_dyg - xhat * mean_dyg_xhat);
+            }
+        }
+        let mut outs = Vec::new();
+        if self.nodes[x].needs {
+            outs.push((x, gx));
+        }
+        if self.nodes[g].needs {
+            outs.push((g, gg));
+        }
+        if self.nodes[b].needs {
+            outs.push((b, gb));
+        }
+        outs
+    }
+
+    fn rmsnorm_backward(&self, x: V, g: V, go: &[f32]) -> Vec<(V, Vec<f32>)> {
+        let (vx, vg) = (self.val(x), self.val(g));
+        let d = vx.width();
+        let rows = vx.rows();
+        let mut gx = vec![0f32; vx.len()];
+        let mut gg = vec![0f32; d];
+        for r in 0..rows {
+            let row = &vx.data[r * d..(r + 1) * d];
+            let gor = &go[r * d..(r + 1) * d];
+            let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            let rms = (ms + 1e-6).sqrt();
+            let inv = 1.0 / rms;
+            let mut dot = 0f32; // Σ x·g·dy
+            for j in 0..d {
+                dot += row[j] * vg.data[j] * gor[j];
+                gg[j] += gor[j] * row[j] * inv;
+            }
+            let c = dot / (d as f32 * rms * rms * rms);
+            for j in 0..d {
+                gx[r * d + j] = vg.data[j] * gor[j] * inv - row[j] * c;
+            }
+        }
+        let mut outs = Vec::new();
+        if self.nodes[x].needs {
+            outs.push((x, gx));
+        }
+        if self.nodes[g].needs {
+            outs.push((g, gg));
+        }
+        outs
+    }
+
+    fn c3a_backward(&self, x: V, w: V, go: &[f32]) -> Vec<(V, Vec<f32>)> {
+        let (vx, vw) = (self.val(x), self.val(w));
+        let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
+        let rows = vx.rows();
+        let plan = Plan::new(b);
+        let conj = |v: &[C]| -> Vec<C> { v.iter().map(|&(re, im)| (re, -im)).collect() };
+        // spectra of w (conjugated) for dx, accumulated conj(X)·dY for dw
+        let wf_conj: Vec<Vec<C>> = (0..m * n)
+            .map(|ij| {
+                let kr: Vec<f64> = vw.data[ij * b..(ij + 1) * b].iter().map(|&v| v as f64).collect();
+                conj(&fft::rfft(&plan, &kr))
+            })
+            .collect();
+        let need_x = self.nodes[x].needs;
+        let need_w = self.nodes[w].needs;
+        let mut gx = vec![0f32; vx.len()];
+        let mut gw_spec = vec![(0f64, 0f64); m * n * b];
+        for r in 0..rows {
+            let dyf: Vec<Vec<C>> = (0..m)
+                .map(|i| {
+                    let dyr: Vec<f64> =
+                        go[r * m * b + i * b..r * m * b + (i + 1) * b].iter().map(|&v| v as f64).collect();
+                    fft::rfft(&plan, &dyr)
+                })
+                .collect();
+            let xf_conj: Vec<Vec<C>> = if need_w {
+                (0..n)
+                    .map(|j| {
+                        let xj: Vec<f64> = vx.data[r * n * b + j * b..r * n * b + (j + 1) * b]
+                            .iter()
+                            .map(|&v| v as f64)
+                            .collect();
+                        conj(&fft::rfft(&plan, &xj))
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            if need_x {
+                for j in 0..n {
+                    let mut acc = vec![(0f64, 0f64); b];
+                    for i in 0..m {
+                        let wc = &wf_conj[i * n + j];
+                        for k in 0..b {
+                            let p = fft::c_mul(wc[k], dyf[i][k]);
+                            acc[k].0 += p.0;
+                            acc[k].1 += p.1;
+                        }
+                    }
+                    let z = fft::irfft_real(&plan, &acc);
+                    for k in 0..b {
+                        gx[r * n * b + j * b + k] = z[k] as f32;
+                    }
+                }
+            }
+            if need_w {
+                for i in 0..m {
+                    for j in 0..n {
+                        let xc = &xf_conj[j];
+                        let slot = &mut gw_spec[(i * n + j) * b..(i * n + j + 1) * b];
+                        for k in 0..b {
+                            let p = fft::c_mul(xc[k], dyf[i][k]);
+                            slot[k].0 += p.0;
+                            slot[k].1 += p.1;
+                        }
+                    }
+                }
+            }
+        }
+        let mut outs = Vec::new();
+        if need_x {
+            outs.push((x, gx));
+        }
+        if need_w {
+            let mut gw = vec![0f32; vw.len()];
+            for ij in 0..m * n {
+                let z = fft::irfft_real(&plan, &gw_spec[ij * b..(ij + 1) * b]);
+                for k in 0..b {
+                    gw[ij * b + k] = z[k] as f32;
+                }
+            }
+            outs.push((w, gw));
+        }
+        outs
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests: finite-difference gradient checks for every differentiable op
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Rng;
+
+    fn rand_arr(rng: &mut Rng, shape: &[usize]) -> Arr {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        Arr::new(shape.to_vec(), (0..n).map(|_| rng.normal() as f32 * 0.5).collect())
+    }
+
+    /// Scalar objective: weighted sum of the graph output, so dL/dout is a
+    /// fixed random seed vector.
+    fn gradcheck(
+        shapes: &[&[usize]],
+        build: impl Fn(&mut Tape, &[V]) -> V,
+        tol: f32,
+    ) {
+        let mut rng = Rng::seed(0xAD);
+        let inputs: Vec<Arr> = shapes.iter().map(|s| rand_arr(&mut rng, s)).collect();
+        let mut tape = Tape::new();
+        let ids: Vec<V> = inputs.iter().map(|a| tape.leaf(a.clone(), true)).collect();
+        let out = build(&mut tape, &ids);
+        let w: Vec<f32> = (0..tape.val(out).len()).map(|_| rng.normal() as f32).collect();
+        let grads = tape.backward(out, w.clone());
+
+        let loss = |vals: &[Arr]| -> f64 {
+            let mut t = Tape::new();
+            let ids: Vec<V> = vals.iter().map(|a| t.leaf(a.clone(), false)).collect();
+            let o = build(&mut t, &ids);
+            t.val(o).data.iter().zip(w.iter()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let eps = 1e-3f32;
+        for (vi, id) in ids.iter().enumerate() {
+            let g = grads[*id].as_ref().expect("input grad");
+            for ei in 0..inputs[vi].len() {
+                let mut plus = inputs.clone();
+                plus[vi].data[ei] += eps;
+                let mut minus = inputs.clone();
+                minus[vi].data[ei] -= eps;
+                let num = ((loss(&plus) - loss(&minus)) / (2.0 * eps as f64)) as f32;
+                let an = g[ei];
+                let scale = 1.0f32.max(num.abs()).max(an.abs());
+                assert!(
+                    (num - an).abs() / scale < tol,
+                    "input {vi} elem {ei}: numeric {num} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_add_mul_broadcast() {
+        gradcheck(&[&[2, 3, 4], &[4]], |t, v| t.add(v[0], v[1]), 1e-2);
+        gradcheck(&[&[2, 3, 4], &[1, 1, 4]], |t, v| t.mul(v[0], v[1]), 1e-2);
+        gradcheck(&[&[2, 4], &[2, 4]], |t, v| t.mul(v[0], v[1]), 1e-2);
+    }
+
+    #[test]
+    fn grad_matmul_shared_weight() {
+        gradcheck(&[&[2, 3, 4], &[4, 5]], |t, v| t.matmul(v[0], v[1], false), 1e-2);
+        gradcheck(&[&[2, 3, 4], &[5, 4]], |t, v| t.matmul(v[0], v[1], true), 1e-2);
+    }
+
+    #[test]
+    fn grad_matmul_batched() {
+        gradcheck(&[&[2, 3, 4], &[2, 4, 5]], |t, v| t.matmul(v[0], v[1], false), 1e-2);
+        gradcheck(&[&[2, 3, 4], &[2, 5, 4]], |t, v| t.matmul(v[0], v[1], true), 1e-2);
+    }
+
+    #[test]
+    fn grad_activations() {
+        for kind in [Act::Gelu, Act::Silu, Act::Relu] {
+            gradcheck(&[&[3, 5]], |t, v| t.activation(v[0], kind), 2e-2);
+        }
+    }
+
+    #[test]
+    fn grad_softmax_norms() {
+        gradcheck(&[&[3, 6]], |t, v| t.softmax_last(v[0]), 1e-2);
+        gradcheck(&[&[3, 6], &[6], &[6]], |t, v| t.layernorm(v[0], v[1], v[2]), 2e-2);
+        gradcheck(&[&[3, 6], &[6]], |t, v| t.rmsnorm(v[0], v[1]), 2e-2);
+    }
+
+    #[test]
+    fn grad_structural_ops() {
+        gradcheck(&[&[2, 3, 4]], |t, v| t.slice_first(v[0]), 1e-2);
+        gradcheck(&[&[2, 3, 4]], |t, v| {
+            let h = t.split_heads(v[0], 2);
+            t.merge_heads(h)
+        }, 1e-2);
+        gradcheck(&[&[2, 3, 4]], |t, v| t.transpose2(v[0]), 1e-2);
+        gradcheck(&[&[3, 4]], |t, v| t.sum_axis0(v[0]), 1e-2);
+        gradcheck(&[&[3, 4]], |t, v| t.reshape(v[0], vec![4, 3]), 1e-2);
+    }
+
+    #[test]
+    fn grad_rsqrt() {
+        // keep inputs positive: square them first via mul
+        gradcheck(&[&[2, 3]], |t, v| {
+            let sq = t.mul(v[0], v[0]);
+            t.rsqrt(sq, 1e-3)
+        }, 2e-2);
+    }
+
+    #[test]
+    fn grad_c3a_operator() {
+        gradcheck(&[&[3, 8], &[2, 2, 4]], |t, v| t.c3a(v[0], v[1]), 1e-2);
+        gradcheck(&[&[2, 2, 6], &[3, 2, 3]], |t, v| t.c3a(v[0], v[1]), 1e-2);
+    }
+
+    #[test]
+    fn grad_block_rotate() {
+        gradcheck(&[&[3, 8], &[2, 4, 4]], |t, v| t.block_rotate(v[0], v[1]), 1e-2);
+    }
+
+    #[test]
+    fn grad_gather() {
+        let mut rng = Rng::seed(7);
+        let table = rand_arr(&mut rng, &[5, 3]);
+        let ids = vec![1usize, 4, 1, 0];
+        let mut tape = Tape::new();
+        let tid = tape.leaf(table.clone(), true);
+        let out = tape.gather(tid, &ids, &[2, 2]);
+        assert_eq!(tape.val(out).shape, vec![2, 2, 3]);
+        let seed = vec![1f32; 12];
+        let grads = tape.backward(out, seed);
+        let g = grads[tid].as_ref().unwrap();
+        // row 1 gathered twice -> grad 2 per column; row 4 and 0 once; rows 2,3 zero
+        assert_eq!(g[1 * 3], 2.0);
+        assert_eq!(g[4 * 3], 1.0);
+        assert_eq!(g[0], 1.0);
+        assert_eq!(g[2 * 3], 0.0);
+    }
+
+    #[test]
+    fn c3a_matches_block_circulant_matvec() {
+        use crate::substrate::circulant::BlockCirculant;
+        let mut rng = Rng::seed(11);
+        let (m, n, b) = (2usize, 3usize, 8usize);
+        let w = rand_arr(&mut rng, &[m, n, b]);
+        let x = rand_arr(&mut rng, &[1, n * b]);
+        let mut tape = Tape::new();
+        let xv = tape.leaf(x.clone(), false);
+        let wv = tape.leaf(w.clone(), false);
+        let out = tape.c3a(xv, wv);
+        let bc = BlockCirculant::new(m, n, b, w.data.iter().map(|&v| v as f64).collect());
+        let want = bc.matvec(&x.data.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        for (got, want) in tape.val(out).data.iter().zip(want.iter()) {
+            assert!((*got as f64 - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn needs_gating_skips_frozen_inputs() {
+        let mut rng = Rng::seed(13);
+        let a = rand_arr(&mut rng, &[2, 3]);
+        let w = rand_arr(&mut rng, &[3, 4]);
+        let mut tape = Tape::new();
+        let av = tape.leaf(a, true);
+        let wv = tape.leaf(w, false);
+        let out = tape.matmul(av, wv, false);
+        let grads = tape.backward(out, vec![1.0; 8]);
+        assert!(grads[av].is_some());
+        assert!(grads[wv].is_none());
+    }
+}

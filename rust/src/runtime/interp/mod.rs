@@ -1,0 +1,403 @@
+//! The substrate interpreter — executes train/eval artifacts on CPU by
+//! routing through the tape autodiff + model zoo instead of compiled HLO.
+//!
+//! An [`InterpExecutable`] is a pure function of its positional inputs and
+//! honors the exact PJRT flattening contract the sessions use:
+//!
+//! * train: inputs `[trainable..., opt_m..., opt_v..., frozen..., data...,
+//!   scalars...]` -> outputs `[new_trainable..., new_m..., new_v..., loss,
+//!   metric]`
+//! * eval: inputs `[trainable..., frozen..., data...]` -> `[logits]`
+//!
+//! The AdamW update mirrors python/compile/model.py `adamw_update`
+//! (decoupled decay, `.b/.g/.mag/.lb/.ld` exempt).
+
+pub mod ad;
+pub mod model;
+
+use self::ad::{Arr, Tape, V};
+use self::model::{Graph, ModelInput};
+use crate::runtime::manifest::{ArtifactSpec, ModelMeta, Role};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+/// A loaded artifact on the substrate backend.
+pub struct InterpExecutable {
+    spec: ArtifactSpec,
+    meta: ModelMeta,
+}
+
+struct ParsedInputs {
+    /// (name, value) in trainable_order
+    trainable: Vec<(String, Arr)>,
+    opt_m: Vec<Arr>,
+    opt_v: Vec<Arr>,
+    /// (name, value) for frozen + frozen_random
+    frozen: Vec<(String, Arr)>,
+    data_f32: BTreeMap<String, Arr>,
+    data_i32: BTreeMap<String, Vec<i32>>,
+    scalars: BTreeMap<String, f32>,
+}
+
+impl InterpExecutable {
+    pub fn new(spec: &ArtifactSpec, meta: &ModelMeta) -> Result<InterpExecutable> {
+        match meta.kind.as_str() {
+            "encoder" | "decoder" | "mlp" => {}
+            other => bail!("{}: unsupported model kind {other}", spec.name),
+        }
+        match spec.peft.method.as_str() {
+            "full" | "head" | "bitfit" | "ia3" | "lora" | "dora" | "vera" | "boft" | "c3a" => {}
+            other => bail!("{}: unsupported PEFT method {other}", spec.name),
+        }
+        Ok(InterpExecutable { spec: spec.clone(), meta: meta.clone() })
+    }
+
+    pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let parsed = self.parse_inputs(inputs)?;
+        if self.spec.kind == "train" {
+            self.train_step(parsed)
+        } else {
+            self.eval_step(parsed)
+        }
+    }
+
+    fn parse_inputs(&self, inputs: &[&xla::Literal]) -> Result<ParsedInputs> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest declares {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut p = ParsedInputs {
+            trainable: Vec::new(),
+            opt_m: Vec::new(),
+            opt_v: Vec::new(),
+            frozen: Vec::new(),
+            data_f32: BTreeMap::new(),
+            data_i32: BTreeMap::new(),
+            scalars: BTreeMap::new(),
+        };
+        for (inp, lit) in self.spec.inputs.iter().zip(inputs.iter()) {
+            match inp.role {
+                Role::Trainable => p.trainable.push((inp.name.clone(), lit_to_arr(lit, &inp.shape)?)),
+                Role::OptM => p.opt_m.push(lit_to_arr(lit, &inp.shape)?),
+                Role::OptV => p.opt_v.push(lit_to_arr(lit, &inp.shape)?),
+                Role::Frozen | Role::FrozenRandom => {
+                    p.frozen.push((inp.name.clone(), lit_to_arr(lit, &inp.shape)?))
+                }
+                Role::Data => {
+                    if inp.i32_dtype {
+                        p.data_i32.insert(inp.name.clone(), lit.to_vec::<i32>()?);
+                    } else {
+                        p.data_f32.insert(inp.name.clone(), lit_to_arr(lit, &inp.shape)?);
+                    }
+                }
+                Role::Scalar => {
+                    p.scalars.insert(inp.name.clone(), lit.get_first_element::<f32>()?);
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// Build tape leaves + the shared model input, run the forward pass.
+    fn forward<'t>(
+        &self,
+        tape: &'t mut Tape,
+        parsed: &ParsedInputs,
+    ) -> Result<(V, Vec<V>, ModelInput)> {
+        let mut params: BTreeMap<String, V> = BTreeMap::new();
+        let mut t_ids = Vec::with_capacity(parsed.trainable.len());
+        for (name, arr) in &parsed.trainable {
+            let id = tape.leaf(arr.clone(), true);
+            t_ids.push(id);
+            params.insert(name.clone(), id);
+        }
+        for (name, arr) in &parsed.frozen {
+            let id = tape.leaf(arr.clone(), false);
+            params.insert(name.clone(), id);
+        }
+        let (b, s) = (self.spec.batch, self.spec.seq);
+        let input = ModelInput {
+            tokens: parsed.data_i32.get("data.tokens").cloned(),
+            x: parsed.data_f32.get("data.x").cloned(),
+            b,
+            s,
+        };
+        let mut graph =
+            Graph { tape, params: &params, meta: &self.meta, peft: &self.spec.peft };
+        let fwd = graph.forward(&self.spec.head, &input)?;
+        Ok((fwd.logits, t_ids, input))
+    }
+
+    fn eval_step(&self, parsed: ParsedInputs) -> Result<Vec<xla::Literal>> {
+        let mut tape = Tape::new();
+        let (logits, _t_ids, _input) = self.forward(&mut tape, &parsed)?;
+        let out = tape.val(logits);
+        Ok(vec![xla::Literal::from_f32(&out.shape, out.data.clone())])
+    }
+
+    fn train_step(&self, parsed: ParsedInputs) -> Result<Vec<xla::Literal>> {
+        let mut tape = Tape::new();
+        let (logits, t_ids, input) = self.forward(&mut tape, &parsed)?;
+        let (loss, metric, dlogits) = self.loss_head(&tape, logits, &parsed, &input)?;
+        let grads = tape.backward(logits, dlogits);
+
+        let step = *parsed.scalars.get("step").context("missing scalar step")?;
+        let lr = *parsed.scalars.get("lr").context("missing scalar lr")?;
+        let wd = parsed.scalars.get("wd").copied().unwrap_or(0.0);
+        let bc1 = 1.0 - (BETA1 as f64).powf(step as f64);
+        let bc2 = 1.0 - (BETA2 as f64).powf(step as f64);
+
+        let nt = parsed.trainable.len();
+        let mut new_t = Vec::with_capacity(nt);
+        let mut new_m = Vec::with_capacity(nt);
+        let mut new_v = Vec::with_capacity(nt);
+        for (i, (name, p)) in parsed.trainable.iter().enumerate() {
+            let zero;
+            let g: &Vec<f32> = match grads[t_ids[i]].as_ref() {
+                Some(g) => g,
+                None => {
+                    zero = vec![0f32; p.len()];
+                    &zero
+                }
+            };
+            let exempt = name.ends_with(".b")
+                || name.ends_with(".g")
+                || name.ends_with(".mag")
+                || name.ends_with(".lb")
+                || name.ends_with(".ld");
+            let decay = if exempt { 0.0 } else { wd };
+            let m0 = &parsed.opt_m[i];
+            let v0 = &parsed.opt_v[i];
+            let mut pn = vec![0f32; p.len()];
+            let mut mn = vec![0f32; p.len()];
+            let mut vn = vec![0f32; p.len()];
+            for e in 0..p.len() {
+                let gv = g[e];
+                let nm = BETA1 * m0.data[e] + (1.0 - BETA1) * gv;
+                let nv = BETA2 * v0.data[e] + (1.0 - BETA2) * gv * gv;
+                let upd = (nm / bc1 as f32) / ((nv / bc2 as f32).sqrt() + EPS);
+                pn[e] = p.data[e] - lr * (upd + decay * p.data[e]);
+                mn[e] = nm;
+                vn[e] = nv;
+            }
+            new_t.push(xla::Literal::from_f32(&p.shape, pn));
+            new_m.push(xla::Literal::from_f32(&p.shape, mn));
+            new_v.push(xla::Literal::from_f32(&p.shape, vn));
+        }
+        let mut outs = new_t;
+        outs.extend(new_m);
+        outs.extend(new_v);
+        outs.push(xla::Literal::scalar(loss));
+        outs.push(xla::Literal::scalar(metric));
+        Ok(outs)
+    }
+
+    /// Compute (loss, metric, dL/dlogits) on the host, mirroring
+    /// python task_loss.
+    fn loss_head(
+        &self,
+        tape: &Tape,
+        logits: V,
+        parsed: &ParsedInputs,
+        input: &ModelInput,
+    ) -> Result<(f32, f32, Vec<f32>)> {
+        let lv = tape.val(logits);
+        let head = self.spec.head.as_str();
+        let kind = self.meta.kind.as_str();
+        let (b, s) = (input.b, input.s);
+
+        if kind == "decoder" || head == "mlm" {
+            // masked token-level cross-entropy over [b,s,V]
+            let mask = parsed
+                .data_f32
+                .get("data.loss_mask")
+                .context("missing data.loss_mask")?;
+            let targets: Vec<i32> = if head == "mlm" {
+                parsed.data_i32.get("data.targets").context("missing data.targets")?.clone()
+            } else {
+                // next-token targets: shift left, pad last column with 0
+                let toks = input.tokens.as_ref().context("missing data.tokens")?;
+                let mut t = vec![0i32; b * s];
+                for bi in 0..b {
+                    for si in 0..s.saturating_sub(1) {
+                        t[bi * s + si] = toks[bi * s + si + 1];
+                    }
+                }
+                t
+            };
+            let vcb = *lv.shape.last().unwrap();
+            let denom = mask.data.iter().sum::<f32>().max(1.0);
+            let mut loss = 0f64;
+            let mut correct = 0f64;
+            let mut dl = vec![0f32; lv.len()];
+            for pos in 0..b * s {
+                let m = mask.data[pos];
+                let row = &lv.data[pos * vcb..(pos + 1) * vcb];
+                let tgt = targets[pos].max(0) as usize;
+                if tgt >= vcb {
+                    bail!("target {tgt} out of vocab {vcb}");
+                }
+                if m == 0.0 {
+                    continue;
+                }
+                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+                let lse = mx + sum.ln();
+                loss += (m * (lse - row[tgt])) as f64;
+                let amax = crate::substrate::linalg::argmax(row);
+                if amax == tgt {
+                    correct += m as f64;
+                }
+                for j in 0..vcb {
+                    let p = (row[j] - lse).exp();
+                    let onehot = if j == tgt { 1.0 } else { 0.0 };
+                    dl[pos * vcb + j] = m * (p - onehot) / denom;
+                }
+            }
+            return Ok(((loss / denom as f64) as f32, correct as f32, dl));
+        }
+
+        if head == "reg" {
+            let y = parsed.data_f32.get("data.y").context("missing data.y")?;
+            let w = lv.shape[1];
+            let mut loss = 0f64;
+            let mut pred_sum = 0f64;
+            let mut dl = vec![0f32; lv.len()];
+            for r in 0..b {
+                let pred = lv.data[r * w];
+                let diff = pred - y.data[r];
+                loss += (diff * diff) as f64;
+                pred_sum += pred as f64;
+                dl[r * w] = 2.0 * diff / b as f32;
+            }
+            return Ok(((loss / b as f64) as f32, pred_sum as f32, dl));
+        }
+
+        // classification (cls / vec / mlp): mean CE over [b, n_out]
+        let y = parsed.data_i32.get("data.y").context("missing data.y")?;
+        let w = lv.shape[1];
+        let mut loss = 0f64;
+        let mut correct = 0f64;
+        let mut dl = vec![0f32; lv.len()];
+        for r in 0..b {
+            let row = &lv.data[r * w..(r + 1) * w];
+            let tgt = y[r].max(0) as usize;
+            if tgt >= w {
+                bail!("label {tgt} out of range {w}");
+            }
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+            let lse = mx + sum.ln();
+            loss += (lse - row[tgt]) as f64;
+            if crate::substrate::linalg::argmax(row) == tgt {
+                correct += 1.0;
+            }
+            for j in 0..w {
+                let p = (row[j] - lse).exp();
+                let onehot = if j == tgt { 1.0 } else { 0.0 };
+                dl[r * w + j] = (p - onehot) / b as f32;
+            }
+        }
+        Ok(((loss / b as f64) as f32, correct as f32, dl))
+    }
+}
+
+fn lit_to_arr(lit: &xla::Literal, shape: &[usize]) -> Result<Arr> {
+    let data = lit.to_vec::<f32>()?;
+    if data.len() != shape.iter().product::<usize>().max(1) {
+        bail!("literal has {} elements, manifest shape {shape:?}", data.len());
+    }
+    Ok(Arr::new(shape.to_vec(), data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::init::C3aScheme;
+    use crate::runtime::catalog;
+    use crate::runtime::session::tensor_to_literal;
+    use crate::substrate::prng::Rng;
+
+    /// Drive one interpreted train step directly (no session machinery):
+    /// asserts the positional output contract and that loss is finite.
+    #[test]
+    fn train_step_contract_c3a() {
+        let dir = std::env::temp_dir().join("c3a_interp_test");
+        let manifest = catalog::synthesize(&dir).unwrap();
+        let spec = manifest.artifact("enc_tiny__c3a_d8__cls__train").unwrap().clone();
+        let meta = manifest.model("enc_tiny").unwrap().clone();
+        let exe = InterpExecutable::new(&spec, &meta).unwrap();
+
+        let mut rng = Rng::seed(1);
+        let base = catalog::init_base_params(&meta);
+        let mut lits: Vec<xla::Literal> = Vec::new();
+        for inp in &spec.inputs {
+            match inp.role {
+                Role::Trainable | Role::Frozen | Role::FrozenRandom => {
+                    let t = if let Some(p) = base.get(&inp.name) {
+                        p.clone()
+                    } else {
+                        inp.init
+                            .as_ref()
+                            .unwrap()
+                            .materialize(&inp.shape, &mut rng, C3aScheme::Xavier)
+                    };
+                    lits.push(tensor_to_literal(&t).unwrap());
+                }
+                Role::OptM | Role::OptV => {
+                    let n: usize = inp.shape.iter().product::<usize>().max(1);
+                    lits.push(xla::Literal::from_f32(&inp.shape, vec![0.0; n]));
+                }
+                Role::Data => {
+                    if inp.i32_dtype {
+                        let n: usize = inp.shape.iter().product::<usize>().max(1);
+                        let toks: Vec<i32> = (0..n)
+                            .map(|i| if i % 7 == 0 { 1 } else { 4 + (i as i32 % 50) })
+                            .collect();
+                        lits.push(xla::Literal::from_i32(&inp.shape, toks));
+                    } else {
+                        let n: usize = inp.shape.iter().product::<usize>().max(1);
+                        lits.push(xla::Literal::from_f32(&inp.shape, vec![1.0; n]));
+                    }
+                }
+                Role::Scalar => {
+                    let v = match inp.name.as_str() {
+                        "step" => 1.0,
+                        "lr" => 0.01,
+                        _ => 0.0,
+                    };
+                    lits.push(xla::Literal::scalar(v));
+                }
+            }
+        }
+        // labels within n_out range
+        for (inp, lit) in spec.inputs.iter().zip(lits.iter_mut()) {
+            if inp.name == "data.y" {
+                let n: usize = inp.shape.iter().product::<usize>().max(1);
+                *lit = xla::Literal::from_i32(&inp.shape, (0..n).map(|i| (i % 2) as i32).collect());
+            }
+        }
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let outs = exe.execute(&refs).unwrap();
+        let nt = spec.trainable_order.len();
+        assert_eq!(outs.len(), 3 * nt + 2);
+        let loss = outs[3 * nt].get_first_element::<f32>().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        // trainable c3a kernels must have moved (nonzero grads at init)
+        let before_idx =
+            spec.trainable_order.iter().position(|n| n.contains(".c3a.w")).unwrap();
+        let before = &lits[before_idx];
+        let after = &outs[before_idx];
+        let b = before.to_vec::<f32>().unwrap();
+        let a = after.to_vec::<f32>().unwrap();
+        assert!(b.iter().zip(a.iter()).any(|(x, y)| x != y), "c3a kernel did not update");
+    }
+}

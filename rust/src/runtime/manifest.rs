@@ -52,7 +52,23 @@ pub struct PeftParams {
     pub rank: usize,
     pub r_v: usize,
     pub alpha: f64,
+    pub boft_block: usize,
     pub mlp_mid: String,
+}
+
+impl Default for PeftParams {
+    /// Mirrors python/compile/model.py `PeftCfg` defaults.
+    fn default() -> Self {
+        PeftParams {
+            method: "c3a".to_string(),
+            block: 0,
+            rank: 8,
+            r_v: 256,
+            alpha: 16.0,
+            boft_block: 8,
+            mlp_mid: "dense".to_string(),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -87,6 +103,15 @@ pub struct ModelMeta {
     pub seq: usize,
     pub n_out: usize,
     pub kind: String,
+    /// attention heads (encoder/decoder)
+    pub heads: usize,
+    /// "tokens" | "vec" (ViT-sim patch vectors)
+    pub input_mode: String,
+    /// vec mode: per-patch feature width
+    pub patch_dim: usize,
+    /// mlp kind: hidden / input widths
+    pub mlp_hidden: usize,
+    pub mlp_in: usize,
 }
 
 #[derive(Debug)]
@@ -108,6 +133,9 @@ impl Manifest {
         for (name, m) in root.get("models").and_then(|v| v.as_obj()).context("manifest: models")? {
             let cfg = m.get("cfg").context("model cfg")?;
             let gi = |k: &str| cfg.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            let gs = |k: &str, dflt: &str| {
+                cfg.get(k).and_then(|v| v.as_str()).unwrap_or(dflt).to_string()
+            };
             models.insert(
                 name.clone(),
                 ModelMeta {
@@ -118,7 +146,12 @@ impl Manifest {
                     vocab: gi("vocab"),
                     seq: gi("seq"),
                     n_out: gi("n_out"),
-                    kind: cfg.get("kind").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    kind: gs("kind", ""),
+                    heads: gi("heads").max(1),
+                    input_mode: gs("input_mode", "tokens"),
+                    patch_dim: gi("patch_dim").max(1),
+                    mlp_hidden: gi("mlp_hidden").max(1),
+                    mlp_in: gi("mlp_in").max(1),
                 },
             );
         }
@@ -129,6 +162,43 @@ impl Manifest {
             artifacts.insert(spec.name.clone(), spec);
         }
         Ok(Manifest { dir, models, artifacts })
+    }
+
+    /// Load `<dir>/manifest.json` when present (python AOT build), or
+    /// synthesize the same inventory in pure Rust so offline runs need no
+    /// python/JAX at all (the substrate fallback backend ignores HLO
+    /// artifact paths).
+    pub fn load_or_synthesize<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            // Visible notice: python-built artifacts are NOT being used.
+            // A mistyped --artifacts path lands here too, so say where.
+            eprintln!(
+                "note: {}/manifest.json not found — synthesizing the artifact \
+                 catalog in Rust (substrate backend; run `make artifacts` for \
+                 python-built artifacts)",
+                dir.display()
+            );
+            super::catalog::synthesize(dir)
+        }
+    }
+
+    /// The model's initial (pre-pretraining) parameters.  Loads the
+    /// python-written init bin when present; otherwise generates an
+    /// equivalent init in Rust and caches it at `init_path`.
+    pub fn init_params(&self, model: &str) -> Result<crate::substrate::tensor::TensorMap> {
+        let meta = self.model(model)?;
+        if meta.init_path.exists() {
+            return crate::substrate::tensor::load(&meta.init_path);
+        }
+        let map = super::catalog::init_base_params(meta);
+        if let Some(parent) = meta.init_path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        crate::substrate::tensor::save(&meta.init_path, &map)?;
+        Ok(map)
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -157,6 +227,7 @@ fn parse_artifact(dir: &Path, a: &Json) -> Result<ArtifactSpec> {
         rank: peft_j.get("rank").and_then(|v| v.as_usize()).unwrap_or(0),
         r_v: peft_j.get("r_v").and_then(|v| v.as_usize()).unwrap_or(0),
         alpha: peft_j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        boft_block: peft_j.get("boft_block").and_then(|v| v.as_usize()).unwrap_or(8),
         mlp_mid: peft_j.get("mlp_mid").and_then(|v| v.as_str()).unwrap_or("dense").to_string(),
     };
     let mut inputs = Vec::new();

@@ -1,42 +1,80 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile, execute.
+//! Runtime: load artifacts, bind them to an execution backend, execute.
 //!
-//! Python/JAX runs only at build time (`make artifacts`); this module is the
-//! only bridge between the rust coordinator and the compiled XLA programs.
+//! The coordinator talks to [`Engine`] / [`Executable`] only; which
+//! backend runs underneath is a build-time choice:
+//!
+//! * default — [`backend::SubstrateBackend`], the pure-Rust interpreter
+//!   over the FFT/circulant substrate (fully offline, no HLO needed);
+//! * `--features pjrt` — [`backend::PjrtBackend`], compiled XLA programs
+//!   through PJRT (requires vendored real `xla` bindings).
+//!
+//! Python/JAX runs only at build time (`make artifacts`) and only for the
+//! PJRT path; the substrate path synthesizes the same artifact manifest in
+//! Rust (see [`catalog`]).
 
 use anyhow::{Context, Result};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::rc::Rc;
 
+pub mod backend;
+pub mod catalog;
+pub mod interp;
 pub mod manifest;
 pub mod session;
 
-/// A compiled XLA program plus its PJRT client.
+use backend::{Backend, Executor};
+use manifest::{ArtifactSpec, Manifest, ModelMeta};
+
+/// An execution backend plus the model registry and a compile/load cache
+/// (experiments reuse artifacts heavily).
 pub struct Engine {
     client: xla::PjRtClient,
-    /// compile cache: artifact path -> loaded executable
+    backend: Box<dyn Backend>,
+    models: BTreeMap<String, ModelMeta>,
+    /// load cache: artifact name -> loaded executable
     cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
 
 impl Engine {
-    /// Create a CPU PJRT engine.
+    /// Create a CPU engine with an empty model registry (ad-hoc HLO use).
     pub fn cpu() -> Result<Self> {
-        Ok(Self {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-            cache: RefCell::new(HashMap::new()),
-        })
+        Self::with_models(BTreeMap::new())
     }
 
-    /// Load + compile with caching (experiments reuse artifacts heavily;
-    /// PJRT compilation costs seconds per artifact).
-    pub fn load_cached<P: AsRef<Path>>(&self, path: P) -> Result<Rc<Executable>> {
-        let key = path.as_ref().to_string_lossy().into_owned();
-        if let Some(e) = self.cache.borrow().get(&key) {
+    /// Create a CPU engine bound to a manifest's model registry — the
+    /// normal construction path (`Ctx::open`).
+    pub fn for_manifest(manifest: &Manifest) -> Result<Self> {
+        Self::with_models(manifest.models.clone())
+    }
+
+    fn with_models(models: BTreeMap<String, ModelMeta>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        #[cfg(feature = "pjrt")]
+        let backend: Box<dyn Backend> = Box::new(backend::PjrtBackend::new(client.clone()));
+        #[cfg(not(feature = "pjrt"))]
+        let backend: Box<dyn Backend> = Box::new(backend::SubstrateBackend);
+        Ok(Engine { client, backend, models, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Which backend executes artifacts ("substrate" or "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Load an artifact with caching, keyed by artifact name.
+    pub fn load_cached(&self, spec: &ArtifactSpec) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(&spec.name) {
             return Ok(e.clone());
         }
-        let exe = Rc::new(self.load_hlo_text(path)?);
-        self.cache.borrow_mut().insert(key, exe.clone());
+        let meta = self
+            .models
+            .get(&spec.model)
+            .with_context(|| format!("model {} not in engine registry", spec.model))?;
+        let exec = self.backend.load(spec, meta)?;
+        let exe = Rc::new(Executable { exec });
+        self.cache.borrow_mut().insert(spec.name.clone(), exe.clone());
         Ok(exe)
     }
 
@@ -44,7 +82,9 @@ impl Engine {
         &self.client
     }
 
-    /// Load an HLO-text artifact and compile it.
+    /// Load an ad-hoc HLO-text file and compile it through PJRT.  Only
+    /// meaningful with vendored real bindings; the shim reports a
+    /// descriptive error otherwise.
     pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
         let path = path.as_ref();
         let proto = xla::HloModuleProto::from_text_file(
@@ -56,30 +96,29 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe })
+        Ok(Executable { exec: Box::new(backend::HloExecutor { exe }) })
     }
 }
 
-/// A compiled, loaded executable.
+/// A loaded, executable artifact (backend-agnostic).
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    exec: Box<dyn Executor>,
 }
 
 impl Executable {
     /// Execute with host literals; returns the flattened tuple outputs.
-    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
-        let mut out = self.exe.execute::<L>(inputs)?;
-        let first = out
-            .pop()
-            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
-            .context("executable returned no outputs")?;
-        let lit = first.to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().map(|l| l.borrow()).collect();
+        self.exec.execute(&refs)
     }
 
-    /// Execute with device buffers, keeping outputs on device.
+    /// Execute with device buffers.  On the fallback backend this
+    /// round-trips through host literals; HLO executors keep outputs on
+    /// device.
     pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut out = self.exe.execute_b::<xla::PjRtBuffer>(inputs)?;
-        Ok(out.pop().context("no outputs")?)
+        self.exec.execute_b(inputs)
     }
 }

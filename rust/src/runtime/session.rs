@@ -116,7 +116,7 @@ impl TrainSession {
         if spec.kind != "train" {
             bail!("{} is not a train artifact", spec.name);
         }
-        let exe = engine.load_cached(&spec.path)?;
+        let exe = engine.load_cached(spec)?;
         let mut t_state = Vec::new();
         let mut t_shapes = Vec::new();
         for name in &spec.trainable_order {
@@ -149,20 +149,19 @@ impl TrainSession {
         let data_lits: Vec<xla::Literal> =
             batch.iter().map(tensor_to_literal).collect::<Result<_>>()?;
         // scalar inputs are manifest-driven: `wd` is absent from artifacts
-        // whose trainables are all decay-exempt (XLA DCE; see aot.py)
-        let scalar_lits: Vec<xla::Literal> = self
-            .spec
-            .inputs
-            .iter()
-            .filter(|i| i.role == Role::Scalar)
-            .map(|i| {
-                xla::Literal::scalar(match i.name.as_str() {
-                    "step" => (self.steps_done + 1) as f32,
-                    "lr" => lr,
-                    _ => wd,
-                })
-            })
-            .collect();
+        // whose trainables are all decay-exempt (XLA DCE; see aot.py).
+        // Unknown scalar names mean manifest drift — fail loudly instead of
+        // silently binding them to `wd` and corrupting training.
+        let mut scalar_lits: Vec<xla::Literal> = Vec::new();
+        for i in self.spec.inputs.iter().filter(|i| i.role == Role::Scalar) {
+            let value = match i.name.as_str() {
+                "step" => (self.steps_done + 1) as f32,
+                "lr" => lr,
+                "wd" => wd,
+                other => bail!("{}: unknown scalar input {other} (manifest drift)", self.spec.name),
+            };
+            scalar_lits.push(xla::Literal::scalar(value));
+        }
 
         let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
             3 * self.t_state.len() + self.f_state.len() + data_lits.len() + 3,
@@ -220,7 +219,7 @@ impl EvalSession {
         if spec.kind != "eval" {
             bail!("{} is not an eval artifact", spec.name);
         }
-        let exe = engine.load_cached(&spec.path)?;
+        let exe = engine.load_cached(spec)?;
         let mut f_state = Vec::new();
         for name in &spec.frozen_order {
             let t = init.frozen.get(name).with_context(|| format!("missing frozen {name}"))?;

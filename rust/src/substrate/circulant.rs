@@ -94,8 +94,7 @@ impl BlockCirculant {
     /// Materialize the dense ΔW [d_out × d_in], via the paper's
     /// Algorithm A2: column i of ΔW equals Δw ⋆ e_i.
     pub fn materialize(&self) -> Vec<f64> {
-        let (d_out, d_in, b) = (self.d_out(), self.d_in(), self.b);
-        let plan = Plan::new(b);
+        let (d_out, d_in) = (self.d_out(), self.d_in());
         let prepared = self.prepared();
         let mut out = vec![0.0; d_out * d_in];
         let mut e = vec![0.0; d_in];
@@ -107,7 +106,6 @@ impl BlockCirculant {
                 out[row * d_in + col] = z[row];
             }
         }
-        let _ = plan;
         out
     }
 
@@ -182,7 +180,13 @@ pub fn circulant_rank(w: &[f64], tol: f64) -> usize {
 
 pub fn circulant_rank_with(plan: &Plan, w: &[f64], tol: f64) -> usize {
     let spec = fft::rfft(plan, w);
-    let scale = spec.iter().map(|z| (z.0 * z.0 + z.1 * z.1).sqrt()).fold(1.0f64, f64::max);
+    // Relative tolerance against the true max DFT magnitude.  Flooring the
+    // scale at 1.0 would turn `tol` absolute for small-magnitude kernels
+    // (e.g. late-training deltas) and under-count their rank.
+    let scale = spec.iter().map(|z| (z.0 * z.0 + z.1 * z.1).sqrt()).fold(0.0f64, f64::max);
+    if scale <= 0.0 {
+        return 0; // zero kernel: rank 0
+    }
     spec.iter().filter(|z| (z.0 * z.0 + z.1 * z.1).sqrt() > tol * scale).count()
 }
 
@@ -306,6 +310,19 @@ mod tests {
     #[test]
     fn rank_constant_kernel_is_one() {
         assert_eq!(circulant_rank(&vec![2.5; 16], 1e-9), 1);
+    }
+
+    #[test]
+    fn rank_is_scale_invariant() {
+        // the tolerance is relative to the true max DFT magnitude, so
+        // scaling a kernel must not change its measured rank
+        let mut rng = Rng::seed(8);
+        let w: Vec<f64> = (0..16).map(|_| rng.normal()).collect();
+        let r_full = circulant_rank(&w, 1e-9);
+        let tiny: Vec<f64> = w.iter().map(|v| v * 1e-12).collect();
+        assert_eq!(circulant_rank(&tiny, 1e-9), r_full);
+        // and the zero kernel has rank 0, not "everything above 0·tol"
+        assert_eq!(circulant_rank(&vec![0.0; 16], 1e-9), 0);
     }
 
     #[test]

@@ -4,6 +4,17 @@
 //! projections, synthetic dataset generation, and shuffling — so every
 //! experiment is reproducible from a single seed.
 
+/// FNV-1a over a string — the shared seed-derivation hash (decorrelates
+/// per-name RNG streams for tasks, models, etc.).
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// xoshiro256** with splitmix64 initialization.
 #[derive(Clone, Debug)]
 pub struct Rng {

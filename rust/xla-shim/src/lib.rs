@@ -1,0 +1,334 @@
+//! `xla-shim` — a pure-Rust implementation of the subset of the `xla`
+//! (PJRT binding) crate API that the c3a runtime uses.
+//!
+//! The shim has two halves:
+//!
+//! * **Literals** (fully functional): shaped host values in row-major
+//!   layout, the data currency between the coordinator and any execution
+//!   backend.  `Literal` intentionally mirrors `substrate::tensor::Tensor`
+//!   semantics (row-major, f32/i32, reshape preserves element order).
+//! * **PJRT handles** (structural): `PjRtClient`, `PjRtBuffer`,
+//!   `HloModuleProto`, `XlaComputation`, `PjRtLoadedExecutable` exist so
+//!   HLO-path code compiles unchanged, but compiling/executing HLO returns
+//!   a descriptive error until real bindings are vendored (the `pjrt`
+//!   feature marks that seam).  The default execution path never touches
+//!   them: the c3a runtime routes artifacts through its substrate
+//!   interpreter backend instead.
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// Element types
+// ---------------------------------------------------------------------------
+
+/// Scalar element types a [`Literal`] can hold.
+pub trait Element: Copy + 'static {
+    fn wrap_vec(v: Vec<Self>) -> LitData;
+    /// Extract (with numeric conversion) from literal storage.
+    fn unwrap_vec(data: &LitData) -> Result<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn wrap_vec(v: Vec<f32>) -> LitData {
+        LitData::F32(v)
+    }
+
+    fn unwrap_vec(data: &LitData) -> Result<Vec<f32>> {
+        match data {
+            LitData::F32(v) => Ok(v.clone()),
+            LitData::I32(v) => Ok(v.iter().map(|&x| x as f32).collect()),
+            LitData::Tuple(_) => bail!("cannot read a tuple literal as f32"),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap_vec(v: Vec<i32>) -> LitData {
+        LitData::I32(v)
+    }
+
+    fn unwrap_vec(data: &LitData) -> Result<Vec<i32>> {
+        match data {
+            LitData::I32(v) => Ok(v.clone()),
+            LitData::F32(v) => Ok(v.iter().map(|&x| x as i32).collect()),
+            LitData::Tuple(_) => bail!("cannot read a tuple literal as i32"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal
+// ---------------------------------------------------------------------------
+
+/// Storage of a literal: flat row-major payload or a tuple of literals.
+#[derive(Clone, Debug)]
+pub enum LitData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A shaped host value (row-major).  Scalars have an empty shape.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: Vec<i64>,
+    data: LitData,
+}
+
+/// Array shape descriptor (mirrors the binding crate's accessor).
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> Vec<i64> {
+        self.dims.clone()
+    }
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: Element>(v: T) -> Literal {
+        Literal { shape: Vec::new(), data: T::wrap_vec(vec![v]) }
+    }
+
+    /// Rank-1 literal.
+    pub fn vec1<T: Element>(v: &[T]) -> Literal {
+        Literal { shape: vec![v.len() as i64], data: T::wrap_vec(v.to_vec()) }
+    }
+
+    /// Build directly from shape + f32 payload (shim-native constructor).
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Literal {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Literal { shape: shape.iter().map(|&d| d as i64).collect(), data: LitData::F32(data) }
+    }
+
+    /// Build directly from shape + i32 payload (shim-native constructor).
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Literal {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Literal { shape: shape.iter().map(|&d| d as i64).collect(), data: LitData::I32(data) }
+    }
+
+    /// Tuple literal.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { shape: Vec::new(), data: LitData::Tuple(elems) }
+    }
+
+    /// Number of payload elements (1 for scalars).
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LitData::F32(v) => v.len(),
+            LitData::I32(v) => v.len(),
+            LitData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Row-major reshape: element order is preserved, counts must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 {
+            bail!("reshape to negative dims {dims:?}");
+        }
+        if matches!(self.data, LitData::Tuple(_)) {
+            bail!("cannot reshape a tuple literal");
+        }
+        if n as usize != self.element_count() {
+            bail!("reshape {:?} -> {dims:?}: element count {} != {n}", self.shape, self.element_count());
+        }
+        Ok(Literal { shape: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Flat row-major payload (numeric dtypes convert).
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::unwrap_vec(&self.data)
+    }
+
+    /// First element of the payload.
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        let v = T::unwrap_vec(&self.data)?;
+        match v.first() {
+            Some(&x) => Ok(x),
+            None => bail!("empty literal has no first element"),
+        }
+    }
+
+    /// Flatten a tuple literal; a non-tuple flattens to itself.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LitData::Tuple(v) => Ok(v),
+            _ => Ok(vec![self]),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.data, LitData::Tuple(_)) {
+            bail!("tuple literal has no array shape");
+        }
+        Ok(ArrayShape { dims: self.shape.clone() })
+    }
+
+    /// Shape as usize dims (shim-native accessor).
+    pub fn shape_usize(&self) -> Vec<usize> {
+        self.shape.iter().map(|&d| d as usize).collect()
+    }
+
+    /// True when the payload is i32.
+    pub fn is_i32(&self) -> bool {
+        matches!(self.data, LitData::I32(_))
+    }
+
+    /// Zero-copy f32 payload view (shim-native; errors on i32/tuple).
+    pub fn f32_slice(&self) -> Result<&[f32]> {
+        match &self.data {
+            LitData::F32(v) => Ok(v),
+            _ => bail!("literal is not f32"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT handles (structural; HLO execution requires real vendored bindings)
+// ---------------------------------------------------------------------------
+
+const PJRT_UNAVAILABLE: &str = "HLO/PJRT execution is unavailable: the in-tree xla-shim only \
+     executes through the substrate fallback backend. Vendor real `xla` \
+     PJRT bindings and build with `--features pjrt` (see rust/README.md)";
+
+/// PJRT client handle.
+#[derive(Clone, Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!("{PJRT_UNAVAILABLE}");
+    }
+
+    /// Upload a host literal to a (host-resident, in the shim) buffer.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: literal.clone() })
+    }
+}
+
+/// Parsed HLO module handle.  Parsing HLO text needs the real bindings.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        bail!("{PJRT_UNAVAILABLE}");
+    }
+}
+
+/// Computation handle built from an HLO module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle.  Unreachable without real bindings (the
+/// only constructor, `PjRtClient::compile`, errors first).
+#[derive(Clone, Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!("{PJRT_UNAVAILABLE}");
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _inputs: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!("{PJRT_UNAVAILABLE}");
+    }
+}
+
+/// Device buffer.  In the shim this is a host literal wrapper, which is
+/// exactly what the fallback backend needs for the `run_b` path.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn from_literal(literal: Literal) -> PjRtBuffer {
+        PjRtBuffer { literal }
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = Literal::scalar(3.5f32);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 3.5);
+        assert!(l.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn vec_reshape_preserves_row_major_order() {
+        let l = Literal::vec1(&[1f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), vec![2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn reshape_count_mismatch_rejected() {
+        assert!(Literal::vec1(&[1f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn i32_literals_and_conversion() {
+        let l = Literal::vec1(&[1i32, -2, 3]);
+        assert!(l.is_i32());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn tuple_flattening() {
+        let t = Literal::tuple(vec![Literal::scalar(1f32), Literal::scalar(2f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        let single = Literal::scalar(9f32);
+        assert_eq!(single.to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn hlo_path_reports_unavailable() {
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.compile(&XlaComputation).is_err());
+    }
+
+    #[test]
+    fn buffers_wrap_literals() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c
+            .buffer_from_host_literal(None, &Literal::vec1(&[1f32, 2.0]).reshape(&[2]).unwrap())
+            .unwrap();
+        assert_eq!(b.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + test fully offline with default features
+# (pure-Rust substrate fallback backend; no network, no system XLA, no
+# python).  Also compiles every example and bench target so the whole
+# workspace stays green.
+#
+# Usage: scripts/verify.sh [--quick]
+#   --quick   skip the quickstart example run (build/test only)
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUICK=0
+for arg in "$@"; do
+  case "$arg" in
+    --quick) QUICK=1 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+export CARGO_NET_OFFLINE=true
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== compile examples + benches =="
+cargo build --release --examples --benches
+
+if [ "$QUICK" -eq 0 ]; then
+  echo "== quickstart on the fallback backend =="
+  cargo run --release --example quickstart
+fi
+
+echo "verify OK"
