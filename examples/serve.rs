@@ -122,6 +122,11 @@ fn main() -> anyhow::Result<()> {
     println!("requests      : {n_requests}");
     println!("accuracy      : {:.3}", correct as f64 / n_requests as f64);
     println!("throughput    : {:.1} req/s", n_requests as f64 / total_s);
+    println!("threads       : {}", c3a::substrate::parallel::threads());
+    // the session caches the adapter upload + frozen parse + kernel
+    // spectra: a fixed adapter must upload exactly once however many
+    // batches were served
+    println!("uploads       : {} (adapter reuse)", session.upload_count());
     println!("mean batch    : {:.1}", batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64);
     println!("latency p50   : {:.1} ms", pct(0.50));
     println!("latency p95   : {:.1} ms", pct(0.95));

@@ -1,0 +1,141 @@
+//! Interp train/serve benchmark tracking the tentpole speedups: the
+//! cached + multi-threaded session path vs the stateless single-threaded
+//! interpreter (the pre-seam behavior), plus a spectra-cached C3A matvec
+//! ops/s figure and a short serve-style `EvalSession::logits` loop.
+//!
+//! Emits `BENCH_interp.json` in the working directory so CI can track the
+//! perf trajectory.  `harness = false`; pass `--smoke` for the quick CI
+//! run, `C3A_THREADS` to pin the pool size.
+//!
+//!     cargo bench --bench bench_interp [-- --smoke]
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::interp::InterpExecutable;
+use c3a::runtime::manifest::ArtifactSpec;
+use c3a::runtime::session::{build_init, EvalSession, TrainSession};
+use c3a::runtime::Engine;
+use c3a::substrate::circulant::BlockCirculant;
+use c3a::substrate::parallel;
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::Tensor;
+use c3a::xla;
+use std::time::Instant;
+
+/// Data batch (tensors in `data_order`) for session-driven steps.
+fn build_batch(spec: &ArtifactSpec) -> Vec<Tensor> {
+    let mut batch = Vec::new();
+    for name in &spec.data_order {
+        let inp = spec.inputs.iter().find(|i| &i.name == name).unwrap();
+        let n: usize = inp.shape.iter().product::<usize>().max(1);
+        if inp.i32_dtype {
+            let vals: Vec<i32> = if inp.name == "data.y" {
+                (0..n).map(|i| (i % 2) as i32).collect()
+            } else {
+                (0..n).map(|i| if i % 7 == 0 { 1 } else { 4 + (i as i32 % 50) }).collect()
+            };
+            batch.push(Tensor::from_i32(inp.shape.clone(), &vals));
+        } else {
+            batch.push(Tensor::from_f32(inp.shape.clone(), &vec![1.0f32; n]));
+        }
+    }
+    batch
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let steps = if smoke { 8 } else { 40 };
+    let serve_calls = if smoke { 16 } else { 100 };
+    let max_threads = parallel::threads();
+
+    let dir = std::env::temp_dir().join("c3a_bench_interp");
+    let manifest = catalog::synthesize(&dir)?;
+    let spec = manifest.artifact("enc_tiny__c3a_d8__cls__train")?.clone();
+    let eval_spec = manifest.artifact("enc_tiny__c3a_d8__cls__eval")?.clone();
+    let meta = manifest.model("enc_tiny")?.clone();
+
+    println!("== bench_interp: enc_tiny/c3a_d8, {steps} steps, threads={max_threads} ==");
+
+    // -- baseline: stateless + single-threaded (pre-seam behavior).  A
+    // fresh executable per step guarantees no cache survives.
+    let lits = catalog::synth_inputs(&spec, &meta);
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+    parallel::set_threads(1);
+    {
+        // warmup
+        let exe = InterpExecutable::new(&spec, &meta)?;
+        exe.execute(&refs)?;
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let exe = InterpExecutable::new(&spec, &meta)?;
+        exe.execute(&refs)?;
+    }
+    let step_ms_single = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    println!("stateless single-thread : {step_ms_single:>8.2} ms/step");
+
+    // -- tentpole path: persistent session state + thread pool
+    parallel::set_threads(max_threads);
+    let engine = Engine::for_manifest(&manifest)?;
+    let mut rng = Rng::seed(1);
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut rng, C3aScheme::Xavier)?;
+    let mut session = TrainSession::new(&engine, &spec, &init)?;
+    let batch = build_batch(&spec);
+    session.step(&batch, 0.01, 0.0)?; // warmup
+    let t1 = Instant::now();
+    for _ in 0..steps {
+        session.step(&batch, 0.01, 0.0)?;
+    }
+    let step_ms_cached = t1.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    let speedup = step_ms_single / step_ms_cached;
+    println!("cached  multi-thread    : {step_ms_cached:>8.2} ms/step  ({speedup:.2}x)");
+
+    // -- serve-style loop: repeated EvalSession::logits with a fixed
+    // adapter (trainable upload + frozen parse + spectra all reused)
+    let eval_init = build_init(&eval_spec, &base, None, &mut Rng::seed(2), C3aScheme::Xavier)?;
+    let eval_session = EvalSession::new(&engine, &eval_spec, &eval_init)?;
+    let adapter = session.trainable_tensors()?;
+    let (b, s) = (eval_spec.batch, eval_spec.seq);
+    let toks: Vec<i32> =
+        (0..b * s).map(|i| if i % 5 == 0 { 1 } else { 3 + (i as i32 % 40) }).collect();
+    let eval_batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+    eval_session.logits(&adapter, &eval_batch)?; // warmup
+    let t2 = Instant::now();
+    for _ in 0..serve_calls {
+        eval_session.logits(&adapter, &eval_batch)?;
+    }
+    let serve_req_s = (serve_calls * b) as f64 / t2.elapsed().as_secs_f64();
+    let uploads = eval_session.upload_count();
+    println!("serve loop              : {serve_req_s:>8.1} req/s  (uploads={uploads})");
+
+    // -- spectra-cached C3A matvec ops/s (production inference operator)
+    let d = 1024usize;
+    let blk = d / 8;
+    let m = d / blk;
+    let mut brng = Rng::seed(d as u64);
+    let bc =
+        BlockCirculant::new(m, m, blk, (0..m * m * blk).map(|_| brng.normal()).collect());
+    let prepared = bc.prepared();
+    let x: Vec<f64> = (0..d).map(|_| brng.normal()).collect();
+    let mut out = vec![0.0; d];
+    let iters = if smoke { 200 } else { 2000 };
+    prepared.matvec_into(&x, &mut out); // warmup
+    let t3 = Instant::now();
+    for _ in 0..iters {
+        prepared.matvec_into(&x, &mut out);
+    }
+    let ops_per_s = iters as f64 / t3.elapsed().as_secs_f64();
+    println!("c3a matvec d={d} b={blk}  : {ops_per_s:>8.0} ops/s");
+
+    // -- JSON report (no serde offline; fields are flat and numeric)
+    let json = format!(
+        "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
+    );
+    // cargo bench runs with the package dir as cwd; the bench script sets
+    // C3A_BENCH_OUT to pin the report to the repo root
+    let out = std::env::var("C3A_BENCH_OUT").unwrap_or_else(|_| "BENCH_interp.json".into());
+    std::fs::write(&out, &json)?;
+    println!("\nwrote {out}:\n{json}");
+    Ok(())
+}

@@ -28,8 +28,13 @@ fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn main() {
-    println!("== bench_operator: Table 1 measured (single core) ==");
-    for d in [256usize, 1024, 4096] {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let dims: &[usize] = if smoke { &[256, 1024] } else { &[256, 1024, 4096] };
+    println!(
+        "== bench_operator: Table 1 measured ({} threads) ==",
+        c3a::substrate::parallel::threads()
+    );
+    for &d in dims {
         let mut rng = Rng::seed(d as u64);
         let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
         println!("\n-- d = {d} --");

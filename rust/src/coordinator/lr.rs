@@ -21,26 +21,36 @@ impl Schedule {
     }
 
     /// LR multiplier at `step` (0-based) of `total` steps.
+    ///
+    /// Warmup ramps on `(step + 1) / warmup_steps` (the HF convention):
+    /// the old `step / warmup_steps` form made `factor(0, n) == 0`, so the
+    /// first optimizer step of every warmup run was a wasted lr=0 step —
+    /// worst for short GLUE runs where it was a visible fraction of the
+    /// budget.
     pub fn factor(&self, step: usize, total: usize) -> f64 {
         let total = total.max(1);
         let t = step as f64 / total as f64;
+        let warmup = |warmup_frac: f64| -> Option<f64> {
+            let warm_steps = warmup_frac * total as f64;
+            if (step as f64) < warm_steps {
+                Some(((step as f64 + 1.0) / warm_steps.max(1e-9)).min(1.0))
+            } else {
+                None
+            }
+        };
         match *self {
             Schedule::Constant => 1.0,
-            Schedule::LinearWarmup { warmup_frac } => {
-                if t < warmup_frac {
-                    (t / warmup_frac.max(1e-9)).min(1.0)
-                } else {
-                    ((1.0 - t) / (1.0 - warmup_frac).max(1e-9)).max(0.0)
-                }
-            }
-            Schedule::Cosine { warmup_frac } => {
-                if t < warmup_frac {
-                    (t / warmup_frac.max(1e-9)).min(1.0)
-                } else {
+            Schedule::LinearWarmup { warmup_frac } => match warmup(warmup_frac) {
+                Some(f) => f,
+                None => ((1.0 - t) / (1.0 - warmup_frac).max(1e-9)).max(0.0),
+            },
+            Schedule::Cosine { warmup_frac } => match warmup(warmup_frac) {
+                Some(f) => f,
+                None => {
                     let u = (t - warmup_frac) / (1.0 - warmup_frac).max(1e-9);
                     0.5 * (1.0 + (std::f64::consts::PI * u).cos())
                 }
-            }
+            },
         }
     }
 }
@@ -57,15 +67,42 @@ mod tests {
     #[test]
     fn linear_warms_and_decays() {
         let s = Schedule::LinearWarmup { warmup_frac: 0.1 };
-        assert!(s.factor(0, 100) < 0.05);
+        assert!((s.factor(0, 100) - 0.1).abs() < 1e-12); // (0+1)/10 warmup steps
+        assert!((s.factor(9, 100) - 1.0).abs() < 1e-12); // end of warmup
         assert!((s.factor(10, 100) - 1.0).abs() < 0.01);
         assert!(s.factor(99, 100) < 0.05);
+        // monotone ramp through warmup
+        let mut prev = 0.0;
+        for step in 0..10 {
+            let f = s.factor(step, 100);
+            assert!(f > prev);
+            prev = f;
+        }
         // monotone decay after warmup
         let mut prev = s.factor(10, 100);
         for step in 11..100 {
             let f = s.factor(step, 100);
             assert!(f <= prev + 1e-12);
             prev = f;
+        }
+    }
+
+    #[test]
+    fn first_step_is_never_zero_lr() {
+        // regression: warmup schedules used to return 0.0 at step 0,
+        // wasting the first optimizer step of every run
+        for sched in [
+            Schedule::Constant,
+            Schedule::LinearWarmup { warmup_frac: 0.06 },
+            Schedule::LinearWarmup { warmup_frac: 0.5 },
+            Schedule::Cosine { warmup_frac: 0.05 },
+            Schedule::Cosine { warmup_frac: 0.0 },
+        ] {
+            for total in [1usize, 2, 10, 100, 10_000] {
+                let f = sched.factor(0, total);
+                assert!(f > 0.0, "{sched:?} factor(0, {total}) = {f}");
+                assert!(f <= 1.0 + 1e-12);
+            }
         }
     }
 

@@ -146,4 +146,16 @@ mod tests {
         let c = TrainCfg::default();
         assert!(c.steps > 0 && c.lr > 0.0);
     }
+
+    #[test]
+    fn first_step_lr_nonzero_for_default_schedule() {
+        // regression for the zero-LR first step: the trainer drives
+        // `schedule.factor(step, steps)` starting at step 0, which must
+        // yield a usable LR under the default warmup schedule
+        let c = TrainCfg::default();
+        for steps in [10usize, 60, 300] {
+            let lr0 = c.lr * c.schedule.factor(0, steps);
+            assert!(lr0 > 0.0, "first-step lr is zero for steps={steps}");
+        }
+    }
 }

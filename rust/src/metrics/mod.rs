@@ -85,7 +85,10 @@ pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let n = xs.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    // total_cmp: NaNs sort after +inf instead of panicking — a diverged
+    // run reports a (meaningless but finite) correlation instead of
+    // crashing the whole experiment sweep inside Spearman.
+    idx.sort_by(|&i, &j| xs[i].total_cmp(&xs[j]));
     let mut r = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -186,6 +189,21 @@ mod tests {
         let a = [1.0, 2.0, 2.0, 3.0];
         let b = [1.0, 2.0, 2.0, 3.0];
         assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_survives_nan_predictions() {
+        // regression: a diverged run's NaN predictions used to panic in
+        // `ranks` (`partial_cmp().unwrap()`); they must instead produce a
+        // finite (if meaningless) score so the sweep keeps going
+        let pred = [0.3, f64::NAN, 0.7, f64::NAN, 0.1];
+        let gold = [0.2, 0.9, 0.8, 0.4, 0.0];
+        let r = spearman(&pred, &gold);
+        assert!(r.is_finite(), "spearman with NaN input returned {r}");
+        assert!((-1.0..=1.0).contains(&r));
+        // all-NaN predictions degrade to a tie-everything ranking
+        let all_nan = [f64::NAN; 5];
+        assert!(spearman(&all_nan, &gold).is_finite());
     }
 
     #[test]

@@ -16,10 +16,48 @@ use super::interp::InterpExecutable;
 use super::manifest::{ArtifactSpec, ModelMeta};
 use anyhow::{Context, Result};
 
+/// Opaque per-session executor state — the seam that lets a backend
+/// persist work across steps (parsed frozen params, kernel spectra, FFT
+/// plans).  Sessions create one via [`Executor::prepare`] and thread it
+/// through every [`Executor::execute_stateful`] call.  Backends downcast
+/// to their concrete state type; a state they don't recognize must degrade
+/// to stateless execution, never to wrong results.
+pub trait ExecutorState {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+/// Placeholder state for executors with nothing to persist (e.g. compiled
+/// PJRT programs, which keep weights on device anyway).
+pub struct NoState;
+
+impl ExecutorState for NoState {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
 /// A loaded artifact, ready to execute on host literals.
 pub trait Executor {
     /// Execute with positional inputs; returns the flattened outputs.
     fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>>;
+
+    /// Build per-session state from the session's frozen parameters (in
+    /// the artifact's `frozen_order`).  Default: nothing to persist.
+    fn prepare(&self, _frozen: &[xla::Literal]) -> Result<Box<dyn ExecutorState>> {
+        Ok(Box::new(NoState))
+    }
+
+    /// Execute with session state.  `inputs` is the *full* positional
+    /// list (the PJRT contract is unchanged); stateful backends may skip
+    /// re-reading inputs their state already covers.  Must return exactly
+    /// what [`Executor::execute`] would.
+    fn execute_stateful(
+        &self,
+        _state: &mut dyn ExecutorState,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.execute(inputs)
+    }
 
     /// Buffer-path execution.  Contract: returns the executable's output
     /// buffers as PJRT hands them back — for this repo's artifacts
@@ -62,6 +100,22 @@ impl Backend for SubstrateBackend {
 impl Executor for InterpExecutable {
     fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         InterpExecutable::execute(self, inputs)
+    }
+
+    fn prepare(&self, frozen: &[xla::Literal]) -> Result<Box<dyn ExecutorState>> {
+        Ok(Box::new(InterpExecutable::prepare(self, frozen)?))
+    }
+
+    fn execute_stateful(
+        &self,
+        state: &mut dyn ExecutorState,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        match state.as_any_mut().downcast_mut::<super::interp::InterpState>() {
+            Some(s) => InterpExecutable::execute_stateful(self, s, inputs),
+            // unknown state (e.g. NoState after a backend swap): stay correct
+            None => InterpExecutable::execute(self, inputs),
+        }
     }
 }
 

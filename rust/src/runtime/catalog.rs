@@ -618,6 +618,59 @@ pub fn synthesize(dir: &Path) -> Result<Manifest> {
     Ok(Manifest { dir: dir.to_path_buf(), models, artifacts })
 }
 
+/// Materialize a full positional input list for an artifact with synthetic
+/// data: backbone/init params, zeroed optimizer state, deterministic token
+/// ids, in-range labels, unit scalars (`step`=1, `lr`=0.01, others 0).
+/// Shared by the interp unit tests, the parity integration tests, and
+/// `bench_interp` so the input recipe tracks the contract in one place.
+pub fn synth_inputs(spec: &ArtifactSpec, meta: &ModelMeta) -> Vec<xla::Literal> {
+    use crate::peft::init::C3aScheme;
+    use crate::runtime::session::tensor_to_literal;
+    let mut rng = Rng::seed(1);
+    let base = init_base_params(meta);
+    let mut lits: Vec<xla::Literal> = Vec::new();
+    for inp in &spec.inputs {
+        let n: usize = inp.shape.iter().product::<usize>().max(1);
+        match inp.role {
+            Role::Trainable | Role::Frozen | Role::FrozenRandom => {
+                let t = if let Some(p) = base.get(&inp.name) {
+                    p.clone()
+                } else {
+                    inp.init
+                        .as_ref()
+                        .expect("input without init")
+                        .materialize(&inp.shape, &mut rng, C3aScheme::Xavier)
+                };
+                lits.push(tensor_to_literal(&t).expect("literal conversion"));
+            }
+            Role::OptM | Role::OptV => {
+                lits.push(xla::Literal::from_f32(&inp.shape, vec![0.0; n]));
+            }
+            Role::Data => {
+                if inp.i32_dtype {
+                    let vals: Vec<i32> = if inp.name == "data.y" {
+                        (0..n).map(|i| (i % 2) as i32).collect()
+                    } else {
+                        (0..n).map(|i| if i % 7 == 0 { 1 } else { 4 + (i as i32 % 50) }).collect()
+                    };
+                    lits.push(xla::Literal::from_i32(&inp.shape, vals));
+                } else {
+                    lits.push(xla::Literal::from_f32(&inp.shape, vec![1.0; n]));
+                }
+            }
+            Role::Scalar => {
+                let v = match inp.name.as_str() {
+                    "step" => 1.0,
+                    "lr" => 0.01,
+                    _ => 0.0,
+                };
+                lits.push(xla::Literal::scalar(v));
+            }
+        }
+    }
+    lits
+}
+
 // ---------------------------------------------------------------------------
 // Backbone initialization (mirrors model.py `init_base_params`)
 // ---------------------------------------------------------------------------

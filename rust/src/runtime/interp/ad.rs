@@ -13,12 +13,53 @@
 //! backward matmuls automatically.
 
 use crate::substrate::fft::{self, Plan, C};
+use crate::substrate::parallel;
+use std::rc::Rc;
+
+/// Flop floor below which matmuls stay on one thread.
+const PAR_MIN_WORK: usize = 64 * 1024;
+
+/// Fixed row-chunk for the C3A kernel-gradient reduction.  Partial spectra
+/// are produced per chunk and combined in chunk order, so the reduction is
+/// bit-for-bit identical at any thread count (boundaries never depend on
+/// the pool size).
+const C3A_GW_CHUNK: usize = 16;
+
+/// Element floor (rows·m·n·b) below which the C3A loops skip the pool —
+/// FFT work is heavier per element than a matmul flop, so the floor is
+/// lower than [`PAR_MIN_WORK`].  Scheduling only: the chunk decomposition
+/// of the gw reduction is the same either way.
+const C3A_PAR_MIN_WORK: usize = 8 * 1024;
 
 /// Dense row-major f32 array.  Scalars have an empty shape.
 #[derive(Clone, Debug)]
 pub struct Arr {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
+}
+
+/// Precomputed forward spectra of a C3A kernel — the session-cacheable
+/// half of the operator (analogous to `circulant::PreparedBlockCirculant`).
+/// Shared between the forward op and its backward pass, and across steps
+/// through the interpreter's session cache while the kernel is unchanged.
+pub struct C3aSpectra {
+    pub plan: Rc<Plan>,
+    /// [m*n] kernel spectra, each of length b
+    pub wf: Vec<Vec<C>>,
+}
+
+impl C3aSpectra {
+    /// FFT every kernel of a [m,n,b] weight.
+    pub fn compute(plan: Rc<Plan>, w: &Arr) -> C3aSpectra {
+        let (mn, b) = (w.shape[0] * w.shape[1], w.shape[2]);
+        let wf = (0..mn)
+            .map(|ij| {
+                let k: Vec<f64> = w.data[ij * b..(ij + 1) * b].iter().map(|&v| v as f64).collect();
+                fft::rfft(&plan, &k)
+            })
+            .collect();
+        C3aSpectra { plan, wf }
+    }
 }
 
 impl Arr {
@@ -80,12 +121,14 @@ enum Op {
     SumAxis0(V),
     Rsqrt { x: V, eps: f32 },
     Reshape(V),
-    C3a { x: V, w: V },
+    C3a { x: V, w: V, spectra: Rc<C3aSpectra> },
     BlockRotate { x: V, r: V },
 }
 
 struct Node {
-    val: Arr,
+    /// Rc so leaves can share session-cached parses (frozen backbone
+    /// params are uploaded once per session, not cloned per step).
+    val: Rc<Arr>,
     op: Op,
     needs: bool,
 }
@@ -98,14 +141,18 @@ pub struct Tape {
 // Dense helpers
 // ---------------------------------------------------------------------------
 
-/// C[m,n] = A[m,k] · B[k,n], row-major.
+/// C[m,n] = A[m,k] · B[k,n], row-major.  Output rows are sharded across
+/// the substrate pool above a work floor; each row keeps its sequential
+/// accumulation order, so results are identical at any thread count.
 fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut c = vec![0f32; m * n];
-    for i in 0..m {
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let row_mul = |i: usize, crow: &mut [f32]| {
         let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
             if av != 0.0 {
                 let brow = &b[p * n..(p + 1) * n];
@@ -114,7 +161,8 @@ fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
                 }
             }
         }
-    }
+    };
+    parallel::for_rows(&mut c, n, m * k * n >= PAR_MIN_WORK, row_mul);
     c
 }
 
@@ -238,6 +286,12 @@ impl Tape {
     }
 
     pub fn leaf(&mut self, arr: Arr, needs: bool) -> V {
+        self.leaf_shared(Rc::new(arr), needs)
+    }
+
+    /// Zero-copy leaf from a session-cached parse (frozen params are held
+    /// as `Rc<Arr>` across steps; cloning the Rc is O(1)).
+    pub fn leaf_shared(&mut self, arr: Rc<Arr>, needs: bool) -> V {
         self.nodes.push(Node { val: arr, op: Op::Leaf, needs });
         self.nodes.len() - 1
     }
@@ -251,7 +305,7 @@ impl Tape {
     }
 
     fn push(&mut self, val: Arr, op: Op, needs: bool) -> V {
-        self.nodes.push(Node { val, op, needs });
+        self.nodes.push(Node { val: Rc::new(val), op, needs });
         self.nodes.len() - 1
     }
 
@@ -553,50 +607,67 @@ impl Tape {
 
     /// C3A block-circular conv: x [..., n*b] ⋆ w [m,n,b] -> [..., m*b]
     /// (per-block FFT; same convention as `substrate::circulant`).
+    /// Kernel spectra are computed once per call.
     pub fn c3a(&mut self, x: V, w: V) -> V {
+        self.c3a_with(x, w, None)
+    }
+
+    /// C3A with optionally precomputed kernel spectra (session cache).
+    /// When `spectra` is None they are computed here; either way the op
+    /// stores them so the backward pass never re-runs the kernel FFTs.
+    pub fn c3a_with(&mut self, x: V, w: V, spectra: Option<Rc<C3aSpectra>>) -> V {
         let (vx, vw) = (self.val(x), self.val(w));
         assert_eq!(vw.shape.len(), 3);
         let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
         assert_eq!(vx.width(), n * b, "c3a input width");
         let rows = vx.rows();
-        let plan = Plan::new(b);
-        // kernel spectra, computed once per call
-        let wf: Vec<Vec<C>> = (0..m * n)
-            .map(|ij| {
-                let k: Vec<f64> = vw.data[ij * b..(ij + 1) * b].iter().map(|&v| v as f64).collect();
-                fft::rfft(&plan, &k)
-            })
-            .collect();
-        let mut data = vec![0f32; rows * m * b];
-        let mut xf: Vec<Vec<C>> = Vec::with_capacity(n);
-        for r in 0..rows {
-            let xrow = &vx.data[r * n * b..(r + 1) * n * b];
-            xf.clear();
-            for j in 0..n {
-                let xj: Vec<f64> = xrow[j * b..(j + 1) * b].iter().map(|&v| v as f64).collect();
-                xf.push(fft::rfft(&plan, &xj));
+        let spectra = match spectra {
+            Some(s) => {
+                assert_eq!(s.plan.n, b, "cached spectra plan size");
+                assert_eq!(s.wf.len(), m * n, "cached spectra block count");
+                s
             }
-            for i in 0..m {
-                let mut acc = vec![(0f64, 0f64); b];
-                for j in 0..n {
-                    let wij = &wf[i * n + j];
+            None => Rc::new(C3aSpectra::compute(Rc::new(Plan::new(b)), vw)),
+        };
+        let mut data = vec![0f32; rows * m * b];
+        {
+            // deref out of the Rc: &Plan is Sync (Rc is not), so the
+            // row closure can cross the pool
+            let plan: &Plan = &spectra.plan;
+            let wf = &spectra.wf;
+            let xdata = &vx.data;
+            let row_fwd = |r: usize, orow: &mut [f32]| {
+                let xrow = &xdata[r * n * b..(r + 1) * n * b];
+                let xf: Vec<Vec<C>> = (0..n)
+                    .map(|j| {
+                        let xj: Vec<f64> =
+                            xrow[j * b..(j + 1) * b].iter().map(|&v| v as f64).collect();
+                        fft::rfft(plan, &xj)
+                    })
+                    .collect();
+                for i in 0..m {
+                    let mut acc = vec![(0f64, 0f64); b];
+                    for j in 0..n {
+                        let wij = &wf[i * n + j];
+                        for k in 0..b {
+                            let p = fft::c_mul(wij[k], xf[j][k]);
+                            acc[k].0 += p.0;
+                            acc[k].1 += p.1;
+                        }
+                    }
+                    let z = fft::irfft_real(plan, &acc);
                     for k in 0..b {
-                        let p = fft::c_mul(wij[k], xf[j][k]);
-                        acc[k].0 += p.0;
-                        acc[k].1 += p.1;
+                        orow[i * b + k] = z[k] as f32;
                     }
                 }
-                let z = fft::irfft_real(&plan, &acc);
-                for k in 0..b {
-                    data[r * m * b + i * b + k] = z[k] as f32;
-                }
-            }
+            };
+            parallel::for_rows(&mut data, m * b, rows * m * n * b >= C3A_PAR_MIN_WORK, row_fwd);
         }
         let mut shape = vx.shape.clone();
         *shape.last_mut().unwrap() = m * b;
         let out = Arr::new(shape, data);
         let needs = self.needs(x) || self.needs(w);
-        self.push(out, Op::C3a { x, w }, needs)
+        self.push(out, Op::C3a { x, w, spectra }, needs)
     }
 
     /// BOFT rotation: out[..., n, c] = Σ_b x[..., n, b] · r[n, b, c]
@@ -800,7 +871,7 @@ impl Tape {
                 vec![(*x, g)]
             }
             Op::Reshape(x) => vec![(*x, go.to_vec())],
-            Op::C3a { x, w } => self.c3a_backward(*x, *w, go),
+            Op::C3a { x, w, spectra } => self.c3a_backward(*x, *w, spectra, go),
             Op::BlockRotate { x, r } => {
                 let (vx, vr) = (self.val(*x), self.val(*r));
                 let (nb, bb) = (vr.shape[0], vr.shape[1]);
@@ -981,45 +1052,38 @@ impl Tape {
         outs
     }
 
-    fn c3a_backward(&self, x: V, w: V, go: &[f32]) -> Vec<(V, Vec<f32>)> {
+    /// C3A backward.  Kernel spectra come from the forward op (conjugated
+    /// on the fly — no kernel FFTs here).  `gx` rows are disjoint and
+    /// sharded across the pool; the `gw` reduction over rows uses fixed
+    /// [`C3A_GW_CHUNK`] partials combined in chunk order, so it is
+    /// bit-for-bit identical at any thread count.
+    fn c3a_backward(&self, x: V, w: V, spectra: &Rc<C3aSpectra>, go: &[f32]) -> Vec<(V, Vec<f32>)> {
         let (vx, vw) = (self.val(x), self.val(w));
         let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
         let rows = vx.rows();
-        let plan = Plan::new(b);
+        let plan: &Plan = &spectra.plan;
         let conj = |v: &[C]| -> Vec<C> { v.iter().map(|&(re, im)| (re, -im)).collect() };
-        // spectra of w (conjugated) for dx, accumulated conj(X)·dY for dw
-        let wf_conj: Vec<Vec<C>> = (0..m * n)
-            .map(|ij| {
-                let kr: Vec<f64> = vw.data[ij * b..(ij + 1) * b].iter().map(|&v| v as f64).collect();
-                conj(&fft::rfft(&plan, &kr))
-            })
-            .collect();
+        let wf_conj: Vec<Vec<C>> = spectra.wf.iter().map(|wf| conj(wf)).collect();
         let need_x = self.nodes[x].needs;
         let need_w = self.nodes[w].needs;
-        let mut gx = vec![0f32; vx.len()];
-        let mut gw_spec = vec![(0f64, 0f64); m * n * b];
-        for r in 0..rows {
-            let dyf: Vec<Vec<C>> = (0..m)
+        let xdata = &vx.data;
+        // per-row FFT of the upstream gradient (shared by dx and dw)
+        let row_dyf = |r: usize| -> Vec<Vec<C>> {
+            (0..m)
                 .map(|i| {
-                    let dyr: Vec<f64> =
-                        go[r * m * b + i * b..r * m * b + (i + 1) * b].iter().map(|&v| v as f64).collect();
-                    fft::rfft(&plan, &dyr)
+                    let dyr: Vec<f64> = go[r * m * b + i * b..r * m * b + (i + 1) * b]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect();
+                    fft::rfft(plan, &dyr)
                 })
-                .collect();
-            let xf_conj: Vec<Vec<C>> = if need_w {
-                (0..n)
-                    .map(|j| {
-                        let xj: Vec<f64> = vx.data[r * n * b + j * b..r * n * b + (j + 1) * b]
-                            .iter()
-                            .map(|&v| v as f64)
-                            .collect();
-                        conj(&fft::rfft(&plan, &xj))
-                    })
-                    .collect()
-            } else {
-                Vec::new()
-            };
-            if need_x {
+                .collect()
+        };
+        let mut outs = Vec::new();
+        if need_x {
+            let mut gx = vec![0f32; vx.len()];
+            let row_gx = |r: usize, grow: &mut [f32]| {
+                let dyf = row_dyf(r);
                 for j in 0..n {
                     let mut acc = vec![(0f64, 0f64); b];
                     for i in 0..m {
@@ -1030,34 +1094,64 @@ impl Tape {
                             acc[k].1 += p.1;
                         }
                     }
-                    let z = fft::irfft_real(&plan, &acc);
+                    let z = fft::irfft_real(plan, &acc);
                     for k in 0..b {
-                        gx[r * n * b + j * b + k] = z[k] as f32;
+                        grow[j * b + k] = z[k] as f32;
                     }
                 }
-            }
-            if need_w {
-                for i in 0..m {
-                    for j in 0..n {
-                        let xc = &xf_conj[j];
-                        let slot = &mut gw_spec[(i * n + j) * b..(i * n + j + 1) * b];
-                        for k in 0..b {
-                            let p = fft::c_mul(xc[k], dyf[i][k]);
-                            slot[k].0 += p.0;
-                            slot[k].1 += p.1;
-                        }
-                    }
-                }
-            }
-        }
-        let mut outs = Vec::new();
-        if need_x {
+            };
+            parallel::for_rows(&mut gx, n * b, rows * m * n * b >= C3A_PAR_MIN_WORK, row_gx);
             outs.push((x, gx));
         }
         if need_w {
+            // accumulate conj(X)·dY per fixed row chunk, combine in order.
+            // The chunk decomposition is identical on the small-work inline
+            // path, so the reduction order never depends on scheduling.
+            let gw_chunk = |range: std::ops::Range<usize>| -> Vec<(f64, f64)> {
+                let mut part = vec![(0f64, 0f64); m * n * b];
+                for r in range {
+                    let dyf = row_dyf(r);
+                    let xf_conj: Vec<Vec<C>> = (0..n)
+                        .map(|j| {
+                            let xj: Vec<f64> = xdata[r * n * b + j * b..r * n * b + (j + 1) * b]
+                                .iter()
+                                .map(|&v| v as f64)
+                                .collect();
+                            conj(&fft::rfft(plan, &xj))
+                        })
+                        .collect();
+                    for i in 0..m {
+                        for j in 0..n {
+                            let xc = &xf_conj[j];
+                            let slot = &mut part[(i * n + j) * b..(i * n + j + 1) * b];
+                            for k in 0..b {
+                                let p = fft::c_mul(xc[k], dyf[i][k]);
+                                slot[k].0 += p.0;
+                                slot[k].1 += p.1;
+                            }
+                        }
+                    }
+                }
+                part
+            };
+            let partials: Vec<Vec<(f64, f64)>> =
+                if rows * m * n * b >= C3A_PAR_MIN_WORK && parallel::threads() > 1 {
+                    parallel::map_chunks(rows, C3A_GW_CHUNK, &gw_chunk)
+                } else {
+                    (0..rows.div_ceil(C3A_GW_CHUNK))
+                        .map(|ci| gw_chunk(ci * C3A_GW_CHUNK..rows.min((ci + 1) * C3A_GW_CHUNK)))
+                        .collect()
+                };
+            let mut gw_spec = vec![(0f64, 0f64); m * n * b];
+            for part in &partials {
+                for (acc, p) in gw_spec.iter_mut().zip(part.iter()) {
+                    acc.0 += p.0;
+                    acc.1 += p.1;
+                }
+            }
             let mut gw = vec![0f32; vw.len()];
             for ij in 0..m * n {
-                let z = fft::irfft_real(&plan, &gw_spec[ij * b..(ij + 1) * b]);
+                let z = fft::irfft_real(plan, &gw_spec[ij * b..(ij + 1) * b]);
                 for k in 0..b {
                     gw[ij * b + k] = z[k] as f32;
                 }

@@ -15,29 +15,119 @@
 pub mod ad;
 pub mod model;
 
-use self::ad::{Arr, Tape, V};
+use self::ad::{Arr, C3aSpectra, Tape, V};
 use self::model::{Graph, ModelInput};
+use crate::runtime::backend::ExecutorState;
 use crate::runtime::manifest::{ArtifactSpec, ModelMeta, Role};
+use crate::substrate::fft::Plan;
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
 
 const BETA1: f32 = 0.9;
 const BETA2: f32 = 0.999;
 const EPS: f32 = 1e-8;
 
+/// Cache hit/miss counters (observability for tests and the bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub spectra_hits: u64,
+    pub spectra_misses: u64,
+}
+
+struct SpectraEntry {
+    /// bit pattern of the kernel the spectra were computed from (validity
+    /// check — training updates the kernel every step, serving keeps it
+    /// fixed).  Stored as bits so the comparison is truly bitwise:
+    /// f32 `==` would treat -0.0 as a stale hit and NaN as a forced miss.
+    kernel_bits: Vec<u32>,
+    spectra: Rc<C3aSpectra>,
+}
+
+/// Interior caches the interpreter keeps warm across calls: FFT plans per
+/// block size and C3A kernel spectra per parameter name.  Spectra entries
+/// are invalidated by exact kernel comparison, so a stale entry can cost
+/// a recompute but never wrong numerics.
+#[derive(Default)]
+pub struct InterpCache {
+    plans: HashMap<usize, Rc<Plan>>,
+    spectra: HashMap<String, SpectraEntry>,
+    stats: CacheStats,
+}
+
+impl InterpCache {
+    pub fn plan(&mut self, b: usize) -> Rc<Plan> {
+        self.plans.entry(b).or_insert_with(|| Rc::new(Plan::new(b))).clone()
+    }
+
+    /// Spectra of kernel `name` with current value `w`, reusing the cached
+    /// transform when the kernel is bit-identical to the last call.
+    pub fn spectra_for(&mut self, name: &str, w: &Arr) -> Rc<C3aSpectra> {
+        if let Some(e) = self.spectra.get(name) {
+            let same = e.kernel_bits.len() == w.data.len()
+                && e.kernel_bits.iter().zip(&w.data).all(|(&bits, v)| bits == v.to_bits());
+            if same {
+                self.stats.spectra_hits += 1;
+                return e.spectra.clone();
+            }
+        }
+        self.stats.spectra_misses += 1;
+        let plan = self.plan(w.shape[2]);
+        let spectra = Rc::new(C3aSpectra::compute(plan, w));
+        self.spectra.insert(
+            name.to_string(),
+            SpectraEntry {
+                kernel_bits: w.data.iter().map(|v| v.to_bits()).collect(),
+                spectra: spectra.clone(),
+            },
+        );
+        spectra
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// Per-session interpreter state ([`crate::runtime::backend::ExecutorState`]
+/// impl): frozen parameters parsed **once** at session build instead of per
+/// step, plus a private cache (plans + spectra) not shared with other
+/// sessions.
+pub struct InterpState {
+    /// (name, parsed value) in `frozen_order`
+    frozen: Vec<(String, Rc<Arr>)>,
+    cache: RefCell<InterpCache>,
+}
+
+impl InterpState {
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.borrow().stats()
+    }
+}
+
+impl ExecutorState for InterpState {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
 /// A loaded artifact on the substrate backend.
 pub struct InterpExecutable {
     spec: ArtifactSpec,
     meta: ModelMeta,
+    /// fallback cache for stateless `execute` calls (plans + spectra);
+    /// shared across sessions of this executable, equality-verified
+    cache: RefCell<InterpCache>,
 }
 
 struct ParsedInputs {
     /// (name, value) in trainable_order
-    trainable: Vec<(String, Arr)>,
+    trainable: Vec<(String, Rc<Arr>)>,
     opt_m: Vec<Arr>,
     opt_v: Vec<Arr>,
     /// (name, value) for frozen + frozen_random
-    frozen: Vec<(String, Arr)>,
+    frozen: Vec<(String, Rc<Arr>)>,
     data_f32: BTreeMap<String, Arr>,
     data_i32: BTreeMap<String, Vec<i32>>,
     scalars: BTreeMap<String, f32>,
@@ -53,19 +143,74 @@ impl InterpExecutable {
             "full" | "head" | "bitfit" | "ia3" | "lora" | "dora" | "vera" | "boft" | "c3a" => {}
             other => bail!("{}: unsupported PEFT method {other}", spec.name),
         }
-        Ok(InterpExecutable { spec: spec.clone(), meta: meta.clone() })
+        Ok(InterpExecutable {
+            spec: spec.clone(),
+            meta: meta.clone(),
+            cache: RefCell::new(InterpCache::default()),
+        })
     }
 
+    /// Stateless execution: every input (including the frozen backbone) is
+    /// parsed from the literals each call.  Plans/spectra still come from
+    /// the executable-local cache (equality-verified).
     pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let parsed = self.parse_inputs(inputs)?;
+        let parsed = self.parse_inputs(inputs, None)?;
+        self.run_parsed(parsed, &self.cache)
+    }
+
+    /// Build per-session state: parse the frozen parameters once (they are
+    /// constant for the life of a session) and give the session a private
+    /// plan/spectra cache.
+    pub fn prepare(&self, frozen: &[xla::Literal]) -> Result<InterpState> {
+        if frozen.len() != self.spec.frozen_order.len() {
+            bail!(
+                "{}: prepare got {} frozen literals, manifest declares {}",
+                self.spec.name,
+                frozen.len(),
+                self.spec.frozen_order.len()
+            );
+        }
+        let mut parsed = Vec::with_capacity(frozen.len());
+        for (name, lit) in self.spec.frozen_order.iter().zip(frozen.iter()) {
+            let inp = self
+                .spec
+                .inputs
+                .iter()
+                .find(|i| &i.name == name)
+                .with_context(|| format!("{}: unknown frozen input {name}", self.spec.name))?;
+            parsed.push((name.clone(), Rc::new(lit_to_arr(lit, &inp.shape)?)));
+        }
+        Ok(InterpState { frozen: parsed, cache: RefCell::new(InterpCache::default()) })
+    }
+
+    /// Stateful execution: frozen inputs are taken from `state` (the
+    /// positional literals for them are arity-checked but not re-read).
+    pub fn execute_stateful(
+        &self,
+        state: &mut InterpState,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let parsed = self.parse_inputs(inputs, Some(state))?;
+        self.run_parsed(parsed, &state.cache)
+    }
+
+    fn run_parsed(
+        &self,
+        parsed: ParsedInputs,
+        cache: &RefCell<InterpCache>,
+    ) -> Result<Vec<xla::Literal>> {
         if self.spec.kind == "train" {
-            self.train_step(parsed)
+            self.train_step(parsed, cache)
         } else {
-            self.eval_step(parsed)
+            self.eval_step(parsed, cache)
         }
     }
 
-    fn parse_inputs(&self, inputs: &[&xla::Literal]) -> Result<ParsedInputs> {
+    fn parse_inputs(
+        &self,
+        inputs: &[&xla::Literal],
+        state: Option<&InterpState>,
+    ) -> Result<ParsedInputs> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: got {} inputs, manifest declares {}",
@@ -83,13 +228,21 @@ impl InterpExecutable {
             data_i32: BTreeMap::new(),
             scalars: BTreeMap::new(),
         };
+        if let Some(s) = state {
+            // session-cached parses, uploaded once in `prepare`
+            p.frozen = s.frozen.clone();
+        }
         for (inp, lit) in self.spec.inputs.iter().zip(inputs.iter()) {
             match inp.role {
-                Role::Trainable => p.trainable.push((inp.name.clone(), lit_to_arr(lit, &inp.shape)?)),
+                Role::Trainable => {
+                    p.trainable.push((inp.name.clone(), Rc::new(lit_to_arr(lit, &inp.shape)?)))
+                }
                 Role::OptM => p.opt_m.push(lit_to_arr(lit, &inp.shape)?),
                 Role::OptV => p.opt_v.push(lit_to_arr(lit, &inp.shape)?),
                 Role::Frozen | Role::FrozenRandom => {
-                    p.frozen.push((inp.name.clone(), lit_to_arr(lit, &inp.shape)?))
+                    if state.is_none() {
+                        p.frozen.push((inp.name.clone(), Rc::new(lit_to_arr(lit, &inp.shape)?)));
+                    }
                 }
                 Role::Data => {
                     if inp.i32_dtype {
@@ -107,20 +260,22 @@ impl InterpExecutable {
     }
 
     /// Build tape leaves + the shared model input, run the forward pass.
+    /// Leaves are shared (`Rc`) with the parsed/cached arrays — no copies.
     fn forward<'t>(
         &self,
         tape: &'t mut Tape,
         parsed: &ParsedInputs,
+        cache: &RefCell<InterpCache>,
     ) -> Result<(V, Vec<V>, ModelInput)> {
         let mut params: BTreeMap<String, V> = BTreeMap::new();
         let mut t_ids = Vec::with_capacity(parsed.trainable.len());
         for (name, arr) in &parsed.trainable {
-            let id = tape.leaf(arr.clone(), true);
+            let id = tape.leaf_shared(arr.clone(), true);
             t_ids.push(id);
             params.insert(name.clone(), id);
         }
         for (name, arr) in &parsed.frozen {
-            let id = tape.leaf(arr.clone(), false);
+            let id = tape.leaf_shared(arr.clone(), false);
             params.insert(name.clone(), id);
         }
         let (b, s) = (self.spec.batch, self.spec.seq);
@@ -130,22 +285,35 @@ impl InterpExecutable {
             b,
             s,
         };
-        let mut graph =
-            Graph { tape, params: &params, meta: &self.meta, peft: &self.spec.peft };
+        let mut graph = Graph {
+            tape,
+            params: &params,
+            meta: &self.meta,
+            peft: &self.spec.peft,
+            cache: Some(cache),
+        };
         let fwd = graph.forward(&self.spec.head, &input)?;
         Ok((fwd.logits, t_ids, input))
     }
 
-    fn eval_step(&self, parsed: ParsedInputs) -> Result<Vec<xla::Literal>> {
+    fn eval_step(
+        &self,
+        parsed: ParsedInputs,
+        cache: &RefCell<InterpCache>,
+    ) -> Result<Vec<xla::Literal>> {
         let mut tape = Tape::new();
-        let (logits, _t_ids, _input) = self.forward(&mut tape, &parsed)?;
+        let (logits, _t_ids, _input) = self.forward(&mut tape, &parsed, cache)?;
         let out = tape.val(logits);
         Ok(vec![xla::Literal::from_f32(&out.shape, out.data.clone())])
     }
 
-    fn train_step(&self, parsed: ParsedInputs) -> Result<Vec<xla::Literal>> {
+    fn train_step(
+        &self,
+        parsed: ParsedInputs,
+        cache: &RefCell<InterpCache>,
+    ) -> Result<Vec<xla::Literal>> {
         let mut tape = Tape::new();
-        let (logits, t_ids, input) = self.forward(&mut tape, &parsed)?;
+        let (logits, t_ids, input) = self.forward(&mut tape, &parsed, cache)?;
         let (loss, metric, dlogits) = self.loss_head(&tape, logits, &parsed, &input)?;
         let grads = tape.backward(logits, dlogits);
 
@@ -240,13 +408,16 @@ impl InterpExecutable {
             let mut dl = vec![0f32; lv.len()];
             for pos in 0..b * s {
                 let m = mask.data[pos];
+                // masked (padding) positions are skipped *before* target
+                // validation: garbage targets under mask 0 are legal and
+                // must not abort training.
+                if m == 0.0 {
+                    continue;
+                }
                 let row = &lv.data[pos * vcb..(pos + 1) * vcb];
                 let tgt = targets[pos].max(0) as usize;
                 if tgt >= vcb {
                     bail!("target {tgt} out of vocab {vcb}");
-                }
-                if m == 0.0 {
-                    continue;
                 }
                 let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
@@ -321,10 +492,7 @@ fn lit_to_arr(lit: &xla::Literal, shape: &[usize]) -> Result<Arr> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::peft::init::C3aScheme;
     use crate::runtime::catalog;
-    use crate::runtime::session::tensor_to_literal;
-    use crate::substrate::prng::Rng;
 
     /// Drive one interpreted train step directly (no session machinery):
     /// asserts the positional output contract and that loss is finite.
@@ -336,55 +504,7 @@ mod tests {
         let meta = manifest.model("enc_tiny").unwrap().clone();
         let exe = InterpExecutable::new(&spec, &meta).unwrap();
 
-        let mut rng = Rng::seed(1);
-        let base = catalog::init_base_params(&meta);
-        let mut lits: Vec<xla::Literal> = Vec::new();
-        for inp in &spec.inputs {
-            match inp.role {
-                Role::Trainable | Role::Frozen | Role::FrozenRandom => {
-                    let t = if let Some(p) = base.get(&inp.name) {
-                        p.clone()
-                    } else {
-                        inp.init
-                            .as_ref()
-                            .unwrap()
-                            .materialize(&inp.shape, &mut rng, C3aScheme::Xavier)
-                    };
-                    lits.push(tensor_to_literal(&t).unwrap());
-                }
-                Role::OptM | Role::OptV => {
-                    let n: usize = inp.shape.iter().product::<usize>().max(1);
-                    lits.push(xla::Literal::from_f32(&inp.shape, vec![0.0; n]));
-                }
-                Role::Data => {
-                    if inp.i32_dtype {
-                        let n: usize = inp.shape.iter().product::<usize>().max(1);
-                        let toks: Vec<i32> = (0..n)
-                            .map(|i| if i % 7 == 0 { 1 } else { 4 + (i as i32 % 50) })
-                            .collect();
-                        lits.push(xla::Literal::from_i32(&inp.shape, toks));
-                    } else {
-                        let n: usize = inp.shape.iter().product::<usize>().max(1);
-                        lits.push(xla::Literal::from_f32(&inp.shape, vec![1.0; n]));
-                    }
-                }
-                Role::Scalar => {
-                    let v = match inp.name.as_str() {
-                        "step" => 1.0,
-                        "lr" => 0.01,
-                        _ => 0.0,
-                    };
-                    lits.push(xla::Literal::scalar(v));
-                }
-            }
-        }
-        // labels within n_out range
-        for (inp, lit) in spec.inputs.iter().zip(lits.iter_mut()) {
-            if inp.name == "data.y" {
-                let n: usize = inp.shape.iter().product::<usize>().max(1);
-                *lit = xla::Literal::from_i32(&inp.shape, (0..n).map(|i| (i % 2) as i32).collect());
-            }
-        }
+        let lits = catalog::synth_inputs(&spec, &meta);
         let refs: Vec<&xla::Literal> = lits.iter().collect();
         let outs = exe.execute(&refs).unwrap();
         let nt = spec.trainable_order.len();
@@ -399,5 +519,41 @@ mod tests {
         let b = before.to_vec::<f32>().unwrap();
         let a = after.to_vec::<f32>().unwrap();
         assert!(b.iter().zip(a.iter()).any(|(x, y)| x != y), "c3a kernel did not update");
+    }
+
+    /// Regression: an out-of-vocab target at a *masked* position must be
+    /// skipped, not abort training (padding rows carry garbage targets).
+    /// The same garbage at an unmasked position must still fail loudly.
+    #[test]
+    fn masked_garbage_targets_are_skipped() {
+        let dir = std::env::temp_dir().join("c3a_interp_test_mlm");
+        let manifest = catalog::synthesize(&dir).unwrap();
+        let spec = manifest.artifact("enc_tiny__full__mlm__train").unwrap().clone();
+        let meta = manifest.model("enc_tiny").unwrap().clone();
+        let exe = InterpExecutable::new(&spec, &meta).unwrap();
+
+        let mut lits = catalog::synth_inputs(&spec, &meta);
+        let (b, s) = (spec.batch, spec.seq);
+        let tgt_idx = spec.inputs.iter().position(|i| i.name == "data.targets").unwrap();
+        let mask_idx = spec.inputs.iter().position(|i| i.name == "data.loss_mask").unwrap();
+        // mask: even positions supervised, odd positions padding
+        let mask: Vec<f32> = (0..b * s).map(|p| if p % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        // targets: valid ids where supervised, garbage where masked out
+        let targets: Vec<i32> =
+            (0..b * s).map(|p| if p % 2 == 0 { (p % 4) as i32 + 4 } else { 9_999_999 }).collect();
+        lits[mask_idx] = xla::Literal::from_f32(&[b, s], mask.clone());
+        lits[tgt_idx] = xla::Literal::from_i32(&[b, s], targets.clone());
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let outs = exe.execute(&refs).expect("masked garbage targets must not abort");
+        let nt = spec.trainable_order.len();
+        let loss = outs[3 * nt].get_first_element::<f32>().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+
+        // garbage at a *supervised* position is real corruption: fail
+        let mut bad = targets;
+        bad[0] = 9_999_999;
+        lits[tgt_idx] = xla::Literal::from_i32(&[b, s], bad);
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        assert!(exe.execute(&refs).is_err(), "unmasked garbage target must error");
     }
 }

@@ -6,10 +6,13 @@
 //! Graphs are built on the [`Tape`](super::ad::Tape); the caller owns loss
 //! heads and the optimizer.
 
-use super::ad::{Act, Arr, Tape, V};
+use super::ad::{Act, Arr, C3aSpectra, Tape, V};
+use super::InterpCache;
 use crate::runtime::manifest::{ModelMeta, PeftParams};
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 const NEG: f32 = -1e9;
 
@@ -35,11 +38,22 @@ pub struct Graph<'a> {
     pub params: &'a BTreeMap<String, V>,
     pub meta: &'a ModelMeta,
     pub peft: &'a PeftParams,
+    /// session/executable cache for C3A kernel spectra + FFT plans
+    /// (None in unit-test graphs; ops then compute spectra ad hoc)
+    pub cache: Option<&'a RefCell<InterpCache>>,
 }
 
 impl<'a> Graph<'a> {
     fn p(&self, name: &str) -> Result<V> {
         self.params.get(name).copied().with_context(|| format!("missing parameter {name}"))
+    }
+
+    /// Cached (name-keyed, equality-verified) spectra of the C3A kernel
+    /// node `w` — hits while the kernel is unchanged (every serve request;
+    /// forward+backward within one train step).
+    fn c3a_spectra(&mut self, name: &str, w: V) -> Option<Rc<C3aSpectra>> {
+        let cache = self.cache?;
+        Some(cache.borrow_mut().spectra_for(name, self.tape.val(w)))
     }
 
     /// y = x @ w0 (+ bias) + delta(x) for the adapted q/v projections.
@@ -110,8 +124,10 @@ impl<'a> Graph<'a> {
                     y = self.tape.block_rotate(y, r);
                 }
                 "c3a" => {
-                    let w = self.p(&format!("{key}.c3a.w"))?;
-                    let delta = self.tape.c3a(x, w);
+                    let wname = format!("{key}.c3a.w");
+                    let w = self.p(&wname)?;
+                    let spectra = self.c3a_spectra(&wname, w);
+                    let delta = self.tape.c3a_with(x, w, spectra);
                     y = self.tape.add(y, delta);
                 }
                 "full" | "head" | "bitfit" | "ia3" => {}
@@ -332,7 +348,8 @@ impl<'a> Graph<'a> {
             }
             "c3a" => {
                 let w = self.p("mlp.mid.c3a.w")?;
-                self.tape.c3a(h, w)
+                let spectra = self.c3a_spectra("mlp.mid.c3a.w", w);
+                self.tape.c3a_with(h, w, spectra)
             }
             other => bail!("unknown mlp_mid {other}"),
         };

@@ -24,7 +24,7 @@ pub mod interp;
 pub mod manifest;
 pub mod session;
 
-use backend::{Backend, Executor};
+use backend::{Backend, Executor, ExecutorState};
 use manifest::{ArtifactSpec, Manifest, ModelMeta};
 
 /// An execution backend plus the model registry and a compile/load cache
@@ -120,5 +120,22 @@ impl Executable {
     /// device.
     pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
         self.exec.execute_b(inputs)
+    }
+
+    /// Build per-session executor state from the session's frozen params
+    /// (in `frozen_order`).  Stateless backends return a no-op handle.
+    pub fn prepare(&self, frozen: &[xla::Literal]) -> Result<Box<dyn ExecutorState>> {
+        self.exec.prepare(frozen)
+    }
+
+    /// Execute with session state (same outputs as [`Executable::run`];
+    /// stateful backends skip re-reading state-covered inputs).
+    pub fn run_stateful<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        state: &mut dyn ExecutorState,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().map(|l| l.borrow()).collect();
+        self.exec.execute_stateful(state, &refs)
     }
 }

@@ -3,15 +3,21 @@
 //!
 //! A `TrainSession` owns the trainable parameters + AdamW state as XLA
 //! literals, rebuilt from each step's tuple output; frozen backbone
-//! parameters are uploaded once.  An `EvalSession` borrows the trainable
-//! state to produce logits for the rust-side metric computation.
+//! parameters are uploaded once into a persistent
+//! [`ExecutorState`](super::backend::ExecutorState), so stateful backends
+//! (the substrate interpreter) never re-parse them per step.  An
+//! `EvalSession` borrows the trainable state to produce logits for the
+//! rust-side metric computation; repeated calls with an unchanged
+//! trainable snapshot (the serving hot path) reuse the uploaded literals.
 
+use super::backend::ExecutorState;
 use super::manifest::{ArtifactSpec, Role};
 use super::Engine;
 use crate::peft::init::C3aScheme;
 use crate::substrate::prng::Rng;
 use crate::substrate::tensor::{DType, Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
+use std::cell::{Cell, RefCell};
 
 /// Convert a host tensor to an XLA literal.
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
@@ -108,6 +114,9 @@ pub struct TrainSession {
     f_state: Vec<xla::Literal>,
     /// trainable shapes for checkpoint extraction
     t_shapes: Vec<Vec<usize>>,
+    /// persistent executor state (parsed frozen params, spectra/plan
+    /// caches) — lives as long as the session
+    exec_state: RefCell<Box<dyn ExecutorState>>,
     pub steps_done: usize,
 }
 
@@ -134,7 +143,18 @@ impl TrainSession {
             let t = init.frozen.get(name).with_context(|| format!("missing frozen {name}"))?;
             f_state.push(tensor_to_literal(t)?);
         }
-        Ok(TrainSession { spec: spec.clone(), exe, t_state, m_state, v_state, f_state, t_shapes, steps_done: 0 })
+        let exec_state = RefCell::new(exe.prepare(&f_state)?);
+        Ok(TrainSession {
+            spec: spec.clone(),
+            exe,
+            t_state,
+            m_state,
+            v_state,
+            f_state,
+            t_shapes,
+            exec_state,
+            steps_done: 0,
+        })
     }
 
     pub fn spec(&self) -> &ArtifactSpec {
@@ -173,7 +193,10 @@ impl TrainSession {
         inputs.extend(data_lits.iter());
         inputs.extend(scalar_lits.iter());
 
-        let mut outs = self.exe.run(&inputs)?;
+        let mut outs = {
+            let mut state = self.exec_state.borrow_mut();
+            self.exe.run_stateful(&mut **state, &inputs)?
+        };
         let nt = self.t_state.len();
         if outs.len() != 3 * nt + 2 {
             bail!("{}: expected {} outputs, got {}", self.spec.name, 3 * nt + 2, outs.len());
@@ -208,10 +231,22 @@ impl TrainSession {
     }
 }
 
+/// Cached upload of one trainable snapshot (the serving hot path calls
+/// `logits` many times with the same adapter).
+struct TrainableUpload {
+    /// exact tensors the literals were built from (bitwise identity check)
+    snapshot: Vec<Tensor>,
+    lits: Vec<xla::Literal>,
+}
+
 pub struct EvalSession {
     spec: ArtifactSpec,
     exe: std::rc::Rc<super::Executable>,
     f_state: Vec<xla::Literal>,
+    /// persistent executor state (parsed frozen params, spectra caches)
+    exec_state: RefCell<Box<dyn ExecutorState>>,
+    t_upload: RefCell<Option<TrainableUpload>>,
+    uploads: Cell<usize>,
 }
 
 impl EvalSession {
@@ -225,27 +260,71 @@ impl EvalSession {
             let t = init.frozen.get(name).with_context(|| format!("missing frozen {name}"))?;
             f_state.push(tensor_to_literal(t)?);
         }
-        Ok(EvalSession { spec: spec.clone(), exe, f_state })
+        let exec_state = RefCell::new(exe.prepare(&f_state)?);
+        Ok(EvalSession {
+            spec: spec.clone(),
+            exe,
+            f_state,
+            exec_state,
+            t_upload: RefCell::new(None),
+            uploads: Cell::new(0),
+        })
     }
 
     pub fn spec(&self) -> &ArtifactSpec {
         &self.spec
     }
 
-    /// Forward pass: returns flattened logits + their shape.
+    /// How many times a trainable snapshot has been converted to literals
+    /// (serving loops with a fixed adapter should see exactly 1).
+    pub fn upload_count(&self) -> usize {
+        self.uploads.get()
+    }
+
+    /// Forward pass: returns flattened logits + their shape.  The
+    /// trainable upload is reused across calls while the snapshot is
+    /// bit-identical to the previous one.
     pub fn logits(&self, trainable: &TensorMap, batch: &Batch) -> Result<(Vec<f32>, Vec<usize>)> {
-        let mut t_lits = Vec::new();
-        for name in &self.spec.trainable_order {
-            let t = trainable.get(name).with_context(|| format!("missing trainable {name}"))?;
-            t_lits.push(tensor_to_literal(t)?);
+        {
+            let mut upload = self.t_upload.borrow_mut();
+            let reusable = match upload.as_ref() {
+                Some(u) => {
+                    u.snapshot.len() == self.spec.trainable_order.len()
+                        && self
+                            .spec
+                            .trainable_order
+                            .iter()
+                            .zip(&u.snapshot)
+                            .all(|(name, prev)| trainable.get(name) == Some(prev))
+                }
+                None => false,
+            };
+            if !reusable {
+                let mut snapshot = Vec::with_capacity(self.spec.trainable_order.len());
+                let mut lits = Vec::with_capacity(self.spec.trainable_order.len());
+                for name in &self.spec.trainable_order {
+                    let t = trainable
+                        .get(name)
+                        .with_context(|| format!("missing trainable {name}"))?;
+                    snapshot.push(t.clone());
+                    lits.push(tensor_to_literal(t)?);
+                }
+                *upload = Some(TrainableUpload { snapshot, lits });
+                self.uploads.set(self.uploads.get() + 1);
+            }
         }
         let data_lits: Vec<xla::Literal> =
             batch.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let upload = self.t_upload.borrow();
+        let t_lits = &upload.as_ref().expect("trainable upload present").lits;
         let mut inputs: Vec<&xla::Literal> = Vec::new();
         inputs.extend(t_lits.iter());
         inputs.extend(self.f_state.iter());
         inputs.extend(data_lits.iter());
-        let mut outs = self.exe.run(&inputs)?;
+        let mut outs = {
+            let mut state = self.exec_state.borrow_mut();
+            self.exe.run_stateful(&mut **state, &inputs)?
+        };
         if outs.len() != 1 {
             bail!("eval artifact returned {} outputs", outs.len());
         }

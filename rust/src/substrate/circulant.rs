@@ -9,6 +9,10 @@
 //!   * the Table 1 operator benchmarks.
 
 use super::fft::{self, c_mul, Plan, C};
+use super::parallel;
+
+/// Work floor (roughly m·n·b) below which the block loops stay sequential.
+const PAR_MIN_WORK: usize = 16 * 1024;
 
 /// Kernels of a block-circular operator: `m × n` blocks, each length `b`.
 #[derive(Clone, Debug)]
@@ -55,18 +59,18 @@ impl BlockCirculant {
         self.matvec_with(&plan, x)
     }
 
-    /// FFT matvec with a reusable plan and precomputed kernel spectra.
+    /// FFT matvec with a reusable plan.  The per-output-block loop (kernel
+    /// FFTs + spectral accumulate + inverse FFT) is sharded across the
+    /// substrate pool; each output block is computed identically at any
+    /// thread count.
     pub fn matvec_with(&self, plan: &Plan, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.d_in());
         let b = self.b;
         // forward transforms of the n input blocks
         let xf: Vec<Vec<C>> = (0..self.n).map(|j| fft::rfft(plan, &x[j * b..(j + 1) * b])).collect();
         let mut out = vec![0.0; self.d_out()];
-        let mut acc = vec![(0.0, 0.0); b];
-        for i in 0..self.m {
-            for z in acc.iter_mut() {
-                *z = (0.0, 0.0);
-            }
+        let block = |i: usize, out_i: &mut [f64]| {
+            let mut acc = vec![(0.0, 0.0); b];
             for j in 0..self.n {
                 let wf = fft::rfft(plan, self.kernel(i, j));
                 for k in 0..b {
@@ -76,8 +80,9 @@ impl BlockCirculant {
                 }
             }
             let zi = fft::irfft_real(plan, &acc);
-            out[i * b..(i + 1) * b].copy_from_slice(&zi);
-        }
+            out_i.copy_from_slice(&zi);
+        };
+        parallel::for_rows(&mut out, b, self.m * self.n * b >= PAR_MIN_WORK, block);
         out
     }
 
@@ -135,18 +140,17 @@ impl PreparedBlockCirculant {
         out
     }
 
-    /// Allocation-free variant used by the bench/serve hot loops.
+    /// Allocation-free variant used by the bench/serve hot loops.  Output
+    /// blocks are sharded across the substrate pool (disjoint writes, so
+    /// bit-for-bit identical at any thread count).
     pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
         let b = self.b;
         assert_eq!(x.len(), self.n * b);
         assert_eq!(out.len(), self.m * b);
         let xf: Vec<Vec<C>> =
             (0..self.n).map(|j| fft::rfft(&self.plan, &x[j * b..(j + 1) * b])).collect();
-        let mut acc = vec![(0.0, 0.0); b];
-        for i in 0..self.m {
-            for z in acc.iter_mut() {
-                *z = (0.0, 0.0);
-            }
+        let block = |i: usize, out_i: &mut [f64]| {
+            let mut acc = vec![(0.0, 0.0); b];
             for j in 0..self.n {
                 let wf = &self.spectra[i * self.n + j];
                 for k in 0..b {
@@ -156,8 +160,9 @@ impl PreparedBlockCirculant {
                 }
             }
             let zi = fft::irfft_real(&self.plan, &acc);
-            out[i * b..(i + 1) * b].copy_from_slice(&zi);
-        }
+            out_i.copy_from_slice(&zi);
+        };
+        parallel::for_rows(out, b, self.m * self.n * b >= PAR_MIN_WORK, block);
     }
 }
 

@@ -1,5 +1,15 @@
 //! Minimal dense linear algebra for baselines and the Table 1 benches:
 //! LoRA / VeRA delta matvecs, dense matmul, norms.  Row-major f64.
+//!
+//! `matvec`/`matmul` shard their output rows across the substrate thread
+//! pool above a work threshold.  Rows are disjoint and each row's
+//! accumulation order is unchanged, so results are bit-for-bit identical
+//! at any `C3A_THREADS` setting.
+
+use super::parallel;
+
+/// Flop-count floor below which row-sharding is not worth the dispatch.
+const PAR_MIN_WORK: usize = 64 * 1024;
 
 /// y = A·x where A is rows×cols row-major.
 pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64]) -> Vec<f64> {
@@ -10,34 +20,42 @@ pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// Allocation-free matvec for hot loops.
+/// Allocation-free matvec for hot loops (row-sharded when large).
 pub fn matvec_into(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
-    for r in 0..rows {
+    let row_dot = |r: usize| -> f64 {
         let row = &a[r * cols..(r + 1) * cols];
         let mut acc = 0.0;
         for (v, xv) in row.iter().zip(x.iter()) {
             acc += v * xv;
         }
-        y[r] = acc;
-    }
+        acc
+    };
+    parallel::for_rows(&mut y[..rows], 1, rows * cols >= PAR_MIN_WORK, |r, out| {
+        out[0] = row_dot(r)
+    });
 }
 
-/// C = A·B, A is m×k, B is k×n (row-major).
+/// C = A·B, A is m×k, B is k×n (row-major).  Output rows are sharded
+/// across the pool; each row keeps its sequential p-loop, so the result
+/// does not depend on the thread count.
 pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     let mut c = vec![0.0; m * n];
-    for i in 0..m {
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let row_mul = |i: usize, crow: &mut [f64]| {
         for p in 0..k {
             let av = a[i * k + p];
             if av == 0.0 {
                 continue;
             }
             let brow = &b[p * n..(p + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
             for j in 0..n {
                 crow[j] += av * brow[j];
             }
         }
-    }
+    };
+    parallel::for_rows(&mut c, n, m * k * n >= PAR_MIN_WORK, row_mul);
     c
 }
 
@@ -116,15 +134,23 @@ pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
 }
 
-/// argmax of a slice (first max wins).
+/// argmax of a slice, skipping NaNs (first max wins among ties).
+///
+/// NaN entries never win: a diverged row with a NaN logit used to return
+/// index 0 (every `>` comparison is false against NaN), silently
+/// mispredicting class 0.  An all-NaN (or empty) slice returns 0.
 pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if v <= xs[b] => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 /// Numerically-stable softmax in place.
@@ -238,5 +264,39 @@ mod tests {
     #[test]
     fn argmax_first_max() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn argmax_skips_nans() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN]), 0);
+    }
+
+    #[test]
+    fn matvec_matmul_threaded_parity() {
+        use crate::substrate::parallel;
+        let _lock = parallel::thread_override_lock();
+        let mut rng = Rng::seed(42);
+        // matmul gate is m*k*n >= PAR_MIN_WORK: 96*48*64 = 294912 crosses it
+        let (m, k, n) = (96, 48, 64);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        // matvec gate is rows*cols >= PAR_MIN_WORK: 640*128 = 81920 crosses it
+        let (mr, mc) = (640, 128);
+        let av: Vec<f64> = (0..mr * mc).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..mc).map(|_| rng.normal()).collect();
+        let prev = parallel::threads();
+        parallel::set_threads(1);
+        let c1 = matmul(&a, &b, m, k, n);
+        let y1 = matvec(&av, mr, mc, &x);
+        parallel::set_threads(4);
+        let c4 = matmul(&a, &b, m, k, n);
+        let y4 = matvec(&av, mr, mc, &x);
+        parallel::set_threads(prev);
+        assert_eq!(c1, c4, "matmul must be bit-for-bit across thread counts");
+        assert_eq!(y1, y4, "matvec must be bit-for-bit across thread counts");
     }
 }

@@ -10,6 +10,7 @@ pub mod circulant;
 pub mod fft;
 pub mod json;
 pub mod linalg;
+pub mod parallel;
 pub mod polynomial;
 pub mod prng;
 pub mod tensor;

@@ -1,0 +1,460 @@
+//! Std-only scoped thread pool for the substrate hot loops.
+//!
+//! Design constraints (see ROADMAP items 2–3):
+//!
+//! * **In-tree, std-only** — no rayon/crossbeam; a small persistent pool of
+//!   workers fed through a condvar, with the submitting thread always
+//!   participating in the work so `threads() == 1` never context-switches.
+//! * **Deterministic** — disjoint-output loops (matmul row blocks, per-row
+//!   FFTs) are bit-for-bit identical at any thread count because every
+//!   element is computed by the same scalar code, regardless of how rows
+//!   are grouped (those loops may size chunks off [`row_chunk`], which
+//!   scales with the pool).  Reductions are stricter: they must use
+//!   [`map_chunks`] with a *fixed* chunk size so the per-chunk partials —
+//!   combined by the caller **in chunk order** — make the floating-point
+//!   addition order thread-count independent too.
+//! * **Never nested** — a parallel region entered from a pool worker (or
+//!   while another region is active) runs inline on the calling thread.
+//!
+//! Thread count: `C3A_THREADS` env var if set (>=1), else
+//! `std::thread::available_parallelism()`.  [`set_threads`] overrides at
+//! runtime (used by the parity tests and the bench harness).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Thread-count configuration
+// ---------------------------------------------------------------------------
+
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("C3A_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn threads_cell() -> &'static AtomicUsize {
+    static CELL: OnceLock<AtomicUsize> = OnceLock::new();
+    CELL.get_or_init(|| AtomicUsize::new(default_threads()))
+}
+
+/// Current worker budget (including the calling thread).
+pub fn threads() -> usize {
+    threads_cell().load(Ordering::Relaxed)
+}
+
+/// Override the worker budget at runtime (clamped to >= 1).  Results are
+/// bit-for-bit identical at any setting; this only trades wall-clock.
+pub fn set_threads(n: usize) {
+    threads_cell().store(n.max(1), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// One queued parallel region: workers pull chunk indices from `counter`
+/// and call `f(index)` until the range is exhausted.  The `'static`
+/// lifetimes are a lie told via transmute; they hold in practice because
+/// the submitting thread blocks until every worker has checked out of the
+/// epoch, so the borrows outlive all uses.
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    counter: *const AtomicUsize,
+    n_chunks: usize,
+    panicked: *const AtomicBool,
+}
+
+unsafe impl Send for Job {}
+
+struct PoolState {
+    job: Option<Job>,
+    /// bumped once per submitted job; workers track the last epoch seen
+    epoch: u64,
+    /// workers that have not yet checked out of the current epoch
+    active: usize,
+    /// spawned worker threads
+    workers: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// serializes regions: one job in flight at a time.  Contended
+    /// submissions run inline instead of queueing.
+    submit: Mutex<()>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState { job: None, epoch: 0, active: 0, workers: 0 }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        submit: Mutex::new(()),
+    })
+}
+
+thread_local! {
+    /// True on pool workers and inside an active region on the submitter:
+    /// any nested region runs inline.
+    static IN_REGION: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn worker_loop(p: &'static Pool) {
+    IN_REGION.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = p.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(j) = st.job {
+                        break j;
+                    }
+                    // epoch advanced with no job: check out immediately
+                    st.active -= 1;
+                    if st.active == 0 {
+                        p.done_cv.notify_all();
+                    }
+                    continue;
+                }
+                st = p.work_cv.wait(st).unwrap();
+            }
+        };
+        let f = job.f;
+        let counter = unsafe { &*job.counter };
+        let panicked = unsafe { &*job.panicked };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = counter.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n_chunks || panicked.load(Ordering::Relaxed) {
+                break;
+            }
+            f(i);
+        }));
+        if res.is_err() {
+            panicked.store(true, Ordering::Relaxed);
+        }
+        let mut st = p.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            p.done_cv.notify_all();
+        }
+    }
+}
+
+/// Run `f(0..n_chunks)` across the pool, submitter participating.  Falls
+/// back to an inline ascending loop when parallelism is unavailable; the
+/// chunk decomposition (and therefore the numerics of chunked reductions)
+/// is identical either way.
+fn run_chunked(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    let inline = n_chunks <= 1
+        || threads() <= 1
+        || IN_REGION.with(|flag| flag.get());
+    if inline {
+        for i in 0..n_chunks {
+            f(i);
+        }
+        return;
+    }
+    let p = pool();
+    let _guard = match p.submit.try_lock() {
+        Ok(g) => g,
+        // a previous region panicked mid-flight: the pool protocol itself
+        // is still sound (the panicking submitter waited for checkout), so
+        // recover the lock instead of degrading to inline forever
+        Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+        // another thread owns the pool: run inline rather than queue
+        Err(std::sync::TryLockError::WouldBlock) => {
+            for i in 0..n_chunks {
+                f(i);
+            }
+            return;
+        }
+    };
+    let counter = AtomicUsize::new(0);
+    let panicked = AtomicBool::new(false);
+    {
+        let mut st = p.state.lock().unwrap();
+        // lazily grow the worker set toward threads() - 1
+        let want = (threads() - 1).min(n_chunks.saturating_sub(1));
+        while st.workers < want {
+            std::thread::Builder::new()
+                .name("c3a-pool".into())
+                .spawn(move || worker_loop(pool()))
+                .expect("spawning pool worker");
+            st.workers += 1;
+        }
+        // erase the borrow lifetimes: the wait-for-checkout below keeps
+        // `f`/`counter`/`panicked` alive past every worker access
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+        st.job = Some(Job {
+            f: f_static,
+            counter: &counter as *const AtomicUsize,
+            n_chunks,
+            panicked: &panicked as *const AtomicBool,
+        });
+        st.epoch += 1;
+        st.active = st.workers;
+        p.work_cv.notify_all();
+    }
+    // participate from the submitting thread
+    IN_REGION.with(|flag| flag.set(true));
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+        let i = counter.fetch_add(1, Ordering::Relaxed);
+        if i >= n_chunks || panicked.load(Ordering::Relaxed) {
+            break;
+        }
+        f(i);
+    }));
+    IN_REGION.with(|flag| flag.set(false));
+    if res.is_err() {
+        panicked.store(true, Ordering::Relaxed);
+    }
+    // wait for every worker to check out before the closure/counter die
+    {
+        let mut st = p.state.lock().unwrap();
+        while st.active > 0 {
+            st = p.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+    if let Err(e) = res {
+        std::panic::resume_unwind(e);
+    }
+    if panicked.load(Ordering::Relaxed) {
+        panic!("c3a-pool worker panicked");
+    }
+}
+
+#[inline]
+fn chunk_range(i: usize, chunk: usize, n: usize) -> Range<usize> {
+    let start = i * chunk;
+    start..n.min(start + chunk)
+}
+
+// ---------------------------------------------------------------------------
+// Public combinators
+// ---------------------------------------------------------------------------
+
+/// Parallel-for over `n` items in fixed chunks of `chunk`: calls
+/// `f(start..end)` for each chunk.  `f` must only touch disjoint state per
+/// chunk (e.g. disjoint output rows); determinism then holds trivially.
+pub fn for_each_chunk(n: usize, chunk: usize, f: impl Fn(Range<usize>) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+    run_chunked(n_chunks, &|i| f(chunk_range(i, chunk, n)));
+}
+
+/// Chunked map for **deterministic reductions**: `f(start..end)` produces a
+/// per-chunk partial; the returned Vec is in chunk order, so combining the
+/// partials sequentially gives a floating-point result independent of the
+/// thread count (the chunk boundaries depend only on `n` and `chunk`).
+pub fn map_chunks<R: Send>(
+    n: usize,
+    chunk: usize,
+    f: impl Fn(Range<usize>) -> R + Sync,
+) -> Vec<R> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+    let mut out: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
+    {
+        let slots = SharedSlice::new(&mut out);
+        run_chunked(n_chunks, &|i| {
+            let r = f(chunk_range(i, chunk, n));
+            // each chunk index writes exactly its own slot
+            unsafe { *slots.get_mut(i) = Some(r) };
+        });
+    }
+    out.into_iter().map(|s| s.expect("chunk slot filled")).collect()
+}
+
+/// Row-shard a disjoint-output buffer: `out` is `rows × row_width`
+/// elements and `f(row_index, row)` computes one row.  When `parallel_ok`
+/// (the caller's work-floor gate) and the pool has more than one thread,
+/// rows are grouped into [`row_chunk`]-sized spans across the pool;
+/// otherwise they run inline.  `f` must compute each row identically
+/// regardless of grouping — this helper is for disjoint outputs only,
+/// never reductions.
+pub fn for_rows<T: Send>(
+    out: &mut [T],
+    row_width: usize,
+    parallel_ok: bool,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let row_width = row_width.max(1);
+    let rows = out.len() / row_width;
+    if parallel_ok && rows >= 2 && threads() > 1 {
+        let chunk = row_chunk(rows, 1);
+        par_chunks_mut(out, chunk * row_width, |ci, span| {
+            let base = ci * chunk;
+            for (ri, row) in span.chunks_mut(row_width).enumerate() {
+                f(base + ri, row);
+            }
+        });
+    } else {
+        for (r, row) in out.chunks_mut(row_width).enumerate() {
+            f(r, row);
+        }
+    }
+}
+
+/// Parallel mutation of disjoint `chunk_len`-sized spans of `data`:
+/// `f(chunk_index, span)`.  The last span may be shorter.
+pub fn par_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if data.is_empty() {
+        return;
+    }
+    let chunk_len = chunk_len.max(1);
+    let n = data.len();
+    let n_chunks = n.div_ceil(chunk_len);
+    let base = SharedSlice::new(data);
+    run_chunked(n_chunks, &|i| {
+        let r = chunk_range(i, chunk_len, n);
+        let span = unsafe { base.slice_mut(r) };
+        f(i, span);
+    });
+}
+
+/// Raw shared-slice handle for disjoint cross-thread writes.  Safety
+/// contract: every index/range is touched by at most one chunk, and the
+/// submitting call blocks until all chunks finish.
+struct SharedSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+
+impl<T> SharedSlice<T> {
+    fn new(data: &mut [T]) -> SharedSlice<T> {
+        SharedSlice { ptr: data.as_mut_ptr(), len: data.len() }
+    }
+
+    /// # Safety: `i` must be written by exactly one chunk.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// # Safety: ranges across chunks must not overlap.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self, r: Range<usize>) -> &mut [T] {
+        debug_assert!(r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+}
+
+/// Rows-per-chunk heuristic for row-sharded **disjoint-output** loops:
+/// aim for a few chunks per thread for load balance, with a floor so tiny
+/// rows don't produce pathological chunk counts.
+///
+/// NOT for reductions: the returned chunk size scales with [`threads`],
+/// so partials produced with it would combine in a thread-count-dependent
+/// order.  Reductions must use a fixed chunk constant (see
+/// `C3A_GW_CHUNK` in `runtime/interp/ad.rs`) with [`map_chunks`].
+pub fn row_chunk(rows: usize, min_rows: usize) -> usize {
+    let target = threads() * 4;
+    (rows.div_ceil(target)).max(min_rows).max(1)
+}
+
+/// Serializes tests/benches that override the global thread count:
+/// without it, concurrent test-harness threads race [`set_threads`] and a
+/// "single-threaded" parity leg can silently run multi-threaded, making
+/// the bit-parity assertion vacuous.
+#[doc(hidden)]
+pub fn thread_override_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn for_each_chunk_covers_all_indices() {
+        let n = 1003;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        for_each_chunk(n, 17, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_chunks_orders_partials() {
+        // partial sums combined in chunk order equal the sequential sum
+        let n = 500usize;
+        let parts = map_chunks(n, 13, |r| r.map(|i| i as u64).sum::<u64>());
+        assert_eq!(parts.len(), n.div_ceil(13));
+        let total: u64 = parts.iter().sum();
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn par_chunks_mut_disjoint_writes() {
+        let mut data = vec![0usize; 777];
+        par_chunks_mut(&mut data, 32, |ci, span| {
+            for (k, v) in span.iter_mut().enumerate() {
+                *v = ci * 32 + k;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let _lock = thread_override_lock();
+        let prev = threads();
+        let work = |_: ()| -> Vec<f64> {
+            map_chunks(97, 8, |r| r.map(|i| ((i as f64) * 0.37).sin()).sum::<f64>())
+        };
+        set_threads(1);
+        let a = work(());
+        set_threads(4);
+        let b = work(());
+        set_threads(prev);
+        // bit-for-bit: chunk boundaries and per-chunk order are fixed
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        let count = AtomicU64::new(0);
+        for_each_chunk(8, 1, |_| {
+            // nested region must not deadlock on the submit lock
+            for_each_chunk(4, 1, |r| {
+                count.fetch_add(r.len() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+}

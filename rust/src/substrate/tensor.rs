@@ -31,7 +31,9 @@ impl DType {
 }
 
 /// A host tensor: shape + raw little-endian storage.
-#[derive(Clone, Debug)]
+/// Equality is bitwise on the stored payload (exact, NaN-safe) — used by
+/// session caches to detect unchanged parameters.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     pub dtype: DType,
     pub shape: Vec<usize>,

@@ -1,0 +1,197 @@
+//! Tentpole regression tests: the threaded substrate must be bit-for-bit
+//! identical to the single-threaded path (deterministic chunked
+//! reductions), and the stateful session caches (parsed frozen params,
+//! kernel spectra, trainable uploads) must never change numerics.
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::interp::InterpExecutable;
+use c3a::runtime::manifest::Role;
+use c3a::runtime::session::{build_init, EvalSession};
+use c3a::runtime::Engine;
+use c3a::substrate::circulant::BlockCirculant;
+use c3a::substrate::linalg;
+use c3a::substrate::parallel;
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::Tensor;
+use c3a::xla;
+
+fn lits_to_f32(outs: &[xla::Literal]) -> Vec<Vec<f32>> {
+    outs.iter().map(|l| l.to_vec::<f32>().unwrap()).collect()
+}
+
+#[test]
+fn block_circulant_matvec_threaded_parity() {
+    let _lock = parallel::thread_override_lock();
+    let mut rng = Rng::seed(3);
+    // big enough to cross the circulant PAR_MIN_WORK floor
+    let (m, n, b) = (8usize, 8usize, 512usize);
+    let bc = BlockCirculant::new(m, n, b, (0..m * n * b).map(|_| rng.normal()).collect());
+    let x: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+    let prev = parallel::threads();
+    parallel::set_threads(1);
+    let y1 = bc.matvec(&x);
+    let p1 = bc.prepared().matvec(&x);
+    parallel::set_threads(4);
+    let y4 = bc.matvec(&x);
+    let p4 = bc.prepared().matvec(&x);
+    parallel::set_threads(prev);
+    assert_eq!(y1, y4, "BlockCirculant::matvec must be bit-for-bit across thread counts");
+    assert_eq!(p1, p4, "PreparedBlockCirculant must be bit-for-bit across thread counts");
+}
+
+#[test]
+fn matmul_threaded_parity_large() {
+    let _lock = parallel::thread_override_lock();
+    let mut rng = Rng::seed(5);
+    let (m, k, n) = (128usize, 64, 96);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let prev = parallel::threads();
+    parallel::set_threads(1);
+    let c1 = linalg::matmul(&a, &b, m, k, n);
+    parallel::set_threads(4);
+    let c4 = linalg::matmul(&a, &b, m, k, n);
+    parallel::set_threads(prev);
+    assert_eq!(c1, c4);
+}
+
+/// One full interp train step must produce identical literals at any
+/// thread count — this covers the forward matmuls, the C3A FFT operator,
+/// every backward pass, and the chunk-deterministic kernel-grad reduction.
+#[test]
+fn interp_train_step_threaded_parity() {
+    let _lock = parallel::thread_override_lock();
+    let dir = std::env::temp_dir().join("c3a_parity_test");
+    let manifest = catalog::synthesize(&dir).unwrap();
+    let spec = manifest.artifact("enc_tiny__c3a_d8__cls__train").unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let lits = catalog::synth_inputs(&spec, &meta);
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+
+    let prev = parallel::threads();
+    parallel::set_threads(1);
+    let exe1 = InterpExecutable::new(&spec, &meta).unwrap();
+    let o1 = lits_to_f32(&exe1.execute(&refs).unwrap());
+    parallel::set_threads(4);
+    let exe4 = InterpExecutable::new(&spec, &meta).unwrap();
+    let o4 = lits_to_f32(&exe4.execute(&refs).unwrap());
+    parallel::set_threads(prev);
+    assert_eq!(o1, o4, "train step must be bit-for-bit across thread counts");
+}
+
+/// Stateful execution (frozen params parsed once, session spectra cache)
+/// must return exactly what the stateless path returns — across several
+/// steps with evolving trainables (exercising spectra invalidation).
+#[test]
+fn stateful_session_matches_stateless() {
+    let dir = std::env::temp_dir().join("c3a_stateful_test");
+    let manifest = catalog::synthesize(&dir).unwrap();
+    let spec = manifest.artifact("enc_tiny__c3a_d8__cls__train").unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let exe = InterpExecutable::new(&spec, &meta).unwrap();
+    let mut lits = catalog::synth_inputs(&spec, &meta);
+
+    // frozen literals in frozen_order, as TrainSession uploads them
+    let frozen: Vec<xla::Literal> = spec
+        .frozen_order
+        .iter()
+        .map(|name| {
+            let idx = spec.inputs.iter().position(|i| &i.name == name).unwrap();
+            lits[idx].clone()
+        })
+        .collect();
+    let mut state = exe.prepare(&frozen).unwrap();
+
+    let nt = spec.trainable_order.len();
+    let t_indices: Vec<usize> = (0..spec.inputs.len())
+        .filter(|&i| matches!(spec.inputs[i].role, Role::Trainable))
+        .collect();
+    let m_indices: Vec<usize> = (0..spec.inputs.len())
+        .filter(|&i| matches!(spec.inputs[i].role, Role::OptM))
+        .collect();
+    let v_indices: Vec<usize> = (0..spec.inputs.len())
+        .filter(|&i| matches!(spec.inputs[i].role, Role::OptV))
+        .collect();
+
+    for step in 0..3 {
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let stateless = exe.execute(&refs).unwrap();
+        let stateful = exe.execute_stateful(&mut state, &refs).unwrap();
+        assert_eq!(
+            lits_to_f32(&stateless),
+            lits_to_f32(&stateful),
+            "stateful output diverged at step {step}"
+        );
+        // feed the updated trainable/opt state back in for the next step
+        for (k, &idx) in t_indices.iter().enumerate() {
+            lits[idx] = stateless[k].clone();
+        }
+        for (k, &idx) in m_indices.iter().enumerate() {
+            lits[idx] = stateless[nt + k].clone();
+        }
+        for (k, &idx) in v_indices.iter().enumerate() {
+            lits[idx] = stateless[2 * nt + k].clone();
+        }
+    }
+    // repeated execution with an *unchanged* kernel (the serving pattern)
+    // must hit the session spectra cache instead of re-running kernel FFTs
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+    let a = exe.execute_stateful(&mut state, &refs).unwrap();
+    let before = state.cache_stats();
+    let b = exe.execute_stateful(&mut state, &refs).unwrap();
+    let after = state.cache_stats();
+    assert_eq!(lits_to_f32(&a), lits_to_f32(&b), "repeat execution must be deterministic");
+    assert!(
+        after.spectra_hits > before.spectra_hits,
+        "unchanged kernel must hit the spectra cache: {before:?} -> {after:?}"
+    );
+    assert_eq!(
+        after.spectra_misses, before.spectra_misses,
+        "unchanged kernel must not recompute spectra"
+    );
+}
+
+/// Serve-style repeated `EvalSession::logits` calls with an unchanged
+/// adapter must reuse the uploaded trainable literals (and return
+/// identical logits); changing the adapter must re-upload.
+#[test]
+fn eval_session_reuses_trainable_upload() {
+    let dir = std::env::temp_dir().join("c3a_evalcache_test");
+    let manifest = catalog::synthesize(&dir).unwrap();
+    let engine = Engine::for_manifest(&manifest).unwrap();
+    let spec = manifest.artifact("enc_tiny__c3a_d8__cls__eval").unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let mut rng = Rng::seed(7);
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut rng, C3aScheme::Xavier).unwrap();
+    let session = EvalSession::new(&engine, &spec, &init).unwrap();
+
+    let (b, s) = (spec.batch, spec.seq);
+    let toks: Vec<i32> = (0..b * s).map(|i| if i % 5 == 0 { 1 } else { 3 + (i as i32 % 40) }).collect();
+    let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+
+    let mut trainable = init.trainable.clone();
+    assert_eq!(session.upload_count(), 0);
+    let (l1, shape1) = session.logits(&trainable, &batch).unwrap();
+    assert_eq!(session.upload_count(), 1);
+    let (l2, shape2) = session.logits(&trainable, &batch).unwrap();
+    let (l3, _) = session.logits(&trainable, &batch).unwrap();
+    assert_eq!(session.upload_count(), 1, "unchanged adapter must not re-upload");
+    assert_eq!(shape1, shape2);
+    assert_eq!(l1, l2);
+    assert_eq!(l1, l3);
+
+    // perturb one trainable parameter -> re-upload + different logits
+    let name = spec.trainable_order[0].clone();
+    let t = trainable.get(&name).unwrap();
+    let mut vals = t.as_f32();
+    for v in vals.iter_mut() {
+        *v += 0.25;
+    }
+    let shape = t.shape.clone();
+    trainable.insert(name, Tensor::from_f32(shape, &vals));
+    let (l4, _) = session.logits(&trainable, &batch).unwrap();
+    assert_eq!(session.upload_count(), 2, "changed adapter must re-upload");
+    assert_ne!(l1, l4, "perturbed adapter should change logits");
+}

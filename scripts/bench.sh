@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Perf tracking: the Table-1 operator bench plus the interp train/serve
+# bench (stateless-single-thread vs cached-multi-thread, serve-style
+# EvalSession loop).  Emits BENCH_interp.json at the repo root so CI can
+# follow the perf trajectory.
+#
+# Usage: scripts/bench.sh [--smoke]
+#   --smoke   reduced dims/step counts for CI
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SMOKE_ARG=""
+for arg in "$@"; do
+  case "$arg" in
+    --smoke) SMOKE_ARG="--smoke" ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+export CARGO_NET_OFFLINE=true
+export C3A_BENCH_OUT="$PWD/BENCH_interp.json"
+
+echo "== bench_operator =="
+# shellcheck disable=SC2086
+cargo bench --bench bench_operator -- $SMOKE_ARG
+
+echo "== bench_interp =="
+# shellcheck disable=SC2086
+cargo bench --bench bench_interp -- $SMOKE_ARG
+
+echo "== BENCH_interp.json =="
+cat BENCH_interp.json
