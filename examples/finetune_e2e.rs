@@ -68,11 +68,7 @@ fn main() -> anyhow::Result<()> {
     let merged = merge::merge_c3a(&w0, d_in, d_out, &k, m, n, b);
     let y_merged = merge::dense_forward(&merged, d_in, d_out, &x);
     let y_adapter = merge::c3a_forward_unmerged(&w0, d_in, d_out, &k, m, n, b, &x);
-    let err = y_merged
-        .iter()
-        .zip(&y_adapter)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0f32, f32::max);
+    let err = y_merged.iter().zip(&y_adapter).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
     println!("merge parity max err: {err:.2e} (zero inference overhead after merge)");
     assert!(err < 1e-3);
     println!("e2e OK");

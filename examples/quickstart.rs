@@ -14,7 +14,8 @@ fn main() -> anyhow::Result<()> {
 
     // 2. one call: pretrain (cached) -> fine-tune -> evaluate
     let cfg = run::default_cfg("c3a_d8", 80);
-    let result = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 0, &cfg, C3aScheme::Xavier)?;
+    let result =
+        run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 0, &cfg, C3aScheme::Xavier)?;
 
     println!("\n=== quickstart result ===");
     println!("test accuracy : {:.3}", result.metric);
@@ -25,6 +26,9 @@ fn main() -> anyhow::Result<()> {
     }
     let first_loss = result.losses.first().unwrap();
     let last_loss = result.losses.last().unwrap();
-    println!("loss curve    : {first_loss:.3} -> {last_loss:.3} over {} steps", result.losses.len());
+    println!(
+        "loss curve    : {first_loss:.3} -> {last_loss:.3} over {} steps",
+        result.losses.len()
+    );
     Ok(())
 }

@@ -1,135 +1,159 @@
-//! Serving demo: fine-tune an adapter, then serve batched classification
-//! requests from a producer thread through an in-process request queue
-//! (std mpsc; tokio unavailable offline) with dynamic batching, and report
-//! latency/throughput percentiles.
+//! Serving demo — a thin CLI over `c3a::serving`: fine-tune one adapter,
+//! derive N tenant variants, serve batched classification requests through
+//! the bounded scheduler queue (dynamic batching + `try_submit`
+//! backpressure), hot-swap one tenant mid-stream, and report
+//! latency/throughput percentiles plus per-tenant upload counts.  Writes
+//! `BENCH_serve.json` (override with `C3A_BENCH_SERVE_OUT`) so CI can
+//! archive the smoke run.
 //!
-//!     cargo run --release --example serve [-- --requests 256]
+//!     cargo run --release --example serve -- \
+//!         [--requests 256] [--tenants 3] [--pretrain-steps 200]
 
 use c3a::coordinator::run::{self, Ctx};
 use c3a::data::glue_sim::GlueTask;
 use c3a::peft::init::C3aScheme;
 use c3a::runtime::manifest::Manifest;
-use c3a::runtime::session::{build_init, EvalSession};
+use c3a::runtime::session::build_init;
+use c3a::serving::{
+    AdapterRegistry, Scheduler, SchedulerCfg, SubmitError, perturb_c3a_kernels as perturb,
+};
 use c3a::substrate::prng::Rng;
-use c3a::substrate::tensor::Tensor;
-use std::sync::mpsc;
-use std::time::Instant;
+use c3a::substrate::tensor::TensorMap;
+use std::time::{Duration, Instant};
+
+fn flag(args: &[String], name: &str) -> Option<usize> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let n_requests: usize = args
-        .iter()
-        .position(|a| a == "--requests")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(128);
+    let n_requests = flag(&args, "--requests").unwrap_or(128);
+    let n_tenants = flag(&args, "--tenants").unwrap_or(3).max(1);
 
-    let ctx = Ctx::open("artifacts")?;
     let (model, method, task) = ("enc_tiny", "c3a_d8", GlueTask::Sst2);
 
-    // fine-tune quickly (pretrain is cached) to obtain an adapter to serve
+    // fine-tune one adapter (pretrain cached), then derive tenant variants
     eprintln!("preparing adapter ({model}/{method})...");
+    let mut ctx = Ctx::open("artifacts")?;
+    // demo default: a short pretrain budget keeps the smoke run fast; the
+    // checkpoint is cached under a budget-keyed name, so a later full run
+    // is unaffected
+    ctx.pretrain_steps = Some(flag(&args, "--pretrain-steps").unwrap_or(200));
     let cfg = run::default_cfg(method, 60);
     let run_out = run::glue_run(&ctx, model, method, task, 0, &cfg, C3aScheme::Xavier)?;
     eprintln!("adapter ready (test metric {:.3})", run_out.metric);
 
-    // build the serving session around the *trained* adapter snapshot
     let meta = ctx.manifest.model(model)?.clone();
-    let eval_spec = ctx
-        .manifest
-        .artifact(&Manifest::artifact_name(model, method, task.head(), "eval"))?
-        .clone();
+    let eval_name = Manifest::artifact_name(model, method, task.head(), "eval");
     let backbone = run::ensure_pretrained(&ctx, model)?;
-    let mut rng = Rng::seed(1);
-    let init = build_init(&eval_spec, &backbone, Some(&run_out.trainable), &mut rng, C3aScheme::Xavier)?;
-    let session = EvalSession::new(&ctx.engine, &eval_spec, &init)?;
-    let served_params = run_out.trainable;
+    let adapters: Vec<(String, TensorMap)> = (0..n_tenants)
+        .map(|i| {
+            let params = if i == 0 {
+                run_out.trainable.clone()
+            } else {
+                perturb(&run_out.trainable, i as u64, 0.05)
+            };
+            (format!("tenant{i}"), params)
+        })
+        .collect();
 
-    // producer thread enqueues single requests; the server drains the
-    // queue into dynamic batches of up to the artifact batch size.
-    let (tx, rx) = mpsc::channel::<(usize, Vec<i32>, Instant)>();
-    let splits = task.splits(meta.vocab, meta.seq, 99);
-    let producer = std::thread::spawn({
-        let tokens = splits.test.tokens.clone();
+    // the registry lives on the scheduler thread (sessions are not Send);
+    // the builder gets plain tensors and opens its own Ctx over the cached
+    // artifacts
+    let sched_cfg =
+        SchedulerCfg { queue_cap: 64, max_batch: 0, max_wait: Duration::from_millis(2) };
+    let sched = Scheduler::spawn(sched_cfg, {
+        let adapters = adapters.clone();
+        let eval_name = eval_name.clone();
         move || {
-            for i in 0..n_requests {
-                let t = tokens[i % tokens.len()].clone();
-                if tx.send((i, t, Instant::now())).is_err() {
-                    return;
-                }
-                if i % 16 == 0 {
-                    std::thread::sleep(std::time::Duration::from_millis(1));
-                }
+            let ctx = Ctx::open("artifacts")?;
+            let spec = ctx.manifest.artifact(&eval_name)?.clone();
+            let mut rng = Rng::seed(1);
+            let init = build_init(&spec, &backbone, None, &mut rng, C3aScheme::Xavier)?;
+            let mut registry = AdapterRegistry::new(&ctx.engine, &spec, &init)?;
+            for (name, params) in adapters {
+                registry.register(&name, params)?;
             }
+            Ok(registry)
         }
-    });
+    })?;
+    let handle = sched.handle();
 
-    let b = eval_spec.batch;
-    let s = eval_spec.seq;
+    let splits = task.splits(meta.vocab, meta.seq, 99);
+    let tokens = &splits.test.tokens;
     let t_start = Instant::now();
-    let mut latencies = Vec::with_capacity(n_requests);
-    let mut batch_sizes = Vec::new();
+    let mut tickets = Vec::with_capacity(n_requests);
+    let mut shed_retries = 0usize;
+    for i in 0..n_requests {
+        let tenant = format!("tenant{}", i % n_tenants);
+        // mid-stream hot swap: tenant0 gets a new adapter version half-way
+        if i == n_requests / 2 {
+            let v = handle.hot_swap("tenant0", perturb(&adapters[0].1, 7, 0.02))?;
+            eprintln!("hot-swapped tenant0 -> v{v}");
+        }
+        let toks = tokens[i % tokens.len()].clone();
+        loop {
+            match handle.try_submit(&tenant, toks.clone()) {
+                Ok(t) => {
+                    tickets.push(t);
+                    break;
+                }
+                Err(SubmitError::QueueFull) => {
+                    // backpressure: the demo retries; a real frontend
+                    // would shed or 429
+                    shed_retries += 1;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
     let mut correct = 0usize;
-    let mut served = 0usize;
-    let mut queue: Vec<(usize, Vec<i32>, Instant)> = Vec::new();
-    while served < n_requests {
-        if queue.is_empty() {
-            // block for the first request instead of burning a core, then
-            // opportunistically drain whatever else arrived (dynamic batch)
-            match rx.recv_timeout(std::time::Duration::from_millis(5)) {
-                Ok(item) => queue.push(item),
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait()?;
+        if r.pred == splits.test.labels[i % splits.test.len()] as usize {
+            correct += 1;
         }
-        while queue.len() < b {
-            match rx.try_recv() {
-                Ok(item) => queue.push(item),
-                Err(_) => break,
-            }
-        }
-        let take = queue.len().min(b);
-        let batch_items: Vec<_> = queue.drain(..take).collect();
-        let mut toks = vec![0i32; b * s];
-        for (slot, (_, t, _)) in batch_items.iter().enumerate() {
-            let n = t.len().min(s);
-            toks[slot * s..slot * s + n].copy_from_slice(&t[..n]);
-        }
-        let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
-        let (logits, shape) = session.logits(&served_params, &batch)?;
-        let width = shape[1];
-        let now = Instant::now();
-        for (slot, (req_id, _, t0)) in batch_items.iter().enumerate() {
-            let pred = c3a::substrate::linalg::argmax(&logits[slot * width..(slot + 1) * width]);
-            if pred == splits.test.labels[req_id % splits.test.len()] as usize {
-                correct += 1;
-            }
-            latencies.push(now.duration_since(*t0).as_secs_f64() * 1e3);
-        }
-        batch_sizes.push(batch_items.len());
-        served += batch_items.len();
     }
-    producer.join().unwrap();
-
-    if latencies.is_empty() {
-        println!("\n=== serve report ===\nno requests served");
-        return Ok(());
-    }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let total_s = t_start.elapsed().as_secs_f64();
-    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];
+    drop(handle);
+    let stats = sched.finish()?;
+    let lat = stats.latency();
+    let req_per_s = n_requests as f64 / total_s;
+
     println!("\n=== serve report ===");
-    println!("requests      : {n_requests}");
+    println!("requests      : {n_requests}  ({n_tenants} tenants)");
     println!("accuracy      : {:.3}", correct as f64 / n_requests as f64);
-    println!("throughput    : {:.1} req/s", n_requests as f64 / total_s);
+    println!("throughput    : {req_per_s:.1} req/s");
     println!("threads       : {}", c3a::substrate::parallel::threads());
-    // the session caches the adapter upload + frozen parse + kernel
-    // spectra: a fixed adapter must upload exactly once however many
-    // batches were served
-    println!("uploads       : {} (adapter reuse)", session.upload_count());
-    println!("mean batch    : {:.1}", batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64);
-    println!("latency p50   : {:.1} ms", pct(0.50));
-    println!("latency p95   : {:.1} ms", pct(0.95));
-    println!("latency p99   : {:.1} ms", pct(0.99));
+    println!("mean batch    : {:.1}", stats.mean_batch());
+    println!("shed retries  : {shed_retries}");
+    println!("latency p50   : {:.1} ms", lat.p50_ms);
+    println!("latency p95   : {:.1} ms", lat.p95_ms);
+    println!("latency p99   : {:.1} ms", lat.p99_ms);
+    // one upload per adapter version: tenant0 was swapped once mid-stream
+    // (2 versions), every other tenant served its whole stream on 1
+    for t in &stats.tenants {
+        println!(
+            "tenant {:<9}: {:>4} reqs  v{}  uploads={}  spectra {}h/{}m",
+            t.name, t.requests, t.version, t.uploads, t.spectra_hits, t.spectra_misses
+        );
+    }
+
+    let uploads: Vec<String> =
+        stats.tenants.iter().map(|t| format!("\"{}\": {}", t.name, t.uploads)).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve_example\",\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"threads\": {},\n  \"req_per_s\": {req_per_s:.1},\n  \"accuracy\": {:.4},\n  \"mean_batch\": {:.2},\n  \"shed_retries\": {shed_retries},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"uploads\": {{ {} }}\n}}\n",
+        c3a::substrate::parallel::threads(),
+        correct as f64 / n_requests as f64,
+        stats.mean_batch(),
+        lat.p50_ms,
+        lat.p95_ms,
+        lat.p99_ms,
+        uploads.join(", ")
+    );
+    let out = std::env::var("C3A_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&out, &json)?;
+    println!("\nwrote {out}");
     Ok(())
 }

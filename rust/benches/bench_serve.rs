@@ -1,0 +1,137 @@
+//! Multi-adapter serving benchmark: the scheduler + registry over one
+//! shared frozen-backbone parse, at 1 adapter vs N adapters.  Emits
+//! `BENCH_serve.json` (req/s, p50/p95/p99, mean dynamic batch, per-tenant
+//! upload counts) so CI tracks the serving trajectory next to
+//! `BENCH_interp.json`.  `harness = false`; pass `--smoke` for the quick
+//! CI run.
+//!
+//!     cargo bench --bench bench_serve [-- --smoke]
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::session::build_init;
+use c3a::runtime::Engine;
+use c3a::serving::{
+    AdapterRegistry, LatencySummary, Scheduler, SchedulerCfg, ServeStats,
+    perturb_c3a_kernels as perturb,
+};
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::TensorMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+const EVAL: &str = "enc_tiny__c3a_d8__cls__eval";
+
+/// Adapter template + (batch, seq) from the synthesized catalog.
+fn template(dir: &Path) -> anyhow::Result<(TensorMap, usize)> {
+    let manifest = catalog::synthesize(dir)?;
+    let spec = manifest.artifact(EVAL)?.clone();
+    let meta = manifest.model("enc_tiny")?.clone();
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
+    Ok((init.trainable, spec.seq))
+}
+
+/// Serve `n_requests` round-robin over `n_tenants`; returns (req/s, stats).
+fn run_phase(
+    dir: &Path,
+    adapter: &TensorMap,
+    s: usize,
+    n_tenants: usize,
+    n_requests: usize,
+) -> anyhow::Result<(f64, ServeStats)> {
+    let adapters: Vec<(String, TensorMap)> = (0..n_tenants)
+        .map(|i| (format!("tenant{i}"), perturb(adapter, i as u64, 0.05)))
+        .collect();
+    let dir: PathBuf = dir.to_path_buf();
+    let cfg = SchedulerCfg { queue_cap: 128, max_batch: 0, max_wait: Duration::from_millis(1) };
+    let sched = Scheduler::spawn(cfg, move || {
+        let manifest = catalog::synthesize(&dir)?;
+        let spec = manifest.artifact(EVAL)?.clone();
+        let meta = manifest.model("enc_tiny")?.clone();
+        let engine = Engine::for_manifest(&manifest)?;
+        let base = catalog::init_base_params(&meta);
+        let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
+        let mut registry = AdapterRegistry::new(&engine, &spec, &init)?;
+        for (name, params) in adapters {
+            registry.register(&name, params)?;
+        }
+        Ok(registry)
+    })?;
+    let handle = sched.handle();
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let tenant = format!("tenant{}", i % n_tenants);
+        let toks: Vec<i32> = (0..s as i32)
+            .map(|j| if j == 0 { 1 } else { 4 + ((i as i32 * 13 + j * 7) % 40) })
+            .collect();
+        tickets.push(handle.submit(&tenant, toks).map_err(anyhow::Error::from)?);
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    let req_per_s = n_requests as f64 / t0.elapsed().as_secs_f64();
+    drop(handle);
+    let stats = sched.finish()?;
+    Ok((req_per_s, stats))
+}
+
+fn phase_json(req_per_s: f64, stats: &ServeStats) -> String {
+    let lat: LatencySummary = stats.latency();
+    let mean_batch = stats.mean_batch();
+    format!(
+        "{{ \"req_per_s\": {req_per_s:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"mean_batch\": {mean_batch:.2} }}",
+        lat.p50_ms,
+        lat.p95_ms,
+        lat.p99_ms
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n_requests = if smoke { 64 } else { 512 };
+    let n_tenants = 4;
+    let threads = c3a::substrate::parallel::threads();
+    let dir = std::env::temp_dir().join("c3a_bench_serve");
+    let (adapter, s) = template(&dir)?;
+
+    println!("== bench_serve: {EVAL}, {n_requests} requests, threads={threads} ==");
+
+    let (rps1, stats1) = run_phase(&dir, &adapter, s, 1, n_requests)?;
+    let l1 = stats1.latency();
+    println!(
+        "1 adapter   : {rps1:>8.1} req/s  p50 {:.2} ms  p95 {:.2} ms  mean batch {:.1}",
+        l1.p50_ms,
+        l1.p95_ms,
+        stats1.mean_batch()
+    );
+
+    let (rpsn, statsn) = run_phase(&dir, &adapter, s, n_tenants, n_requests)?;
+    let ln = statsn.latency();
+    println!(
+        "{n_tenants} adapters  : {rpsn:>8.1} req/s  p50 {:.2} ms  p95 {:.2} ms  mean batch {:.1}",
+        ln.p50_ms,
+        ln.p95_ms,
+        statsn.mean_batch()
+    );
+    for t in &statsn.tenants {
+        println!(
+            "  tenant {:<8}: {:>4} reqs  uploads={}  spectra {}h/{}m",
+            t.name, t.requests, t.uploads, t.spectra_hits, t.spectra_misses
+        );
+        assert_eq!(t.uploads, 1, "fixed adapter must upload exactly once");
+    }
+
+    let uploads: Vec<String> = statsn.tenants.iter().map(|t| t.uploads.to_string()).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"one_adapter\": {},\n  \"multi_adapter\": {},\n  \"uploads_per_tenant\": [{}]\n}}\n",
+        phase_json(rps1, &stats1),
+        phase_json(rpsn, &statsn),
+        uploads.join(", ")
+    );
+    let out = std::env::var("C3A_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&out, &json)?;
+    println!("\nwrote {out}:\n{json}");
+    Ok(())
+}

@@ -30,7 +30,8 @@ fn main() -> anyhow::Result<()> {
     };
     let mut lora_ms = None;
     for method in ["lora", "vera", "boft", "c3a_d1", "c3a_d8", "bitfit", "ia3", "full"] {
-        let r = run::glue_run(&ctx, "enc_base", method, GlueTask::Sst2, 0, &cfg, C3aScheme::Xavier)?;
+        let r =
+            run::glue_run(&ctx, "enc_base", method, GlueTask::Sst2, 0, &cfg, C3aScheme::Xavier)?;
         if method == "lora" {
             lora_ms = Some(r.step_ms);
         }

@@ -117,7 +117,10 @@ patience = 2
     #[test]
     fn missing_fields_rejected() {
         assert!(RunConfig::parse("model = \"m\"").is_err());
-        assert!(RunConfig::parse("model = \"m\"\nmethod = \"x\"\ntask = \"t\"\n[train]\nsteps = 0").is_err());
+        assert!(
+            RunConfig::parse("model = \"m\"\nmethod = \"x\"\ntask = \"t\"\n[train]\nsteps = 0")
+                .is_err()
+        );
     }
 
     #[test]

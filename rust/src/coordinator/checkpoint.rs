@@ -23,7 +23,11 @@ pub fn load(path: &Path) -> Result<TensorMap> {
 
 /// Load the pretrained backbone for `model`, falling back to the python
 /// init bin when no pretraining run has happened yet.
-pub fn load_backbone(artifacts_dir: &Path, model: &str, init_path: &Path) -> Result<(TensorMap, bool)> {
+pub fn load_backbone(
+    artifacts_dir: &Path,
+    model: &str,
+    init_path: &Path,
+) -> Result<(TensorMap, bool)> {
     let pre = pretrained_path(artifacts_dir, model);
     if pre.exists() {
         Ok((load(&pre)?, true))

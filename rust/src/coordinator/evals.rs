@@ -123,7 +123,8 @@ pub fn eval_gen(session: &EvalSession, trainable: &TensorMap, ds: &GenDataset) -
                     continue;
                 }
                 let pos = cursor[slot] - 1; // predict token at cursor from pos
-                let row = &logits[(slot * seq_len + pos) * vocab..(slot * seq_len + pos + 1) * vocab];
+                let row =
+                    &logits[(slot * seq_len + pos) * vocab..(slot * seq_len + pos + 1) * vocab];
                 // never emit PAD/CLS: restrict to ids >= 4
                 let mut best = (f32::NEG_INFINITY, 4usize);
                 for (t, &v) in row.iter().enumerate().skip(4) {
@@ -147,7 +148,11 @@ pub fn eval_gen(session: &EvalSession, trainable: &TensorMap, ds: &GenDataset) -
 }
 
 /// Vision-sim accuracy.
-pub fn eval_vision(session: &EvalSession, trainable: &TensorMap, ds: &VisionDataset) -> Result<f64> {
+pub fn eval_vision(
+    session: &EvalSession,
+    trainable: &TensorMap,
+    ds: &VisionDataset,
+) -> Result<f64> {
     let b = session.spec().batch;
     let n = ds.len();
     let mut preds = Vec::with_capacity(n);

@@ -203,10 +203,14 @@ pub fn glue_run(
 ) -> Result<RunResult> {
     let meta = ctx.manifest.model(model)?.clone();
     let backbone = ensure_pretrained(ctx, model)?;
-    let train_spec =
-        ctx.manifest.artifact(&Manifest::artifact_name(model, method, task.head(), "train"))?.clone();
-    let eval_spec =
-        ctx.manifest.artifact(&Manifest::artifact_name(model, method, task.head(), "eval"))?.clone();
+    let train_spec = ctx
+        .manifest
+        .artifact(&Manifest::artifact_name(model, method, task.head(), "train"))?
+        .clone();
+    let eval_spec = ctx
+        .manifest
+        .artifact(&Manifest::artifact_name(model, method, task.head(), "eval"))?
+        .clone();
 
     let splits = task.splits(meta.vocab, meta.seq, seed);
     let mut rng = Rng::seed(seed.wrapping_mul(0x51ed) ^ 0xC3A);

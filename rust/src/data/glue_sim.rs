@@ -20,8 +20,14 @@ pub enum GlueTask {
 }
 
 impl GlueTask {
-    pub const ALL: [GlueTask; 6] =
-        [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Cola, GlueTask::Qnli, GlueTask::Rte, GlueTask::Stsb];
+    pub const ALL: [GlueTask; 6] = [
+        GlueTask::Sst2,
+        GlueTask::Mrpc,
+        GlueTask::Cola,
+        GlueTask::Qnli,
+        GlueTask::Rte,
+        GlueTask::Stsb,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {

@@ -119,7 +119,13 @@ impl McDataset {
 }
 
 /// Generate one task's splits: `n_train` plus fixed val/test.
-pub fn splits(task: McTask, vocab: usize, seq: usize, seed: u64, n_train: usize) -> Splits<McDataset> {
+pub fn splits(
+    task: McTask,
+    vocab: usize,
+    seq: usize,
+    seed: u64,
+    n_train: usize,
+) -> Splits<McDataset> {
     let mut rng = Rng::seed(seed ^ (task as u64).wrapping_mul(0x9e3779b9));
     let gen = |n: usize, rng: &mut Rng| McDataset {
         examples: (0..n).map(|_| generate(task, vocab, seq, rng)).collect(),

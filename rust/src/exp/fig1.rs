@@ -27,7 +27,14 @@ pub fn run(opt: &ExpOpt) -> Result<()> {
     let t4 = super::read_results(opt, "table4")?;
     let t2 = super::read_results(opt, "table2").ok();
     println!("== Fig 1: relative to LoRA (=1.0), higher is better ==");
-    println!("{:<8} {:>12} {:>12} {:>14} {:>14}", "method", "commonsense", "math+code", "param-eff", "mem-eff");
+    println!(
+        "{:<8} {:>12} {:>12} {:>14} {:>14}",
+        "method",
+        "commonsense",
+        "math+code",
+        "param-eff",
+        "mem-eff"
+    );
     let (l3, lp3) = avg_of(&t3, "lora").ok_or_else(|| anyhow::anyhow!("no lora row in table3"))?;
     let (l4, _) = avg_of(&t4, "lora").ok_or_else(|| anyhow::anyhow!("no lora row in table4"))?;
     let lora_mem = t2
@@ -50,7 +57,14 @@ pub fn run(opt: &ExpOpt) -> Result<()> {
             })
             .unwrap_or(lora_mem);
         let row = [a3 / l3, a4 / l4.max(1e-9), lp3 / p3.max(1e-9), lora_mem / mem.max(1e-9)];
-        println!("{:<8} {:>12.3} {:>12.3} {:>14.3} {:>14.3}", method, row[0], row[1], row[2], row[3]);
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>14.3} {:>14.3}",
+            method,
+            row[0],
+            row[1],
+            row[2],
+            row[3]
+        );
         rows.push(json::obj(vec![
             ("method", json::s(method)),
             ("commonsense", json::num(row[0])),

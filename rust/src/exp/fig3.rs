@@ -51,7 +51,14 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
             all.values.iter().cloned().fold(f64::MAX, f64::min),
             all.values.iter().cloned().fold(f64::MIN, f64::max),
         );
-        println!("{:<10} {:>8.4} {:>8.4} {:>8.4} {:>8.4}", scheme.name(), all.mean(), all.std(), lo, hi);
+        println!(
+            "{:<10} {:>8.4} {:>8.4} {:>8.4} {:>8.4}",
+            scheme.name(),
+            all.mean(),
+            all.std(),
+            lo,
+            hi
+        );
         means.push(all.mean());
         rows.push(json::obj(vec![
             ("scheme", json::s(scheme.name())),

@@ -47,7 +47,16 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
             ("variant", json::s(variant)),
             ("mid_params", json::num(mid_params(variant) as f64)),
             ("final_acc", json::num(r.metric)),
-            ("losses", json::arr(r.losses.iter().step_by((r.losses.len() / 50).max(1)).map(|&v| json::num(v as f64)).collect())),
+            (
+                "losses",
+                json::arr(
+                    r.losses
+                        .iter()
+                        .step_by((r.losses.len() / 50).max(1))
+                        .map(|&v| json::num(v as f64))
+                        .collect(),
+                ),
+            ),
         ]));
     }
     // Fig A1: dump the dataset scatter for plotting
@@ -56,10 +65,14 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
         .x
         .iter()
         .zip(&data.y)
-        .map(|(p, &c)| json::arr(vec![json::num(p[0] as f64), json::num(p[1] as f64), json::num(c as f64)]))
+        .map(|(p, &c)| {
+            json::arr(vec![json::num(p[0] as f64), json::num(p[1] as f64), json::num(c as f64)])
+        })
         .collect();
     super::write_results(opt, "figA1_points", &json::arr(pts))?;
-    println!("\npaper shape: lora r=1 plateaus at high loss; c3a + dense reach ~0 and perfect acc.");
+    println!(
+        "\npaper shape: lora r=1 plateaus at high loss; c3a + dense reach ~0 and perfect acc."
+    );
     super::write_results(opt, "fig4", &json::arr(rows))
 }
 

@@ -9,7 +9,8 @@ use anyhow::Result;
 
 pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
     let steps = opt.steps.unwrap_or(if opt.fast { 50 } else { 200 });
-    let fractions: Vec<usize> = if opt.fast { vec![128, 512, 2048] } else { vec![128, 512, 2048, 8192] };
+    let fractions: Vec<usize> =
+        if opt.fast { vec![128, 512, 2048] } else { vec![128, 512, 2048, 8192] };
     println!("== Fig 5 (left): data scaling on math-sim (dec_small, {steps} steps) ==");
     println!("{:>8} {:>10} {:>10} {:>10}", "n_train", "lora", "c3a", "delta");
     let mut rows = Vec::new();
@@ -20,7 +21,13 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
             let r = run::gen_run(ctx, "dec_small", method, GenTask::Gsm, 0, &cfg, n)?;
             scores.push(r.metric);
         }
-        println!("{:>8} {:>10.3} {:>10.3} {:>+10.3}", n, scores[0], scores[1], scores[1] - scores[0]);
+        println!(
+            "{:>8} {:>10.3} {:>10.3} {:>+10.3}",
+            n,
+            scores[0],
+            scores[1],
+            scores[1] - scores[0]
+        );
         rows.push(json::obj(vec![
             ("panel", json::s("data")),
             ("n_train", json::num(n as f64)),
@@ -29,7 +36,8 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
         ]));
     }
 
-    let models: Vec<&str> = if opt.fast { vec!["dec_small", "dec_large"] } else { vec!["dec_small", "dec_large"] };
+    let models: Vec<&str> =
+        if opt.fast { vec!["dec_small", "dec_large"] } else { vec!["dec_small", "dec_large"] };
     println!("\n== Fig 5 (right): model scaling (math-sim, n=512) ==");
     println!("{:>10} {:>10} {:>10} {:>10}", "model", "lora", "c3a", "delta");
     for model in models {
@@ -39,7 +47,13 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
             let r = run::gen_run(ctx, model, method, GenTask::Gsm, 0, &cfg, 512)?;
             scores.push(r.metric);
         }
-        println!("{:>10} {:>10.3} {:>10.3} {:>+10.3}", model, scores[0], scores[1], scores[1] - scores[0]);
+        println!(
+            "{:>10} {:>10.3} {:>10.3} {:>+10.3}",
+            model,
+            scores[0],
+            scores[1],
+            scores[1] - scores[0]
+        );
         rows.push(json::obj(vec![
             ("panel", json::s("model")),
             ("model", json::s(model)),

@@ -32,7 +32,13 @@ pub struct ExpOpt {
 
 impl Default for ExpOpt {
     fn default() -> Self {
-        Self { steps: None, seeds: 1, fast: true, filter: Vec::new(), results_dir: "results".into() }
+        Self {
+            steps: None,
+            seeds: 1,
+            fast: true,
+            filter: Vec::new(),
+            results_dir: "results".into(),
+        }
     }
 }
 

@@ -29,7 +29,8 @@ pub fn run(opt: &ExpOpt) -> Result<()> {
     println!("{:<6} {:>10} {:>12} {:>12} | {:>12} {:>12} {:>12}",
              "d", "method", "#param", "#other", "MACs(model)", "us/matvec", "ratio_vs_lora");
     let mut rows = Vec::new();
-    let dims: &[usize] = if opt.fast { &[256, 1024, 4096] } else { &[256, 512, 1024, 2048, 4096, 8192] };
+    let dims: &[usize] =
+        if opt.fast { &[256, 1024, 4096] } else { &[256, 512, 1024, 2048, 4096, 8192] };
     for &d in dims {
         let mut rng = Rng::seed(d as u64);
         let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();

@@ -47,7 +47,17 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
         println!("\n== Table 2 ({model}): GLUE-sim, {steps} steps, {} seed(s) ==", opt.seeds);
         println!(
             "{:<8} {:>9} {:>9} | {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} | {:>6} {:>9}",
-            "method", "#params", "mem(MB)", "sst2", "mrpc", "cola", "qnli", "rte", "stsb", "avg", "fullrank%"
+            "method",
+            "#params",
+            "mem(MB)",
+            "sst2",
+            "mrpc",
+            "cola",
+            "qnli",
+            "rte",
+            "stsb",
+            "avg",
+            "fullrank%"
         );
         for method in METHODS {
             if !opt.keep(method) {
@@ -57,7 +67,9 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
             let mut n_params = 0usize;
             let mut rank_frac = None;
             for task in GlueTask::ALL {
-                if !opt.keep(task.name()) && opt.filter.iter().any(|f| GlueTask::parse(f).is_some()) {
+                if !opt.keep(task.name())
+                    && opt.filter.iter().any(|f| GlueTask::parse(f).is_some())
+                {
                     per_task.push(f64::NAN);
                     continue;
                 }
@@ -81,7 +93,12 @@ pub fn run(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
                 method,
                 fmt_params(n_params),
                 mem,
-                per_task[0], per_task[1], per_task[2], per_task[3], per_task[4], per_task[5],
+                per_task[0],
+                per_task[1],
+                per_task[2],
+                per_task[3],
+                per_task[4],
+                per_task[5],
                 avg,
                 rank_frac.map(|f| format!("{:.0}%", 100.0 * f)).unwrap_or_else(|| "-".into()),
             );

@@ -20,7 +20,8 @@ fn params_pct(ctx: &Ctx, model: &str, n_params: usize) -> f64 {
 }
 
 pub fn table3(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
-    let models: Vec<&str> = if opt.fast { vec!["dec_small"] } else { vec!["dec_small", "dec_large"] };
+    let models: Vec<&str> =
+        if opt.fast { vec!["dec_small"] } else { vec!["dec_small", "dec_large"] };
     let tasks: Vec<McTask> = if opt.fast {
         vec![McTask::BoolQ, McTask::Piqa, McTask::HellaSwag, McTask::Obqa]
     } else {
@@ -74,7 +75,8 @@ pub fn table3(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
 }
 
 pub fn table4(ctx: &Ctx, opt: &ExpOpt) -> Result<()> {
-    let models: Vec<&str> = if opt.fast { vec!["dec_small"] } else { vec!["dec_small", "dec_large"] };
+    let models: Vec<&str> =
+        if opt.fast { vec!["dec_small"] } else { vec!["dec_small", "dec_large"] };
     let math: Vec<GenTask> = GenTask::MATH_ALL.to_vec();
     let code: Vec<GenTask> = if opt.fast {
         vec![GenTask::HumanEval, GenTask::Mbpp]

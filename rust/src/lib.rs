@@ -12,4 +12,5 @@ pub mod exp;
 pub mod data;
 pub mod metrics;
 pub mod peft;
+pub mod serving;
 pub mod substrate;

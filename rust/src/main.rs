@@ -124,7 +124,10 @@ fn info(args: &Args) -> Result<()> {
     let ctx = open_ctx(args)?;
     println!("models:");
     for (name, m) in &ctx.manifest.models {
-        println!("  {name:<12} kind={:<8} d={:<4} L={:<2} vocab={:<4} seq={}", m.kind, m.d, m.layers, m.vocab, m.seq);
+        println!(
+            "  {name:<12} kind={:<8} d={:<4} L={:<2} vocab={:<4} seq={}",
+            m.kind, m.d, m.layers, m.vocab, m.seq
+        );
     }
     println!("\nartifacts ({}):", ctx.manifest.artifacts.len());
     for (name, a) in &ctx.manifest.artifacts {
@@ -206,7 +209,10 @@ fn train(args: &Args) -> Result<()> {
             run::gen_run(&ctx, &model, &method, t, seed, &cfg, 768)?
         }
         "vision" => {
-            let t = VisionTask::ALL.into_iter().find(|t| t.name() == name).context("unknown vision task")?;
+            let t = VisionTask::ALL
+                .into_iter()
+                .find(|t| t.name() == name)
+                .context("unknown vision task")?;
             run::vision_run(&ctx, &model, &method, t, seed, &cfg)?
         }
         "mlp" => run::mlp_run(&ctx, &format!("mlp_{name}"), seed, &cfg)?,
@@ -251,7 +257,9 @@ fn experiment(args: &Args) -> Result<()> {
         }
     };
     if id == "all" {
-        for id in ["table1", "fig4", "table2", "fig3", "table3", "table4", "fig5", "table_a2", "fig1"] {
+        for id in
+            ["table1", "fig4", "table2", "fig3", "table3", "table4", "fig5", "table_a2", "fig1"]
+        {
             println!("\n######## exp {id} ########");
             dispatch(id)?;
         }
@@ -278,6 +286,10 @@ fn rank_demo(args: &Args) -> Result<()> {
     let wf: Vec<f64> = wi.iter().map(|&v| v as f64).collect();
     let numeric = circulant::circulant_rank(&wf, 1e-9);
     println!("integer kernel len {b}: exact rank {exact}, numeric rank {numeric}");
-    println!("LoRA with the same budget ({} params) would cap at rank {}", bc.param_count(), bc.param_count() / (2 * d));
+    println!(
+        "LoRA with the same budget ({} params) would cap at rank {}",
+        bc.param_count(),
+        bc.param_count() / (2 * d)
+    );
     Ok(())
 }

@@ -78,7 +78,8 @@ impl ProjSpec {
             Method::C3a => {
                 let b = self.block as f64;
                 let p = self.lanes as f64;
-                let fft = (d1 + d2) / p * 0.5 * b.log2().max(1.0) / b * b; // (d1+d2)/p · (1/2)log2 b per element
+                // (d1+d2)/p · (1/2)log2 b per element
+                let fft = (d1 + d2) / p * 0.5 * b.log2().max(1.0) / b * b;
                 let agg = d1 * d2 / b;
                 fft + agg
             }

@@ -116,9 +116,12 @@ mod tests {
     #[test]
     fn zeros_ones_const() {
         let mut rng = Rng::seed(0);
-        assert_eq!(InitSpec::Zeros.materialize(&[3], &mut rng, C3aScheme::Xavier).as_f32(), vec![0.0; 3]);
-        assert_eq!(InitSpec::Ones.materialize(&[2], &mut rng, C3aScheme::Xavier).as_f32(), vec![1.0; 2]);
-        assert_eq!(InitSpec::Const(0.1).materialize(&[1], &mut rng, C3aScheme::Xavier).as_f32(), vec![0.1]);
+        let zeros = InitSpec::Zeros.materialize(&[3], &mut rng, C3aScheme::Xavier);
+        assert_eq!(zeros.as_f32(), vec![0.0; 3]);
+        let ones = InitSpec::Ones.materialize(&[2], &mut rng, C3aScheme::Xavier);
+        assert_eq!(ones.as_f32(), vec![1.0; 2]);
+        let c = InitSpec::Const(0.1).materialize(&[1], &mut rng, C3aScheme::Xavier);
+        assert_eq!(c.as_f32(), vec![0.1]);
     }
 
     #[test]

@@ -13,7 +13,15 @@ use crate::substrate::circulant::BlockCirculant;
 /// `w0` is row-major [d_in][d_out] (JAX layout, y = x·W); the circulant
 /// operator computes z = C·x with C [d_out][d_in], so its transpose is
 /// added.  `kernels` is [m][n][b] with m·b = d_out, n·b = d_in.
-pub fn merge_c3a(w0: &[f32], d_in: usize, d_out: usize, kernels: &[f32], m: usize, n: usize, b: usize) -> Vec<f32> {
+pub fn merge_c3a(
+    w0: &[f32],
+    d_in: usize,
+    d_out: usize,
+    kernels: &[f32],
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Vec<f32> {
     assert_eq!(w0.len(), d_in * d_out);
     assert_eq!(m * b, d_out);
     assert_eq!(n * b, d_in);
@@ -29,7 +37,15 @@ pub fn merge_c3a(w0: &[f32], d_in: usize, d_out: usize, kernels: &[f32], m: usiz
 }
 
 /// W_merged = W0 + scale·(B·A)^T; A [r][d_in], B [d_out][r].
-pub fn merge_lora(w0: &[f32], d_in: usize, d_out: usize, a: &[f32], bmat: &[f32], r: usize, scale: f32) -> Vec<f32> {
+pub fn merge_lora(
+    w0: &[f32],
+    d_in: usize,
+    d_out: usize,
+    a: &[f32],
+    bmat: &[f32],
+    r: usize,
+    scale: f32,
+) -> Vec<f32> {
     assert_eq!(w0.len(), d_in * d_out);
     assert_eq!(a.len(), r * d_in);
     assert_eq!(bmat.len(), d_out * r);
@@ -47,7 +63,16 @@ pub fn merge_lora(w0: &[f32], d_in: usize, d_out: usize, a: &[f32], bmat: &[f32]
 }
 
 /// Unmerged inference check: y = x·W0 + C_blk(w)·x computed two ways.
-pub fn c3a_forward_unmerged(w0: &[f32], d_in: usize, d_out: usize, kernels: &[f32], m: usize, n: usize, b: usize, x: &[f32]) -> Vec<f32> {
+pub fn c3a_forward_unmerged(
+    w0: &[f32],
+    d_in: usize,
+    d_out: usize,
+    kernels: &[f32],
+    m: usize,
+    n: usize,
+    b: usize,
+    x: &[f32],
+) -> Vec<f32> {
     let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
     let w0f: Vec<f64> = w0.iter().map(|&v| v as f64).collect();
     // y = x·W0: treat W0^T as [d_out][d_in]

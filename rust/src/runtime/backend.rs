@@ -12,9 +12,11 @@
 //!   structure (and the session/coordinator code above it) is identical
 //!   either way.
 
+use super::interp::ad::Arr;
 use super::interp::InterpExecutable;
 use super::manifest::{ArtifactSpec, ModelMeta};
 use anyhow::{Context, Result};
+use std::rc::Rc;
 
 /// Opaque per-session executor state — the seam that lets a backend
 /// persist work across steps (parsed frozen params, kernel spectra, FFT
@@ -36,6 +38,14 @@ impl ExecutorState for NoState {
     }
 }
 
+/// Opaque shared frozen-backbone parse.  Produced by
+/// [`Executor::parse_frozen`] and consumed by [`Executor::prepare_shared`]
+/// so many sessions of one executable (multi-adapter serving: one tenant
+/// state each) can sit on a single parse of the frozen parameters.  A
+/// backend that does not recognize a handle must fall back to a private
+/// parse, never to wrong results.
+pub struct FrozenHandle(pub Rc<dyn std::any::Any>);
+
 /// A loaded artifact, ready to execute on host literals.
 pub trait Executor {
     /// Execute with positional inputs; returns the flattened outputs.
@@ -45,6 +55,23 @@ pub trait Executor {
     /// the artifact's `frozen_order`).  Default: nothing to persist.
     fn prepare(&self, _frozen: &[xla::Literal]) -> Result<Box<dyn ExecutorState>> {
         Ok(Box::new(NoState))
+    }
+
+    /// Parse the frozen parameters once for sharing across many sessions
+    /// (multi-adapter serving).  Default: nothing backend-side to share.
+    fn parse_frozen(&self, _frozen: &[xla::Literal]) -> Result<FrozenHandle> {
+        Ok(FrozenHandle(Rc::new(())))
+    }
+
+    /// Build per-session state over a shared frozen parse.  `frozen` is
+    /// still the full literal list so a backend that does not recognize
+    /// the handle can fall back to [`Executor::prepare`].
+    fn prepare_shared(
+        &self,
+        frozen: &[xla::Literal],
+        _parse: &FrozenHandle,
+    ) -> Result<Box<dyn ExecutorState>> {
+        self.prepare(frozen)
     }
 
     /// Execute with session state.  `inputs` is the *full* positional
@@ -104,6 +131,22 @@ impl Executor for InterpExecutable {
 
     fn prepare(&self, frozen: &[xla::Literal]) -> Result<Box<dyn ExecutorState>> {
         Ok(Box::new(InterpExecutable::prepare(self, frozen)?))
+    }
+
+    fn parse_frozen(&self, frozen: &[xla::Literal]) -> Result<FrozenHandle> {
+        Ok(FrozenHandle(InterpExecutable::parse_frozen(self, frozen)?))
+    }
+
+    fn prepare_shared(
+        &self,
+        frozen: &[xla::Literal],
+        parse: &FrozenHandle,
+    ) -> Result<Box<dyn ExecutorState>> {
+        match parse.0.clone().downcast::<Vec<(String, Rc<Arr>)>>() {
+            Ok(p) => Ok(Box::new(InterpExecutable::prepare_from(self, p)?)),
+            // foreign handle (e.g. after a backend swap): parse privately
+            Err(_) => Ok(Box::new(InterpExecutable::prepare(self, frozen)?)),
+        }
     }
 
     fn execute_stateful(

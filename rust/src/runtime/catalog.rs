@@ -82,7 +82,8 @@ pub fn model_presets() -> Vec<(&'static str, ModelCfg)> {
         input_mode: "vec",
         ..ModelCfg::base("encoder")
     };
-    let dec = |d, layers, heads| ModelCfg { d, layers, heads, seq: 48, ..ModelCfg::base("decoder") };
+    let dec =
+        |d, layers, heads| ModelCfg { d, layers, heads, seq: 48, ..ModelCfg::base("decoder") };
     vec![
         ("enc_tiny", enc(32, 2, 2, 16, 64)),
         ("enc_base", enc(128, 4, 4, 32, 512)),
@@ -611,9 +612,7 @@ pub fn synthesize(dir: &Path) -> Result<Manifest> {
         let cfg = preset(model).expect("inventory model has a preset");
         let spec = build_spec(dir, model, &cfg, &method_name, &peft, head, kind);
         artifacts.insert(spec.name.clone(), spec);
-        models
-            .entry(model.to_string())
-            .or_insert_with(|| meta_of(dir, model, &cfg));
+        models.entry(model.to_string()).or_insert_with(|| meta_of(dir, model, &cfg));
     }
     Ok(Manifest { dir: dir.to_path_buf(), models, artifacts })
 }
@@ -729,11 +728,7 @@ mod tests {
         assert_eq!(a.inputs[0].role, Role::Trainable);
         assert_eq!(a.inputs.last().unwrap().role, Role::Scalar);
         // every trainable has an init spec
-        assert!(a
-            .inputs
-            .iter()
-            .filter(|i| i.role == Role::Trainable)
-            .all(|i| i.init.is_some()));
+        assert!(a.inputs.iter().filter(|i| i.role == Role::Trainable).all(|i| i.init.is_some()));
         // train artifact has matching m/v counts
         let nt = a.trainable_order.len();
         let nm = a.inputs.iter().filter(|i| i.role == Role::OptM).count();

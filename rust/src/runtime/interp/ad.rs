@@ -211,7 +211,12 @@ fn bcast_strides(shape: &[usize], out: &[usize]) -> Vec<usize> {
 }
 
 /// Iterate a broadcast result, yielding (out_idx, a_idx, b_idx).
-fn bcast_apply(out_shape: &[usize], sa: &[usize], sb: &[usize], mut f: impl FnMut(usize, usize, usize)) {
+fn bcast_apply(
+    out_shape: &[usize],
+    sa: &[usize],
+    sb: &[usize],
+    mut f: impl FnMut(usize, usize, usize),
+) {
     let n: usize = out_shape.iter().product::<usize>().max(1);
     let rank = out_shape.len();
     let mut coords = vec![0usize; rank];
@@ -771,7 +776,8 @@ impl Tape {
             Op::Matmul { a, b, trans_b } => self.matmul_backward(*a, *b, *trans_b, go),
             Op::Activation { x, kind } => {
                 let vx = &self.val(*x).data;
-                let g = vx.iter().zip(go.iter()).map(|(&xv, &gv)| gv * act_bwd(*kind, xv)).collect();
+                let g =
+                    vx.iter().zip(go.iter()).map(|(&xv, &gv)| gv * act_bwd(*kind, xv)).collect();
                 vec![(*x, g)]
             }
             Op::SoftmaxLast(x) => {
@@ -867,7 +873,8 @@ impl Tape {
             Op::Rsqrt { x, eps: _ } => {
                 // y = (x+eps)^-1/2 -> dy/dx = -y^3 / 2
                 let y = &out_val.data;
-                let g = y.iter().zip(go.iter()).map(|(&yv, &gv)| -0.5 * yv * yv * yv * gv).collect();
+                let g =
+                    y.iter().zip(go.iter()).map(|(&yv, &gv)| -0.5 * yv * yv * yv * gv).collect();
                 vec![(*x, g)]
             }
             Op::Reshape(x) => vec![(*x, go.to_vec())],
@@ -1178,11 +1185,7 @@ mod tests {
 
     /// Scalar objective: weighted sum of the graph output, so dL/dout is a
     /// fixed random seed vector.
-    fn gradcheck(
-        shapes: &[&[usize]],
-        build: impl Fn(&mut Tape, &[V]) -> V,
-        tol: f32,
-    ) {
+    fn gradcheck(shapes: &[&[usize]], build: impl Fn(&mut Tape, &[V]) -> V, tol: f32) {
         let mut rng = Rng::seed(0xAD);
         let inputs: Vec<Arr> = shapes.iter().map(|s| rand_arr(&mut rng, s)).collect();
         let mut tape = Tape::new();

@@ -88,21 +88,43 @@ impl InterpCache {
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
+
+    /// Number of distinct kernels currently held in the spectra cache.
+    pub fn spectra_entries(&self) -> usize {
+        self.spectra.len()
+    }
 }
+
+/// One parse of a frozen-backbone literal set: (name, value) pairs in
+/// `frozen_order`.  Shareable across sessions — the multi-adapter serving
+/// substrate parses the backbone once and hands every tenant state a clone
+/// of this `Rc`.
+pub type FrozenParse = Rc<Vec<(String, Rc<Arr>)>>;
 
 /// Per-session interpreter state ([`crate::runtime::backend::ExecutorState`]
 /// impl): frozen parameters parsed **once** at session build instead of per
-/// step, plus a private cache (plans + spectra) not shared with other
-/// sessions.
+/// step (and shared across sessions when built from a [`FrozenParse`]),
+/// plus a private cache (plans + spectra) not shared with other sessions.
 pub struct InterpState {
     /// (name, parsed value) in `frozen_order`
-    frozen: Vec<(String, Rc<Arr>)>,
+    frozen: FrozenParse,
     cache: RefCell<InterpCache>,
 }
 
 impl InterpState {
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.borrow().stats()
+    }
+
+    /// Distinct kernels in this state's private spectra cache.
+    pub fn spectra_entries(&self) -> usize {
+        self.cache.borrow().spectra_entries()
+    }
+
+    /// States (plus the originating handle, if any) sharing this state's
+    /// frozen parse.
+    pub fn frozen_parse_refs(&self) -> usize {
+        Rc::strong_count(&self.frozen)
     }
 }
 
@@ -158,13 +180,14 @@ impl InterpExecutable {
         self.run_parsed(parsed, &self.cache)
     }
 
-    /// Build per-session state: parse the frozen parameters once (they are
-    /// constant for the life of a session) and give the session a private
-    /// plan/spectra cache.
-    pub fn prepare(&self, frozen: &[xla::Literal]) -> Result<InterpState> {
+    /// Parse a frozen literal set (in `frozen_order`) into a shareable
+    /// handle.  One parse can back any number of session states (see
+    /// [`InterpExecutable::prepare_from`]) — the multi-adapter serving
+    /// pattern: one frozen backbone, one state per tenant.
+    pub fn parse_frozen(&self, frozen: &[xla::Literal]) -> Result<FrozenParse> {
         if frozen.len() != self.spec.frozen_order.len() {
             bail!(
-                "{}: prepare got {} frozen literals, manifest declares {}",
+                "{}: parse_frozen got {} frozen literals, manifest declares {}",
                 self.spec.name,
                 frozen.len(),
                 self.spec.frozen_order.len()
@@ -180,7 +203,45 @@ impl InterpExecutable {
                 .with_context(|| format!("{}: unknown frozen input {name}", self.spec.name))?;
             parsed.push((name.clone(), Rc::new(lit_to_arr(lit, &inp.shape)?)));
         }
-        Ok(InterpState { frozen: parsed, cache: RefCell::new(InterpCache::default()) })
+        Ok(Rc::new(parsed))
+    }
+
+    /// Build per-session state: parse the frozen parameters once (they are
+    /// constant for the life of a session) and give the session a private
+    /// plan/spectra cache.
+    pub fn prepare(&self, frozen: &[xla::Literal]) -> Result<InterpState> {
+        Ok(InterpState {
+            frozen: self.parse_frozen(frozen)?,
+            cache: RefCell::new(InterpCache::default()),
+        })
+    }
+
+    /// Build per-session state over an *existing* shared parse.  The caches
+    /// stay private per state; only the parsed frozen arrays are shared.
+    pub fn prepare_from(&self, parse: FrozenParse) -> Result<InterpState> {
+        if parse.len() != self.spec.frozen_order.len() {
+            bail!(
+                "{}: shared parse has {} entries, manifest declares {}",
+                self.spec.name,
+                parse.len(),
+                self.spec.frozen_order.len()
+            );
+        }
+        for ((name, arr), want) in parse.iter().zip(self.spec.frozen_order.iter()) {
+            if name != want {
+                bail!("{}: shared parse names {name}, manifest declares {want}", self.spec.name);
+            }
+            let inp = self
+                .spec
+                .inputs
+                .iter()
+                .find(|i| &i.name == name)
+                .with_context(|| format!("{}: unknown frozen input {name}", self.spec.name))?;
+            if arr.shape != inp.shape {
+                bail!("{name}: shared parse shape {:?} != manifest {:?}", arr.shape, inp.shape);
+            }
+        }
+        Ok(InterpState { frozen: parse, cache: RefCell::new(InterpCache::default()) })
     }
 
     /// Stateful execution: frozen inputs are taken from `state` (the
@@ -229,8 +290,9 @@ impl InterpExecutable {
             scalars: BTreeMap::new(),
         };
         if let Some(s) = state {
-            // session-cached parses, uploaded once in `prepare`
-            p.frozen = s.frozen.clone();
+            // session-cached parses, uploaded once in `prepare` (the Rc
+            // clones are O(1); the name Strings are the only copies)
+            p.frozen = s.frozen.as_ref().clone();
         }
         for (inp, lit) in self.spec.inputs.iter().zip(inputs.iter()) {
             match inp.role {
@@ -384,10 +446,8 @@ impl InterpExecutable {
 
         if kind == "decoder" || head == "mlm" {
             // masked token-level cross-entropy over [b,s,V]
-            let mask = parsed
-                .data_f32
-                .get("data.loss_mask")
-                .context("missing data.loss_mask")?;
+            let mask =
+                parsed.data_f32.get("data.loss_mask").context("missing data.loss_mask")?;
             let targets: Vec<i32> = if head == "mlm" {
                 parsed.data_i32.get("data.targets").context("missing data.targets")?.clone()
             } else {

@@ -125,8 +125,9 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
         let root = Json::parse(&text).context("parsing manifest.json")?;
 
         let mut models = BTreeMap::new();
@@ -140,7 +141,8 @@ impl Manifest {
                 name.clone(),
                 ModelMeta {
                     name: name.clone(),
-                    init_path: dir.join(m.get("init").and_then(|v| v.as_str()).context("init path")?),
+                    init_path: dir
+                        .join(m.get("init").and_then(|v| v.as_str()).context("init path")?),
                     d: gi("d"),
                     layers: gi("layers"),
                     vocab: gi("vocab"),
@@ -217,7 +219,10 @@ impl Manifest {
 
 fn parse_artifact(dir: &Path, a: &Json) -> Result<ArtifactSpec> {
     let gets = |k: &str| -> Result<String> {
-        Ok(a.get(k).and_then(|v| v.as_str()).with_context(|| format!("artifact field {k}"))?.to_string())
+        Ok(a.get(k)
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("artifact field {k}"))?
+            .to_string())
     };
     let name = gets("name")?;
     let peft_j = a.get("peft").context("peft")?;
@@ -302,11 +307,7 @@ mod tests {
         // scalars last
         assert_eq!(a.inputs.last().unwrap().role, Role::Scalar);
         // every trainable has an init spec
-        assert!(a
-            .inputs
-            .iter()
-            .filter(|i| i.role == Role::Trainable)
-            .all(|i| i.init.is_some()));
+        assert!(a.inputs.iter().filter(|i| i.role == Role::Trainable).all(|i| i.init.is_some()));
         // train artifact has matching m/v counts
         let nt = a.trainable_order.len();
         let nm = a.inputs.iter().filter(|i| i.role == Role::OptM).count();

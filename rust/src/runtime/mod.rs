@@ -128,6 +128,22 @@ impl Executable {
         self.exec.prepare(frozen)
     }
 
+    /// Parse the frozen params once for sharing across many sessions of
+    /// this executable (multi-adapter serving).  Pair with
+    /// [`Executable::prepare_shared`].
+    pub fn parse_frozen(&self, frozen: &[xla::Literal]) -> Result<backend::FrozenHandle> {
+        self.exec.parse_frozen(frozen)
+    }
+
+    /// Build per-session executor state over a shared frozen parse.
+    pub fn prepare_shared(
+        &self,
+        frozen: &[xla::Literal],
+        parse: &backend::FrozenHandle,
+    ) -> Result<Box<dyn ExecutorState>> {
+        self.exec.prepare_shared(frozen, parse)
+    }
+
     /// Execute with session state (same outputs as [`Executable::run`];
     /// stateful backends skip re-reading state-covered inputs).
     pub fn run_stateful<L: std::borrow::Borrow<xla::Literal>>(

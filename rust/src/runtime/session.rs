@@ -10,7 +10,7 @@
 //! rust-side metric computation; repeated calls with an unchanged
 //! trainable snapshot (the serving hot path) reuse the uploaded literals.
 
-use super::backend::ExecutorState;
+use super::backend::{ExecutorState, FrozenHandle};
 use super::manifest::{ArtifactSpec, Role};
 use super::Engine;
 use crate::peft::init::C3aScheme;
@@ -76,7 +76,10 @@ pub fn build_init(
                     // e.g. `full` fine-tuning or the always-trainable head
                     p.clone()
                 } else {
-                    let init = inp.init.as_ref().with_context(|| format!("no init for {}", inp.name))?;
+                    let init = inp
+                        .init
+                        .as_ref()
+                        .with_context(|| format!("no init for {}", inp.name))?;
                     init.materialize(&inp.shape, rng, scheme)
                 };
                 if t.shape != inp.shape {
@@ -88,7 +91,10 @@ pub fn build_init(
                 let t = if let Some(p) = pretrained.get(&inp.name) {
                     p.clone()
                 } else {
-                    let init = inp.init.as_ref().with_context(|| format!("no init for {}", inp.name))?;
+                    let init = inp
+                        .init
+                        .as_ref()
+                        .with_context(|| format!("no init for {}", inp.name))?;
                     init.materialize(&inp.shape, rng, scheme)
                 };
                 frozen.insert(inp.name.clone(), t);
@@ -239,18 +245,20 @@ struct TrainableUpload {
     lits: Vec<xla::Literal>,
 }
 
-pub struct EvalSession {
+/// A frozen backbone uploaded and parsed **once**, shareable by many
+/// [`EvalSession`]s — the multi-adapter serving substrate.  Every session
+/// built via [`SharedBackbone::session`] reuses the same frozen literals
+/// and (on stateful backends) the same parsed arrays; only the per-session
+/// caches (kernel spectra, trainable uploads) stay private per tenant.
+pub struct SharedBackbone {
     spec: ArtifactSpec,
     exe: std::rc::Rc<super::Executable>,
-    f_state: Vec<xla::Literal>,
-    /// persistent executor state (parsed frozen params, spectra caches)
-    exec_state: RefCell<Box<dyn ExecutorState>>,
-    t_upload: RefCell<Option<TrainableUpload>>,
-    uploads: Cell<usize>,
+    f_state: std::rc::Rc<Vec<xla::Literal>>,
+    parse: FrozenHandle,
 }
 
-impl EvalSession {
-    pub fn new(engine: &Engine, spec: &ArtifactSpec, init: &SessionInit) -> Result<EvalSession> {
+impl SharedBackbone {
+    pub fn new(engine: &Engine, spec: &ArtifactSpec, init: &SessionInit) -> Result<SharedBackbone> {
         if spec.kind != "eval" {
             bail!("{} is not an eval artifact", spec.name);
         }
@@ -260,19 +268,84 @@ impl EvalSession {
             let t = init.frozen.get(name).with_context(|| format!("missing frozen {name}"))?;
             f_state.push(tensor_to_literal(t)?);
         }
-        let exec_state = RefCell::new(exe.prepare(&f_state)?);
-        Ok(EvalSession {
+        let parse = exe.parse_frozen(&f_state)?;
+        Ok(SharedBackbone {
             spec: spec.clone(),
             exe,
-            f_state,
+            f_state: std::rc::Rc::new(f_state),
+            parse,
+        })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Build one session (one tenant) over this backbone.
+    pub fn session(&self) -> Result<EvalSession> {
+        let exec_state = RefCell::new(self.exe.prepare_shared(&self.f_state, &self.parse)?);
+        Ok(EvalSession {
+            spec: self.spec.clone(),
+            exe: self.exe.clone(),
+            f_state: self.f_state.clone(),
             exec_state,
             t_upload: RefCell::new(None),
             uploads: Cell::new(0),
         })
     }
 
+    /// Live references to the shared frozen-literal upload (this backbone
+    /// included): `n_sessions + 1` when every session came from here.
+    pub fn session_refs(&self) -> usize {
+        std::rc::Rc::strong_count(&self.f_state)
+    }
+
+    /// Executor states sharing the frozen *parse* (the handle included).
+    /// On the substrate backend this is `n_sessions + 1`; stateless
+    /// backends have nothing to share and report 1.
+    pub fn parse_refs(&self) -> usize {
+        std::rc::Rc::strong_count(&self.parse.0)
+    }
+}
+
+pub struct EvalSession {
+    spec: ArtifactSpec,
+    exe: std::rc::Rc<super::Executable>,
+    /// frozen literals, possibly shared with sibling sessions
+    f_state: std::rc::Rc<Vec<xla::Literal>>,
+    /// persistent executor state (parsed frozen params, spectra caches)
+    exec_state: RefCell<Box<dyn ExecutorState>>,
+    t_upload: RefCell<Option<TrainableUpload>>,
+    uploads: Cell<usize>,
+}
+
+impl EvalSession {
+    pub fn new(engine: &Engine, spec: &ArtifactSpec, init: &SessionInit) -> Result<EvalSession> {
+        SharedBackbone::new(engine, spec, init)?.session()
+    }
+
     pub fn spec(&self) -> &ArtifactSpec {
         &self.spec
+    }
+
+    /// Per-session spectra-cache accounting (`None` when the executor
+    /// state is not the substrate interpreter's).
+    pub fn cache_stats(&self) -> Option<crate::runtime::interp::CacheStats> {
+        let mut state = self.exec_state.borrow_mut();
+        state
+            .as_any_mut()
+            .downcast_mut::<crate::runtime::interp::InterpState>()
+            .map(|s| s.cache_stats())
+    }
+
+    /// Distinct kernels in this session's private spectra cache (`None`
+    /// for non-interpreter backends).
+    pub fn spectra_entries(&self) -> Option<usize> {
+        let mut state = self.exec_state.borrow_mut();
+        state
+            .as_any_mut()
+            .downcast_mut::<crate::runtime::interp::InterpState>()
+            .map(|s| s.spectra_entries())
     }
 
     /// How many times a trainable snapshot has been converted to literals
@@ -329,12 +402,7 @@ impl EvalSession {
             bail!("eval artifact returned {} outputs", outs.len());
         }
         let lit = outs.pop().unwrap();
-        let shape: Vec<usize> = lit
-            .array_shape()?
-            .dims()
-            .iter()
-            .map(|&d| d as usize)
-            .collect();
+        let shape: Vec<usize> = lit.array_shape()?.dims().iter().map(|&d| d as usize).collect();
         Ok((lit.to_vec::<f32>()?, shape))
     }
 }

@@ -1,0 +1,32 @@
+//! Multi-tenant serving: many C3A adapters over one frozen backbone.
+//!
+//! This is the operational payoff of the paper's economics (§1): adapters
+//! are tiny (d²/b params per projection), so a deployment serves one
+//! frozen backbone and swaps cheap per-tenant kernels in front of it.
+//! The subsystem has three layers:
+//!
+//! * [`stats`] — latency percentile accounting (`total_cmp`-ordered, so a
+//!   NaN-poisoned sample can never panic a report);
+//! * [`registry::AdapterRegistry`] — named adapter snapshots over a single
+//!   shared frozen-backbone parse ([`crate::runtime::session::SharedBackbone`]):
+//!   one `EvalSession` (and one private spectra cache / upload slot) per
+//!   tenant, `hot_swap` to atomically replace a tenant's adapter;
+//! * [`scheduler::Scheduler`] — a bounded request queue with dynamic
+//!   batching (max-wait deadline), backpressure via `try_submit`, and
+//!   ordered hot-swaps, running the registry on a dedicated thread
+//!   (sessions are deliberately not `Send`; requests are).
+//!
+//! Invalidation contract: a hot-swap bumps only the target tenant's
+//! version; its next request re-uploads the adapter (`upload_count` + 1)
+//! and recomputes its kernel spectra, while every other tenant keeps
+//! hitting its caches.  `rust/tests/serving.rs` pins all of this.
+
+pub mod registry;
+pub mod scheduler;
+pub mod stats;
+
+pub use registry::{AdapterRegistry, perturb_c3a_kernels};
+pub use scheduler::{
+    Reply, Scheduler, SchedulerCfg, ServeStats, SubmitError, SubmitHandle, TenantStats, Ticket,
+};
+pub use stats::{percentile, LatencySummary};

@@ -1,0 +1,133 @@
+//! Named adapter snapshots over one shared frozen-backbone parse.
+
+use crate::runtime::interp::CacheStats;
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::session::{Batch, EvalSession, SessionInit, SharedBackbone};
+use crate::runtime::Engine;
+use crate::substrate::prng::Rng;
+use crate::substrate::tensor::{Tensor, TensorMap};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Derive an adapter variant by deterministically perturbing the C3A
+/// kernels (seeded, `eps`-scaled noise).  Stands in for per-tenant
+/// fine-tuning in the serve demo/bench/tests, and doubles as a
+/// cache-invalidation probe: any kernel change must re-upload and
+/// recompute exactly that tenant's spectra.
+pub fn perturb_c3a_kernels(adapter: &TensorMap, seed: u64, eps: f32) -> TensorMap {
+    let mut rng = Rng::seed(0xC3A0_5EED ^ seed);
+    let mut out = adapter.clone();
+    for (name, t) in adapter {
+        if !name.contains(".c3a.w") {
+            continue;
+        }
+        let mut vals = t.as_f32();
+        for v in vals.iter_mut() {
+            *v += eps * rng.normal() as f32;
+        }
+        out.insert(name.clone(), Tensor::from_f32(t.shape.clone(), &vals));
+    }
+    out
+}
+
+struct Tenant {
+    session: EvalSession,
+    params: TensorMap,
+    version: u64,
+}
+
+/// Many named C3A adapters served over a *single* frozen-backbone parse:
+/// one [`EvalSession`] — and therefore one private spectra cache and one
+/// trainable-upload slot — per tenant, all sharing the backbone literals
+/// and (on the substrate backend) the parsed frozen arrays.
+///
+/// Not `Send` by design (sessions hold `Rc` state): a registry lives on
+/// one serving thread; see [`super::scheduler::Scheduler::spawn`].
+pub struct AdapterRegistry {
+    backbone: SharedBackbone,
+    tenants: BTreeMap<String, Tenant>,
+}
+
+impl AdapterRegistry {
+    /// Build the shared backbone from an eval artifact + init.  Only the
+    /// frozen half of `init` is used; it is uploaded and parsed once, for
+    /// every tenant ever registered.
+    pub fn new(
+        engine: &Engine,
+        spec: &ArtifactSpec,
+        init: &SessionInit,
+    ) -> Result<AdapterRegistry> {
+        Ok(AdapterRegistry {
+            backbone: SharedBackbone::new(engine, spec, init)?,
+            tenants: BTreeMap::new(),
+        })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        self.backbone.spec()
+    }
+
+    /// Register a tenant with its adapter snapshot (version 1).
+    pub fn register(&mut self, name: &str, params: TensorMap) -> Result<()> {
+        if self.tenants.contains_key(name) {
+            bail!("tenant {name} already registered");
+        }
+        let session = self.backbone.session()?;
+        self.tenants.insert(name.to_string(), Tenant { session, params, version: 1 });
+        Ok(())
+    }
+
+    /// Atomically replace `name`'s adapter; returns the new version.
+    ///
+    /// Invalidation is exact and tenant-local: the swapped tenant's next
+    /// request re-uploads the snapshot (its `upload_count` rises by one)
+    /// and its kernel spectra recompute via equality invalidation; every
+    /// other tenant's caches keep hitting untouched.
+    pub fn hot_swap(&mut self, name: &str, params: TensorMap) -> Result<u64> {
+        let t = self.tenants.get_mut(name).with_context(|| format!("unknown tenant {name}"))?;
+        t.params = params;
+        t.version += 1;
+        Ok(t.version)
+    }
+
+    /// Forward one batch through `name`'s adapter; returns (flat logits,
+    /// shape, adapter version the batch was served under).
+    pub fn infer(&self, name: &str, batch: &Batch) -> Result<(Vec<f32>, Vec<usize>, u64)> {
+        let t = self.tenants.get(name).with_context(|| format!("unknown tenant {name}"))?;
+        let (logits, shape) = t.session.logits(&t.params, batch)?;
+        Ok((logits, shape, t.version))
+    }
+
+    /// How many times `name`'s adapter has been uploaded (1 per version
+    /// under the serving pattern).
+    pub fn upload_count(&self, name: &str) -> Option<usize> {
+        self.tenants.get(name).map(|t| t.session.upload_count())
+    }
+
+    pub fn version(&self, name: &str) -> Option<u64> {
+        self.tenants.get(name).map(|t| t.version)
+    }
+
+    /// Per-tenant spectra-cache accounting (substrate backend).
+    pub fn cache_stats(&self, name: &str) -> Option<CacheStats> {
+        self.tenants.get(name).and_then(|t| t.session.cache_stats())
+    }
+
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Executor states sharing the frozen parse, the backbone's own handle
+    /// included: `n_tenants + 1` when every tenant shares one parse.
+    pub fn shared_parse_refs(&self) -> usize {
+        self.backbone.parse_refs()
+    }
+}

@@ -1,0 +1,85 @@
+//! Latency accounting shared by the serve example, `bench_serve`, and the
+//! serving tests.
+//!
+//! Samples are ordered with `f64::total_cmp`: a NaN latency (clock
+//! weirdness, a poisoned measurement) sorts after +inf instead of
+//! panicking the whole report — the same fix `metrics::ranks` applies to
+//! Spearman inputs.
+
+/// Percentile (p in [0, 1]) of an ascending-sorted sample, by truncated
+/// index — the convention the serve report has always used.
+pub fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = (p.clamp(0.0, 1.0) * (sorted_ms.len() - 1) as f64) as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// p50/p95/p99 + mean of a latency sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a sample (sorts a copy with `total_cmp`).
+    pub fn from_samples(samples: &[f64]) -> LatencySummary {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(f64::total_cmp);
+        LatencySummary {
+            n: s.len(),
+            p50_ms: percentile(&s, 0.50),
+            p95_ms: percentile(&s, 0.95),
+            p99_ms: percentile(&s, 0.99),
+            mean_ms: s.iter().sum::<f64>() / s.len() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_sample() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let l = LatencySummary::from_samples(&s);
+        assert_eq!(l.n, 100);
+        assert_eq!(l.p50_ms, 50.0);
+        assert_eq!(l.p95_ms, 95.0);
+        assert_eq!(l.p99_ms, 99.0);
+        assert!((l.mean_ms - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_the_report() {
+        // regression: the old serve report sorted with
+        // `partial_cmp(..).unwrap()`, so one NaN latency panicked it
+        let s = [3.0, f64::NAN, 1.0, 2.0];
+        let l = LatencySummary::from_samples(&s);
+        // sorted: [1, 2, 3, NaN]; truncated indices 1 and 2
+        assert_eq!(l.p50_ms, 2.0);
+        assert_eq!(l.p99_ms, 3.0);
+        assert!(l.mean_ms.is_nan()); // the mean honestly reports the NaN
+        // NaN sorts last, so it surfaces at the very top of the range
+        let mut two = [1.0, f64::NAN];
+        two.sort_by(f64::total_cmp);
+        assert!(percentile(&two, 1.0).is_nan());
+    }
+
+    #[test]
+    fn empty_sample_is_zeroed() {
+        let l = LatencySummary::from_samples(&[]);
+        assert_eq!(l.n, 0);
+        assert_eq!(l.p50_ms, 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

@@ -67,7 +67,8 @@ impl BlockCirculant {
         assert_eq!(x.len(), self.d_in());
         let b = self.b;
         // forward transforms of the n input blocks
-        let xf: Vec<Vec<C>> = (0..self.n).map(|j| fft::rfft(plan, &x[j * b..(j + 1) * b])).collect();
+        let xf: Vec<Vec<C>> =
+            (0..self.n).map(|j| fft::rfft(plan, &x[j * b..(j + 1) * b])).collect();
         let mut out = vec![0.0; self.d_out()];
         let block = |i: usize, out_i: &mut [f64]| {
             let mut acc = vec![(0.0, 0.0); b];

@@ -214,7 +214,8 @@ mod tests {
     #[test]
     fn radix2_matches_naive() {
         for n in [1usize, 2, 4, 8, 64, 256] {
-            let x: Vec<C> = (0..n).map(|i| ((i as f64 * 0.7).sin(), (i as f64 * 0.3).cos())).collect();
+            let x: Vec<C> =
+                (0..n).map(|i| ((i as f64 * 0.7).sin(), (i as f64 * 0.3).cos())).collect();
             let want = dft_naive(&x);
             let plan = Plan::new(n);
             let mut got = x.clone();
@@ -226,7 +227,8 @@ mod tests {
     #[test]
     fn bluestein_matches_naive() {
         for n in [3usize, 5, 6, 7, 12, 48, 100, 192, 320, 768] {
-            let x: Vec<C> = (0..n).map(|i| ((i as f64 * 1.1).sin(), (i as f64 * 0.5).sin())).collect();
+            let x: Vec<C> =
+                (0..n).map(|i| ((i as f64 * 1.1).sin(), (i as f64 * 0.5).sin())).collect();
             let want = dft_naive(&x);
             let plan = Plan::new(n);
             let mut got = x.clone();

@@ -34,7 +34,9 @@ fn splitmix64(state: &mut u64) -> u64 {
 impl Rng {
     pub fn seed(seed: u64) -> Self {
         let mut sm = seed;
-        Self { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)], spare: None }
+        let s =
+            [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Self { s, spare: None }
     }
 
     /// Derive an independent stream (for per-task / per-run seeding).

@@ -176,7 +176,8 @@ mod tests {
     fn reads_python_written_file() {
         // The python build path writes *_init.bin in the same format; if
         // artifacts exist, verify interop.
-        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/enc_tiny_init.bin");
+        let p =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/enc_tiny_init.bin");
         if !p.exists() {
             eprintln!("skipping: {} missing (run `make artifacts`)", p.display());
             return;

@@ -61,12 +61,15 @@ pub fn parse(text: &str) -> Result<Doc> {
             continue;
         }
         if let Some(name) = line.strip_prefix('[') {
-            let name = name.strip_suffix(']').with_context(|| format!("line {}: bad section", lineno + 1))?;
+            let name = name
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section", lineno + 1))?;
             section = name.trim().to_string();
             doc.entry(section.clone()).or_default();
             continue;
         }
-        let eq = line.find('=').with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let eq =
+            line.find('=').with_context(|| format!("line {}: expected key = value", lineno + 1))?;
         let key = line[..eq].trim().to_string();
         let val = parse_value(line[eq + 1..].trim())
             .with_context(|| format!("line {}: bad value", lineno + 1))?;
@@ -94,7 +97,8 @@ fn strip_comment(line: &str) -> &str {
 fn parse_value(s: &str) -> Result<Value> {
     if let Some(body) = s.strip_prefix('"') {
         let body = body.strip_suffix('"').context("unterminated string")?;
-        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\n", "\n").replace("\\\\", "\\")));
+        let unescaped = body.replace("\\\"", "\"").replace("\\n", "\n").replace("\\\\", "\\");
+        return Ok(Value::Str(unescaped));
     }
     if s == "true" {
         return Ok(Value::Bool(true));

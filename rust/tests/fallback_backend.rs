@@ -37,8 +37,16 @@ fn temp_ctx(tag: &str) -> Ctx {
 fn glue_run_roundtrip_on_fallback() {
     let ctx = temp_ctx("glue");
     assert_eq!(ctx.engine.backend_name(), "substrate");
-    let r = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 0, &quick_cfg(3), C3aScheme::Xavier)
-        .unwrap();
+    let r = run::glue_run(
+        &ctx,
+        "enc_tiny",
+        "c3a_d8",
+        GlueTask::Sst2,
+        0,
+        &quick_cfg(3),
+        C3aScheme::Xavier,
+    )
+    .unwrap();
     assert_eq!(r.losses.len(), 3);
     assert!(r.losses.iter().all(|l| l.is_finite()), "losses {:?}", r.losses);
     assert!(r.metric.is_finite() && (0.0..=1.0).contains(&r.metric), "metric {}", r.metric);

@@ -81,10 +81,13 @@ fn deterministic_given_seed() {
     let Some(dir) = artifacts_dir() else { return };
     let ctx = Ctx::open(&dir).unwrap();
     let cfg = quick_cfg(5e-2, 10);
-    let a = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 3, &cfg, C3aScheme::Xavier).unwrap();
-    let b = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 3, &cfg, C3aScheme::Xavier).unwrap();
+    let a = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 3, &cfg, C3aScheme::Xavier)
+        .unwrap();
+    let b = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 3, &cfg, C3aScheme::Xavier)
+        .unwrap();
     assert_eq!(a.losses, b.losses);
     assert_eq!(a.metric, b.metric);
-    let c = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 4, &cfg, C3aScheme::Xavier).unwrap();
+    let c = run::glue_run(&ctx, "enc_tiny", "c3a_d8", GlueTask::Sst2, 4, &cfg, C3aScheme::Xavier)
+        .unwrap();
     assert_ne!(a.losses, c.losses);
 }

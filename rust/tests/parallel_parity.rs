@@ -168,7 +168,8 @@ fn eval_session_reuses_trainable_upload() {
     let session = EvalSession::new(&engine, &spec, &init).unwrap();
 
     let (b, s) = (spec.batch, spec.seq);
-    let toks: Vec<i32> = (0..b * s).map(|i| if i % 5 == 0 { 1 } else { 3 + (i as i32 % 40) }).collect();
+    let toks: Vec<i32> =
+        (0..b * s).map(|i| if i % 5 == 0 { 1 } else { 3 + (i as i32 % 40) }).collect();
     let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
 
     let mut trainable = init.trainable.clone();

@@ -1,0 +1,267 @@
+//! Serving-subsystem regression tests: one shared frozen-backbone parse
+//! under many adapters, per-tenant cache isolation across hot-swaps, and
+//! the scheduler's dynamic-batching / backpressure contract.
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::session::build_init;
+use c3a::runtime::Engine;
+use c3a::serving::{
+    AdapterRegistry, Scheduler, SchedulerCfg, SubmitError, perturb_c3a_kernels as perturb,
+};
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::{Tensor, TensorMap};
+use std::path::Path;
+use std::time::Duration;
+
+const EVAL: &str = "enc_tiny__c3a_d8__cls__eval";
+
+/// Adapter template + (batch, seq) from the synthesized catalog.
+fn template(dir: &Path) -> (TensorMap, usize, usize) {
+    let manifest = catalog::synthesize(dir).unwrap();
+    let spec = manifest.artifact(EVAL).unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier).unwrap();
+    (init.trainable, spec.batch, spec.seq)
+}
+
+fn build_registry(
+    dir: &Path,
+    adapters: Vec<(String, TensorMap)>,
+) -> anyhow::Result<AdapterRegistry> {
+    let manifest = catalog::synthesize(dir)?;
+    let spec = manifest.artifact(EVAL)?.clone();
+    let meta = manifest.model("enc_tiny")?.clone();
+    let engine = Engine::for_manifest(&manifest)?;
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
+    let mut registry = AdapterRegistry::new(&engine, &spec, &init)?;
+    for (name, params) in adapters {
+        registry.register(&name, params)?;
+    }
+    Ok(registry)
+}
+
+fn toks(seed: i32, s: usize) -> Vec<i32> {
+    (0..s as i32).map(|j| if j == 0 { 1 } else { 4 + ((seed * 13 + j * 7) % 40) }).collect()
+}
+
+/// Full [b, s] batch tensor with one real row (rest PAD).
+fn one_row_batch(tokens: &[i32], b: usize, s: usize) -> Vec<Tensor> {
+    let mut t = vec![0i32; b * s];
+    let n = tokens.len().min(s);
+    t[..n].copy_from_slice(&tokens[..n]);
+    vec![Tensor::from_i32(vec![b, s], &t)]
+}
+
+#[test]
+fn registry_shares_one_frozen_parse_across_tenants() {
+    let dir = std::env::temp_dir().join("c3a_serving_registry");
+    let (adapter, b, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..3u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
+    let registry = build_registry(&dir, adapters).unwrap();
+    assert_eq!(registry.len(), 3);
+    // the acceptance invariant: 3 tenant states + the backbone handle all
+    // sit on ONE parse of the frozen backbone
+    assert_eq!(registry.shared_parse_refs(), 4, "tenants must share one frozen parse");
+    let batch = one_row_batch(&toks(1, s), b, s);
+    for name in registry.tenant_names() {
+        let (logits, shape, v) = registry.infer(&name, &batch).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(shape[0], b);
+        assert!(logits.iter().all(|x| x.is_finite()), "{name}: non-finite logits");
+        let _ = registry.infer(&name, &batch).unwrap();
+        assert_eq!(registry.upload_count(&name), Some(1), "{name}: fixed adapter re-uploaded");
+        let cs = registry.cache_stats(&name).unwrap();
+        assert!(cs.spectra_hits > 0, "{name}: second request must hit the spectra cache");
+    }
+}
+
+#[test]
+fn hot_swap_invalidates_only_the_swapped_tenant() {
+    let dir = std::env::temp_dir().join("c3a_serving_swap");
+    let (adapter, b, s) = template(&dir);
+    let adapters =
+        vec![("t0".to_string(), adapter.clone()), ("t1".to_string(), adapter.clone())];
+    let mut registry = build_registry(&dir, adapters).unwrap();
+    let batch = one_row_batch(&toks(3, s), b, s);
+
+    let (l0a, _, _) = registry.infer("t0", &batch).unwrap();
+    let (l1a, _, _) = registry.infer("t1", &batch).unwrap();
+    assert_eq!(l0a, l1a, "identical adapters over one backbone must agree bitwise");
+    let s0 = registry.cache_stats("t0").unwrap();
+    let s1 = registry.cache_stats("t1").unwrap();
+
+    let v = registry.hot_swap("t1", perturb(&adapter, 9, 0.5)).unwrap();
+    assert_eq!(v, 2);
+    assert!(registry.hot_swap("nope", adapter.clone()).is_err(), "unknown tenant must fail");
+
+    let (l0b, _, _) = registry.infer("t0", &batch).unwrap();
+    let (l1b, _, v1b) = registry.infer("t1", &batch).unwrap();
+    assert_eq!(v1b, 2);
+    assert_eq!(l0a, l0b, "untouched tenant's logits must be bitwise identical");
+    assert_ne!(l1a, l1b, "swapped tenant must serve the new adapter");
+
+    assert_eq!(registry.upload_count("t0"), Some(1));
+    assert_eq!(registry.upload_count("t1"), Some(2), "one upload per adapter version");
+    let s0b = registry.cache_stats("t0").unwrap();
+    let s1b = registry.cache_stats("t1").unwrap();
+    assert_eq!(s0b.spectra_misses, s0.spectra_misses, "t0 spectra must stay cached");
+    assert!(s0b.spectra_hits > s0.spectra_hits);
+    assert!(s1b.spectra_misses > s1.spectra_misses, "t1 spectra must recompute after swap");
+}
+
+#[test]
+fn scheduler_drains_partial_batches_under_slow_producer() {
+    let dir = std::env::temp_dir().join("c3a_serving_partial");
+    let (adapter, _b, s) = template(&dir);
+    let cfg = SchedulerCfg { queue_cap: 16, max_batch: 8, max_wait: Duration::from_millis(5) };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move || build_registry(&dir, vec![("t0".to_string(), adapter)])
+    })
+    .unwrap();
+    let handle = sched.handle();
+    // a slow producer: each request waits for its reply before the next is
+    // submitted, so the max-wait deadline must close every batch at size 1
+    for i in 0..4 {
+        let t = handle.submit("t0", toks(i, s)).unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.batch_size, 1, "slow producer must not stall for a full batch");
+        assert_eq!(r.tenant_version, 1);
+    }
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.batches, 4);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn try_submit_backpressure_then_queued_requests_drain_as_one_batch() {
+    let dir = std::env::temp_dir().join("c3a_serving_backpressure");
+    let (adapter, _b, s) = template(&dir);
+    // gate the registry build so the worker cannot drain while we fill the
+    // bounded queue — makes the backpressure assertion deterministic
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let cfg = SchedulerCfg { queue_cap: 4, max_batch: 4, max_wait: Duration::from_millis(1) };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move || {
+            let _ = gate_rx.recv();
+            build_registry(&dir, vec![("t0".to_string(), adapter)])
+        }
+    })
+    .unwrap();
+    let handle = sched.handle();
+    let mut tickets = Vec::new();
+    for i in 0..4 {
+        tickets.push(handle.try_submit("t0", toks(i, s)).expect("queue has room"));
+    }
+    match handle.try_submit("t0", toks(9, s)) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    gate_tx.send(()).unwrap();
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.batch_size, 4, "queued requests must drain as one dynamic batch");
+    }
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.batches, 1);
+}
+
+#[test]
+fn hot_swap_mid_stream_changes_predictions_for_exactly_the_swapped_tenant() {
+    let dir = std::env::temp_dir().join("c3a_serving_midstream");
+    let (adapter, _b, s) = template(&dir);
+    let names = ["ta", "tb", "tc"];
+    let adapters: Vec<(String, TensorMap)> =
+        names.iter().map(|n| (n.to_string(), adapter.clone())).collect();
+    let cfg = SchedulerCfg { queue_cap: 16, max_batch: 4, max_wait: Duration::from_millis(1) };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move || build_registry(&dir, adapters)
+    })
+    .unwrap();
+    let handle = sched.handle();
+    let q = toks(5, s);
+
+    let ask = |name: &str| handle.submit(name, q.clone()).unwrap().wait().unwrap();
+    let before: Vec<_> = names.iter().map(|n| ask(n)).collect();
+
+    let v = handle.hot_swap("tb", perturb(&adapter, 11, 0.5)).unwrap();
+    assert_eq!(v, 2);
+
+    let after: Vec<_> = names.iter().map(|n| ask(n)).collect();
+    assert_eq!(before[0].logits, after[0].logits, "ta must be untouched");
+    assert_eq!(before[2].logits, after[2].logits, "tc must be untouched");
+    assert_ne!(before[1].logits, after[1].logits, "tb must serve the swapped adapter");
+    assert_eq!(before[1].tenant_version, 1);
+    assert_eq!(after[1].tenant_version, 2);
+
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    let t = |n: &str| stats.tenant(n).unwrap();
+    assert_eq!(t("ta").uploads, 1);
+    assert_eq!(t("tc").uploads, 1);
+    assert_eq!(t("tb").uploads, 2, "one upload per adapter version");
+    assert_eq!(t("tb").version, 2);
+}
+
+#[test]
+fn three_tenants_interleaved_keep_one_upload_each() {
+    let dir = std::env::temp_dir().join("c3a_serving_interleave");
+    let (adapter, _b, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..3u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
+    let sched = Scheduler::spawn(SchedulerCfg::default(), {
+        let dir = dir.clone();
+        move || build_registry(&dir, adapters)
+    })
+    .unwrap();
+    let handle = sched.handle();
+    let mut tickets = Vec::new();
+    // interleave tenants so every request lands on a "cold" session slot —
+    // the adapter upload and spectra caches must still hold per tenant
+    for i in 0..30 {
+        let tenant = format!("t{}", i % 3);
+        tickets.push(handle.submit(&tenant, toks(i, s)).unwrap());
+    }
+    for t in tickets {
+        assert!(t.wait().unwrap().logits.iter().all(|x| x.is_finite()));
+    }
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 30);
+    assert_eq!(stats.tenants.len(), 3);
+    for t in &stats.tenants {
+        assert_eq!(t.requests, 10, "{}: round-robin must serve 10 each", t.name);
+        assert_eq!(t.uploads, 1, "{}: interleaving must not evict the upload", t.name);
+        assert!(t.spectra_hits > 0, "{}: spectra cache must hit across requests", t.name);
+    }
+}
+
+#[test]
+fn unknown_tenant_gets_an_error_reply_not_a_hang() {
+    let dir = std::env::temp_dir().join("c3a_serving_unknown");
+    let (adapter, _b, s) = template(&dir);
+    let sched = Scheduler::spawn(SchedulerCfg::default(), {
+        let dir = dir.clone();
+        move || build_registry(&dir, vec![("t0".to_string(), adapter)])
+    })
+    .unwrap();
+    let handle = sched.handle();
+    let err = handle.submit("ghost", toks(1, s)).unwrap().wait();
+    assert!(err.is_err(), "unknown tenant must surface an error");
+    let ok = handle.submit("t0", toks(1, s)).unwrap().wait();
+    assert!(ok.is_ok(), "the scheduler must keep serving after a failed request");
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.served, 1);
+}

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Perf tracking: the Table-1 operator bench plus the interp train/serve
-# bench (stateless-single-thread vs cached-multi-thread, serve-style
-# EvalSession loop).  Emits BENCH_interp.json at the repo root so CI can
-# follow the perf trajectory.
+# Perf tracking: the Table-1 operator bench, the interp train/serve bench
+# (stateless-single-thread vs cached-multi-thread), and the multi-adapter
+# serving bench (scheduler + registry at 1 vs N adapters).  Emits
+# BENCH_interp.json + BENCH_serve.json at the repo root so CI can follow
+# the perf trajectory.
 #
 # Usage: scripts/bench.sh [--smoke]
 #   --smoke   reduced dims/step counts for CI
@@ -20,6 +21,7 @@ done
 
 export CARGO_NET_OFFLINE=true
 export C3A_BENCH_OUT="$PWD/BENCH_interp.json"
+export C3A_BENCH_SERVE_OUT="$PWD/BENCH_serve.json"
 
 echo "== bench_operator =="
 # shellcheck disable=SC2086
@@ -29,5 +31,12 @@ echo "== bench_interp =="
 # shellcheck disable=SC2086
 cargo bench --bench bench_interp -- $SMOKE_ARG
 
+echo "== bench_serve =="
+# shellcheck disable=SC2086
+cargo bench --bench bench_serve -- $SMOKE_ARG
+
 echo "== BENCH_interp.json =="
 cat BENCH_interp.json
+
+echo "== BENCH_serve.json =="
+cat BENCH_serve.json
