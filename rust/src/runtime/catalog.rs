@@ -315,7 +315,17 @@ pub fn init_spec(name: &str, shape: &[usize]) -> InitSpec {
         return InitSpec::C3a { fan_in: n * b, fan_out: m * b };
     }
     if name == "vera.A" || name == "vera.B" {
-        return InitSpec::NormalFanin { fan: *shape.last().unwrap_or(&1), seed: Some(1234) };
+        // python draws A then B from ONE RandomState(1234) stream, so the
+        // two frozen projections are independent samples.  Seeding a fresh
+        // per-tensor stream with the same constant (the old behavior) made
+        // vera.B replay vera.A's stream bit for bit — the "independent"
+        // projections were perfectly correlated (B ∝ reshape(A)), which
+        // collapses the VeRA baseline's effective randomness.  Derive a
+        // distinct deterministic seed per name instead.
+        return InitSpec::NormalFanin {
+            fan: *shape.last().unwrap_or(&1),
+            seed: Some(1234 ^ crate::substrate::prng::fnv1a(name)),
+        };
     }
     InitSpec::Zeros
 }
@@ -770,6 +780,26 @@ mod tests {
         let lp = PeftParams { rank: 8, alpha: 16.0, ..pp("lora") };
         let nl = trainable_param_count(&cfg, &lp);
         assert_eq!(nl, cfg.layers * 2 * 2 * 8 * cfg.d);
+    }
+
+    /// Regression: vera.A and vera.B used to materialize from the SAME
+    /// seeded stream (fresh Rng::seed(1234) each), so B was a bit-exact
+    /// scaled replay of A.  The python reference draws both from one
+    /// continuing RandomState(1234) stream — independent values.
+    #[test]
+    fn vera_frozen_projections_are_decorrelated() {
+        use crate::peft::init::C3aScheme;
+        let mut rng = Rng::seed(0);
+        let (rv, d) = (64usize, 32usize);
+        let a = init_spec("vera.A", &[rv, d]).materialize(&[rv, d], &mut rng, C3aScheme::Xavier);
+        let b = init_spec("vera.B", &[d, rv]).materialize(&[d, rv], &mut rng, C3aScheme::Xavier);
+        let (av, bv) = (a.as_f32(), b.as_f32());
+        // identical streams are exactly proportional: a[0]/a[1] == b[0]/b[1]
+        let (ra, rb) = (av[0] / av[1], bv[0] / bv[1]);
+        assert!(
+            (ra - rb).abs() > 1e-6,
+            "vera.A/vera.B still share one random stream (ratio {ra} vs {rb})"
+        );
     }
 
     #[test]

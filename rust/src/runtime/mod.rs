@@ -22,6 +22,7 @@ pub mod backend;
 pub mod catalog;
 pub mod interp;
 pub mod manifest;
+pub mod refbackend;
 pub mod session;
 
 use backend::{Backend, Executor, ExecutorState};
@@ -49,13 +50,32 @@ impl Engine {
         Self::with_models(manifest.models.clone())
     }
 
+    /// Same, but over an explicit backend — the differential-testing hook
+    /// (e.g. the naive [`refbackend::RefBackend`] oracle), and the runtime
+    /// seam future PJRT bindings plug into for side-by-side cross-checks.
+    pub fn for_manifest_with_backend(
+        manifest: &Manifest,
+        backend: Box<dyn Backend>,
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self::assemble(manifest.models.clone(), backend, client))
+    }
+
     fn with_models(models: BTreeMap<String, ModelMeta>) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         #[cfg(feature = "pjrt")]
         let backend: Box<dyn Backend> = Box::new(backend::PjrtBackend::new(client.clone()));
         #[cfg(not(feature = "pjrt"))]
         let backend: Box<dyn Backend> = Box::new(backend::SubstrateBackend);
-        Ok(Engine { client, backend, models, cache: RefCell::new(HashMap::new()) })
+        Ok(Self::assemble(models, backend, client))
+    }
+
+    fn assemble(
+        models: BTreeMap<String, ModelMeta>,
+        backend: Box<dyn Backend>,
+        client: xla::PjRtClient,
+    ) -> Engine {
+        Engine { client, backend, models, cache: RefCell::new(HashMap::new()) }
     }
 
     /// Which backend executes artifacts ("substrate" or "pjrt").

@@ -1,0 +1,392 @@
+//! Reference oracle backend — a second, deliberately naive implementation
+//! of the [`Backend`](crate::runtime::backend::Backend) /
+//! [`Executor`](crate::runtime::backend::Executor) contract used to
+//! differentially test the substrate interpreter (and, once vendored, the
+//! real PJRT path): same artifact specs, same positional PJRT flattening,
+//! completely independent numerics.
+//!
+//! Everything the substrate optimizes, this backend refuses to: dense
+//! O(b²) circular convolution instead of FFT, direct-indexed scalar-loop
+//! matmuls, f64 end to end, straight-line AdamW, no kernel-spectra or
+//! parse caches, no thread pool (stateful execution degrades to the
+//! stateless path via the trait defaults).  `rust/tests/differential.rs`
+//! runs every tiny-catalog artifact through both backends and compares
+//! forward logits, losses, every recovered parameter gradient (plus
+//! central finite differences through [`RefExecutable::loss_f64`]), and
+//! multi-step train trajectories under documented error budgets.
+
+pub mod rmodel;
+pub mod rtape;
+
+use self::rmodel::{RGraph, RInput};
+use self::rtape::{RArr, RTape, RV};
+use crate::runtime::backend::{Backend, Executor};
+use crate::runtime::manifest::{ArtifactSpec, ModelMeta, Role};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.999;
+const EPS: f64 = 1e-8;
+
+/// Loads artifact specs into naive reference executors.
+pub struct RefBackend;
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load(&self, spec: &ArtifactSpec, meta: &ModelMeta) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(RefExecutable::new(spec, meta)?))
+    }
+}
+
+/// A loaded artifact on the reference backend.  Pure function of its
+/// positional inputs — nothing is cached between calls.
+pub struct RefExecutable {
+    spec: ArtifactSpec,
+    meta: ModelMeta,
+}
+
+struct RefParsed {
+    /// (name, value) in trainable_order
+    trainable: Vec<(String, RArr)>,
+    opt_m: Vec<RArr>,
+    opt_v: Vec<RArr>,
+    /// (name, value) for frozen + frozen_random
+    frozen: Vec<(String, RArr)>,
+    data_f64: BTreeMap<String, RArr>,
+    data_i32: BTreeMap<String, Vec<i32>>,
+    scalars: BTreeMap<String, f64>,
+}
+
+fn lit_to_rarr(lit: &xla::Literal, shape: &[usize]) -> Result<RArr> {
+    let data = lit.to_vec::<f32>()?;
+    if data.len() != shape.iter().product::<usize>().max(1) {
+        bail!("literal has {} elements, manifest shape {shape:?}", data.len());
+    }
+    Ok(RArr::new(shape.to_vec(), data.into_iter().map(|v| v as f64).collect()))
+}
+
+fn rarr_to_lit(a: &RArr) -> xla::Literal {
+    xla::Literal::from_f32(&a.shape, a.data.iter().map(|&v| v as f32).collect())
+}
+
+/// First strict maximum (naive; NaN entries never win).
+fn argmax_f64(row: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f64::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+impl RefExecutable {
+    pub fn new(spec: &ArtifactSpec, meta: &ModelMeta) -> Result<RefExecutable> {
+        match meta.kind.as_str() {
+            "encoder" | "decoder" | "mlp" => {}
+            other => bail!("{}: unsupported model kind {other}", spec.name),
+        }
+        match spec.peft.method.as_str() {
+            "full" | "head" | "bitfit" | "ia3" | "lora" | "dora" | "vera" | "boft" | "c3a" => {}
+            other => bail!("{}: unsupported PEFT method {other}", spec.name),
+        }
+        Ok(RefExecutable { spec: spec.clone(), meta: meta.clone() })
+    }
+
+    fn parse(&self, inputs: &[&xla::Literal]) -> Result<RefParsed> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest declares {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut p = RefParsed {
+            trainable: Vec::new(),
+            opt_m: Vec::new(),
+            opt_v: Vec::new(),
+            frozen: Vec::new(),
+            data_f64: BTreeMap::new(),
+            data_i32: BTreeMap::new(),
+            scalars: BTreeMap::new(),
+        };
+        for (inp, lit) in self.spec.inputs.iter().zip(inputs.iter()) {
+            match inp.role {
+                Role::Trainable => {
+                    p.trainable.push((inp.name.clone(), lit_to_rarr(lit, &inp.shape)?))
+                }
+                Role::OptM => p.opt_m.push(lit_to_rarr(lit, &inp.shape)?),
+                Role::OptV => p.opt_v.push(lit_to_rarr(lit, &inp.shape)?),
+                Role::Frozen | Role::FrozenRandom => {
+                    p.frozen.push((inp.name.clone(), lit_to_rarr(lit, &inp.shape)?))
+                }
+                Role::Data => {
+                    if inp.i32_dtype {
+                        p.data_i32.insert(inp.name.clone(), lit.to_vec::<i32>()?);
+                    } else {
+                        p.data_f64.insert(inp.name.clone(), lit_to_rarr(lit, &inp.shape)?);
+                    }
+                }
+                Role::Scalar => {
+                    p.scalars.insert(inp.name.clone(), lit.get_first_element::<f32>()? as f64);
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// Build tape leaves + the model input, run the forward pass.
+    fn forward(&self, tape: &mut RTape, parsed: &RefParsed) -> Result<(RV, Vec<RV>, RInput)> {
+        let mut params: BTreeMap<String, RV> = BTreeMap::new();
+        let mut t_ids = Vec::with_capacity(parsed.trainable.len());
+        for (name, arr) in &parsed.trainable {
+            let id = tape.leaf(arr.clone(), true);
+            t_ids.push(id);
+            params.insert(name.clone(), id);
+        }
+        for (name, arr) in &parsed.frozen {
+            let id = tape.leaf(arr.clone(), false);
+            params.insert(name.clone(), id);
+        }
+        let (b, s) = (self.spec.batch, self.spec.seq);
+        let input = RInput {
+            tokens: parsed.data_i32.get("data.tokens").cloned(),
+            x: parsed.data_f64.get("data.x").cloned(),
+            b,
+            s,
+        };
+        let mut graph = RGraph { tape, params: &params, meta: &self.meta, peft: &self.spec.peft };
+        let logits = graph.forward(&self.spec.head, &input)?;
+        Ok((logits, t_ids, input))
+    }
+
+    /// Compute (loss, metric, dL/dlogits) — mirrors python task_loss.
+    fn loss_head(
+        &self,
+        tape: &RTape,
+        logits: RV,
+        parsed: &RefParsed,
+        input: &RInput,
+    ) -> Result<(f64, f64, Vec<f64>)> {
+        let lv = tape.val(logits);
+        let head = self.spec.head.as_str();
+        let kind = self.meta.kind.as_str();
+        let (b, s) = (input.b, input.s);
+
+        if kind == "decoder" || head == "mlm" {
+            let mask =
+                parsed.data_f64.get("data.loss_mask").context("missing data.loss_mask")?;
+            let targets: Vec<i32> = if head == "mlm" {
+                parsed.data_i32.get("data.targets").context("missing data.targets")?.clone()
+            } else {
+                let toks = input.tokens.as_ref().context("missing data.tokens")?;
+                let mut t = vec![0i32; b * s];
+                for bi in 0..b {
+                    for si in 0..s.saturating_sub(1) {
+                        t[bi * s + si] = toks[bi * s + si + 1];
+                    }
+                }
+                t
+            };
+            let vcb = *lv.shape.last().unwrap();
+            let denom = mask.data.iter().sum::<f64>().max(1.0);
+            let mut loss = 0.0;
+            let mut correct = 0.0;
+            let mut dl = vec![0.0; lv.len()];
+            for pos in 0..b * s {
+                let m = mask.data[pos];
+                // masked (padding) positions skipped before target checks,
+                // same contract as the substrate loss head
+                if m == 0.0 {
+                    continue;
+                }
+                let row = &lv.data[pos * vcb..(pos + 1) * vcb];
+                let tgt = targets[pos].max(0) as usize;
+                if tgt >= vcb {
+                    bail!("target {tgt} out of vocab {vcb}");
+                }
+                let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let sum: f64 = row.iter().map(|&v| (v - mx).exp()).sum();
+                let lse = mx + sum.ln();
+                loss += m * (lse - row[tgt]);
+                if argmax_f64(row) == tgt {
+                    correct += m;
+                }
+                for j in 0..vcb {
+                    let p = (row[j] - lse).exp();
+                    let onehot = if j == tgt { 1.0 } else { 0.0 };
+                    dl[pos * vcb + j] = m * (p - onehot) / denom;
+                }
+            }
+            return Ok((loss / denom, correct, dl));
+        }
+
+        if head == "reg" {
+            let y = parsed.data_f64.get("data.y").context("missing data.y")?;
+            let w = lv.shape[1];
+            let mut loss = 0.0;
+            let mut pred_sum = 0.0;
+            let mut dl = vec![0.0; lv.len()];
+            for r in 0..b {
+                let pred = lv.data[r * w];
+                let diff = pred - y.data[r];
+                loss += diff * diff;
+                pred_sum += pred;
+                dl[r * w] = 2.0 * diff / b as f64;
+            }
+            return Ok((loss / b as f64, pred_sum, dl));
+        }
+
+        // classification (cls / vec / mlp): mean CE over [b, n_out]
+        let y = parsed.data_i32.get("data.y").context("missing data.y")?;
+        let w = lv.shape[1];
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        let mut dl = vec![0.0; lv.len()];
+        for r in 0..b {
+            let row = &lv.data[r * w..(r + 1) * w];
+            let tgt = y[r].max(0) as usize;
+            if tgt >= w {
+                bail!("label {tgt} out of range {w}");
+            }
+            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let sum: f64 = row.iter().map(|&v| (v - mx).exp()).sum();
+            let lse = mx + sum.ln();
+            loss += lse - row[tgt];
+            if argmax_f64(row) == tgt {
+                correct += 1.0;
+            }
+            for j in 0..w {
+                let p = (row[j] - lse).exp();
+                let onehot = if j == tgt { 1.0 } else { 0.0 };
+                dl[r * w + j] = (p - onehot) / b as f64;
+            }
+        }
+        Ok((loss / b as f64, correct, dl))
+    }
+
+    /// Execute the artifact on host literals (train or eval contract).
+    pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let parsed = self.parse(inputs)?;
+        if self.spec.kind == "train" {
+            self.train_step(parsed)
+        } else {
+            let mut tape = RTape::new();
+            let (logits, _t_ids, _input) = self.forward(&mut tape, &parsed)?;
+            Ok(vec![rarr_to_lit(tape.val(logits))])
+        }
+    }
+
+    fn train_step(&self, parsed: RefParsed) -> Result<Vec<xla::Literal>> {
+        let mut tape = RTape::new();
+        let (logits, t_ids, input) = self.forward(&mut tape, &parsed)?;
+        let (loss, metric, dlogits) = self.loss_head(&tape, logits, &parsed, &input)?;
+        let grads = tape.backward(logits, dlogits);
+
+        let step = *parsed.scalars.get("step").context("missing scalar step")?;
+        let lr = *parsed.scalars.get("lr").context("missing scalar lr")?;
+        let wd = parsed.scalars.get("wd").copied().unwrap_or(0.0);
+        let bc1 = 1.0 - BETA1.powf(step);
+        let bc2 = 1.0 - BETA2.powf(step);
+
+        let nt = parsed.trainable.len();
+        let mut new_t = Vec::with_capacity(nt);
+        let mut new_m = Vec::with_capacity(nt);
+        let mut new_v = Vec::with_capacity(nt);
+        for (i, (name, p)) in parsed.trainable.iter().enumerate() {
+            let zero;
+            let g: &Vec<f64> = match grads[t_ids[i]].as_ref() {
+                Some(g) => g,
+                None => {
+                    zero = vec![0.0; p.len()];
+                    &zero
+                }
+            };
+            let exempt = name.ends_with(".b")
+                || name.ends_with(".g")
+                || name.ends_with(".mag")
+                || name.ends_with(".lb")
+                || name.ends_with(".ld");
+            let decay = if exempt { 0.0 } else { wd };
+            let m0 = &parsed.opt_m[i];
+            let v0 = &parsed.opt_v[i];
+            let mut pn = RArr::zeros(p.shape.clone());
+            let mut mn = RArr::zeros(p.shape.clone());
+            let mut vn = RArr::zeros(p.shape.clone());
+            for e in 0..p.len() {
+                let gv = g[e];
+                let nm = BETA1 * m0.data[e] + (1.0 - BETA1) * gv;
+                let nv = BETA2 * v0.data[e] + (1.0 - BETA2) * gv * gv;
+                let upd = (nm / bc1) / ((nv / bc2).sqrt() + EPS);
+                pn.data[e] = p.data[e] - lr * (upd + decay * p.data[e]);
+                mn.data[e] = nm;
+                vn.data[e] = nv;
+            }
+            new_t.push(rarr_to_lit(&pn));
+            new_m.push(rarr_to_lit(&mn));
+            new_v.push(rarr_to_lit(&vn));
+        }
+        let mut outs = new_t;
+        outs.extend(new_m);
+        outs.extend(new_v);
+        outs.push(xla::Literal::scalar(loss as f32));
+        outs.push(xla::Literal::scalar(metric as f32));
+        Ok(outs)
+    }
+
+    /// Full-precision loss probe for finite-difference checks: runs the
+    /// forward + loss head in f64 and returns the scalar loss without
+    /// touching the optimizer (train artifacts only).
+    pub fn loss_f64(&self, inputs: &[&xla::Literal]) -> Result<f64> {
+        if self.spec.kind != "train" {
+            bail!("{}: loss_f64 needs a train artifact", self.spec.name);
+        }
+        let parsed = self.parse(inputs)?;
+        let mut tape = RTape::new();
+        let (logits, _t_ids, input) = self.forward(&mut tape, &parsed)?;
+        let (loss, _metric, _dl) = self.loss_head(&tape, logits, &parsed, &input)?;
+        Ok(loss)
+    }
+
+    /// Full-precision analytic gradients: (loss, metric, grads by
+    /// trainable name).  The differential harness compares these against
+    /// the substrate's gradients (recovered from the AdamW first moment)
+    /// and against central finite differences of [`RefExecutable::loss_f64`].
+    pub fn loss_and_grads(
+        &self,
+        inputs: &[&xla::Literal],
+    ) -> Result<(f64, f64, BTreeMap<String, Vec<f64>>)> {
+        if self.spec.kind != "train" {
+            bail!("{}: loss_and_grads needs a train artifact", self.spec.name);
+        }
+        let parsed = self.parse(inputs)?;
+        let mut tape = RTape::new();
+        let (logits, t_ids, input) = self.forward(&mut tape, &parsed)?;
+        let (loss, metric, dlogits) = self.loss_head(&tape, logits, &parsed, &input)?;
+        let grads = tape.backward(logits, dlogits);
+        let mut out = BTreeMap::new();
+        for (i, (name, p)) in parsed.trainable.iter().enumerate() {
+            let g = match grads[t_ids[i]].as_ref() {
+                Some(g) => g.clone(),
+                None => vec![0.0; p.len()],
+            };
+            out.insert(name.clone(), g);
+        }
+        Ok((loss, metric, out))
+    }
+}
+
+impl Executor for RefExecutable {
+    fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        RefExecutable::execute(self, inputs)
+    }
+    // prepare/parse_frozen/prepare_shared/execute_stateful use the trait
+    // defaults: the oracle persists nothing, by design.
+}

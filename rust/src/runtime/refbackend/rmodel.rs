@@ -1,0 +1,334 @@
+//! Reference-oracle forward graphs — a second, independent Rust port of
+//! python/compile/model.py on the naive f64 tape ([`super::rtape`]).
+//!
+//! Structurally mirrors `runtime::interp::model` (it must: both implement
+//! the same paper models) but shares none of its numeric code: f64
+//! throughout, dense circular convolution, no spectra cache, no threads.
+
+use super::rtape::{RAct, RArr, RTape, RV};
+use crate::runtime::manifest::{ModelMeta, PeftParams};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+const NEG: f64 = -1e9;
+
+/// Model inputs for one batch (exactly one of `tokens` / `x` per kind).
+pub struct RInput {
+    /// [b*s] token ids (tokens mode / decoder)
+    pub tokens: Option<Vec<i32>>,
+    /// [b,s,patch] patch vectors (vec mode) or [b,in] mlp features
+    pub x: Option<RArr>,
+    pub b: usize,
+    pub s: usize,
+}
+
+pub struct RGraph<'a> {
+    pub tape: &'a mut RTape,
+    pub params: &'a BTreeMap<String, RV>,
+    pub meta: &'a ModelMeta,
+    pub peft: &'a PeftParams,
+}
+
+impl<'a> RGraph<'a> {
+    fn p(&self, name: &str) -> Result<RV> {
+        self.params.get(name).copied().with_context(|| format!("missing parameter {name}"))
+    }
+
+    /// y = x @ w0 (+ bias) + delta(x) for the adapted q/v projections.
+    fn adapted_linear(&mut self, key: &str, x: RV, w0: RV, bias: Option<RV>) -> Result<RV> {
+        let method = self.peft.method.clone();
+        let mut y = if method == "dora" {
+            let a = self.p(&format!("{key}.lora.A"))?; // [r, d_in]
+            let bmat = self.p(&format!("{key}.lora.B"))?; // [d_out, r]
+            let scale = self.peft.alpha / self.peft.rank.max(1) as f64;
+            let ba = self.tape.matmul(bmat, a, false); // [d_out, d_in]
+            let bat = self.tape.transpose2(ba); // [d_in, d_out]
+            let delta = self.tape.scale(bat, scale);
+            let w = self.tape.add(w0, delta);
+            let w2 = self.tape.mul(w, w);
+            let colsum = self.tape.sum_axis0(w2); // [d_out]
+            let inv = self.tape.rsqrt(colsum, 1e-6);
+            let wn = self.tape.mul(w, inv);
+            let mag = self.p(&format!("{key}.dora.mag"))?;
+            let wm = self.tape.mul(wn, mag);
+            self.tape.matmul(x, wm, false)
+        } else {
+            let mut y = self.tape.matmul(x, w0, false);
+            match method.as_str() {
+                "lora" => {
+                    let a = self.p(&format!("{key}.lora.A"))?;
+                    let bmat = self.p(&format!("{key}.lora.B"))?;
+                    let scale = self.peft.alpha / self.peft.rank.max(1) as f64;
+                    let xa = self.tape.matmul(x, a, true);
+                    let xab = self.tape.matmul(xa, bmat, true);
+                    let delta = self.tape.scale(xab, scale);
+                    y = self.tape.add(y, delta);
+                }
+                "vera" => {
+                    let a = self.p("vera.A")?;
+                    let bmat = self.p("vera.B")?;
+                    let ld = self.p(&format!("{key}.vera.ld"))?;
+                    let lb = self.p(&format!("{key}.vera.lb"))?;
+                    let xa = self.tape.matmul(x, a, true);
+                    let xad = self.tape.mul(xa, ld);
+                    let xb = self.tape.matmul(xad, bmat, true);
+                    let delta = self.tape.mul(xb, lb);
+                    y = self.tape.add(y, delta);
+                }
+                "boft" => {
+                    // truncated exp(skew), order 4 (identity at init)
+                    let s = self.p(&format!("{key}.boft.skew"))?; // [nb,bb,bb]
+                    let bb = self.tape.val(s).shape[2];
+                    let st = self.tape.transpose2(s);
+                    let diff = self.tape.sub(s, st);
+                    let skew = self.tape.scale(diff, 0.5);
+                    let s2 = self.tape.matmul(skew, skew, false);
+                    let s3 = self.tape.matmul(s2, skew, false);
+                    let s4 = self.tape.matmul(s2, s2, false);
+                    let mut eye = RArr::zeros(vec![1, bb, bb]);
+                    for i in 0..bb {
+                        eye.data[i * bb + i] = 1.0;
+                    }
+                    let eye = self.tape.leaf(eye, false);
+                    let t2 = self.tape.scale(s2, 0.5);
+                    let t3 = self.tape.scale(s3, 1.0 / 6.0);
+                    let t4 = self.tape.scale(s4, 1.0 / 24.0);
+                    let mut r = self.tape.add(eye, skew);
+                    r = self.tape.add(r, t2);
+                    r = self.tape.add(r, t3);
+                    r = self.tape.add(r, t4);
+                    y = self.tape.block_rotate(y, r);
+                }
+                "c3a" => {
+                    let w = self.p(&format!("{key}.c3a.w"))?;
+                    let delta = self.tape.circ_conv(x, w);
+                    y = self.tape.add(y, delta);
+                }
+                "full" | "head" | "bitfit" | "ia3" => {}
+                other => bail!("unsupported PEFT method {other} in reference backend"),
+            }
+            y
+        };
+        if let Some(b) = bias {
+            y = self.tape.add(y, b);
+        }
+        Ok(y)
+    }
+
+    fn attention(&mut self, i: usize, x: RV, mask: RV) -> Result<RV> {
+        let l = format!("L{i}");
+        let enc = self.meta.kind != "decoder";
+        let heads = self.meta.heads;
+        let hd = self.meta.d / heads;
+        let wq = self.p(&format!("{l}.attn.wq"))?;
+        let wk = self.p(&format!("{l}.attn.wk"))?;
+        let wv = self.p(&format!("{l}.attn.wv"))?;
+        let wo = self.p(&format!("{l}.attn.wo"))?;
+        let bias = |g: &Self, proj: &str| -> Result<Option<RV>> {
+            if enc {
+                Ok(Some(g.p(&format!("{l}.attn.b{proj}"))?))
+            } else {
+                Ok(None)
+            }
+        };
+        let bq = bias(self, "q")?;
+        let bv = bias(self, "v")?;
+        let q = self.adapted_linear(&format!("{l}.attn.q"), x, wq, bq)?;
+        let mut k = self.tape.matmul(x, wk, false);
+        if enc {
+            let bk = self.p(&format!("{l}.attn.bk"))?;
+            k = self.tape.add(k, bk);
+        }
+        let mut v = self.adapted_linear(&format!("{l}.attn.v"), x, wv, bv)?;
+        if self.peft.method == "ia3" {
+            let lk = self.p(&format!("{l}.ia3.lk"))?;
+            let lv = self.p(&format!("{l}.ia3.lv"))?;
+            k = self.tape.mul(k, lk);
+            v = self.tape.mul(v, lv);
+        }
+        let qh = self.tape.split_heads(q, heads);
+        let kh = self.tape.split_heads(k, heads);
+        let vh = self.tape.split_heads(v, heads);
+        let att = self.tape.matmul(qh, kh, true);
+        let att = self.tape.scale(att, 1.0 / (hd as f64).sqrt());
+        let att = self.tape.add(att, mask);
+        let att = self.tape.softmax_last(att);
+        let out = self.tape.matmul(att, vh, false);
+        let merged = self.tape.merge_heads(out);
+        let mut o = self.tape.matmul(merged, wo, false);
+        if enc {
+            let bo = self.p(&format!("{l}.attn.bo"))?;
+            o = self.tape.add(o, bo);
+        }
+        Ok(o)
+    }
+
+    fn ffn(&mut self, i: usize, x: RV) -> Result<RV> {
+        let l = format!("L{i}");
+        if self.meta.kind != "decoder" {
+            let w1 = self.p(&format!("{l}.mlp.w1"))?;
+            let b1 = self.p(&format!("{l}.mlp.b1"))?;
+            let xw = self.tape.matmul(x, w1, false);
+            let xb = self.tape.add(xw, b1);
+            let mut h = self.tape.activation(xb, RAct::Gelu);
+            if self.peft.method == "ia3" {
+                let lff = self.p(&format!("{l}.ia3.lff"))?;
+                h = self.tape.mul(h, lff);
+            }
+            let w2 = self.p(&format!("{l}.mlp.w2"))?;
+            let b2 = self.p(&format!("{l}.mlp.b2"))?;
+            let hw = self.tape.matmul(h, w2, false);
+            Ok(self.tape.add(hw, b2))
+        } else {
+            let wg = self.p(&format!("{l}.mlp.wg"))?;
+            let wu = self.p(&format!("{l}.mlp.wu"))?;
+            let wd = self.p(&format!("{l}.mlp.wd"))?;
+            let xg = self.tape.matmul(x, wg, false);
+            let g = self.tape.activation(xg, RAct::Silu);
+            let u = self.tape.matmul(x, wu, false);
+            let mut h = self.tape.mul(g, u);
+            if self.peft.method == "ia3" {
+                let lff = self.p(&format!("{l}.ia3.lff"))?;
+                h = self.tape.mul(h, lff);
+            }
+            Ok(self.tape.matmul(h, wd, false))
+        }
+    }
+
+    fn encoder_fwd(&mut self, input: &RInput, voc_head: bool) -> Result<RV> {
+        let (b, s) = (input.b, input.s);
+        let mut pad = vec![false; b * s];
+        let mut x = if self.meta.input_mode == "vec" {
+            let xv = input.x.as_ref().context("vec-mode encoder needs data.x")?;
+            let xleaf = self.tape.leaf(xv.clone(), false);
+            let patch = self.p("embed.patch")?;
+            self.tape.matmul(xleaf, patch, false)
+        } else {
+            let toks = input.tokens.as_ref().context("token encoder needs data.tokens")?;
+            for (i, &t) in toks.iter().enumerate() {
+                pad[i] = t == 0;
+            }
+            let ids: Vec<usize> = toks.iter().map(|&t| t.max(0) as usize).collect();
+            let tok = self.p("embed.tok")?;
+            self.tape.gather(tok, &ids, &[b, s])
+        };
+        let pos = self.p("embed.pos")?;
+        x = self.tape.add(x, pos);
+        let mut mask = RArr::zeros(vec![b, 1, 1, s]);
+        for bi in 0..b {
+            for si in 0..s {
+                if pad[bi * s + si] {
+                    mask.data[bi * s + si] = NEG;
+                }
+            }
+        }
+        let mask = self.tape.leaf(mask, false);
+        for i in 0..self.meta.layers {
+            let att = self.attention(i, x, mask)?;
+            let res = self.tape.add(x, att);
+            let g1 = self.p(&format!("L{i}.ln1.g"))?;
+            let b1 = self.p(&format!("L{i}.ln1.b"))?;
+            x = self.tape.layernorm(res, g1, b1);
+            let ff = self.ffn(i, x)?;
+            let res2 = self.tape.add(x, ff);
+            let g2 = self.p(&format!("L{i}.ln2.g"))?;
+            let b2 = self.p(&format!("L{i}.ln2.b"))?;
+            x = self.tape.layernorm(res2, g2, b2);
+        }
+        let gf = self.p("final_ln.g")?;
+        let bf = self.p("final_ln.b")?;
+        x = self.tape.layernorm(x, gf, bf);
+        if voc_head {
+            let tok = self.p("embed.tok")?;
+            Ok(self.tape.matmul(x, tok, true))
+        } else {
+            let pooled = self.tape.slice_first(x);
+            let hw = self.p("head.w")?;
+            let hb = self.p("head.b")?;
+            let lw = self.tape.matmul(pooled, hw, false);
+            Ok(self.tape.add(lw, hb))
+        }
+    }
+
+    fn decoder_fwd(&mut self, input: &RInput) -> Result<RV> {
+        let (b, s) = (input.b, input.s);
+        let toks = input.tokens.as_ref().context("decoder needs data.tokens")?;
+        let ids: Vec<usize> = toks.iter().map(|&t| t.max(0) as usize).collect();
+        let tok = self.p("embed.tok")?;
+        let mut x = self.tape.gather(tok, &ids, &[b, s]);
+        let pos = self.p("embed.pos")?;
+        x = self.tape.add(x, pos);
+        let mut mask = RArr::zeros(vec![b, 1, s, s]);
+        for bi in 0..b {
+            for qi in 0..s {
+                for ki in 0..s {
+                    let mut v = 0.0;
+                    if ki > qi {
+                        v += NEG;
+                    }
+                    if toks[bi * s + ki] == 0 {
+                        v += NEG;
+                    }
+                    mask.data[(bi * s + qi) * s + ki] = v;
+                }
+            }
+        }
+        let mask = self.tape.leaf(mask, false);
+        for i in 0..self.meta.layers {
+            let g1 = self.p(&format!("L{i}.rms1.g"))?;
+            let h = self.tape.rmsnorm(x, g1);
+            let att = self.attention(i, h, mask)?;
+            x = self.tape.add(x, att);
+            let g2 = self.p(&format!("L{i}.rms2.g"))?;
+            let h2 = self.tape.rmsnorm(x, g2);
+            let ff = self.ffn(i, h2)?;
+            x = self.tape.add(x, ff);
+        }
+        let gf = self.p("final_rms.g")?;
+        x = self.tape.rmsnorm(x, gf);
+        Ok(self.tape.matmul(x, tok, true))
+    }
+
+    fn mlp_fwd(&mut self, input: &RInput) -> Result<RV> {
+        let xv = input.x.as_ref().context("mlp needs data.x")?;
+        let x = self.tape.leaf(xv.clone(), false);
+        let w0 = self.p("mlp.w0")?;
+        let b0 = self.p("mlp.b0")?;
+        let xw = self.tape.matmul(x, w0, false);
+        let xb = self.tape.add(xw, b0);
+        let h = self.tape.activation(xb, RAct::Relu);
+        let mid = match self.peft.mlp_mid.as_str() {
+            "dense" => {
+                let w1 = self.p("mlp.w1")?;
+                let b1 = self.p("mlp.b1")?;
+                let hw = self.tape.matmul(h, w1, false);
+                self.tape.add(hw, b1)
+            }
+            "lora" => {
+                let a = self.p("mlp.mid.lora.A")?;
+                let bmat = self.p("mlp.mid.lora.B")?;
+                let ha = self.tape.matmul(h, a, true);
+                self.tape.matmul(ha, bmat, true)
+            }
+            "c3a" => {
+                let w = self.p("mlp.mid.c3a.w")?;
+                self.tape.circ_conv(h, w)
+            }
+            other => bail!("unknown mlp_mid {other}"),
+        };
+        let h2 = self.tape.activation(mid, RAct::Relu);
+        let w2 = self.p("mlp.w2")?;
+        let b2 = self.p("mlp.b2")?;
+        let lw = self.tape.matmul(h2, w2, false);
+        Ok(self.tape.add(lw, b2))
+    }
+
+    /// Dispatch on (model kind, artifact head); returns the logits node.
+    pub fn forward(&mut self, head: &str, input: &RInput) -> Result<RV> {
+        match self.meta.kind.as_str() {
+            "mlp" => self.mlp_fwd(input),
+            "decoder" => self.decoder_fwd(input),
+            _ => self.encoder_fwd(input, head == "mlm"),
+        }
+    }
+}

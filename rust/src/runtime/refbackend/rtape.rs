@@ -1,0 +1,1137 @@
+//! Naive f64 reverse-mode tape — the reference oracle's numeric core.
+//!
+//! Deliberately the *opposite* of `runtime::interp::ad`: every op is a
+//! textbook scalar loop in f64 — dense O(b²) circular convolution instead
+//! of FFT, direct-indexed matmuls instead of blocked/threaded kernels, no
+//! spectra caches, no thread pool, no zero-skipping fast paths.  Sharing
+//! no hot-path code with the substrate is the point: a numerics bug has to
+//! be made twice, independently, to survive the differential harness
+//! (`rust/tests/differential.rs`).
+
+/// Dense row-major f64 array.  Scalars have an empty shape.
+#[derive(Clone, Debug)]
+pub struct RArr {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl RArr {
+    pub fn new(shape: Vec<usize>, data: Vec<f64>) -> RArr {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        RArr { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> RArr {
+        let n = shape.iter().product::<usize>().max(1);
+        RArr { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Product of all dims but the last (row count for last-dim ops).
+    fn rows(&self) -> usize {
+        let w = self.width();
+        if w == 0 {
+            0
+        } else {
+            self.data.len() / w
+        }
+    }
+
+    /// Last dim.
+    fn width(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+}
+
+/// Node id on the reference tape.
+pub type RV = usize;
+
+#[derive(Clone, Copy, Debug)]
+pub enum RAct {
+    Gelu,
+    Silu,
+    Relu,
+}
+
+enum ROp {
+    Leaf,
+    Add(RV, RV),
+    Mul(RV, RV),
+    Scale(RV, f64),
+    Matmul { a: RV, b: RV, trans_b: bool },
+    Activation { x: RV, kind: RAct },
+    SoftmaxLast(RV),
+    LayerNorm { x: RV, g: RV, b: RV },
+    RmsNorm { x: RV, g: RV },
+    Gather { table: RV, ids: Vec<usize> },
+    SliceFirst(RV),
+    SplitHeads { x: RV, heads: usize },
+    MergeHeads(RV),
+    Transpose2(RV),
+    SumAxis0(RV),
+    Rsqrt { x: RV, eps: f64 },
+    Reshape(RV),
+    /// Block-circular convolution by the direct O(b²) definition.
+    CircConv { x: RV, w: RV },
+    BlockRotate { x: RV, r: RV },
+}
+
+struct RNode {
+    val: RArr,
+    op: ROp,
+    needs: bool,
+}
+
+pub struct RTape {
+    nodes: Vec<RNode>,
+}
+
+// ---------------------------------------------------------------------------
+// Naive helpers
+// ---------------------------------------------------------------------------
+
+/// Numpy-style (align-right) broadcast shape of two shapes.
+fn bshape(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        assert!(da == db || da == 1 || db == 1, "broadcast mismatch {a:?} vs {b:?}");
+        out[i] = da.max(db);
+    }
+    out
+}
+
+/// Source element index of `shape` for output linear index `o` of
+/// `out_shape` (align-right; broadcast dims contribute 0).  Recomputed
+/// per element by plain div/mod — slow and obviously correct.
+fn src_idx(out_shape: &[usize], o: usize, shape: &[usize]) -> usize {
+    let rank = out_shape.len();
+    let off = rank - shape.len();
+    let mut rem = o;
+    let mut idx = 0usize;
+    let mut stride = 1usize;
+    for d in (0..rank).rev() {
+        let c = rem % out_shape[d];
+        rem /= out_shape[d];
+        if d >= off {
+            let sd = shape[d - off];
+            if sd != 1 {
+                idx += c * stride;
+            }
+            stride *= sd;
+        }
+    }
+    idx
+}
+
+/// Visit every element of the broadcast result: f(out_idx, a_idx, b_idx).
+fn bcast_each(
+    out_shape: &[usize],
+    a: &[usize],
+    b: &[usize],
+    mut f: impl FnMut(usize, usize, usize),
+) {
+    let n = out_shape.iter().product::<usize>().max(1);
+    for o in 0..n {
+        f(o, src_idx(out_shape, o, a), src_idx(out_shape, o, b));
+    }
+}
+
+/// C[m,n] = A[m,k] · B_eff[k,n] where B_eff indexes `b` directly
+/// (`trans_b`: b is stored [n,k]).  Triple scalar loop, no copies.
+fn mm_naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, trans_b: bool) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                let bv = if trans_b { b[j * k + p] } else { b[p * n + j] };
+                acc += a[i * k + p] * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+fn act_fwd(kind: RAct, x: f64) -> f64 {
+    match kind {
+        RAct::Relu => x.max(0.0),
+        RAct::Silu => x / (1.0 + (-x).exp()),
+        RAct::Gelu => {
+            // tanh approximation (jax.nn.gelu default)
+            let c = (2.0f64 / std::f64::consts::PI).sqrt();
+            let u = c * (x + 0.044715 * x * x * x);
+            0.5 * x * (1.0 + u.tanh())
+        }
+    }
+}
+
+fn act_bwd(kind: RAct, x: f64) -> f64 {
+    match kind {
+        RAct::Relu => {
+            if x > 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        RAct::Silu => {
+            let s = 1.0 / (1.0 + (-x).exp());
+            s * (1.0 + x * (1.0 - s))
+        }
+        RAct::Gelu => {
+            let c = (2.0f64 / std::f64::consts::PI).sqrt();
+            let u = c * (x + 0.044715 * x * x * x);
+            let t = u.tanh();
+            let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+            0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tape
+// ---------------------------------------------------------------------------
+
+impl Default for RTape {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RTape {
+    pub fn new() -> RTape {
+        RTape { nodes: Vec::new() }
+    }
+
+    pub fn leaf(&mut self, arr: RArr, needs: bool) -> RV {
+        self.nodes.push(RNode { val: arr, op: ROp::Leaf, needs });
+        self.nodes.len() - 1
+    }
+
+    pub fn val(&self, v: RV) -> &RArr {
+        &self.nodes[v].val
+    }
+
+    fn needs(&self, v: RV) -> bool {
+        self.nodes[v].needs
+    }
+
+    fn push(&mut self, val: RArr, op: ROp, needs: bool) -> RV {
+        self.nodes.push(RNode { val, op, needs });
+        self.nodes.len() - 1
+    }
+
+    // -- binary broadcast ops ------------------------------------------------
+
+    pub fn add(&mut self, a: RV, b: RV) -> RV {
+        let out = {
+            let (va, vb) = (self.val(a), self.val(b));
+            let shape = bshape(&va.shape, &vb.shape);
+            let mut out = RArr::zeros(shape.clone());
+            bcast_each(&shape, &va.shape, &vb.shape, |o, ia, ib| {
+                out.data[o] = va.data[ia] + vb.data[ib];
+            });
+            out
+        };
+        let needs = self.needs(a) || self.needs(b);
+        self.push(out, ROp::Add(a, b), needs)
+    }
+
+    pub fn mul(&mut self, a: RV, b: RV) -> RV {
+        let out = {
+            let (va, vb) = (self.val(a), self.val(b));
+            let shape = bshape(&va.shape, &vb.shape);
+            let mut out = RArr::zeros(shape.clone());
+            bcast_each(&shape, &va.shape, &vb.shape, |o, ia, ib| {
+                out.data[o] = va.data[ia] * vb.data[ib];
+            });
+            out
+        };
+        let needs = self.needs(a) || self.needs(b);
+        self.push(out, ROp::Mul(a, b), needs)
+    }
+
+    pub fn scale(&mut self, a: RV, c: f64) -> RV {
+        let mut out = self.val(a).clone();
+        for v in out.data.iter_mut() {
+            *v *= c;
+        }
+        let needs = self.needs(a);
+        self.push(out, ROp::Scale(a, c), needs)
+    }
+
+    /// a - b (broadcast).
+    pub fn sub(&mut self, a: RV, b: RV) -> RV {
+        let nb = self.scale(b, -1.0);
+        self.add(a, nb)
+    }
+
+    // -- matmul --------------------------------------------------------------
+
+    /// Batched matmul over the last two dims of `a` (same contract as the
+    /// substrate tape: rank-2 rhs is a shared weight, higher-rank rhs is a
+    /// per-batch matmul; `trans_b` means the rhs is stored transposed).
+    pub fn matmul(&mut self, a: RV, b: RV, trans_b: bool) -> RV {
+        let out = {
+            let (va, vb) = (self.val(a), self.val(b));
+            let ra = va.shape.len();
+            assert!(ra >= 2, "matmul lhs rank {ra}");
+            let k = va.shape[ra - 1];
+            if vb.shape.len() == 2 {
+                let (bk, bn) = if trans_b {
+                    (vb.shape[1], vb.shape[0])
+                } else {
+                    (vb.shape[0], vb.shape[1])
+                };
+                assert_eq!(k, bk, "matmul inner dim {k} vs {bk}");
+                let rows = va.data.len() / k;
+                let data = mm_naive(&va.data, &vb.data, rows, k, bn, trans_b);
+                let mut shape = va.shape.clone();
+                *shape.last_mut().unwrap() = bn;
+                RArr::new(shape, data)
+            } else {
+                assert_eq!(vb.shape.len(), ra, "batched matmul rank mismatch");
+                assert_eq!(&vb.shape[..ra - 2], &va.shape[..ra - 2], "batch dims differ");
+                let m = va.shape[ra - 2];
+                let (bm, bn) = (vb.shape[ra - 2], vb.shape[ra - 1]);
+                let (bk, n) = if trans_b { (bn, bm) } else { (bm, bn) };
+                assert_eq!(k, bk, "batched matmul inner dim {k} vs {bk}");
+                let batches: usize = va.shape[..ra - 2].iter().product();
+                let mut data = vec![0.0; batches * m * n];
+                for t in 0..batches {
+                    let asl = &va.data[t * m * k..(t + 1) * m * k];
+                    let bsl = &vb.data[t * bm * bn..(t + 1) * bm * bn];
+                    let c = mm_naive(asl, bsl, m, k, n, trans_b);
+                    data[t * m * n..(t + 1) * m * n].copy_from_slice(&c);
+                }
+                let mut shape = va.shape.clone();
+                shape[ra - 1] = n;
+                RArr::new(shape, data)
+            }
+        };
+        let needs = self.needs(a) || self.needs(b);
+        self.push(out, ROp::Matmul { a, b, trans_b }, needs)
+    }
+
+    // -- unary / fused ops ---------------------------------------------------
+
+    pub fn activation(&mut self, x: RV, kind: RAct) -> RV {
+        let vx = self.val(x);
+        let data = vx.data.iter().map(|&v| act_fwd(kind, v)).collect();
+        let out = RArr::new(vx.shape.clone(), data);
+        let needs = self.needs(x);
+        self.push(out, ROp::Activation { x, kind }, needs)
+    }
+
+    pub fn softmax_last(&mut self, x: RV) -> RV {
+        let vx = self.val(x);
+        let w = vx.width();
+        let mut data = vx.data.clone();
+        for row in data.chunks_mut(w) {
+            let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        let out = RArr::new(vx.shape.clone(), data);
+        let needs = self.needs(x);
+        self.push(out, ROp::SoftmaxLast(x), needs)
+    }
+
+    pub fn layernorm(&mut self, x: RV, g: RV, b: RV) -> RV {
+        let out = {
+            let (vx, vg, vb) = (self.val(x), self.val(g), self.val(b));
+            let d = vx.width();
+            assert_eq!(vg.data.len(), d);
+            assert_eq!(vb.data.len(), d);
+            let mut data = vec![0.0; vx.data.len()];
+            for (r, row) in vx.data.chunks(d).enumerate() {
+                let mu = row.iter().sum::<f64>() / d as f64;
+                let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+                let inv = 1.0 / (var + 1e-5).sqrt();
+                for j in 0..d {
+                    data[r * d + j] = (row[j] - mu) * inv * vg.data[j] + vb.data[j];
+                }
+            }
+            RArr::new(vx.shape.clone(), data)
+        };
+        let needs = self.needs(x) || self.needs(g) || self.needs(b);
+        self.push(out, ROp::LayerNorm { x, g, b }, needs)
+    }
+
+    pub fn rmsnorm(&mut self, x: RV, g: RV) -> RV {
+        let out = {
+            let (vx, vg) = (self.val(x), self.val(g));
+            let d = vx.width();
+            assert_eq!(vg.data.len(), d);
+            let mut data = vec![0.0; vx.data.len()];
+            for (r, row) in vx.data.chunks(d).enumerate() {
+                let ms = row.iter().map(|&v| v * v).sum::<f64>() / d as f64;
+                let inv = 1.0 / (ms + 1e-6).sqrt();
+                for j in 0..d {
+                    data[r * d + j] = row[j] * inv * vg.data[j];
+                }
+            }
+            RArr::new(vx.shape.clone(), data)
+        };
+        let needs = self.needs(x) || self.needs(g);
+        self.push(out, ROp::RmsNorm { x, g }, needs)
+    }
+
+    /// Row gather: out[r, :] = table[ids[r], :]; result [prefix.., cols].
+    pub fn gather(&mut self, table: RV, ids: &[usize], prefix: &[usize]) -> RV {
+        let out = {
+            let vt = self.val(table);
+            assert_eq!(vt.shape.len(), 2);
+            assert_eq!(prefix.iter().product::<usize>().max(1), ids.len());
+            let (rows_v, cols) = (vt.shape[0], vt.shape[1]);
+            let mut data = vec![0.0; ids.len() * cols];
+            for (r, &id) in ids.iter().enumerate() {
+                assert!(id < rows_v, "gather id {id} out of range {rows_v}");
+                for j in 0..cols {
+                    data[r * cols + j] = vt.data[id * cols + j];
+                }
+            }
+            let mut shape = prefix.to_vec();
+            shape.push(cols);
+            RArr::new(shape, data)
+        };
+        let needs = self.needs(table);
+        self.push(out, ROp::Gather { table, ids: ids.to_vec() }, needs)
+    }
+
+    /// [B,S,D] -> [B,D] (token 0 pooling).
+    pub fn slice_first(&mut self, x: RV) -> RV {
+        let out = {
+            let vx = self.val(x);
+            assert_eq!(vx.shape.len(), 3);
+            let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+            let mut data = vec![0.0; bsz * d];
+            for bi in 0..bsz {
+                for j in 0..d {
+                    data[bi * d + j] = vx.data[bi * s * d + j];
+                }
+            }
+            RArr::new(vec![bsz, d], data)
+        };
+        let needs = self.needs(x);
+        self.push(out, ROp::SliceFirst(x), needs)
+    }
+
+    /// [B,S,H*hd] -> [B,H,S,hd].
+    pub fn split_heads(&mut self, x: RV, heads: usize) -> RV {
+        let out = {
+            let vx = self.val(x);
+            assert_eq!(vx.shape.len(), 3);
+            let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+            assert_eq!(d % heads, 0);
+            let hd = d / heads;
+            let mut data = vec![0.0; vx.data.len()];
+            for bi in 0..bsz {
+                for si in 0..s {
+                    for h in 0..heads {
+                        for e in 0..hd {
+                            data[((bi * heads + h) * s + si) * hd + e] =
+                                vx.data[(bi * s + si) * d + h * hd + e];
+                        }
+                    }
+                }
+            }
+            RArr::new(vec![bsz, heads, s, hd], data)
+        };
+        let needs = self.needs(x);
+        self.push(out, ROp::SplitHeads { x, heads }, needs)
+    }
+
+    /// [B,H,S,hd] -> [B,S,H*hd].
+    pub fn merge_heads(&mut self, x: RV) -> RV {
+        let out = {
+            let vx = self.val(x);
+            assert_eq!(vx.shape.len(), 4);
+            let (bsz, heads, s, hd) = (vx.shape[0], vx.shape[1], vx.shape[2], vx.shape[3]);
+            let d = heads * hd;
+            let mut data = vec![0.0; vx.data.len()];
+            for bi in 0..bsz {
+                for h in 0..heads {
+                    for si in 0..s {
+                        for e in 0..hd {
+                            data[(bi * s + si) * d + h * hd + e] =
+                                vx.data[((bi * heads + h) * s + si) * hd + e];
+                        }
+                    }
+                }
+            }
+            RArr::new(vec![bsz, s, d], data)
+        };
+        let needs = self.needs(x);
+        self.push(out, ROp::MergeHeads(x), needs)
+    }
+
+    /// Swap the last two dims (any leading batch).
+    pub fn transpose2(&mut self, x: RV) -> RV {
+        let out = {
+            let vx = self.val(x);
+            let rank = vx.shape.len();
+            assert!(rank >= 2);
+            let (r, c) = (vx.shape[rank - 2], vx.shape[rank - 1]);
+            let batches: usize = vx.shape[..rank - 2].iter().product();
+            let mut data = vec![0.0; vx.data.len()];
+            for t in 0..batches {
+                for i in 0..r {
+                    for j in 0..c {
+                        data[t * r * c + j * r + i] = vx.data[t * r * c + i * c + j];
+                    }
+                }
+            }
+            let mut shape = vx.shape.clone();
+            shape.swap(rank - 2, rank - 1);
+            RArr::new(shape, data)
+        };
+        let needs = self.needs(x);
+        self.push(out, ROp::Transpose2(x), needs)
+    }
+
+    /// 2-D [r,c] -> [c] column sums.
+    pub fn sum_axis0(&mut self, x: RV) -> RV {
+        let out = {
+            let vx = self.val(x);
+            assert_eq!(vx.shape.len(), 2);
+            let (r, c) = (vx.shape[0], vx.shape[1]);
+            let mut data = vec![0.0; c];
+            for i in 0..r {
+                for j in 0..c {
+                    data[j] += vx.data[i * c + j];
+                }
+            }
+            RArr::new(vec![c], data)
+        };
+        let needs = self.needs(x);
+        self.push(out, ROp::SumAxis0(x), needs)
+    }
+
+    /// 1/sqrt(x + eps), elementwise.
+    pub fn rsqrt(&mut self, x: RV, eps: f64) -> RV {
+        let vx = self.val(x);
+        let data = vx.data.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
+        let out = RArr::new(vx.shape.clone(), data);
+        let needs = self.needs(x);
+        self.push(out, ROp::Rsqrt { x, eps }, needs)
+    }
+
+    pub fn reshape(&mut self, x: RV, shape: Vec<usize>) -> RV {
+        let vx = self.val(x);
+        assert_eq!(shape.iter().product::<usize>().max(1), vx.data.len());
+        let out = RArr::new(shape, vx.data.clone());
+        let needs = self.needs(x);
+        self.push(out, ROp::Reshape(x), needs)
+    }
+
+    /// C3A block-circular conv by the direct definition (no FFT):
+    /// y[.., i·b+k] = Σ_j Σ_t w[i,j,t] · x[.., j·b + (k−t mod b)]
+    /// with x [..., n·b] and w [m,n,b] (same convention as the substrate's
+    /// FFT operator and `substrate::circulant`).
+    pub fn circ_conv(&mut self, x: RV, w: RV) -> RV {
+        let out = {
+            let (vx, vw) = (self.val(x), self.val(w));
+            assert_eq!(vw.shape.len(), 3);
+            let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
+            assert_eq!(vx.width(), n * b, "circ_conv input width");
+            let rows = vx.rows();
+            let mut data = vec![0.0; rows * m * b];
+            for r in 0..rows {
+                let xrow = &vx.data[r * n * b..(r + 1) * n * b];
+                for i in 0..m {
+                    for k in 0..b {
+                        let mut acc = 0.0;
+                        for j in 0..n {
+                            let wij = &vw.data[(i * n + j) * b..(i * n + j + 1) * b];
+                            for t in 0..b {
+                                acc += wij[t] * xrow[j * b + (k + b - t) % b];
+                            }
+                        }
+                        data[r * m * b + i * b + k] = acc;
+                    }
+                }
+            }
+            let mut shape = vx.shape.clone();
+            *shape.last_mut().unwrap() = m * b;
+            RArr::new(shape, data)
+        };
+        let needs = self.needs(x) || self.needs(w);
+        self.push(out, ROp::CircConv { x, w }, needs)
+    }
+
+    /// BOFT rotation: out[.., nbi·bb+c] = Σ_bi x[.., nbi·bb+bi] · r[nbi,bi,c].
+    pub fn block_rotate(&mut self, x: RV, r: RV) -> RV {
+        let out = {
+            let (vx, vr) = (self.val(x), self.val(r));
+            assert_eq!(vr.shape.len(), 3);
+            let (nb, bb, bb2) = (vr.shape[0], vr.shape[1], vr.shape[2]);
+            assert_eq!(bb, bb2);
+            assert_eq!(vx.width(), nb * bb, "block_rotate width");
+            let rows = vx.rows();
+            let mut data = vec![0.0; vx.data.len()];
+            for row in 0..rows {
+                for nbi in 0..nb {
+                    for c in 0..bb {
+                        let mut acc = 0.0;
+                        for bi in 0..bb {
+                            acc += vx.data[row * nb * bb + nbi * bb + bi]
+                                * vr.data[(nbi * bb + bi) * bb + c];
+                        }
+                        data[row * nb * bb + nbi * bb + c] = acc;
+                    }
+                }
+            }
+            RArr::new(vx.shape.clone(), data)
+        };
+        let needs = self.needs(x) || self.needs(r);
+        self.push(out, ROp::BlockRotate { x, r }, needs)
+    }
+
+    // -- backward ------------------------------------------------------------
+
+    /// Reverse pass from `root` seeded with `seed`.  Returns per-node
+    /// gradients (None where not needed / not reached).
+    pub fn backward(&self, root: RV, seed: Vec<f64>) -> Vec<Option<Vec<f64>>> {
+        assert_eq!(seed.len(), self.val(root).len());
+        let mut grads: Vec<Option<Vec<f64>>> = vec![None; self.nodes.len()];
+        grads[root] = Some(seed);
+        for id in (0..self.nodes.len()).rev() {
+            if grads[id].is_none() || !self.nodes[id].needs {
+                continue;
+            }
+            let go = grads[id].take().unwrap();
+            let contributions = self.op_backward(id, &go);
+            grads[id] = Some(go);
+            for (v, g) in contributions {
+                if !self.nodes[v].needs {
+                    continue;
+                }
+                match &mut grads[v] {
+                    Some(acc) => {
+                        for (a, b) in acc.iter_mut().zip(g.iter()) {
+                            *a += b;
+                        }
+                    }
+                    slot => *slot = Some(g),
+                }
+            }
+        }
+        grads
+    }
+
+    fn op_backward(&self, id: RV, go: &[f64]) -> Vec<(RV, Vec<f64>)> {
+        let out_val = &self.nodes[id].val;
+        match &self.nodes[id].op {
+            ROp::Leaf => Vec::new(),
+            ROp::Scale(a, c) => vec![(*a, go.iter().map(|&g| g * c).collect())],
+            ROp::Add(a, b) => {
+                let mut outs = Vec::new();
+                for &v in &[*a, *b] {
+                    if !self.nodes[v].needs {
+                        continue;
+                    }
+                    let vs = &self.val(v).shape;
+                    let mut g = vec![0.0; self.val(v).len()];
+                    let n = out_val.len();
+                    for o in 0..n {
+                        g[src_idx(&out_val.shape, o, vs)] += go[o];
+                    }
+                    outs.push((v, g));
+                }
+                outs
+            }
+            ROp::Mul(a, b) => {
+                let mut outs = Vec::new();
+                for &(v, other) in &[(*a, *b), (*b, *a)] {
+                    if !self.nodes[v].needs {
+                        continue;
+                    }
+                    let vs = self.val(v).shape.clone();
+                    let os = self.val(other).shape.clone();
+                    let ov = &self.val(other).data;
+                    let mut g = vec![0.0; self.val(v).len()];
+                    bcast_each(&out_val.shape, &vs, &os, |o, iv, io| g[iv] += go[o] * ov[io]);
+                    outs.push((v, g));
+                }
+                outs
+            }
+            ROp::Matmul { a, b, trans_b } => self.matmul_backward(*a, *b, *trans_b, go),
+            ROp::Activation { x, kind } => {
+                let vx = &self.val(*x).data;
+                let g =
+                    vx.iter().zip(go.iter()).map(|(&xv, &gv)| gv * act_bwd(*kind, xv)).collect();
+                vec![(*x, g)]
+            }
+            ROp::SoftmaxLast(x) => {
+                let y = &out_val.data;
+                let w = out_val.width();
+                let mut g = vec![0.0; y.len()];
+                for r in 0..y.len() / w {
+                    let yr = &y[r * w..(r + 1) * w];
+                    let gr = &go[r * w..(r + 1) * w];
+                    let dot: f64 = yr.iter().zip(gr.iter()).map(|(&a, &b)| a * b).sum();
+                    for j in 0..w {
+                        g[r * w + j] = yr[j] * (gr[j] - dot);
+                    }
+                }
+                vec![(*x, g)]
+            }
+            ROp::LayerNorm { x, g, b } => self.layernorm_backward(*x, *g, *b, go),
+            ROp::RmsNorm { x, g } => self.rmsnorm_backward(*x, *g, go),
+            ROp::Gather { table, ids } => {
+                let vt = self.val(*table);
+                let cols = vt.shape[1];
+                let mut g = vec![0.0; vt.len()];
+                for (r, &idx) in ids.iter().enumerate() {
+                    for j in 0..cols {
+                        g[idx * cols + j] += go[r * cols + j];
+                    }
+                }
+                vec![(*table, g)]
+            }
+            ROp::SliceFirst(x) => {
+                let vx = self.val(*x);
+                let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+                let mut g = vec![0.0; vx.len()];
+                for bi in 0..bsz {
+                    for j in 0..d {
+                        g[bi * s * d + j] = go[bi * d + j];
+                    }
+                }
+                vec![(*x, g)]
+            }
+            ROp::SplitHeads { x, heads } => {
+                let vx = self.val(*x);
+                let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+                let hd = d / heads;
+                let mut g = vec![0.0; vx.len()];
+                for bi in 0..bsz {
+                    for si in 0..s {
+                        for h in 0..*heads {
+                            for e in 0..hd {
+                                g[(bi * s + si) * d + h * hd + e] =
+                                    go[((bi * heads + h) * s + si) * hd + e];
+                            }
+                        }
+                    }
+                }
+                vec![(*x, g)]
+            }
+            ROp::MergeHeads(x) => {
+                let vx = self.val(*x);
+                let (bsz, heads, s, hd) = (vx.shape[0], vx.shape[1], vx.shape[2], vx.shape[3]);
+                let d = heads * hd;
+                let mut g = vec![0.0; vx.len()];
+                for bi in 0..bsz {
+                    for h in 0..heads {
+                        for si in 0..s {
+                            for e in 0..hd {
+                                g[((bi * heads + h) * s + si) * hd + e] =
+                                    go[(bi * s + si) * d + h * hd + e];
+                            }
+                        }
+                    }
+                }
+                vec![(*x, g)]
+            }
+            ROp::Transpose2(x) => {
+                let vx = self.val(*x);
+                let rank = vx.shape.len();
+                let (r, c) = (vx.shape[rank - 2], vx.shape[rank - 1]);
+                let batches: usize = vx.shape[..rank - 2].iter().product();
+                let mut g = vec![0.0; vx.len()];
+                // out is [c,r] per batch; route each upstream element back
+                for t in 0..batches {
+                    for j in 0..c {
+                        for i in 0..r {
+                            g[t * r * c + i * c + j] = go[t * r * c + j * r + i];
+                        }
+                    }
+                }
+                vec![(*x, g)]
+            }
+            ROp::SumAxis0(x) => {
+                let vx = self.val(*x);
+                let (r, c) = (vx.shape[0], vx.shape[1]);
+                let mut g = vec![0.0; r * c];
+                for i in 0..r {
+                    for j in 0..c {
+                        g[i * c + j] = go[j];
+                    }
+                }
+                vec![(*x, g)]
+            }
+            ROp::Rsqrt { x, eps: _ } => {
+                let y = &out_val.data;
+                let g =
+                    y.iter().zip(go.iter()).map(|(&yv, &gv)| -0.5 * yv * yv * yv * gv).collect();
+                vec![(*x, g)]
+            }
+            ROp::Reshape(x) => vec![(*x, go.to_vec())],
+            ROp::CircConv { x, w } => self.circ_conv_backward(*x, *w, go),
+            ROp::BlockRotate { x, r } => {
+                let (vx, vr) = (self.val(*x), self.val(*r));
+                let (nb, bb) = (vr.shape[0], vr.shape[1]);
+                let rows = vx.rows();
+                let mut outs = Vec::new();
+                if self.nodes[*x].needs {
+                    let mut gx = vec![0.0; vx.len()];
+                    for row in 0..rows {
+                        for nbi in 0..nb {
+                            for bi in 0..bb {
+                                let mut acc = 0.0;
+                                for c in 0..bb {
+                                    acc += go[row * nb * bb + nbi * bb + c]
+                                        * vr.data[(nbi * bb + bi) * bb + c];
+                                }
+                                gx[row * nb * bb + nbi * bb + bi] = acc;
+                            }
+                        }
+                    }
+                    outs.push((*x, gx));
+                }
+                if self.nodes[*r].needs {
+                    let mut gr = vec![0.0; vr.len()];
+                    for row in 0..rows {
+                        for nbi in 0..nb {
+                            for bi in 0..bb {
+                                for c in 0..bb {
+                                    gr[(nbi * bb + bi) * bb + c] += vx.data
+                                        [row * nb * bb + nbi * bb + bi]
+                                        * go[row * nb * bb + nbi * bb + c];
+                                }
+                            }
+                        }
+                    }
+                    outs.push((*r, gr));
+                }
+                outs
+            }
+        }
+    }
+
+    fn matmul_backward(&self, a: RV, b: RV, trans_b: bool, go: &[f64]) -> Vec<(RV, Vec<f64>)> {
+        let (va, vb) = (self.val(a), self.val(b));
+        let ra = va.shape.len();
+        let k = va.shape[ra - 1];
+        let mut outs = Vec::new();
+        if vb.shape.len() == 2 {
+            let (r0, c0) = (vb.shape[0], vb.shape[1]);
+            let n = if trans_b { r0 } else { c0 };
+            let rows = va.data.len() / k;
+            if self.nodes[a].needs {
+                // da[row,p] = Σ_j go[row,j] · B_eff[p,j]
+                let mut da = vec![0.0; va.len()];
+                for row in 0..rows {
+                    for p in 0..k {
+                        let mut acc = 0.0;
+                        for j in 0..n {
+                            let bv = if trans_b { vb.data[j * k + p] } else { vb.data[p * c0 + j] };
+                            acc += go[row * n + j] * bv;
+                        }
+                        da[row * k + p] = acc;
+                    }
+                }
+                outs.push((a, da));
+            }
+            if self.nodes[b].needs {
+                // dB_eff[p,j] = Σ_row a[row,p] · go[row,j]
+                let mut db = vec![0.0; vb.len()];
+                for row in 0..rows {
+                    for p in 0..k {
+                        let av = va.data[row * k + p];
+                        for j in 0..n {
+                            let slot = if trans_b { j * k + p } else { p * c0 + j };
+                            db[slot] += av * go[row * n + j];
+                        }
+                    }
+                }
+                outs.push((b, db));
+            }
+        } else {
+            let m = va.shape[ra - 2];
+            let (bm, bn) = (vb.shape[ra - 2], vb.shape[ra - 1]);
+            let n = if trans_b { bm } else { bn };
+            let batches: usize = va.shape[..ra - 2].iter().product();
+            let mut da = vec![0.0; va.len()];
+            let mut db = vec![0.0; vb.len()];
+            for t in 0..batches {
+                for row in 0..m {
+                    for p in 0..k {
+                        let mut acc = 0.0;
+                        for j in 0..n {
+                            let bv = if trans_b {
+                                vb.data[t * bm * bn + j * bn + p]
+                            } else {
+                                vb.data[t * bm * bn + p * bn + j]
+                            };
+                            let gv = go[t * m * n + row * n + j];
+                            acc += gv * bv;
+                            let slot = if trans_b {
+                                t * bm * bn + j * bn + p
+                            } else {
+                                t * bm * bn + p * bn + j
+                            };
+                            db[slot] += va.data[t * m * k + row * k + p] * gv;
+                        }
+                        da[t * m * k + row * k + p] = acc;
+                    }
+                }
+            }
+            if self.nodes[a].needs {
+                outs.push((a, da));
+            }
+            if self.nodes[b].needs {
+                outs.push((b, db));
+            }
+        }
+        outs
+    }
+
+    fn layernorm_backward(&self, x: RV, g: RV, b: RV, go: &[f64]) -> Vec<(RV, Vec<f64>)> {
+        let (vx, vg) = (self.val(x), self.val(g));
+        let d = vx.width();
+        let rows = vx.rows();
+        let mut gx = vec![0.0; vx.len()];
+        let mut gg = vec![0.0; d];
+        let mut gb = vec![0.0; d];
+        for r in 0..rows {
+            let row = &vx.data[r * d..(r + 1) * d];
+            let gor = &go[r * d..(r + 1) * d];
+            let mu = row.iter().sum::<f64>() / d as f64;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            let mut mean_dyg = 0.0;
+            let mut mean_dyg_xhat = 0.0;
+            for j in 0..d {
+                let xhat = (row[j] - mu) * inv;
+                let dyg = gor[j] * vg.data[j];
+                mean_dyg += dyg;
+                mean_dyg_xhat += dyg * xhat;
+                gg[j] += gor[j] * xhat;
+                gb[j] += gor[j];
+            }
+            mean_dyg /= d as f64;
+            mean_dyg_xhat /= d as f64;
+            for j in 0..d {
+                let xhat = (row[j] - mu) * inv;
+                let dyg = gor[j] * vg.data[j];
+                gx[r * d + j] = inv * (dyg - mean_dyg - xhat * mean_dyg_xhat);
+            }
+        }
+        let mut outs = Vec::new();
+        if self.nodes[x].needs {
+            outs.push((x, gx));
+        }
+        if self.nodes[g].needs {
+            outs.push((g, gg));
+        }
+        if self.nodes[b].needs {
+            outs.push((b, gb));
+        }
+        outs
+    }
+
+    fn rmsnorm_backward(&self, x: RV, g: RV, go: &[f64]) -> Vec<(RV, Vec<f64>)> {
+        let (vx, vg) = (self.val(x), self.val(g));
+        let d = vx.width();
+        let rows = vx.rows();
+        let mut gx = vec![0.0; vx.len()];
+        let mut gg = vec![0.0; d];
+        for r in 0..rows {
+            let row = &vx.data[r * d..(r + 1) * d];
+            let gor = &go[r * d..(r + 1) * d];
+            let ms = row.iter().map(|&v| v * v).sum::<f64>() / d as f64;
+            let rms = (ms + 1e-6).sqrt();
+            let inv = 1.0 / rms;
+            let mut dot = 0.0;
+            for j in 0..d {
+                dot += row[j] * vg.data[j] * gor[j];
+                gg[j] += gor[j] * row[j] * inv;
+            }
+            let c = dot / (d as f64 * rms * rms * rms);
+            for j in 0..d {
+                gx[r * d + j] = vg.data[j] * gor[j] * inv - row[j] * c;
+            }
+        }
+        let mut outs = Vec::new();
+        if self.nodes[x].needs {
+            outs.push((x, gx));
+        }
+        if self.nodes[g].needs {
+            outs.push((g, gg));
+        }
+        outs
+    }
+
+    /// Backward of the dense circular convolution, by the definition:
+    /// dx[j,u] = Σ_i Σ_t w[i,j,t] · dy[i, (u+t) mod b]
+    /// dw[i,j,t] = Σ_rows Σ_k dy[i,k] · x[j, (k−t) mod b]
+    fn circ_conv_backward(&self, x: RV, w: RV, go: &[f64]) -> Vec<(RV, Vec<f64>)> {
+        let (vx, vw) = (self.val(x), self.val(w));
+        let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
+        let rows = vx.rows();
+        let mut outs = Vec::new();
+        if self.nodes[x].needs {
+            let mut gx = vec![0.0; vx.len()];
+            for r in 0..rows {
+                for j in 0..n {
+                    for u in 0..b {
+                        let mut acc = 0.0;
+                        for i in 0..m {
+                            let wij = &vw.data[(i * n + j) * b..(i * n + j + 1) * b];
+                            for t in 0..b {
+                                acc += wij[t] * go[r * m * b + i * b + (u + t) % b];
+                            }
+                        }
+                        gx[r * n * b + j * b + u] = acc;
+                    }
+                }
+            }
+            outs.push((x, gx));
+        }
+        if self.nodes[w].needs {
+            let mut gw = vec![0.0; vw.len()];
+            for r in 0..rows {
+                let xrow = &vx.data[r * n * b..(r + 1) * n * b];
+                for i in 0..m {
+                    for j in 0..n {
+                        for t in 0..b {
+                            let mut acc = 0.0;
+                            for k in 0..b {
+                                acc += go[r * m * b + i * b + k] * xrow[j * b + (k + b - t) % b];
+                            }
+                            gw[(i * n + j) * b + t] += acc;
+                        }
+                    }
+                }
+            }
+            outs.push((w, gw));
+        }
+        outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny seeded generator (independent of `substrate::prng` on purpose).
+    fn lcg(seed: u64) -> impl FnMut() -> f64 {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 11) as f64 / (1u64 << 53) as f64) - 0.5
+        }
+    }
+
+    fn rand_arr(next: &mut impl FnMut() -> f64, shape: &[usize]) -> RArr {
+        let n = shape.iter().product::<usize>().max(1);
+        RArr::new(shape.to_vec(), (0..n).map(|_| next()).collect())
+    }
+
+    /// Central-difference gradient check of a tape-built graph.
+    fn gradcheck(shapes: &[&[usize]], build: impl Fn(&mut RTape, &[RV]) -> RV) {
+        let mut next = lcg(0xADC3A);
+        let inputs: Vec<RArr> = shapes.iter().map(|s| rand_arr(&mut next, s)).collect();
+        let mut tape = RTape::new();
+        let ids: Vec<RV> = inputs.iter().map(|a| tape.leaf(a.clone(), true)).collect();
+        let out = build(&mut tape, &ids);
+        let wvec: Vec<f64> = (0..tape.val(out).len()).map(|_| next()).collect();
+        let grads = tape.backward(out, wvec.clone());
+        let loss = |vals: &[RArr]| -> f64 {
+            let mut t = RTape::new();
+            let ids: Vec<RV> = vals.iter().map(|a| t.leaf(a.clone(), false)).collect();
+            let o = build(&mut t, &ids);
+            t.val(o).data.iter().zip(wvec.iter()).map(|(&a, &b)| a * b).sum()
+        };
+        let eps = 1e-5;
+        for (vi, id) in ids.iter().enumerate() {
+            let g = grads[*id].as_ref().expect("input grad");
+            for ei in 0..inputs[vi].len() {
+                let mut plus = inputs.clone();
+                plus[vi].data[ei] += eps;
+                let mut minus = inputs.clone();
+                minus[vi].data[ei] -= eps;
+                let num = (loss(&plus) - loss(&minus)) / (2.0 * eps);
+                let an = g[ei];
+                let scale = 1.0f64.max(num.abs()).max(an.abs());
+                assert!(
+                    (num - an).abs() / scale < 1e-6,
+                    "input {vi} elem {ei}: numeric {num} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rgrad_core_ops() {
+        gradcheck(&[&[2, 3, 4], &[4]], |t, v| t.add(v[0], v[1]));
+        gradcheck(&[&[2, 3, 4], &[1, 1, 4]], |t, v| t.mul(v[0], v[1]));
+        gradcheck(&[&[2, 3, 4], &[4, 5]], |t, v| t.matmul(v[0], v[1], false));
+        gradcheck(&[&[2, 3, 4], &[5, 4]], |t, v| t.matmul(v[0], v[1], true));
+        gradcheck(&[&[2, 3, 4], &[2, 4, 5]], |t, v| t.matmul(v[0], v[1], false));
+        gradcheck(&[&[2, 3, 4], &[2, 5, 4]], |t, v| t.matmul(v[0], v[1], true));
+    }
+
+    #[test]
+    fn rgrad_fused_ops() {
+        gradcheck(&[&[3, 6]], |t, v| t.softmax_last(v[0]));
+        gradcheck(&[&[3, 6], &[6], &[6]], |t, v| t.layernorm(v[0], v[1], v[2]));
+        gradcheck(&[&[3, 6], &[6]], |t, v| t.rmsnorm(v[0], v[1]));
+        for kind in [RAct::Gelu, RAct::Silu] {
+            gradcheck(&[&[3, 5]], |t, v| t.activation(v[0], kind));
+        }
+    }
+
+    #[test]
+    fn rgrad_structural_and_conv_ops() {
+        gradcheck(&[&[2, 3, 4]], |t, v| t.slice_first(v[0]));
+        gradcheck(&[&[2, 3, 4]], |t, v| {
+            let h = t.split_heads(v[0], 2);
+            t.merge_heads(h)
+        });
+        gradcheck(&[&[2, 3, 4]], |t, v| t.transpose2(v[0]));
+        gradcheck(&[&[3, 4]], |t, v| t.sum_axis0(v[0]));
+        gradcheck(&[&[3, 8], &[2, 2, 4]], |t, v| t.circ_conv(v[0], v[1]));
+        gradcheck(&[&[2, 2, 6], &[3, 2, 3]], |t, v| t.circ_conv(v[0], v[1]));
+        gradcheck(&[&[3, 8], &[2, 4, 4]], |t, v| t.block_rotate(v[0], v[1]));
+    }
+
+    /// The dense conv must agree with the substrate's FFT circulant.
+    #[test]
+    fn circ_conv_matches_fft_circulant() {
+        use crate::substrate::circulant::BlockCirculant;
+        let mut next = lcg(77);
+        let (m, n, b) = (2usize, 3usize, 8usize);
+        let w = rand_arr(&mut next, &[m, n, b]);
+        let x = rand_arr(&mut next, &[1, n * b]);
+        let mut tape = RTape::new();
+        let xv = tape.leaf(x.clone(), false);
+        let wv = tape.leaf(w.clone(), false);
+        let out = tape.circ_conv(xv, wv);
+        let bc = BlockCirculant::new(m, n, b, w.data.clone());
+        let want = bc.matvec(&x.data);
+        for (got, want) in tape.val(out).data.iter().zip(want.iter()) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+}

@@ -6,14 +6,21 @@
 //! panicking the whole report — the same fix `metrics::ranks` applies to
 //! Spearman inputs.
 
-/// Percentile (p in [0, 1]) of an ascending-sorted sample, by truncated
-/// index — the convention the serve report has always used.
+/// Percentile (p in [0, 1]) of an ascending-sorted sample, nearest-rank:
+/// the ⌈p·n⌉-th smallest value (p = 0 yields the minimum).
+///
+/// The old truncated-index form `(p · (n−1)) as usize` under-read small
+/// windows: on a 2-sample window ⌊0.99·1⌋ = 0, so p99 returned the
+/// *minimum* — a tail-latency report that hides the tail.  Nearest-rank
+/// returns the single sample for n = 1 (never panics or reads out of
+/// bounds) and the maximum for p99 of n = 2.
 pub fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
     if sorted_ms.is_empty() {
         return 0.0;
     }
-    let idx = (p.clamp(0.0, 1.0) * (sorted_ms.len() - 1) as f64) as usize;
-    sorted_ms[idx.min(sorted_ms.len() - 1)]
+    let n = sorted_ms.len();
+    let rank = (p.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    sorted_ms[rank.saturating_sub(1).min(n - 1)]
 }
 
 /// p50/p95/p99 + mean of a latency sample.
@@ -65,14 +72,33 @@ mod tests {
         // `partial_cmp(..).unwrap()`, so one NaN latency panicked it
         let s = [3.0, f64::NAN, 1.0, 2.0];
         let l = LatencySummary::from_samples(&s);
-        // sorted: [1, 2, 3, NaN]; truncated indices 1 and 2
+        // sorted: [1, 2, 3, NaN]; nearest ranks ⌈.5·4⌉=2 and ⌈.99·4⌉=4
         assert_eq!(l.p50_ms, 2.0);
-        assert_eq!(l.p99_ms, 3.0);
+        assert!(l.p99_ms.is_nan(), "a NaN inside the top 1% must surface in p99");
         assert!(l.mean_ms.is_nan()); // the mean honestly reports the NaN
         // NaN sorts last, so it surfaces at the very top of the range
         let mut two = [1.0, f64::NAN];
         two.sort_by(f64::total_cmp);
         assert!(percentile(&two, 1.0).is_nan());
+    }
+
+    /// Regression for the 1-/2-sample windows: p99 of a single sample is
+    /// that sample (no panic, no out-of-bounds), and p99 of two samples is
+    /// the larger one — the old truncated index returned the *minimum*.
+    #[test]
+    fn tiny_window_percentiles() {
+        let one = [7.5];
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&one, p), 7.5, "p={p}");
+        }
+        let two = [1.0, 100.0];
+        assert_eq!(percentile(&two, 0.0), 1.0);
+        assert_eq!(percentile(&two, 0.5), 1.0); // ⌈.5·2⌉ = 1st smallest
+        assert_eq!(percentile(&two, 0.95), 100.0);
+        assert_eq!(percentile(&two, 0.99), 100.0, "p99 of 2 samples must report the tail");
+        let l = LatencySummary::from_samples(&[100.0, 1.0]);
+        assert_eq!(l.p99_ms, 100.0);
+        assert_eq!(l.p50_ms, 1.0);
     }
 
     #[test]

@@ -249,6 +249,86 @@ mod tests {
         }
     }
 
+    /// Seeded random signals in [-0.5, 0.5).
+    fn rand_signal(n: usize, seed: u64) -> Vec<C> {
+        let mut s = seed | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) - 0.5
+        };
+        (0..n).map(|_| (next(), next())).collect()
+    }
+
+    /// Explicit per-element round-trip budget for a size-n transform.
+    ///
+    /// Radix-2 loses O(eps·log2 n) relative accuracy; Bluestein routes
+    /// through three transforms of size m ≈ 2n plus two chirp products, so
+    /// its constant is larger.  The budget is pinned here (and documented
+    /// in README § Differential testing) so any future normalization or
+    /// twiddle drift fails loudly instead of shifting silently.
+    fn roundtrip_budget(n: usize, max_abs: f64) -> f64 {
+        let stages = (n as f64).log2().max(1.0);
+        // Bluestein routes through padded size-m transforms whose
+        // intermediates carry ~m× the signal magnitude, so its constant
+        // gets the extra headroom explicitly rather than silently.
+        let bluestein = if n.is_power_of_two() { 1.0 } else { 32.0 };
+        2e-14 * stages * bluestein * max_abs.max(1.0)
+    }
+
+    /// Randomized ifft∘fft round-trips at the block sizes the C3A operator
+    /// actually sees: degenerate (1, 2), odd/Bluestein (3, 7, 13, 101),
+    /// and large power-of-two (1024, 4096).
+    #[test]
+    fn ifft_roundtrip_randomized_sizes_and_budget() {
+        for (i, &n) in [1usize, 2, 3, 7, 13, 101, 1024, 4096].iter().enumerate() {
+            let x = rand_signal(n, 0x9e3779b97f4a7c15 ^ ((i as u64) << 17));
+            let max_abs = x.iter().map(|z| z.0.abs().max(z.1.abs())).fold(0.0, f64::max);
+            let plan = Plan::new(n);
+            let mut y = x.clone();
+            plan.fft_in_place(&mut y);
+            plan.ifft_in_place(&mut y);
+            assert_close(&y, &x, roundtrip_budget(n, max_abs));
+        }
+    }
+
+    /// The real-signal wrappers (the substrate's actual hot path) must
+    /// also round-trip: irfft_real(rfft(x)) == x under the same budget.
+    #[test]
+    fn rfft_irfft_real_roundtrip() {
+        for (i, &n) in [1usize, 2, 5, 12, 64, 2048].iter().enumerate() {
+            let x: Vec<f64> = rand_signal(n, 0xabcdef ^ ((i as u64) << 9))
+                .into_iter()
+                .map(|z| z.0)
+                .collect();
+            let max_abs = x.iter().map(|v| v.abs()).fold(0.0, f64::max);
+            let plan = Plan::new(n);
+            let back = irfft_real(&plan, &rfft(&plan, &x));
+            let tol = roundtrip_budget(n, max_abs);
+            for (k, (a, b)) in back.iter().zip(x.iter()).enumerate() {
+                assert!((a - b).abs() < tol, "n={n} k={k}: {a} vs {b} (tol {tol})");
+            }
+        }
+    }
+
+    /// DC normalization pin: the mean of a signal must survive a
+    /// round-trip exactly to budget at every size class (this is where a
+    /// 1/n-vs-1/√n scaling mistake shows up first).
+    #[test]
+    fn roundtrip_preserves_dc_component() {
+        for n in [1usize, 2, 9, 256] {
+            let x = vec![(1.0, 0.0); n];
+            let plan = Plan::new(n);
+            let mut y = x.clone();
+            plan.fft_in_place(&mut y);
+            // spectrum of a constant: X[0] = n, the rest ~0
+            assert!((y[0].0 - n as f64).abs() < 1e-10 * n as f64, "n={n}: X[0]={}", y[0].0);
+            plan.ifft_in_place(&mut y);
+            assert_close(&y, &x, roundtrip_budget(n, 1.0));
+        }
+    }
+
     #[test]
     fn parseval_energy_preserved() {
         let n = 128;

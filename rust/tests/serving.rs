@@ -246,6 +246,76 @@ fn three_tenants_interleaved_keep_one_upload_each() {
     }
 }
 
+/// FIFO under the carry slot: queue [A, A, B, A₃, swap(A), A₄].  The B
+/// message closes the first A batch via the carry slot; A₃ then sits in
+/// the carry slot when the swap for the SAME tenant is next in the queue.
+/// The batch must close, A₃ must still serve under the old version (it
+/// was submitted before the swap), and the swap must ack afterwards, in
+/// order — a drain that applied the swap before serving the carried
+/// message would give A₃ the new version.
+#[test]
+fn hot_swap_behind_carried_same_tenant_message_stays_fifo() {
+    let dir = std::env::temp_dir().join("c3a_serving_carry_swap");
+    let (adapter, _b, s) = template(&dir);
+    let adapters =
+        vec![("ta".to_string(), adapter.clone()), ("tb".to_string(), adapter.clone())];
+    // gate the registry build so the whole queue fills before the worker
+    // drains anything — makes the batch/carry decomposition deterministic
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let cfg = SchedulerCfg { queue_cap: 8, max_batch: 4, max_wait: Duration::from_millis(5) };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move || {
+            let _ = gate_rx.recv();
+            build_registry(&dir, adapters)
+        }
+    })
+    .unwrap();
+    let handle = sched.handle();
+    let a1 = handle.try_submit("ta", toks(1, s)).expect("queue has room");
+    let a2 = handle.try_submit("ta", toks(2, s)).expect("queue has room");
+    let b1 = handle.try_submit("tb", toks(3, s)).expect("queue has room");
+    let a3 = handle.try_submit("ta", toks(4, s)).expect("queue has room");
+    // hot_swap blocks until the serving thread acks, so it must run on a
+    // helper thread; its ack can only arrive after the gate opens
+    let swapper = {
+        let handle = handle.clone();
+        let params = perturb(&adapter, 9, 0.5);
+        std::thread::spawn(move || {
+            let v = handle.hot_swap("ta", params).expect("swap acked");
+            // submitted strictly after the ack -> must see the new version
+            let after = handle.submit("ta", toks(5, s)).unwrap().wait().unwrap();
+            (v, after)
+        })
+    };
+    // let the swap message land in the queue behind [A, A, B, A₃]
+    std::thread::sleep(Duration::from_millis(100));
+    gate_tx.send(()).unwrap();
+
+    let (ra1, ra2, rb1, ra3) =
+        (a1.wait().unwrap(), a2.wait().unwrap(), b1.wait().unwrap(), a3.wait().unwrap());
+    assert_eq!(ra1.tenant_version, 1, "pre-swap request must serve the old adapter");
+    assert_eq!(ra2.tenant_version, 1);
+    assert_eq!(ra1.batch_size, 2, "tb message must close the first ta batch via the carry");
+    assert_eq!(rb1.tenant_version, 1);
+    assert_eq!(
+        ra3.tenant_version, 1,
+        "carried same-tenant request was submitted before the swap and must stay v1"
+    );
+    let (v, ra4) = swapper.join().unwrap();
+    assert_eq!(v, 2, "swap must ack with the new version");
+    assert_eq!(ra4.tenant_version, 2, "post-ack request must serve the swapped adapter");
+    assert_ne!(ra3.logits, ra4.logits, "the swap must actually change ta's serving adapter");
+
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 5);
+    assert_eq!(stats.failed, 0);
+    let t = stats.tenant("ta").unwrap();
+    assert_eq!(t.version, 2);
+    assert_eq!(t.uploads, 2, "one upload per adapter version");
+}
+
 #[test]
 fn unknown_tenant_gets_an_error_reply_not_a_hang() {
     let dir = std::env::temp_dir().join("c3a_serving_unknown");

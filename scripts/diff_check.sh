@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Differential oracle rig: run every substrate-vs-reference cross-check
+# (rust/tests/differential.rs) — forward logits, losses, gradients +
+# finite differences, 5-step train trajectories, and the serving path.
+# Divergences are appended to DIFF_REPORT.txt (override with
+# C3A_DIFF_REPORT), naming the artifact / tensor / first diverging
+# element; CI uploads the report as an artifact on failure.
+#
+# Usage: scripts/diff_check.sh [--full]
+#   --full   add every artifact of the remaining small models (enc_base,
+#            vit_base, dec_small); without it only the enc_tiny + mlp
+#            slice runs (C3A_DIFF_FULL is explicitly cleared).
+#
+# Thread counts: the harness honors C3A_THREADS like everything else;
+# CI runs it at C3A_THREADS=1 and =4.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export CARGO_NET_OFFLINE=true
+export C3A_DIFF_REPORT="${C3A_DIFF_REPORT:-$PWD/DIFF_REPORT.txt}"
+
+# a stale `export C3A_DIFF_FULL=...` must not silently trigger the
+# multi-minute sweep: only --full enables it
+unset C3A_DIFF_FULL
+for arg in "$@"; do
+  case "$arg" in
+    --full) export C3A_DIFF_FULL=1 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+rm -f "$C3A_DIFF_REPORT"
+
+echo "== differential: substrate vs reference oracle (C3A_THREADS=${C3A_THREADS:-auto}, full=${C3A_DIFF_FULL:-0}) =="
+cargo test --release --test differential -- --nocapture
+
+echo "differential OK (no divergences)"
