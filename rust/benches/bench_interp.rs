@@ -42,6 +42,28 @@ fn build_batch(spec: &ArtifactSpec) -> Vec<Tensor> {
     batch
 }
 
+/// Scoped C3A_PLAN override: restores the prior value (or removes the
+/// var) on drop, so panics and early returns cannot leak the override
+/// into later sessions in this process.
+struct PlanEnvGuard(Option<String>);
+
+impl PlanEnvGuard {
+    fn set(v: &str) -> PlanEnvGuard {
+        let prev = std::env::var("C3A_PLAN").ok();
+        std::env::set_var("C3A_PLAN", v);
+        PlanEnvGuard(prev)
+    }
+}
+
+impl Drop for PlanEnvGuard {
+    fn drop(&mut self) {
+        match &self.0 {
+            Some(v) => std::env::set_var("C3A_PLAN", v),
+            None => std::env::remove_var("C3A_PLAN"),
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let steps = if smoke { 8 } else { 40 };
@@ -92,7 +114,8 @@ fn main() -> anyhow::Result<()> {
     println!("cached  multi-thread    : {step_ms_cached:>8.2} ms/step  ({speedup:.2}x)");
 
     // -- serve-style loop: repeated EvalSession::logits with a fixed
-    // adapter (trainable upload + frozen parse + spectra all reused)
+    // adapter (trainable upload + frozen parse + spectra + execution plan
+    // all reused)
     let eval_init = build_init(&eval_spec, &base, None, &mut Rng::seed(2), C3aScheme::Xavier)?;
     let eval_session = EvalSession::new(&engine, &eval_spec, &eval_init)?;
     let adapter = session.trainable_tensors()?;
@@ -108,6 +131,42 @@ fn main() -> anyhow::Result<()> {
     let serve_req_s = (serve_calls * b) as f64 / t2.elapsed().as_secs_f64();
     let uploads = eval_session.upload_count();
     println!("serve loop              : {serve_req_s:>8.1} req/s  (uploads={uploads})");
+
+    // -- plan replay vs rebuild: the same steady-state eval loop with the
+    // execution plan disabled (C3A_PLAN=0 rebuilds the tape per request)
+    // vs enabled (record once, replay into the arena).  Sessions are
+    // built while the env var is set; it only gates state construction.
+    let rebuild_session = {
+        let _plan_off = PlanEnvGuard::set("0");
+        EvalSession::new(&engine, &eval_spec, &eval_init)?
+    };
+    let replay_session = EvalSession::new(&engine, &eval_spec, &eval_init)?;
+    for _ in 0..2 {
+        rebuild_session.logits(&adapter, &eval_batch)?;
+        replay_session.logits(&adapter, &eval_batch)?;
+    }
+    let t_rebuild = Instant::now();
+    for _ in 0..serve_calls {
+        rebuild_session.logits(&adapter, &eval_batch)?;
+    }
+    let eval_ms_rebuild = t_rebuild.elapsed().as_secs_f64() * 1e3 / serve_calls as f64;
+    let t_replay = Instant::now();
+    for _ in 0..serve_calls {
+        replay_session.logits(&adapter, &eval_batch)?;
+    }
+    let eval_ms_replay = t_replay.elapsed().as_secs_f64() * 1e3 / serve_calls as f64;
+    let plan_speedup = eval_ms_rebuild / eval_ms_replay;
+    // under an operator-set C3A_PLAN=0 the "replay" session is a second
+    // rebuild session: report honestly instead of panicking
+    let pstats = replay_session.plan_stats().unwrap_or_default();
+    if pstats.ops == 0 {
+        println!("plan replay             : DISABLED (C3A_PLAN=0) — rebuild-vs-rebuild shown");
+    }
+    println!(
+        "plan replay             : {eval_ms_replay:>8.3} ms/req vs rebuild \
+         {eval_ms_rebuild:.3} ms/req ({plan_speedup:.2}x; {} ops, {} shared bufs)",
+        pstats.ops, pstats.shared_buffers
+    );
 
     // -- spectra-cached C3A matvec ops/s (production inference operator)
     let d = 1024usize;
@@ -129,8 +188,10 @@ fn main() -> anyhow::Result<()> {
     println!("c3a matvec d={d} b={blk}  : {ops_per_s:>8.0} ops/s");
 
     // -- JSON report (no serde offline; fields are flat and numeric)
+    let plan_ops = pstats.ops;
+    let plan_shared = pstats.shared_buffers;
     let json = format!(
-        "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
+        "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"eval_ms_rebuild\": {eval_ms_rebuild:.3},\n  \"eval_ms_replay\": {eval_ms_replay:.3},\n  \"plan_replay_speedup\": {plan_speedup:.3},\n  \"plan_ops\": {plan_ops},\n  \"plan_shared_buffers\": {plan_shared},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
     );
     // cargo bench runs with the package dir as cwd; the bench script sets
     // C3A_BENCH_OUT to pin the report to the repo root

@@ -20,12 +20,20 @@ use std::rc::Rc;
 
 /// Opaque per-session executor state — the seam that lets a backend
 /// persist work across steps (parsed frozen params, kernel spectra, FFT
-/// plans).  Sessions create one via [`Executor::prepare`] and thread it
-/// through every [`Executor::execute_stateful`] call.  Backends downcast
-/// to their concrete state type; a state they don't recognize must degrade
-/// to stateless execution, never to wrong results.
+/// plans, and the recorded execution plan with its buffer arena).
+/// Sessions create one via [`Executor::prepare`] and thread it through
+/// every [`Executor::execute_stateful`] call.  Backends downcast to their
+/// concrete state type; a state they don't recognize must degrade to
+/// stateless execution, never to wrong results.
 pub trait ExecutorState {
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+
+    /// Stats of this state's recorded execution plan, if the backend
+    /// records one (the substrate interpreter does after its first
+    /// stateful call; stateless backends return None).
+    fn plan_stats(&self) -> Option<crate::runtime::plan::PlanStats> {
+        None
+    }
 }
 
 /// Placeholder state for executors with nothing to persist (e.g. compiled

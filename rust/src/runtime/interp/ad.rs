@@ -14,6 +14,7 @@
 
 use crate::substrate::fft::{self, Plan, C};
 use crate::substrate::parallel;
+use std::cell::RefCell;
 use std::rc::Rc;
 
 /// Flop floor below which matmuls stay on one thread.
@@ -103,8 +104,42 @@ pub enum Act {
     Relu,
 }
 
+/// How a leaf gets its value on a plan replay (see `runtime::plan`).
+/// Recorded at graph-build time by whoever creates the leaf; `Input`
+/// leaves are bound positionally by the executor, the rest are
+/// model-internal (data tensors, token-derived masks, true constants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeafTag {
+    /// Externally bound parameter leaf (trainable or frozen); the plan
+    /// refills trainables from the input literals and leaves frozen
+    /// parses untouched.
+    Input,
+    /// Dense data leaf refilled from the `data.x` literal each replay.
+    DataX,
+    /// Encoder pad-key attention mask `[b,1,1,s]`, recomputed from tokens.
+    MaskEncPad,
+    /// Decoder causal+pad attention mask `[b,1,s,s]`, recomputed from
+    /// tokens.
+    MaskDecCausal,
+    /// Recorded constant (e.g. the BOFT identity block); never refilled.
+    Const,
+}
+
+/// Reusable small-buffer scratch for [`eval_op`]: broadcast strides, the
+/// odometer coordinates, and the matmul transpose staging buffer.  One
+/// lives on every [`Tape`] (eager path) and one on every recorded plan
+/// (replay path), so steady-state op evaluation performs no heap
+/// allocation.
+#[derive(Default)]
+pub struct Scratch {
+    sa: Vec<usize>,
+    sb: Vec<usize>,
+    coords: Vec<usize>,
+    tb: Vec<f32>,
+}
+
 enum Op {
-    Leaf,
+    Leaf(LeafTag),
     Add(V, V),
     Mul(V, V),
     Scale(V, f32),
@@ -135,21 +170,31 @@ struct Node {
 
 pub struct Tape {
     nodes: Vec<Node>,
+    /// op-evaluation scratch, reused across every eager record and every
+    /// in-place replay on this tape
+    scratch: Scratch,
+    /// shared placeholder installed wherever a buffer has been moved out
+    /// (donated to another node or taken as an output); reads of a
+    /// sentinel value indicate a liveness bug and fail loudly on the
+    /// shape asserts
+    sentinel: Rc<Arr>,
 }
 
 // ---------------------------------------------------------------------------
 // Dense helpers
 // ---------------------------------------------------------------------------
 
-/// C[m,n] = A[m,k] · B[k,n], row-major.  Output rows are sharded across
-/// the substrate pool above a work floor; each row keeps its sequential
-/// accumulation order, so results are identical at any thread count.
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// C[m,n] = A[m,k] · B[k,n] into a caller-owned buffer, row-major.
+/// Output rows are sharded across the substrate pool above a work floor;
+/// each row keeps its sequential accumulation order, so results are
+/// identical at any thread count.
+fn mm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut c = vec![0f32; m * n];
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
     if m == 0 || n == 0 {
-        return c;
+        return;
     }
     let row_mul = |i: usize, crow: &mut [f32]| {
         let arow = &a[i * k..(i + 1) * k];
@@ -162,17 +207,30 @@ fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
             }
         }
     };
-    parallel::for_rows(&mut c, n, m * k * n >= PAR_MIN_WORK, row_mul);
+    parallel::for_rows(c, n, m * k * n >= PAR_MIN_WORK, row_mul);
+}
+
+/// Allocating wrapper over [`mm_into`] (backward-pass convenience).
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    mm_into(&mut c, a, b, m, k, n);
     c
 }
 
-fn transpose(x: &[f32], r: usize, c: usize) -> Vec<f32> {
-    let mut out = vec![0f32; r * c];
+/// Transpose `x` ([r,c] -> [c,r]) into a caller-owned staging buffer.
+fn transpose_into(out: &mut Vec<f32>, x: &[f32], r: usize, c: usize) {
+    out.clear();
+    out.resize(r * c, 0.0);
     for i in 0..r {
         for j in 0..c {
             out[j * r + i] = x[i * c + j];
         }
     }
+}
+
+fn transpose(x: &[f32], r: usize, c: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    transpose_into(&mut out, x, r, c);
     out
 }
 
@@ -190,36 +248,41 @@ fn broadcast_shape(a: &[usize], b: &[usize]) -> Vec<usize> {
 }
 
 /// Element strides of `shape` as seen from broadcast result `out`
-/// (0 where the dim is broadcast).
-fn bcast_strides(shape: &[usize], out: &[usize]) -> Vec<usize> {
+/// (0 where the dim is broadcast), into a caller-owned buffer.
+fn bcast_strides_into(shape: &[usize], out: &[usize], s: &mut Vec<usize>) {
     let rank = out.len();
     let off = rank - shape.len();
-    // native strides of `shape`
-    let mut native = vec![0usize; shape.len()];
+    s.clear();
+    s.resize(rank, 0);
     let mut acc = 1usize;
     for i in (0..shape.len()).rev() {
-        native[i] = acc;
+        if shape[i] != 1 {
+            s[off + i] = acc;
+        }
         acc *= shape[i];
     }
-    let mut s = vec![0usize; rank];
-    for i in 0..rank {
-        if i >= off && shape[i - off] != 1 {
-            s[i] = native[i - off];
-        }
-    }
+}
+
+/// Allocating wrapper over [`bcast_strides_into`] (backward-pass use).
+fn bcast_strides(shape: &[usize], out: &[usize]) -> Vec<usize> {
+    let mut s = Vec::new();
+    bcast_strides_into(shape, out, &mut s);
     s
 }
 
-/// Iterate a broadcast result, yielding (out_idx, a_idx, b_idx).
-fn bcast_apply(
+/// Iterate a broadcast result, yielding (out_idx, a_idx, b_idx); the
+/// odometer coordinates live in a caller-owned buffer.
+fn bcast_apply_with(
     out_shape: &[usize],
     sa: &[usize],
     sb: &[usize],
+    coords: &mut Vec<usize>,
     mut f: impl FnMut(usize, usize, usize),
 ) {
     let n: usize = out_shape.iter().product::<usize>().max(1);
     let rank = out_shape.len();
-    let mut coords = vec![0usize; rank];
+    coords.clear();
+    coords.resize(rank, 0);
     let mut ia = 0usize;
     let mut ib = 0usize;
     for i in 0..n {
@@ -237,6 +300,17 @@ fn bcast_apply(
             coords[d] = 0;
         }
     }
+}
+
+/// Allocating wrapper over [`bcast_apply_with`] (backward-pass use).
+fn bcast_apply(
+    out_shape: &[usize],
+    sa: &[usize],
+    sb: &[usize],
+    f: impl FnMut(usize, usize, usize),
+) {
+    let mut coords = Vec::new();
+    bcast_apply_with(out_shape, sa, sb, &mut coords, f)
 }
 
 fn act_fwd(kind: Act, x: f32) -> f32 {
@@ -276,6 +350,312 @@ fn act_bwd(kind: Act, x: f32) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
+// Forward op evaluation (shared by eager record and plan replay)
+// ---------------------------------------------------------------------------
+
+/// Per-thread scratch for the C3A forward rows: input-block spectra, the
+/// frequency-domain accumulator, and the inverse-transform buffer.
+/// Thread-local because rows are sharded across the substrate pool.
+#[derive(Default)]
+struct C3aScratch {
+    xf: Vec<Vec<C>>,
+    acc: Vec<C>,
+    time: Vec<C>,
+}
+
+thread_local! {
+    static C3A_SCRATCH: RefCell<C3aScratch> = RefCell::new(C3aScratch::default());
+}
+
+/// Append an op's input node ids to `buf` (empty for leaves).  The ONE
+/// per-variant input table: `Tape::op_input_ids` (plan liveness) and
+/// [`op_needs`] both route through it, so they cannot drift.
+fn op_inputs(op: &Op, buf: &mut Vec<V>) {
+    match op {
+        Op::Leaf(_) => {}
+        Op::Add(a, b) | Op::Mul(a, b) => buf.extend([*a, *b]),
+        Op::Scale(a, _) => buf.push(*a),
+        Op::Matmul { a, b, .. } => buf.extend([*a, *b]),
+        Op::Activation { x, .. }
+        | Op::SoftmaxLast(x)
+        | Op::SliceFirst(x)
+        | Op::SplitHeads { x, .. }
+        | Op::MergeHeads(x)
+        | Op::Transpose2(x)
+        | Op::SumAxis0(x)
+        | Op::Rsqrt { x, .. }
+        | Op::Reshape(x) => buf.push(*x),
+        Op::LayerNorm { x, g, b } => buf.extend([*x, *g, *b]),
+        Op::RmsNorm { x, g } => buf.extend([*x, *g]),
+        Op::Gather { table, .. } => buf.push(*table),
+        Op::C3a { x, w, .. } => buf.extend([*x, *w]),
+        Op::BlockRotate { x, r } => buf.extend([*x, *r]),
+    }
+}
+
+/// Whether an op's output participates in gradient flow: the OR of its
+/// inputs' `needs` flags (leaves are set explicitly at creation).
+fn op_needs(nodes: &[Node], op: &Op) -> bool {
+    let mut ids = Vec::with_capacity(3);
+    op_inputs(op, &mut ids);
+    ids.iter().any(|&u| nodes[u].needs)
+}
+
+/// Evaluate one op into `out` (shape already set by the caller), reading
+/// inputs from `nodes`.  This is the single source of forward numerics:
+/// the eager tape methods and the plan replay both route through it, so
+/// a replayed step is bit-for-bit identical to a freshly recorded one by
+/// construction.  Every branch fully overwrites `out.data` (accumulating
+/// ops zero-fill first), so dirty reused arena buffers are safe.
+fn eval_op(nodes: &[Node], op: &Op, out: &mut Arr, scratch: &mut Scratch) {
+    match op {
+        Op::Leaf(_) => unreachable!("leaves are filled, not computed"),
+        Op::Add(a, b) => {
+            let (va, vb) = (&*nodes[*a].val, &*nodes[*b].val);
+            bcast_strides_into(&va.shape, &out.shape, &mut scratch.sa);
+            bcast_strides_into(&vb.shape, &out.shape, &mut scratch.sb);
+            let data = &mut out.data;
+            let coords = &mut scratch.coords;
+            bcast_apply_with(&out.shape, &scratch.sa, &scratch.sb, coords, |o, ia, ib| {
+                data[o] = va.data[ia] + vb.data[ib]
+            });
+        }
+        Op::Mul(a, b) => {
+            let (va, vb) = (&*nodes[*a].val, &*nodes[*b].val);
+            bcast_strides_into(&va.shape, &out.shape, &mut scratch.sa);
+            bcast_strides_into(&vb.shape, &out.shape, &mut scratch.sb);
+            let data = &mut out.data;
+            let coords = &mut scratch.coords;
+            bcast_apply_with(&out.shape, &scratch.sa, &scratch.sb, coords, |o, ia, ib| {
+                data[o] = va.data[ia] * vb.data[ib]
+            });
+        }
+        Op::Scale(a, c) => {
+            let va = &*nodes[*a].val;
+            for (o, &x) in out.data.iter_mut().zip(va.data.iter()) {
+                *o = x * c;
+            }
+        }
+        Op::Matmul { a, b, trans_b } => {
+            let (va, vb) = (&*nodes[*a].val, &*nodes[*b].val);
+            let ra = va.shape.len();
+            let k = va.shape[ra - 1];
+            if vb.shape.len() == 2 {
+                let (r0, c0) = (vb.shape[0], vb.shape[1]);
+                let bn = if *trans_b { r0 } else { c0 };
+                let rows = va.data.len() / k;
+                if *trans_b {
+                    transpose_into(&mut scratch.tb, &vb.data, r0, c0);
+                    mm_into(&mut out.data, &va.data, &scratch.tb, rows, k, bn);
+                } else {
+                    mm_into(&mut out.data, &va.data, &vb.data, rows, k, bn);
+                }
+            } else {
+                let m = va.shape[ra - 2];
+                let (bm2, bn2) = (vb.shape[ra - 2], vb.shape[ra - 1]);
+                let bn = if *trans_b { bm2 } else { bn2 };
+                let batches: usize = va.shape[..ra - 2].iter().product();
+                for t in 0..batches {
+                    let asl = &va.data[t * m * k..(t + 1) * m * k];
+                    let bsl = &vb.data[t * bm2 * bn2..(t + 1) * bm2 * bn2];
+                    let osl = &mut out.data[t * m * bn..(t + 1) * m * bn];
+                    if *trans_b {
+                        transpose_into(&mut scratch.tb, bsl, bm2, bn2);
+                        mm_into(osl, asl, &scratch.tb, m, k, bn);
+                    } else {
+                        mm_into(osl, asl, bsl, m, k, bn);
+                    }
+                }
+            }
+        }
+        Op::Activation { x, kind } => {
+            let vx = &*nodes[*x].val;
+            for (o, &v) in out.data.iter_mut().zip(vx.data.iter()) {
+                *o = act_fwd(*kind, v);
+            }
+        }
+        Op::SoftmaxLast(x) => {
+            let vx = &*nodes[*x].val;
+            out.data.copy_from_slice(&vx.data);
+            let w = vx.width();
+            for row in out.data.chunks_mut(w) {
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - m).exp();
+                    sum += *v;
+                }
+                for v in row.iter_mut() {
+                    *v /= sum;
+                }
+            }
+        }
+        Op::LayerNorm { x, g, b } => {
+            let (vx, vg, vb) = (&*nodes[*x].val, &*nodes[*g].val, &*nodes[*b].val);
+            let d = vx.width();
+            for (r, row) in vx.data.chunks(d).enumerate() {
+                let mu = row.iter().sum::<f32>() / d as f32;
+                let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+                let inv = 1.0 / (var + 1e-5).sqrt();
+                for j in 0..d {
+                    out.data[r * d + j] = (row[j] - mu) * inv * vg.data[j] + vb.data[j];
+                }
+            }
+        }
+        Op::RmsNorm { x, g } => {
+            let (vx, vg) = (&*nodes[*x].val, &*nodes[*g].val);
+            let d = vx.width();
+            for (r, row) in vx.data.chunks(d).enumerate() {
+                let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+                let inv = 1.0 / (ms + 1e-6).sqrt();
+                for j in 0..d {
+                    out.data[r * d + j] = row[j] * inv * vg.data[j];
+                }
+            }
+        }
+        Op::Gather { table, ids, prefix: _ } => {
+            let vt = &*nodes[*table].val;
+            let cols = vt.shape[1];
+            let rows_v = vt.shape[0];
+            for (r, &id) in ids.iter().enumerate() {
+                assert!(id < rows_v, "gather id {id} out of range {rows_v}");
+                out.data[r * cols..(r + 1) * cols]
+                    .copy_from_slice(&vt.data[id * cols..(id + 1) * cols]);
+            }
+        }
+        Op::SliceFirst(x) => {
+            let vx = &*nodes[*x].val;
+            let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+            for bi in 0..bsz {
+                out.data[bi * d..(bi + 1) * d]
+                    .copy_from_slice(&vx.data[bi * s * d..bi * s * d + d]);
+            }
+        }
+        Op::SplitHeads { x, heads } => {
+            let vx = &*nodes[*x].val;
+            let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
+            let hd = d / heads;
+            for bi in 0..bsz {
+                for si in 0..s {
+                    for h in 0..*heads {
+                        let src = (bi * s + si) * d + h * hd;
+                        let dst = ((bi * heads + h) * s + si) * hd;
+                        out.data[dst..dst + hd].copy_from_slice(&vx.data[src..src + hd]);
+                    }
+                }
+            }
+        }
+        Op::MergeHeads(x) => {
+            let vx = &*nodes[*x].val;
+            let (bsz, heads, s, hd) = (vx.shape[0], vx.shape[1], vx.shape[2], vx.shape[3]);
+            let d = heads * hd;
+            for bi in 0..bsz {
+                for h in 0..heads {
+                    for si in 0..s {
+                        let src = ((bi * heads + h) * s + si) * hd;
+                        let dst = (bi * s + si) * d + h * hd;
+                        out.data[dst..dst + hd].copy_from_slice(&vx.data[src..src + hd]);
+                    }
+                }
+            }
+        }
+        Op::Transpose2(x) => {
+            let vx = &*nodes[*x].val;
+            let rank = vx.shape.len();
+            let (r, c) = (vx.shape[rank - 2], vx.shape[rank - 1]);
+            let batches: usize = vx.shape[..rank - 2].iter().product();
+            for t in 0..batches {
+                let src = &vx.data[t * r * c..(t + 1) * r * c];
+                let dst = &mut out.data[t * r * c..(t + 1) * r * c];
+                for i in 0..r {
+                    for j in 0..c {
+                        dst[j * r + i] = src[i * c + j];
+                    }
+                }
+            }
+        }
+        Op::SumAxis0(x) => {
+            let vx = &*nodes[*x].val;
+            let (r, c) = (vx.shape[0], vx.shape[1]);
+            out.data.fill(0.0);
+            for i in 0..r {
+                for j in 0..c {
+                    out.data[j] += vx.data[i * c + j];
+                }
+            }
+        }
+        Op::Rsqrt { x, eps } => {
+            let vx = &*nodes[*x].val;
+            for (o, &v) in out.data.iter_mut().zip(vx.data.iter()) {
+                *o = 1.0 / (v + eps).sqrt();
+            }
+        }
+        Op::Reshape(x) => {
+            out.data.copy_from_slice(&nodes[*x].val.data);
+        }
+        Op::C3a { x, w, spectra } => {
+            let (vx, vw) = (&*nodes[*x].val, &*nodes[*w].val);
+            let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
+            let rows = vx.rows();
+            // deref out of the Rc: &Plan is Sync (Rc is not), so the
+            // row closure can cross the pool
+            let plan: &Plan = &spectra.plan;
+            let wf = &spectra.wf;
+            let xdata = &vx.data;
+            let row_fwd = |r: usize, orow: &mut [f32]| {
+                C3A_SCRATCH.with(|cell| {
+                    let s = &mut *cell.borrow_mut();
+                    if s.xf.len() < n {
+                        s.xf.resize_with(n, Vec::new);
+                    }
+                    let xrow = &xdata[r * n * b..(r + 1) * n * b];
+                    for j in 0..n {
+                        fft::rfft_f32_into(plan, &xrow[j * b..(j + 1) * b], &mut s.xf[j]);
+                    }
+                    for i in 0..m {
+                        s.acc.clear();
+                        s.acc.resize(b, (0f64, 0f64));
+                        for j in 0..n {
+                            let wij = &wf[i * n + j];
+                            let xfj = &s.xf[j];
+                            for k in 0..b {
+                                let p = fft::c_mul(wij[k], xfj[k]);
+                                s.acc[k].0 += p.0;
+                                s.acc[k].1 += p.1;
+                            }
+                        }
+                        fft::irfft_into(plan, &s.acc, &mut s.time);
+                        for k in 0..b {
+                            orow[i * b + k] = s.time[k].0 as f32;
+                        }
+                    }
+                });
+            };
+            parallel::for_rows(&mut out.data, m * b, rows * m * n * b >= C3A_PAR_MIN_WORK, row_fwd);
+        }
+        Op::BlockRotate { x, r } => {
+            let (vx, vr) = (&*nodes[*x].val, &*nodes[*r].val);
+            let (nb, bb) = (vr.shape[0], vr.shape[1]);
+            let rows = vx.rows();
+            for row in 0..rows {
+                let xrow = &vx.data[row * nb * bb..(row + 1) * nb * bb];
+                let orow = &mut out.data[row * nb * bb..(row + 1) * nb * bb];
+                for nbi in 0..nb {
+                    let rblk = &vr.data[nbi * bb * bb..(nbi + 1) * bb * bb];
+                    for c in 0..bb {
+                        let mut acc = 0f32;
+                        for bi in 0..bb {
+                            acc += xrow[nbi * bb + bi] * rblk[bi * bb + c];
+                        }
+                        orow[nbi * bb + c] = acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Tape
 // ---------------------------------------------------------------------------
 
@@ -287,7 +667,11 @@ impl Default for Tape {
 
 impl Tape {
     pub fn new() -> Tape {
-        Tape { nodes: Vec::new() }
+        Tape {
+            nodes: Vec::new(),
+            scratch: Scratch::default(),
+            sentinel: Rc::new(Arr { shape: vec![0], data: Vec::new() }),
+        }
     }
 
     pub fn leaf(&mut self, arr: Arr, needs: bool) -> V {
@@ -297,7 +681,14 @@ impl Tape {
     /// Zero-copy leaf from a session-cached parse (frozen params are held
     /// as `Rc<Arr>` across steps; cloning the Rc is O(1)).
     pub fn leaf_shared(&mut self, arr: Rc<Arr>, needs: bool) -> V {
-        self.nodes.push(Node { val: arr, op: Op::Leaf, needs });
+        self.nodes.push(Node { val: arr, op: Op::Leaf(LeafTag::Input), needs });
+        self.nodes.len() - 1
+    }
+
+    /// Leaf with an explicit replay tag (model-internal leaves: data
+    /// tensors, token-derived masks, constants).  See [`LeafTag`].
+    pub fn leaf_tagged(&mut self, arr: Arr, needs: bool, tag: LeafTag) -> V {
+        self.nodes.push(Node { val: Rc::new(arr), op: Op::Leaf(tag), needs });
         self.nodes.len() - 1
     }
 
@@ -314,43 +705,33 @@ impl Tape {
         self.nodes.len() - 1
     }
 
+    /// Record one op: allocate the (zeroed) output, evaluate it through
+    /// [`eval_op`] — the same code a plan replay runs — and push the node.
+    fn record(&mut self, shape: Vec<usize>, op: Op) -> V {
+        let n = shape.iter().product::<usize>().max(1);
+        let mut out = Arr { shape, data: vec![0.0; n] };
+        let mut scratch = std::mem::take(&mut self.scratch);
+        eval_op(&self.nodes, &op, &mut out, &mut scratch);
+        self.scratch = scratch;
+        let needs = op_needs(&self.nodes, &op);
+        self.push(out, op, needs)
+    }
+
     // -- binary broadcast ops ------------------------------------------------
 
     pub fn add(&mut self, a: V, b: V) -> V {
-        let out_shape = broadcast_shape(&self.val(a).shape, &self.val(b).shape);
-        let sa = bcast_strides(&self.val(a).shape, &out_shape);
-        let sb = bcast_strides(&self.val(b).shape, &out_shape);
-        let mut out = Arr::zeros(out_shape.clone());
-        {
-            let (av, bv) = (&self.val(a).data, &self.val(b).data);
-            let data = &mut out.data;
-            bcast_apply(&out_shape, &sa, &sb, |o, ia, ib| data[o] = av[ia] + bv[ib]);
-        }
-        let needs = self.needs(a) || self.needs(b);
-        self.push(out, Op::Add(a, b), needs)
+        let shape = broadcast_shape(&self.val(a).shape, &self.val(b).shape);
+        self.record(shape, Op::Add(a, b))
     }
 
     pub fn mul(&mut self, a: V, b: V) -> V {
-        let out_shape = broadcast_shape(&self.val(a).shape, &self.val(b).shape);
-        let sa = bcast_strides(&self.val(a).shape, &out_shape);
-        let sb = bcast_strides(&self.val(b).shape, &out_shape);
-        let mut out = Arr::zeros(out_shape.clone());
-        {
-            let (av, bv) = (&self.val(a).data, &self.val(b).data);
-            let data = &mut out.data;
-            bcast_apply(&out_shape, &sa, &sb, |o, ia, ib| data[o] = av[ia] * bv[ib]);
-        }
-        let needs = self.needs(a) || self.needs(b);
-        self.push(out, Op::Mul(a, b), needs)
+        let shape = broadcast_shape(&self.val(a).shape, &self.val(b).shape);
+        self.record(shape, Op::Mul(a, b))
     }
 
     pub fn scale(&mut self, a: V, c: f32) -> V {
-        let mut out = self.val(a).clone();
-        for v in out.data.iter_mut() {
-            *v *= c;
-        }
-        let needs = self.needs(a);
-        self.push(out, Op::Scale(a, c), needs)
+        let shape = self.val(a).shape.clone();
+        self.record(shape, Op::Scale(a, c))
     }
 
     /// a - b (broadcast).
@@ -371,79 +752,42 @@ impl Tape {
         let ra = va.shape.len();
         assert!(ra >= 2, "matmul lhs rank {ra}");
         let k = va.shape[ra - 1];
-        let (out, _kn) = if vb.shape.len() == 2 {
+        let shape = if vb.shape.len() == 2 {
             let (bk, bn) = if trans_b {
                 (vb.shape[1], vb.shape[0])
             } else {
                 (vb.shape[0], vb.shape[1])
             };
             assert_eq!(k, bk, "matmul inner dim {k} vs {bk}");
-            let b_eff = if trans_b {
-                transpose(&vb.data, vb.shape[0], vb.shape[1])
-            } else {
-                vb.data.clone()
-            };
-            let rows = va.data.len() / k;
-            let data = mm(&va.data, &b_eff, rows, k, bn);
             let mut shape = va.shape.clone();
             *shape.last_mut().unwrap() = bn;
-            (Arr::new(shape, data), bn)
+            shape
         } else {
             assert_eq!(vb.shape.len(), ra, "batched matmul rank mismatch");
             assert_eq!(&vb.shape[..ra - 2], &va.shape[..ra - 2], "batch dims differ");
-            let m = va.shape[ra - 2];
             let (bk, bn) = if trans_b {
                 (vb.shape[ra - 1], vb.shape[ra - 2])
             } else {
                 (vb.shape[ra - 2], vb.shape[ra - 1])
             };
             assert_eq!(k, bk, "batched matmul inner dim {k} vs {bk}");
-            let batches: usize = va.shape[..ra - 2].iter().product();
-            let mut data = vec![0f32; batches * m * bn];
-            let (bm2, bn2) = (vb.shape[ra - 2], vb.shape[ra - 1]);
-            for t in 0..batches {
-                let asl = &va.data[t * m * k..(t + 1) * m * k];
-                let bsl = &vb.data[t * bm2 * bn2..(t + 1) * bm2 * bn2];
-                let b_eff = if trans_b { transpose(bsl, bm2, bn2) } else { bsl.to_vec() };
-                let c = mm(asl, &b_eff, m, k, bn);
-                data[t * m * bn..(t + 1) * m * bn].copy_from_slice(&c);
-            }
             let mut shape = va.shape.clone();
             shape[ra - 1] = bn;
-            (Arr::new(shape, data), bn)
+            shape
         };
-        let needs = self.needs(a) || self.needs(b);
-        self.push(out, Op::Matmul { a, b, trans_b }, needs)
+        self.record(shape, Op::Matmul { a, b, trans_b })
     }
 
     // -- unary / fused ops ---------------------------------------------------
 
     pub fn activation(&mut self, x: V, kind: Act) -> V {
-        let vx = self.val(x);
-        let data = vx.data.iter().map(|&v| act_fwd(kind, v)).collect();
-        let out = Arr::new(vx.shape.clone(), data);
-        let needs = self.needs(x);
-        self.push(out, Op::Activation { x, kind }, needs)
+        let shape = self.val(x).shape.clone();
+        self.record(shape, Op::Activation { x, kind })
     }
 
     pub fn softmax_last(&mut self, x: V) -> V {
-        let vx = self.val(x);
-        let w = vx.width();
-        let mut data = vx.data.clone();
-        for row in data.chunks_mut(w) {
-            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0f32;
-            for v in row.iter_mut() {
-                *v = (*v - m).exp();
-                sum += *v;
-            }
-            for v in row.iter_mut() {
-                *v /= sum;
-            }
-        }
-        let out = Arr::new(vx.shape.clone(), data);
-        let needs = self.needs(x);
-        self.push(out, Op::SoftmaxLast(x), needs)
+        let shape = self.val(x).shape.clone();
+        self.record(shape, Op::SoftmaxLast(x))
     }
 
     pub fn layernorm(&mut self, x: V, g: V, b: V) -> V {
@@ -451,35 +795,16 @@ impl Tape {
         let d = vx.width();
         assert_eq!(vg.data.len(), d);
         assert_eq!(vb.data.len(), d);
-        let mut data = vec![0f32; vx.data.len()];
-        for (r, row) in vx.data.chunks(d).enumerate() {
-            let mu = row.iter().sum::<f32>() / d as f32;
-            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-            let inv = 1.0 / (var + 1e-5).sqrt();
-            for j in 0..d {
-                data[r * d + j] = (row[j] - mu) * inv * vg.data[j] + vb.data[j];
-            }
-        }
-        let out = Arr::new(vx.shape.clone(), data);
-        let needs = self.needs(x) || self.needs(g) || self.needs(b);
-        self.push(out, Op::LayerNorm { x, g, b }, needs)
+        let shape = vx.shape.clone();
+        self.record(shape, Op::LayerNorm { x, g, b })
     }
 
     pub fn rmsnorm(&mut self, x: V, g: V) -> V {
         let (vx, vg) = (self.val(x), self.val(g));
         let d = vx.width();
         assert_eq!(vg.data.len(), d);
-        let mut data = vec![0f32; vx.data.len()];
-        for (r, row) in vx.data.chunks(d).enumerate() {
-            let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
-            let inv = 1.0 / (ms + 1e-6).sqrt();
-            for j in 0..d {
-                data[r * d + j] = row[j] * inv * vg.data[j];
-            }
-        }
-        let out = Arr::new(vx.shape.clone(), data);
-        let needs = self.needs(x) || self.needs(g);
-        self.push(out, Op::RmsNorm { x, g }, needs)
+        let shape = vx.shape.clone();
+        self.record(shape, Op::RmsNorm { x, g })
     }
 
     /// Row gather: out[prefix.., :] = table[ids[r], :].
@@ -488,31 +813,17 @@ impl Tape {
         assert_eq!(vt.shape.len(), 2);
         assert_eq!(prefix.iter().product::<usize>().max(1), ids.len());
         let cols = vt.shape[1];
-        let rows_v = vt.shape[0];
-        let mut data = vec![0f32; ids.len() * cols];
-        for (r, &id) in ids.iter().enumerate() {
-            assert!(id < rows_v, "gather id {id} out of range {rows_v}");
-            data[r * cols..(r + 1) * cols].copy_from_slice(&vt.data[id * cols..(id + 1) * cols]);
-        }
         let mut shape = prefix.to_vec();
         shape.push(cols);
-        let out = Arr::new(shape, data);
-        let needs = self.needs(table);
-        self.push(out, Op::Gather { table, ids: ids.to_vec(), prefix: prefix.to_vec() }, needs)
+        self.record(shape, Op::Gather { table, ids: ids.to_vec(), prefix: prefix.to_vec() })
     }
 
     /// [B,S,D] -> [B,D] (token 0 pooling).
     pub fn slice_first(&mut self, x: V) -> V {
         let vx = self.val(x);
         assert_eq!(vx.shape.len(), 3);
-        let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
-        let mut data = vec![0f32; bsz * d];
-        for bi in 0..bsz {
-            data[bi * d..(bi + 1) * d].copy_from_slice(&vx.data[bi * s * d..bi * s * d + d]);
-        }
-        let out = Arr::new(vec![bsz, d], data);
-        let needs = self.needs(x);
-        self.push(out, Op::SliceFirst(x), needs)
+        let (bsz, d) = (vx.shape[0], vx.shape[2]);
+        self.record(vec![bsz, d], Op::SliceFirst(x))
     }
 
     /// [B,S,H*hd] -> [B,H,S,hd].
@@ -522,19 +833,7 @@ impl Tape {
         let (bsz, s, d) = (vx.shape[0], vx.shape[1], vx.shape[2]);
         assert_eq!(d % heads, 0);
         let hd = d / heads;
-        let mut data = vec![0f32; vx.data.len()];
-        for bi in 0..bsz {
-            for si in 0..s {
-                for h in 0..heads {
-                    let src = (bi * s + si) * d + h * hd;
-                    let dst = ((bi * heads + h) * s + si) * hd;
-                    data[dst..dst + hd].copy_from_slice(&vx.data[src..src + hd]);
-                }
-            }
-        }
-        let out = Arr::new(vec![bsz, heads, s, hd], data);
-        let needs = self.needs(x);
-        self.push(out, Op::SplitHeads { x, heads }, needs)
+        self.record(vec![bsz, heads, s, hd], Op::SplitHeads { x, heads })
     }
 
     /// [B,H,S,hd] -> [B,S,H*hd].
@@ -542,20 +841,7 @@ impl Tape {
         let vx = self.val(x);
         assert_eq!(vx.shape.len(), 4);
         let (bsz, heads, s, hd) = (vx.shape[0], vx.shape[1], vx.shape[2], vx.shape[3]);
-        let d = heads * hd;
-        let mut data = vec![0f32; vx.data.len()];
-        for bi in 0..bsz {
-            for h in 0..heads {
-                for si in 0..s {
-                    let src = ((bi * heads + h) * s + si) * hd;
-                    let dst = (bi * s + si) * d + h * hd;
-                    data[dst..dst + hd].copy_from_slice(&vx.data[src..src + hd]);
-                }
-            }
-        }
-        let out = Arr::new(vec![bsz, s, d], data);
-        let needs = self.needs(x);
-        self.push(out, Op::MergeHeads(x), needs)
+        self.record(vec![bsz, s, heads * hd], Op::MergeHeads(x))
     }
 
     /// Swap the last two dims (any leading batch).
@@ -563,51 +849,29 @@ impl Tape {
         let vx = self.val(x);
         let rank = vx.shape.len();
         assert!(rank >= 2);
-        let (r, c) = (vx.shape[rank - 2], vx.shape[rank - 1]);
-        let batches: usize = vx.shape[..rank - 2].iter().product();
-        let mut data = vec![0f32; vx.data.len()];
-        for t in 0..batches {
-            let src = &vx.data[t * r * c..(t + 1) * r * c];
-            data[t * r * c..(t + 1) * r * c].copy_from_slice(&transpose(src, r, c));
-        }
         let mut shape = vx.shape.clone();
         shape.swap(rank - 2, rank - 1);
-        let out = Arr::new(shape, data);
-        let needs = self.needs(x);
-        self.push(out, Op::Transpose2(x), needs)
+        self.record(shape, Op::Transpose2(x))
     }
 
     /// 2-D [r,c] -> [c] column sums.
     pub fn sum_axis0(&mut self, x: V) -> V {
         let vx = self.val(x);
         assert_eq!(vx.shape.len(), 2);
-        let (r, c) = (vx.shape[0], vx.shape[1]);
-        let mut data = vec![0f32; c];
-        for i in 0..r {
-            for j in 0..c {
-                data[j] += vx.data[i * c + j];
-            }
-        }
-        let out = Arr::new(vec![c], data);
-        let needs = self.needs(x);
-        self.push(out, Op::SumAxis0(x), needs)
+        let c = vx.shape[1];
+        self.record(vec![c], Op::SumAxis0(x))
     }
 
     /// 1/sqrt(x + eps), elementwise.
     pub fn rsqrt(&mut self, x: V, eps: f32) -> V {
-        let vx = self.val(x);
-        let data = vx.data.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
-        let out = Arr::new(vx.shape.clone(), data);
-        let needs = self.needs(x);
-        self.push(out, Op::Rsqrt { x, eps }, needs)
+        let shape = self.val(x).shape.clone();
+        self.record(shape, Op::Rsqrt { x, eps })
     }
 
     pub fn reshape(&mut self, x: V, shape: Vec<usize>) -> V {
         let vx = self.val(x);
         assert_eq!(shape.iter().product::<usize>().max(1), vx.data.len());
-        let out = Arr::new(shape, vx.data.clone());
-        let needs = self.needs(x);
-        self.push(out, Op::Reshape(x), needs)
+        self.record(shape, Op::Reshape(x))
     }
 
     /// C3A block-circular conv: x [..., n*b] ⋆ w [m,n,b] -> [..., m*b]
@@ -619,13 +883,13 @@ impl Tape {
 
     /// C3A with optionally precomputed kernel spectra (session cache).
     /// When `spectra` is None they are computed here; either way the op
-    /// stores them so the backward pass never re-runs the kernel FFTs.
+    /// stores them so the backward pass never re-runs the kernel FFTs
+    /// (and a plan replay can refresh them through the same cache).
     pub fn c3a_with(&mut self, x: V, w: V, spectra: Option<Rc<C3aSpectra>>) -> V {
         let (vx, vw) = (self.val(x), self.val(w));
         assert_eq!(vw.shape.len(), 3);
         let (m, n, b) = (vw.shape[0], vw.shape[1], vw.shape[2]);
         assert_eq!(vx.width(), n * b, "c3a input width");
-        let rows = vx.rows();
         let spectra = match spectra {
             Some(s) => {
                 assert_eq!(s.plan.n, b, "cached spectra plan size");
@@ -634,45 +898,9 @@ impl Tape {
             }
             None => Rc::new(C3aSpectra::compute(Rc::new(Plan::new(b)), vw)),
         };
-        let mut data = vec![0f32; rows * m * b];
-        {
-            // deref out of the Rc: &Plan is Sync (Rc is not), so the
-            // row closure can cross the pool
-            let plan: &Plan = &spectra.plan;
-            let wf = &spectra.wf;
-            let xdata = &vx.data;
-            let row_fwd = |r: usize, orow: &mut [f32]| {
-                let xrow = &xdata[r * n * b..(r + 1) * n * b];
-                let xf: Vec<Vec<C>> = (0..n)
-                    .map(|j| {
-                        let xj: Vec<f64> =
-                            xrow[j * b..(j + 1) * b].iter().map(|&v| v as f64).collect();
-                        fft::rfft(plan, &xj)
-                    })
-                    .collect();
-                for i in 0..m {
-                    let mut acc = vec![(0f64, 0f64); b];
-                    for j in 0..n {
-                        let wij = &wf[i * n + j];
-                        for k in 0..b {
-                            let p = fft::c_mul(wij[k], xf[j][k]);
-                            acc[k].0 += p.0;
-                            acc[k].1 += p.1;
-                        }
-                    }
-                    let z = fft::irfft_real(plan, &acc);
-                    for k in 0..b {
-                        orow[i * b + k] = z[k] as f32;
-                    }
-                }
-            };
-            parallel::for_rows(&mut data, m * b, rows * m * n * b >= C3A_PAR_MIN_WORK, row_fwd);
-        }
         let mut shape = vx.shape.clone();
         *shape.last_mut().unwrap() = m * b;
-        let out = Arr::new(shape, data);
-        let needs = self.needs(x) || self.needs(w);
-        self.push(out, Op::C3a { x, w, spectra }, needs)
+        self.record(shape, Op::C3a { x, w, spectra })
     }
 
     /// BOFT rotation: out[..., n, c] = Σ_b x[..., n, b] · r[n, b, c]
@@ -683,25 +911,165 @@ impl Tape {
         let (nb, bb, bb2) = (vr.shape[0], vr.shape[1], vr.shape[2]);
         assert_eq!(bb, bb2);
         assert_eq!(vx.width(), nb * bb, "block_rotate width");
-        let rows = vx.rows();
-        let mut data = vec![0f32; vx.data.len()];
-        for row in 0..rows {
-            let xrow = &vx.data[row * nb * bb..(row + 1) * nb * bb];
-            let orow = &mut data[row * nb * bb..(row + 1) * nb * bb];
-            for nbi in 0..nb {
-                let rblk = &vr.data[nbi * bb * bb..(nbi + 1) * bb * bb];
-                for c in 0..bb {
-                    let mut acc = 0f32;
-                    for bi in 0..bb {
-                        acc += xrow[nbi * bb + bi] * rblk[bi * bb + c];
-                    }
-                    orow[nbi * bb + c] = acc;
+        let shape = vx.shape.clone();
+        self.record(shape, Op::BlockRotate { x, r })
+    }
+
+    // -- plan replay primitives (see `runtime::plan`) ------------------------
+
+    /// Number of nodes on the tape (the plan's op-list length).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_leaf(&self, v: V) -> bool {
+        matches!(self.nodes[v].op, Op::Leaf(_))
+    }
+
+    /// Replay tag of a leaf node (None for op nodes).
+    pub fn leaf_tag(&self, v: V) -> Option<LeafTag> {
+        match self.nodes[v].op {
+            Op::Leaf(tag) => Some(tag),
+            _ => None,
+        }
+    }
+
+    /// Append the input node ids of `v` to `buf` (empty for leaves).
+    pub fn op_input_ids(&self, v: V, buf: &mut Vec<V>) {
+        op_inputs(&self.nodes[v].op, buf)
+    }
+
+    /// Node ids of every embedding-gather op (replay refreshes their row
+    /// ids from the request's tokens).
+    pub fn gather_nodes(&self) -> Vec<V> {
+        (0..self.nodes.len())
+            .filter(|&v| matches!(self.nodes[v].op, Op::Gather { .. }))
+            .collect()
+    }
+
+    /// (op node, kernel leaf) pairs of every C3A op (replay refreshes
+    /// their cached spectra through the session cache).
+    pub fn c3a_nodes(&self) -> Vec<(V, V)> {
+        (0..self.nodes.len())
+            .filter_map(|v| match self.nodes[v].op {
+                Op::C3a { w, .. } => Some((v, w)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Whether gather `v`'s recorded ids are exactly the `t.max(0)`
+    /// mapping of `toks` — the plan builder's fail-closed check that a
+    /// recorded gather really is a token-embedding gather before replay
+    /// starts rewriting its ids from request tokens.
+    pub fn gather_ids_match_tokens(&self, v: V, toks: &[i32]) -> bool {
+        match &self.nodes[v].op {
+            Op::Gather { ids, .. } => {
+                ids.len() == toks.len()
+                    && ids.iter().zip(toks.iter()).all(|(&id, &t)| id == t.max(0) as usize)
+            }
+            _ => false,
+        }
+    }
+
+    /// Rewrite a gather op's row ids from raw token ids (the same
+    /// `t.max(0)` clamp the model applies when recording).
+    pub fn set_gather_tokens(&mut self, v: V, toks: &[i32]) {
+        match &mut self.nodes[v].op {
+            Op::Gather { ids, .. } => {
+                assert_eq!(ids.len(), toks.len(), "gather arity changed between record and replay");
+                for (slot, &t) in ids.iter_mut().zip(toks.iter()) {
+                    *slot = t.max(0) as usize;
                 }
             }
+            _ => panic!("node {v} is not a gather op"),
         }
-        let out = Arr::new(vx.shape.clone(), data);
-        let needs = self.needs(x) || self.needs(r);
-        self.push(out, Op::BlockRotate { x, r }, needs)
+    }
+
+    /// Swap a C3A op's kernel spectra (replay path, after the kernel leaf
+    /// has been refilled; the session cache recomputes on kernel change).
+    pub fn refresh_c3a_spectra(&mut self, v: V, spectra: Rc<C3aSpectra>) {
+        match &mut self.nodes[v].op {
+            Op::C3a { spectra: slot, .. } => {
+                debug_assert_eq!(slot.plan.n, spectra.plan.n, "spectra plan size changed");
+                debug_assert_eq!(slot.wf.len(), spectra.wf.len(), "spectra block count changed");
+                *slot = spectra;
+            }
+            _ => panic!("node {v} is not a c3a op"),
+        }
+    }
+
+    /// Overwrite a leaf's payload in place (replay of trainable / data
+    /// leaves).  Falls back to a fresh buffer if the old one is still
+    /// shared (only possible transiently right after recording).
+    pub fn copy_into_leaf(&mut self, v: V, data: &[f32]) {
+        let node = &mut self.nodes[v];
+        debug_assert!(matches!(node.op, Op::Leaf(_)), "copy_into_leaf on op node {v}");
+        assert_eq!(node.val.data.len(), data.len(), "leaf {v} payload length changed");
+        match Rc::get_mut(&mut node.val) {
+            Some(arr) => arr.data.copy_from_slice(data),
+            None => {
+                node.val = Rc::new(Arr { shape: node.val.shape.clone(), data: data.to_vec() });
+            }
+        }
+    }
+
+    /// Mutate a leaf's payload via closure (replay of token-derived
+    /// masks); same clone-on-shared fallback as [`Tape::copy_into_leaf`].
+    pub fn write_leaf_with(&mut self, v: V, f: impl FnOnce(&mut [f32])) {
+        let node = &mut self.nodes[v];
+        debug_assert!(matches!(node.op, Op::Leaf(_)), "write_leaf_with on op node {v}");
+        if Rc::get_mut(&mut node.val).is_none() {
+            node.val = Rc::new(node.val.as_ref().clone());
+        }
+        f(&mut Rc::get_mut(&mut node.val).expect("unique after clone").data);
+    }
+
+    /// Move `donor`'s value buffer onto node `v` (arena slot reuse: the
+    /// plan's liveness analysis guarantees the donor is dead).  The donor
+    /// is left holding the sentinel.
+    pub fn steal_buffer(&mut self, donor: V, v: V) {
+        if donor == v {
+            return;
+        }
+        let rc = std::mem::replace(&mut self.nodes[donor].val, self.sentinel.clone());
+        self.nodes[v].val = rc;
+    }
+
+    /// Recompute op node `v` in place into its (possibly donated) buffer
+    /// through [`eval_op`] — the replay workhorse.  `shape` is the static
+    /// shape recorded by the plan; a node whose buffer was taken (e.g.
+    /// the logits output) transparently reallocates.
+    pub fn recompute(&mut self, v: V, shape: &[usize]) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let n = shape.iter().product::<usize>().max(1);
+        let (prev, rest) = self.nodes.split_at_mut(v);
+        let node = &mut rest[0];
+        debug_assert!(!matches!(node.op, Op::Leaf(_)), "recompute on leaf {v}");
+        if Rc::get_mut(&mut node.val).is_none() {
+            node.val = Rc::new(Arr { shape: shape.to_vec(), data: vec![0.0; n] });
+        }
+        let arr = Rc::get_mut(&mut node.val).expect("unique after replacement");
+        arr.shape.clear();
+        arr.shape.extend_from_slice(shape);
+        arr.data.resize(n, 0.0);
+        eval_op(prev, &node.op, arr, &mut scratch);
+        self.scratch = scratch;
+    }
+
+    /// Move a node's value out of the tape (zero-copy eval output).  The
+    /// node is left holding the sentinel and reallocates on the next
+    /// replay; a still-shared value is cloned instead (defensive).
+    pub fn take_val(&mut self, v: V) -> Arr {
+        let rc = std::mem::replace(&mut self.nodes[v].val, self.sentinel.clone());
+        match Rc::try_unwrap(rc) {
+            Ok(arr) => arr,
+            Err(rc) => {
+                let arr = rc.as_ref().clone();
+                self.nodes[v].val = rc;
+                arr
+            }
+        }
     }
 
     // -- backward ------------------------------------------------------------
@@ -740,7 +1108,7 @@ impl Tape {
     fn op_backward(&self, id: V, go: &[f32]) -> Vec<(V, Vec<f32>)> {
         let out_val = &self.nodes[id].val;
         match &self.nodes[id].op {
-            Op::Leaf => Vec::new(),
+            Op::Leaf(_) => Vec::new(),
             Op::Scale(a, c) => {
                 vec![(*a, go.iter().map(|&g| g * c).collect())]
             }
@@ -1319,6 +1687,62 @@ mod tests {
         for (got, want) in tape.val(out).data.iter().zip(want.iter()) {
             assert!((*got as f64 - want).abs() < 1e-4);
         }
+    }
+
+    /// In-place replay: refill the leaves, refresh the C3A spectra, and
+    /// recompute every op node over the dirty buffers — every node value
+    /// must be bit-identical to a freshly recorded tape over the new
+    /// inputs (the plan subsystem's core invariant).
+    #[test]
+    fn replay_primitives_match_fresh_record() {
+        let mut rng = Rng::seed(0xC0DE);
+        let shapes: [&[usize]; 5] = [&[3, 8], &[2, 2, 4], &[8], &[8, 5], &[5]];
+        let v0: Vec<Arr> = shapes.iter().map(|s| rand_arr(&mut rng, s)).collect();
+        let v1: Vec<Arr> = shapes.iter().map(|s| rand_arr(&mut rng, s)).collect();
+        let build = |t: &mut Tape, vals: &[Arr]| -> Vec<V> {
+            let x = t.leaf(vals[0].clone(), false);
+            let w = t.leaf(vals[1].clone(), true);
+            let g = t.leaf(vals[2].clone(), true);
+            let wo = t.leaf(vals[3].clone(), true);
+            let bias = t.leaf(vals[4].clone(), false);
+            let c = t.c3a(x, w);
+            let sm = t.softmax_last(c);
+            let h = t.rmsnorm(sm, g);
+            let y = t.matmul(h, wo, false);
+            let ys = t.scale(y, 0.5);
+            let out = t.add(ys, bias);
+            vec![x, w, g, wo, bias, out]
+        };
+        let mut tape = Tape::new();
+        let ids = build(&mut tape, &v0);
+        let out_id = *ids.last().unwrap();
+        let node_shapes: Vec<Vec<usize>> =
+            (0..tape.node_count()).map(|v| tape.val(v).shape.clone()).collect();
+        for (leaf, arr) in ids[..5].iter().zip(v1.iter()) {
+            tape.copy_into_leaf(*leaf, &arr.data);
+        }
+        for (op, w_leaf) in tape.c3a_nodes() {
+            let w_arr = tape.val(w_leaf).clone();
+            let spectra =
+                Rc::new(C3aSpectra::compute(Rc::new(Plan::new(w_arr.shape[2])), &w_arr));
+            tape.refresh_c3a_spectra(op, spectra);
+        }
+        for v in 0..tape.node_count() {
+            if !tape.is_leaf(v) {
+                tape.recompute(v, &node_shapes[v]);
+            }
+        }
+        let mut fresh = Tape::new();
+        let fids = build(&mut fresh, &v1);
+        assert_eq!(tape.node_count(), fresh.node_count());
+        for v in 0..tape.node_count() {
+            assert_eq!(tape.val(v).data, fresh.val(v).data, "node {v} diverged on replay");
+        }
+        // take_val moves the output out; the next recompute reallocates
+        let taken = tape.take_val(out_id);
+        assert_eq!(taken.data, fresh.val(*fids.last().unwrap()).data);
+        tape.recompute(out_id, &node_shapes[out_id]);
+        assert_eq!(tape.val(out_id).data, taken.data);
     }
 
     #[test]

@@ -11,6 +11,13 @@
 //!
 //! The AdamW update mirrors python/compile/model.py `adamw_update`
 //! (decoupled decay, `.b/.g/.mag/.lb/.ld` exempt).
+//!
+//! Execution has two regimes.  A *stateless* call (or the first stateful
+//! call) records the step eagerly through the tape; stateful sessions
+//! then promote that tape into a [`Plan`](crate::runtime::plan::Plan) and
+//! every subsequent call *replays* it — leaves refilled in place, ops
+//! recomputed into preallocated arena buffers, bit-for-bit identical to
+//! the rebuild path.  `C3A_PLAN=0` disables the replay regime.
 
 pub mod ad;
 pub mod model;
@@ -19,7 +26,8 @@ use self::ad::{Arr, C3aSpectra, Tape, V};
 use self::model::{Graph, ModelInput};
 use crate::runtime::backend::ExecutorState;
 use crate::runtime::manifest::{ArtifactSpec, ModelMeta, Role};
-use crate::substrate::fft::Plan;
+use crate::runtime::plan::{Plan, PlanStats};
+use crate::substrate::fft::Plan as FftPlan;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
@@ -51,14 +59,14 @@ struct SpectraEntry {
 /// a recompute but never wrong numerics.
 #[derive(Default)]
 pub struct InterpCache {
-    plans: HashMap<usize, Rc<Plan>>,
+    plans: HashMap<usize, Rc<FftPlan>>,
     spectra: HashMap<String, SpectraEntry>,
     stats: CacheStats,
 }
 
 impl InterpCache {
-    pub fn plan(&mut self, b: usize) -> Rc<Plan> {
-        self.plans.entry(b).or_insert_with(|| Rc::new(Plan::new(b))).clone()
+    pub fn plan(&mut self, b: usize) -> Rc<FftPlan> {
+        self.plans.entry(b).or_insert_with(|| Rc::new(FftPlan::new(b))).clone()
     }
 
     /// Spectra of kernel `name` with current value `w`, reusing the cached
@@ -101,17 +109,52 @@ impl InterpCache {
 /// of this `Rc`.
 pub type FrozenParse = Rc<Vec<(String, Rc<Arr>)>>;
 
+/// Whether plan recording/replay is enabled (default yes; `C3A_PLAN=0`
+/// falls back to the per-request rebuild — the bench uses this to measure
+/// the rebuild-vs-replay gap, and it doubles as a kill switch).
+fn plan_enabled_from_env() -> bool {
+    std::env::var("C3A_PLAN").map(|v| v.trim() != "0").unwrap_or(true)
+}
+
 /// Per-session interpreter state ([`crate::runtime::backend::ExecutorState`]
 /// impl): frozen parameters parsed **once** at session build instead of per
 /// step (and shared across sessions when built from a [`FrozenParse`]),
-/// plus a private cache (plans + spectra) not shared with other sessions.
+/// a private cache (plans + spectra) not shared with other sessions, and —
+/// after the first call — the session's recorded execution plan with its
+/// buffer arena.
 pub struct InterpState {
     /// (name, parsed value) in `frozen_order`
     frozen: FrozenParse,
     cache: RefCell<InterpCache>,
+    /// recorded on the first stateful call; replayed afterwards
+    plan: Option<Plan>,
+    plan_enabled: bool,
+    /// consecutive Plan::build failures; planning is disabled for the
+    /// session after [`MAX_PLAN_FAILURES`] so a deterministic build
+    /// error cannot levy a per-request classification tax forever
+    build_failures: u32,
+    /// consecutive replay-to-rebuild fallbacks (reset by any successful
+    /// replay); capped like build failures so a deterministic replay
+    /// error cannot levy a per-request validation+rebuild tax forever
+    replay_failures: u32,
 }
 
+/// Give-up threshold for consecutive plan-build or replay failures (see
+/// [`InterpState::build_failures`] / [`InterpState::replay_failures`]).
+const MAX_PLAN_FAILURES: u32 = 3;
+
 impl InterpState {
+    fn over(frozen: FrozenParse) -> InterpState {
+        InterpState {
+            frozen,
+            cache: RefCell::new(InterpCache::default()),
+            plan: None,
+            plan_enabled: plan_enabled_from_env(),
+            build_failures: 0,
+            replay_failures: 0,
+        }
+    }
+
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.borrow().stats()
     }
@@ -126,11 +169,21 @@ impl InterpState {
     pub fn frozen_parse_refs(&self) -> usize {
         Rc::strong_count(&self.frozen)
     }
+
+    /// Stats of the recorded plan (None before the first call, or when
+    /// disabled via `C3A_PLAN=0`).
+    pub fn plan_stats(&self) -> Option<PlanStats> {
+        self.plan.as_ref().map(|p| p.stats())
+    }
 }
 
 impl ExecutorState for InterpState {
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
         self
+    }
+
+    fn plan_stats(&self) -> Option<PlanStats> {
+        InterpState::plan_stats(self)
     }
 }
 
@@ -155,6 +208,16 @@ struct ParsedInputs {
     scalars: BTreeMap<String, f32>,
 }
 
+/// Everything a recorded forward pass exposes for plan promotion.
+struct ForwardRecord {
+    logits: V,
+    /// trainable leaf ids in trainable_order
+    t_ids: Vec<V>,
+    /// frozen leaf ids in frozen_order
+    f_ids: Vec<V>,
+    input: ModelInput,
+}
+
 impl InterpExecutable {
     pub fn new(spec: &ArtifactSpec, meta: &ModelMeta) -> Result<InterpExecutable> {
         match meta.kind.as_str() {
@@ -173,11 +236,13 @@ impl InterpExecutable {
     }
 
     /// Stateless execution: every input (including the frozen backbone) is
-    /// parsed from the literals each call.  Plans/spectra still come from
-    /// the executable-local cache (equality-verified).
+    /// parsed from the literals each call and the graph is rebuilt.
+    /// Plans/spectra still come from the executable-local cache
+    /// (equality-verified).
     pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let parsed = self.parse_inputs(inputs, None)?;
-        self.run_parsed(parsed, &self.cache)
+        let (outs, _) = self.run_parsed(parsed, &self.cache, false)?;
+        Ok(outs)
     }
 
     /// Parse a frozen literal set (in `frozen_order`) into a shareable
@@ -208,16 +273,14 @@ impl InterpExecutable {
 
     /// Build per-session state: parse the frozen parameters once (they are
     /// constant for the life of a session) and give the session a private
-    /// plan/spectra cache.
+    /// plan/spectra cache plus an (initially empty) execution-plan slot.
     pub fn prepare(&self, frozen: &[xla::Literal]) -> Result<InterpState> {
-        Ok(InterpState {
-            frozen: self.parse_frozen(frozen)?,
-            cache: RefCell::new(InterpCache::default()),
-        })
+        Ok(InterpState::over(self.parse_frozen(frozen)?))
     }
 
     /// Build per-session state over an *existing* shared parse.  The caches
-    /// stay private per state; only the parsed frozen arrays are shared.
+    /// and the execution plan stay private per state; only the parsed
+    /// frozen arrays are shared.
     pub fn prepare_from(&self, parse: FrozenParse) -> Result<InterpState> {
         if parse.len() != self.spec.frozen_order.len() {
             bail!(
@@ -241,29 +304,88 @@ impl InterpExecutable {
                 bail!("{name}: shared parse shape {:?} != manifest {:?}", arr.shape, inp.shape);
             }
         }
-        Ok(InterpState { frozen: parse, cache: RefCell::new(InterpCache::default()) })
+        Ok(InterpState::over(parse))
     }
 
     /// Stateful execution: frozen inputs are taken from `state` (the
     /// positional literals for them are arity-checked but not re-read).
+    /// The first call records the step into the state's plan; every later
+    /// call replays that plan into its preallocated buffers.
     pub fn execute_stateful(
         &self,
         state: &mut InterpState,
         inputs: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
+        let mut replay_failed = false;
+        if state.plan_enabled {
+            if let Some(plan) = state.plan.as_mut() {
+                let replayed = if self.spec.kind == "train" {
+                    plan.replay_train(&self.spec, &self.meta, &state.cache, inputs)
+                } else {
+                    plan.replay_eval(&self.spec, &state.cache, inputs).map(|l| vec![l])
+                };
+                match replayed {
+                    Ok(outs) => {
+                        state.replay_failures = 0;
+                        return Ok(outs);
+                    }
+                    // Replay is stricter than the rebuild path in spots the
+                    // shim is lenient (zero-copy slices reject cross-dtype
+                    // literals the allocating conversions accept).  Per the
+                    // ExecutorState contract — degrade, never error where
+                    // stateless execution would succeed — fall back to the
+                    // rebuild for this call, counted in
+                    // PlanStats::replay_fallbacks.  The plan stays valid:
+                    // every replay refills all variable state from scratch,
+                    // so a partial fill cannot leak, and dtype mismatches
+                    // bail in validate() before any forward work.
+                    Err(_) => {
+                        plan.note_fallback();
+                        replay_failed = true;
+                    }
+                }
+            } else {
+                let parsed = self.parse_inputs(inputs, Some(state))?;
+                let (outs, plan) = self.run_parsed(parsed, &state.cache, true)?;
+                match plan {
+                    Some(p) => state.plan = Some(p),
+                    // build failed (outputs above are still the legacy
+                    // path's): retry on later calls, but not forever
+                    None => {
+                        state.build_failures += 1;
+                        if state.build_failures >= MAX_PLAN_FAILURES {
+                            state.plan_enabled = false;
+                        }
+                    }
+                }
+                return Ok(outs);
+            }
+        }
         let parsed = self.parse_inputs(inputs, Some(state))?;
-        self.run_parsed(parsed, &state.cache)
+        let (outs, _) = self.run_parsed(parsed, &state.cache, false)?;
+        if replay_failed {
+            // the rebuild SUCCEEDED where replay failed — a genuine
+            // replay-strictness gap, not a malformed request (those
+            // error out above on both paths and never reach here).
+            // Persistently gapped sessions stop paying the replay tax.
+            state.replay_failures += 1;
+            if state.replay_failures >= MAX_PLAN_FAILURES {
+                state.plan_enabled = false;
+            }
+        }
+        Ok(outs)
     }
 
     fn run_parsed(
         &self,
         parsed: ParsedInputs,
         cache: &RefCell<InterpCache>,
-    ) -> Result<Vec<xla::Literal>> {
+        record: bool,
+    ) -> Result<(Vec<xla::Literal>, Option<Plan>)> {
         if self.spec.kind == "train" {
-            self.train_step(parsed, cache)
+            self.train_step(parsed, cache, record)
         } else {
-            self.eval_step(parsed, cache)
+            self.eval_step(parsed, cache, record)
         }
     }
 
@@ -323,12 +445,12 @@ impl InterpExecutable {
 
     /// Build tape leaves + the shared model input, run the forward pass.
     /// Leaves are shared (`Rc`) with the parsed/cached arrays — no copies.
-    fn forward<'t>(
+    fn forward(
         &self,
-        tape: &'t mut Tape,
+        tape: &mut Tape,
         parsed: &ParsedInputs,
         cache: &RefCell<InterpCache>,
-    ) -> Result<(V, Vec<V>, ModelInput)> {
+    ) -> Result<ForwardRecord> {
         let mut params: BTreeMap<String, V> = BTreeMap::new();
         let mut t_ids = Vec::with_capacity(parsed.trainable.len());
         for (name, arr) in &parsed.trainable {
@@ -336,8 +458,10 @@ impl InterpExecutable {
             t_ids.push(id);
             params.insert(name.clone(), id);
         }
+        let mut f_ids = Vec::with_capacity(parsed.frozen.len());
         for (name, arr) in &parsed.frozen {
             let id = tape.leaf_shared(arr.clone(), false);
+            f_ids.push(id);
             params.insert(name.clone(), id);
         }
         let (b, s) = (self.spec.batch, self.spec.seq);
@@ -355,69 +479,78 @@ impl InterpExecutable {
             cache: Some(cache),
         };
         let fwd = graph.forward(&self.spec.head, &input)?;
-        Ok((fwd.logits, t_ids, input))
+        Ok(ForwardRecord { logits: fwd.logits, t_ids, f_ids, input })
     }
 
     fn eval_step(
         &self,
         parsed: ParsedInputs,
         cache: &RefCell<InterpCache>,
-    ) -> Result<Vec<xla::Literal>> {
+        record: bool,
+    ) -> Result<(Vec<xla::Literal>, Option<Plan>)> {
         let mut tape = Tape::new();
-        let (logits, _t_ids, _input) = self.forward(&mut tape, &parsed, cache)?;
-        let out = tape.val(logits);
-        Ok(vec![xla::Literal::from_f32(&out.shape, out.data.clone())])
+        let fwd = self.forward(&mut tape, &parsed, cache)?;
+        // the logits buffer *moves* into the output literal (no clone);
+        // a recorded plan reallocates that one slot on its first replay
+        let out = tape.take_val(fwd.logits);
+        // a build failure degrades to plan-less rebuilds — never an error
+        // on a call whose outputs the legacy path already produced
+        let plan = if record {
+            Plan::build(
+                tape,
+                &self.spec,
+                fwd.logits,
+                &out.shape,
+                &fwd.t_ids,
+                &fwd.f_ids,
+                fwd.input.tokens.as_deref(),
+            )
+            .ok()
+        } else {
+            None
+        };
+        Ok((vec![xla::Literal::from_f32(&out.shape, out.data)], plan))
     }
 
     fn train_step(
         &self,
         parsed: ParsedInputs,
         cache: &RefCell<InterpCache>,
-    ) -> Result<Vec<xla::Literal>> {
+        record: bool,
+    ) -> Result<(Vec<xla::Literal>, Option<Plan>)> {
         let mut tape = Tape::new();
-        let (logits, t_ids, input) = self.forward(&mut tape, &parsed, cache)?;
-        let (loss, metric, dlogits) = self.loss_head(&tape, logits, &parsed, &input)?;
-        let grads = tape.backward(logits, dlogits);
+        let fwd = self.forward(&mut tape, &parsed, cache)?;
+        let view = LossView {
+            tokens: fwd.input.tokens.as_deref(),
+            targets: parsed.data_i32.get("data.targets").map(|v| v.as_slice()),
+            loss_mask: parsed.data_f32.get("data.loss_mask").map(|a| a.data.as_slice()),
+            y_i32: parsed.data_i32.get("data.y").map(|v| v.as_slice()),
+            y_f32: parsed.data_f32.get("data.y").map(|a| a.data.as_slice()),
+        };
+        let (loss, metric, dlogits) =
+            loss_head_view(&self.spec, &self.meta, tape.val(fwd.logits), &view)?;
+        let grads = tape.backward(fwd.logits, dlogits);
 
         let step = *parsed.scalars.get("step").context("missing scalar step")?;
         let lr = *parsed.scalars.get("lr").context("missing scalar lr")?;
         let wd = parsed.scalars.get("wd").copied().unwrap_or(0.0);
-        let bc1 = 1.0 - (BETA1 as f64).powf(step as f64);
-        let bc2 = 1.0 - (BETA2 as f64).powf(step as f64);
 
         let nt = parsed.trainable.len();
         let mut new_t = Vec::with_capacity(nt);
         let mut new_m = Vec::with_capacity(nt);
         let mut new_v = Vec::with_capacity(nt);
         for (i, (name, p)) in parsed.trainable.iter().enumerate() {
-            let zero;
-            let g: &Vec<f32> = match grads[t_ids[i]].as_ref() {
-                Some(g) => g,
-                None => {
-                    zero = vec![0f32; p.len()];
-                    &zero
-                }
-            };
-            let exempt = name.ends_with(".b")
-                || name.ends_with(".g")
-                || name.ends_with(".mag")
-                || name.ends_with(".lb")
-                || name.ends_with(".ld");
-            let decay = if exempt { 0.0 } else { wd };
-            let m0 = &parsed.opt_m[i];
-            let v0 = &parsed.opt_v[i];
-            let mut pn = vec![0f32; p.len()];
-            let mut mn = vec![0f32; p.len()];
-            let mut vn = vec![0f32; p.len()];
-            for e in 0..p.len() {
-                let gv = g[e];
-                let nm = BETA1 * m0.data[e] + (1.0 - BETA1) * gv;
-                let nv = BETA2 * v0.data[e] + (1.0 - BETA2) * gv * gv;
-                let upd = (nm / bc1 as f32) / ((nv / bc2 as f32).sqrt() + EPS);
-                pn[e] = p.data[e] - lr * (upd + decay * p.data[e]);
-                mn[e] = nm;
-                vn[e] = nv;
-            }
+            let decay = if decay_exempt(name) { 0.0 } else { wd };
+            let g = grads[fwd.t_ids[i]].as_deref();
+            let (pn, mn, vn) = adamw_update(
+                &p.data,
+                g,
+                &parsed.opt_m[i].data,
+                &parsed.opt_v[i].data,
+                step,
+                lr,
+                decay,
+            );
             new_t.push(xla::Literal::from_f32(&p.shape, pn));
             new_m.push(xla::Literal::from_f32(&p.shape, mn));
             new_v.push(xla::Literal::from_f32(&p.shape, vn));
@@ -427,118 +560,186 @@ impl InterpExecutable {
         outs.extend(new_v);
         outs.push(xla::Literal::scalar(loss));
         outs.push(xla::Literal::scalar(metric));
-        Ok(outs)
+        // build failure degrades to plan-less rebuilds (outputs above
+        // were computed by the legacy path either way)
+        let plan = if record {
+            let lshape = tape.val(fwd.logits).shape.clone();
+            Plan::build(
+                tape,
+                &self.spec,
+                fwd.logits,
+                &lshape,
+                &fwd.t_ids,
+                &fwd.f_ids,
+                fwd.input.tokens.as_deref(),
+            )
+            .ok()
+        } else {
+            None
+        };
+        Ok((outs, plan))
     }
+}
 
-    /// Compute (loss, metric, dL/dlogits) on the host, mirroring
-    /// python task_loss.
-    fn loss_head(
-        &self,
-        tape: &Tape,
-        logits: V,
-        parsed: &ParsedInputs,
-        input: &ModelInput,
-    ) -> Result<(f32, f32, Vec<f32>)> {
-        let lv = tape.val(logits);
-        let head = self.spec.head.as_str();
-        let kind = self.meta.kind.as_str();
-        let (b, s) = (input.b, input.s);
+/// Borrowed views of the loss-head data inputs — built from the parsed
+/// maps on the rebuild path and straight from the literal payloads on the
+/// replay path, so both regimes share one loss implementation.
+pub(crate) struct LossView<'a> {
+    pub tokens: Option<&'a [i32]>,
+    pub targets: Option<&'a [i32]>,
+    pub loss_mask: Option<&'a [f32]>,
+    pub y_i32: Option<&'a [i32]>,
+    pub y_f32: Option<&'a [f32]>,
+}
 
-        if kind == "decoder" || head == "mlm" {
-            // masked token-level cross-entropy over [b,s,V]
-            let mask =
-                parsed.data_f32.get("data.loss_mask").context("missing data.loss_mask")?;
-            let targets: Vec<i32> = if head == "mlm" {
-                parsed.data_i32.get("data.targets").context("missing data.targets")?.clone()
-            } else {
-                // next-token targets: shift left, pad last column with 0
-                let toks = input.tokens.as_ref().context("missing data.tokens")?;
-                let mut t = vec![0i32; b * s];
-                for bi in 0..b {
-                    for si in 0..s.saturating_sub(1) {
-                        t[bi * s + si] = toks[bi * s + si + 1];
-                    }
-                }
-                t
-            };
-            let vcb = *lv.shape.last().unwrap();
-            let denom = mask.data.iter().sum::<f32>().max(1.0);
-            let mut loss = 0f64;
-            let mut correct = 0f64;
-            let mut dl = vec![0f32; lv.len()];
-            for pos in 0..b * s {
-                let m = mask.data[pos];
-                // masked (padding) positions are skipped *before* target
-                // validation: garbage targets under mask 0 are legal and
-                // must not abort training.
-                if m == 0.0 {
-                    continue;
-                }
-                let row = &lv.data[pos * vcb..(pos + 1) * vcb];
-                let tgt = targets[pos].max(0) as usize;
-                if tgt >= vcb {
-                    bail!("target {tgt} out of vocab {vcb}");
-                }
-                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
-                let lse = mx + sum.ln();
-                loss += (m * (lse - row[tgt])) as f64;
-                let amax = crate::substrate::linalg::argmax(row);
-                if amax == tgt {
-                    correct += m as f64;
-                }
-                for j in 0..vcb {
-                    let p = (row[j] - lse).exp();
-                    let onehot = if j == tgt { 1.0 } else { 0.0 };
-                    dl[pos * vcb + j] = m * (p - onehot) / denom;
+/// Compute (loss, metric, dL/dlogits) on the host, mirroring python
+/// task_loss.  Shared verbatim by the rebuild and replay paths.
+pub(crate) fn loss_head_view(
+    spec: &ArtifactSpec,
+    meta: &ModelMeta,
+    lv: &Arr,
+    view: &LossView,
+) -> Result<(f32, f32, Vec<f32>)> {
+    let head = spec.head.as_str();
+    let kind = meta.kind.as_str();
+    let (b, s) = (spec.batch, spec.seq);
+
+    if kind == "decoder" || head == "mlm" {
+        // masked token-level cross-entropy over [b,s,V]
+        let mask = view.loss_mask.context("missing data.loss_mask")?;
+        let shifted;
+        let targets: &[i32] = if head == "mlm" {
+            view.targets.context("missing data.targets")?
+        } else {
+            // next-token targets: shift left, pad last column with 0
+            let toks = view.tokens.context("missing data.tokens")?;
+            let mut t = vec![0i32; b * s];
+            for bi in 0..b {
+                for si in 0..s.saturating_sub(1) {
+                    t[bi * s + si] = toks[bi * s + si + 1];
                 }
             }
-            return Ok(((loss / denom as f64) as f32, correct as f32, dl));
-        }
-
-        if head == "reg" {
-            let y = parsed.data_f32.get("data.y").context("missing data.y")?;
-            let w = lv.shape[1];
-            let mut loss = 0f64;
-            let mut pred_sum = 0f64;
-            let mut dl = vec![0f32; lv.len()];
-            for r in 0..b {
-                let pred = lv.data[r * w];
-                let diff = pred - y.data[r];
-                loss += (diff * diff) as f64;
-                pred_sum += pred as f64;
-                dl[r * w] = 2.0 * diff / b as f32;
-            }
-            return Ok(((loss / b as f64) as f32, pred_sum as f32, dl));
-        }
-
-        // classification (cls / vec / mlp): mean CE over [b, n_out]
-        let y = parsed.data_i32.get("data.y").context("missing data.y")?;
-        let w = lv.shape[1];
+            shifted = t;
+            &shifted
+        };
+        let vcb = *lv.shape.last().unwrap();
+        let denom = mask.iter().sum::<f32>().max(1.0);
         let mut loss = 0f64;
         let mut correct = 0f64;
         let mut dl = vec![0f32; lv.len()];
-        for r in 0..b {
-            let row = &lv.data[r * w..(r + 1) * w];
-            let tgt = y[r].max(0) as usize;
-            if tgt >= w {
-                bail!("label {tgt} out of range {w}");
+        for pos in 0..b * s {
+            let m = mask[pos];
+            // masked (padding) positions are skipped *before* target
+            // validation: garbage targets under mask 0 are legal and
+            // must not abort training.
+            if m == 0.0 {
+                continue;
+            }
+            let row = &lv.data[pos * vcb..(pos + 1) * vcb];
+            let tgt = targets[pos].max(0) as usize;
+            if tgt >= vcb {
+                bail!("target {tgt} out of vocab {vcb}");
             }
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
             let lse = mx + sum.ln();
-            loss += (lse - row[tgt]) as f64;
-            if crate::substrate::linalg::argmax(row) == tgt {
-                correct += 1.0;
+            loss += (m * (lse - row[tgt])) as f64;
+            let amax = crate::substrate::linalg::argmax(row);
+            if amax == tgt {
+                correct += m as f64;
             }
-            for j in 0..w {
+            for j in 0..vcb {
                 let p = (row[j] - lse).exp();
                 let onehot = if j == tgt { 1.0 } else { 0.0 };
-                dl[r * w + j] = (p - onehot) / b as f32;
+                dl[pos * vcb + j] = m * (p - onehot) / denom;
             }
         }
-        Ok(((loss / b as f64) as f32, correct as f32, dl))
+        return Ok(((loss / denom as f64) as f32, correct as f32, dl));
     }
+
+    if head == "reg" {
+        let y = view.y_f32.context("missing data.y")?;
+        let w = lv.shape[1];
+        let mut loss = 0f64;
+        let mut pred_sum = 0f64;
+        let mut dl = vec![0f32; lv.len()];
+        for r in 0..b {
+            let pred = lv.data[r * w];
+            let diff = pred - y[r];
+            loss += (diff * diff) as f64;
+            pred_sum += pred as f64;
+            dl[r * w] = 2.0 * diff / b as f32;
+        }
+        return Ok(((loss / b as f64) as f32, pred_sum as f32, dl));
+    }
+
+    // classification (cls / vec / mlp): mean CE over [b, n_out]
+    let y = view.y_i32.context("missing data.y")?;
+    let w = lv.shape[1];
+    let mut loss = 0f64;
+    let mut correct = 0f64;
+    let mut dl = vec![0f32; lv.len()];
+    for r in 0..b {
+        let row = &lv.data[r * w..(r + 1) * w];
+        let tgt = y[r].max(0) as usize;
+        if tgt >= w {
+            bail!("label {tgt} out of range {w}");
+        }
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+        let lse = mx + sum.ln();
+        loss += (lse - row[tgt]) as f64;
+        if crate::substrate::linalg::argmax(row) == tgt {
+            correct += 1.0;
+        }
+        for j in 0..w {
+            let p = (row[j] - lse).exp();
+            let onehot = if j == tgt { 1.0 } else { 0.0 };
+            dl[r * w + j] = (p - onehot) / b as f32;
+        }
+    }
+    Ok(((loss / b as f64) as f32, correct as f32, dl))
+}
+
+/// Whether a trainable parameter is exempt from AdamW weight decay
+/// (mirrors python adamw_update).  The single home of the suffix rule —
+/// the rebuild path applies it per step and `Plan::build` precomputes it
+/// per plan, so the two can never drift.
+pub(crate) fn decay_exempt(name: &str) -> bool {
+    name.ends_with(".b")
+        || name.ends_with(".g")
+        || name.ends_with(".mag")
+        || name.ends_with(".lb")
+        || name.ends_with(".ld")
+}
+
+/// One AdamW parameter update (decoupled decay), shared verbatim by the
+/// rebuild and replay paths.  `g = None` means a zero gradient (the
+/// parameter is disconnected from the loss).
+pub(crate) fn adamw_update(
+    p: &[f32],
+    g: Option<&[f32]>,
+    m0: &[f32],
+    v0: &[f32],
+    step: f32,
+    lr: f32,
+    decay: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let bc1 = 1.0 - (BETA1 as f64).powf(step as f64);
+    let bc2 = 1.0 - (BETA2 as f64).powf(step as f64);
+    let mut pn = vec![0f32; p.len()];
+    let mut mn = vec![0f32; p.len()];
+    let mut vn = vec![0f32; p.len()];
+    for e in 0..p.len() {
+        let gv = g.map_or(0.0, |g| g[e]);
+        let nm = BETA1 * m0[e] + (1.0 - BETA1) * gv;
+        let nv = BETA2 * v0[e] + (1.0 - BETA2) * gv * gv;
+        let upd = (nm / bc1 as f32) / ((nv / bc2 as f32).sqrt() + EPS);
+        pn[e] = p[e] - lr * (upd + decay * p[e]);
+        mn[e] = nm;
+        vn[e] = nv;
+    }
+    (pn, mn, vn)
 }
 
 fn lit_to_arr(lit: &xla::Literal, shape: &[usize]) -> Result<Arr> {

@@ -6,7 +6,7 @@
 //! Graphs are built on the [`Tape`](super::ad::Tape); the caller owns loss
 //! heads and the optimizer.
 
-use super::ad::{Act, Arr, C3aSpectra, Tape, V};
+use super::ad::{Act, Arr, C3aSpectra, LeafTag, Tape, V};
 use super::InterpCache;
 use crate::runtime::manifest::{ModelMeta, PeftParams};
 use anyhow::{bail, Context, Result};
@@ -14,7 +14,10 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
-const NEG: f32 = -1e9;
+/// Additive attention-mask penalty; shared with the plan replay's mask
+/// recomputation (`runtime::plan`), which must reproduce the recorded
+/// values bit-for-bit.
+pub(crate) const NEG: f32 = -1e9;
 
 /// Model inputs for one batch (exactly one of `tokens` / `x` per kind).
 pub struct ModelInput {
@@ -113,7 +116,7 @@ impl<'a> Graph<'a> {
                     for i in 0..bb {
                         eye.data[i * bb + i] = 1.0;
                     }
-                    let eye = self.tape.leaf(eye, false);
+                    let eye = self.tape.leaf_tagged(eye, false, LeafTag::Const);
                     let t2 = self.tape.scale(s2, 0.5);
                     let t3 = self.tape.scale(s3, 1.0 / 6.0);
                     let t4 = self.tape.scale(s4, 1.0 / 24.0);
@@ -230,7 +233,7 @@ impl<'a> Graph<'a> {
         let mut pad = vec![false; b * s];
         let mut x = if self.meta.input_mode == "vec" {
             let xv = input.x.as_ref().context("vec-mode encoder needs data.x")?;
-            let xleaf = self.tape.leaf(xv.clone(), false);
+            let xleaf = self.tape.leaf_tagged(xv.clone(), false, LeafTag::DataX);
             let patch = self.p("embed.patch")?;
             self.tape.matmul(xleaf, patch, false)
         } else {
@@ -244,7 +247,9 @@ impl<'a> Graph<'a> {
         };
         let pos = self.p("embed.pos")?;
         x = self.tape.add(x, pos); // [S,d] broadcast over batch
-        // attention mask [b,1,1,s]: -1e9 at pad keys
+        // attention mask [b,1,1,s]: -1e9 at pad keys.  Token-derived, so
+        // a plan replay recomputes it; the vec mode has no tokens and the
+        // all-zero mask is a recorded constant.
         let mut mask = Arr::zeros(vec![b, 1, 1, s]);
         for bi in 0..b {
             for si in 0..s {
@@ -253,7 +258,9 @@ impl<'a> Graph<'a> {
                 }
             }
         }
-        let mask = self.tape.leaf(mask, false);
+        let mask_tag =
+            if self.meta.input_mode == "vec" { LeafTag::Const } else { LeafTag::MaskEncPad };
+        let mask = self.tape.leaf_tagged(mask, false, mask_tag);
         for i in 0..self.meta.layers {
             let att = self.attention(i, x, mask)?;
             let res = self.tape.add(x, att);
@@ -307,7 +314,7 @@ impl<'a> Graph<'a> {
                 }
             }
         }
-        let mask = self.tape.leaf(mask, false);
+        let mask = self.tape.leaf_tagged(mask, false, LeafTag::MaskDecCausal);
         for i in 0..self.meta.layers {
             let g1 = self.p(&format!("L{i}.rms1.g"))?;
             let h = self.tape.rmsnorm(x, g1);
@@ -327,7 +334,7 @@ impl<'a> Graph<'a> {
     /// Fig. 4 MLP: in -> h -> (middle op) -> h -> classes.
     fn mlp_fwd(&mut self, input: &ModelInput) -> Result<Forward> {
         let xv = input.x.as_ref().context("mlp needs data.x")?;
-        let x = self.tape.leaf(xv.clone(), false);
+        let x = self.tape.leaf_tagged(xv.clone(), false, LeafTag::DataX);
         let w0 = self.p("mlp.w0")?;
         let b0 = self.p("mlp.b0")?;
         let xw = self.tape.matmul(x, w0, false);

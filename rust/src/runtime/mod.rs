@@ -22,6 +22,7 @@ pub mod backend;
 pub mod catalog;
 pub mod interp;
 pub mod manifest;
+pub mod plan;
 pub mod refbackend;
 pub mod session;
 

@@ -1,0 +1,650 @@
+//! Replayable execution plans — the record-once / replay-many seam that
+//! turns the substrate interpreter's steady state from a rebuild into a
+//! replay.
+//!
+//! The first stateful call on an artifact records the whole step through
+//! the eager [`Tape`] exactly as before; the finished tape — already a
+//! flat, topologically ordered op list with static shapes — is then
+//! promoted into a [`Plan`]: every leaf is classified (trainable /
+//! frozen-parse / data / token-derived mask / constant), liveness is
+//! analysed over the op list, and eval plans get an arena slot assignment
+//! so dead buffers are recycled into later same-size nodes.  Subsequent
+//! calls *replay*: leaves are refilled from the input literals, C3A
+//! spectra are refreshed through the session cache (equality-invalidated,
+//! so training steps stay correct), and every op recomputes in place into
+//! its preallocated buffer through the same `eval_op` kernels the
+//! recording used — bit-for-bit identity with the legacy rebuild path is
+//! structural, not incidental.
+//!
+//! Ownership: one plan per [`InterpState`](super::interp::InterpState),
+//! i.e. per session / per serving tenant.  A plan is never invalidated in
+//! normal operation (shapes are static per artifact); adapter hot-swaps
+//! only invalidate spectra + uploads, not the plan.  `C3A_PLAN=0`
+//! disables recording and falls back to the per-request rebuild.
+
+use super::interp::ad::{LeafTag, Tape, V};
+use super::interp::{adamw_update, decay_exempt, loss_head_view, InterpCache, LossView};
+use super::manifest::{ArtifactSpec, ModelMeta, Role};
+use crate::runtime::interp::model::NEG;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Observability snapshot of a recorded plan (exposed through
+/// [`ExecutorState::plan_stats`](super::backend::ExecutorState::plan_stats)).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    /// op nodes in the straight-line program
+    pub ops: usize,
+    /// leaf nodes (parameters, data, masks, constants)
+    pub leaves: usize,
+    /// completed replays (the recording call is not counted)
+    pub replays: u64,
+    /// replays that errored and fell back to the rebuild path (e.g. a
+    /// cross-dtype literal the strict zero-copy slices reject); nonzero
+    /// here means the tentpole speedup is not being realized
+    pub replay_fallbacks: u64,
+    /// op nodes serviced by a recycled arena buffer (eval plans; liveness
+    /// slot sharing is disabled on train plans, whose values must survive
+    /// for the backward pass)
+    pub shared_buffers: usize,
+    /// bytes of distinct op-output buffers the arena holds live
+    pub arena_bytes: usize,
+}
+
+/// Dtype contract of one positional input, checked up front by
+/// [`Plan::validate`] so a cross-dtype literal (which the lenient
+/// rebuild path converts but the zero-copy replay slices reject) bails
+/// *before* any forward work is spent, making the fallback cheap.
+#[derive(Clone, Copy, PartialEq)]
+enum DtypeRule {
+    MustF32,
+    MustI32,
+    /// frozen inputs: state-covered, never read on replay
+    Any,
+}
+
+/// How one node is serviced on a replay.
+#[derive(Clone, Copy)]
+enum Action {
+    /// frozen-parse leaves and recorded constants: nothing to do
+    Skip,
+    /// trainable leaf `i` (trainable_order): refill from its literal
+    FillTrainable(usize),
+    /// dense data leaf: refill from input literal at `input`
+    FillF32 { input: usize },
+    /// encoder pad-key mask `[b,1,1,s]`, recomputed from tokens
+    MaskEncPad { tokens: usize },
+    /// decoder causal+pad mask `[b,1,s,s]`, recomputed from tokens
+    MaskDecCausal { tokens: usize },
+    /// op node: recompute in place, optionally stealing a dead donor's
+    /// buffer first (arena slot reuse)
+    Compute { steal: Option<V> },
+}
+
+/// A recorded, replayable step: the tape is both the op-list IR and the
+/// buffer arena (every node owns its output slot across replays).
+pub struct Plan {
+    tape: Tape,
+    train: bool,
+    logits: V,
+    /// trainable leaf node ids, in trainable_order
+    t_ids: Vec<V>,
+    actions: Vec<Action>,
+    /// static output shape per node (replay re-imposes it after steals)
+    shapes: Vec<Vec<usize>>,
+    /// embedding gathers to re-id from the request tokens
+    gathers: Vec<V>,
+    /// (c3a op node, kernel leaf node, kernel parameter name)
+    c3as: Vec<(V, V, String)>,
+    /// expected element count per positional input literal
+    expected_len: Vec<usize>,
+    /// expected dtype per positional input literal
+    expected_dtype: Vec<DtypeRule>,
+    /// input literal positions by role/name
+    t_pos: Vec<usize>,
+    m_pos: Vec<usize>,
+    v_pos: Vec<usize>,
+    tokens_pos: Option<usize>,
+    targets_pos: Option<usize>,
+    loss_mask_pos: Option<usize>,
+    y_pos: Option<usize>,
+    y_is_i32: bool,
+    step_pos: Option<usize>,
+    lr_pos: Option<usize>,
+    wd_pos: Option<usize>,
+    /// per-trainable AdamW weight-decay exemption (precomputed from the
+    /// same `.b/.g/.mag/.lb/.ld` suffix rule the legacy path applies)
+    decay_exempt: Vec<bool>,
+    stats: PlanStats,
+}
+
+/// Liveness + arena slot assignment over the op list: every op node's
+/// buffer is free after its last use; a later node of the same element
+/// count steals it.  Chains are closed circularly (the first node of a
+/// chain steals the final owner's stale buffer from the previous replay),
+/// so steady-state replays never allocate.  `exclude` (the logits node)
+/// neither donates — its buffer is moved out as the eval output — nor
+/// steals.  Returns (steal_from, shared_count, arena_bytes).
+fn assign_slots(tape: &Tape, exclude: V) -> (Vec<Option<V>>, usize, usize) {
+    let nn = tape.node_count();
+    let mut last_use = vec![0usize; nn];
+    let mut ids: Vec<V> = Vec::new();
+    for v in 0..nn {
+        ids.clear();
+        tape.op_input_ids(v, &mut ids);
+        for &u in &ids {
+            last_use[u] = v;
+        }
+    }
+    let participates =
+        |v: usize| -> bool { !tape.is_leaf(v) && v != exclude && last_use[v] > v };
+    // donors become free after the op that last reads them
+    let mut release_at: Vec<Vec<V>> = vec![Vec::new(); nn];
+    for v in 0..nn {
+        if participates(v) {
+            release_at[last_use[v]].push(v);
+        }
+    }
+    let mut free: HashMap<usize, Vec<V>> = HashMap::new();
+    let mut steal_from: Vec<Option<V>> = vec![None; nn];
+    for v in 0..nn {
+        if v > 0 {
+            for &d in &release_at[v - 1] {
+                free.entry(tape.val(d).len()).or_default().push(d);
+            }
+        }
+        if tape.is_leaf(v) || v == exclude {
+            continue;
+        }
+        if let Some(list) = free.get_mut(&tape.val(v).len()) {
+            if let Some(d) = list.pop() {
+                steal_from[v] = Some(d);
+            }
+        }
+    }
+    let shared = steal_from.iter().filter(|s| s.is_some()).count();
+    // arena bytes: one physical buffer per chain (its start) + every
+    // sole-owner op node
+    let mut donated = vec![false; nn];
+    let mut next: Vec<Option<V>> = vec![None; nn];
+    for v in 0..nn {
+        if let Some(d) = steal_from[v] {
+            donated[d] = true;
+            next[d] = Some(v);
+        }
+    }
+    // `exclude` (the logits output) is not arena-resident: its buffer is
+    // moved out to the caller on every replay, so it does not count
+    // toward steady-state held memory.
+    let mut arena_bytes = 0usize;
+    for v in 0..nn {
+        if !tape.is_leaf(v) && v != exclude && steal_from[v].is_none() {
+            arena_bytes += tape.val(v).len() * std::mem::size_of::<f32>();
+        }
+    }
+    // circularize: a chain's first node re-steals the final owner's
+    // stale buffer on the next replay
+    for v in 0..nn {
+        if steal_from[v].is_none() && donated[v] {
+            let mut e = v;
+            while let Some(nx) = next[e] {
+                e = nx;
+            }
+            steal_from[v] = Some(e);
+        }
+    }
+    (steal_from, shared, arena_bytes)
+}
+
+impl Plan {
+    /// Promote a freshly recorded tape into a replayable plan.
+    ///
+    /// `logits_shape` is passed explicitly because the eval path moves
+    /// the logits buffer out (to the caller) before promotion, leaving
+    /// the sentinel behind.  `rec_tokens` is the recording call's token
+    /// batch: every recorded gather's ids are verified against the
+    /// `t.max(0)` token mapping, so a future non-token gather fails
+    /// closed here (the caller degrades to the rebuild path) instead of
+    /// being silently mis-replayed.  A build error is always safe to
+    /// swallow: the recording call's outputs were computed by the legacy
+    /// path, and a plan-less state simply keeps rebuilding.
+    pub fn build(
+        tape: Tape,
+        spec: &ArtifactSpec,
+        logits: V,
+        logits_shape: &[usize],
+        t_ids: &[V],
+        f_ids: &[V],
+        rec_tokens: Option<&[i32]>,
+    ) -> Result<Plan> {
+        let train = spec.kind == "train";
+        let nn = tape.node_count();
+        let mut shapes: Vec<Vec<usize>> = (0..nn).map(|v| tape.val(v).shape.clone()).collect();
+        shapes[logits] = logits_shape.to_vec();
+
+        // positional input maps (spec.inputs order == literal order)
+        let mut t_pos = Vec::new();
+        let mut m_pos = Vec::new();
+        let mut v_pos = Vec::new();
+        let mut exempt = Vec::new();
+        let mut tokens_pos = None;
+        let mut targets_pos = None;
+        let mut loss_mask_pos = None;
+        let mut y_pos = None;
+        let mut y_is_i32 = false;
+        let mut x_pos = None;
+        let (mut step_pos, mut lr_pos, mut wd_pos) = (None, None, None);
+        let mut expected_len = Vec::with_capacity(spec.inputs.len());
+        let mut expected_dtype = Vec::with_capacity(spec.inputs.len());
+        for (i, inp) in spec.inputs.iter().enumerate() {
+            expected_len.push(inp.shape.iter().product::<usize>().max(1));
+            expected_dtype.push(match inp.role {
+                Role::Frozen | Role::FrozenRandom => DtypeRule::Any,
+                Role::Data if inp.i32_dtype => DtypeRule::MustI32,
+                _ => DtypeRule::MustF32,
+            });
+            match inp.role {
+                Role::Trainable => {
+                    exempt.push(decay_exempt(&inp.name));
+                    t_pos.push(i);
+                }
+                Role::OptM => m_pos.push(i),
+                Role::OptV => v_pos.push(i),
+                Role::Data => match inp.name.as_str() {
+                    "data.tokens" => tokens_pos = Some(i),
+                    "data.targets" => targets_pos = Some(i),
+                    "data.loss_mask" => loss_mask_pos = Some(i),
+                    "data.x" => x_pos = Some(i),
+                    "data.y" => {
+                        y_pos = Some(i);
+                        y_is_i32 = inp.i32_dtype;
+                    }
+                    _ => {}
+                },
+                Role::Scalar => match inp.name.as_str() {
+                    "step" => step_pos = Some(i),
+                    "lr" => lr_pos = Some(i),
+                    "wd" => wd_pos = Some(i),
+                    _ => bail!("{}: unknown scalar input {}", spec.name, inp.name),
+                },
+                Role::Frozen | Role::FrozenRandom => {}
+            }
+        }
+        if t_pos.len() != t_ids.len() {
+            let (got, want) = (t_ids.len(), t_pos.len());
+            bail!("{}: recorded {got} trainable leaves, manifest has {want}", spec.name);
+        }
+
+        // parameter-name lookup for C3A kernel leaves
+        let t_names: Vec<&String> = t_pos.iter().map(|&i| &spec.inputs[i].name).collect();
+        let name_of = |leaf: V| -> Option<String> {
+            if let Some(i) = t_ids.iter().position(|&v| v == leaf) {
+                return Some(t_names[i].clone());
+            }
+            f_ids
+                .iter()
+                .position(|&v| v == leaf)
+                .map(|i| spec.frozen_order[i].clone())
+        };
+        let mut c3as = Vec::new();
+        for (op, w) in tape.c3a_nodes() {
+            let name = name_of(w)
+                .with_context(|| format!("{}: c3a kernel leaf {w} is unbound", spec.name))?;
+            c3as.push((op, w, name));
+        }
+        let gathers = tape.gather_nodes();
+        if !gathers.is_empty() {
+            if tokens_pos.is_none() {
+                bail!("{}: recorded a token gather but has no data.tokens input", spec.name);
+            }
+            // fail closed: replay rewrites gather ids from tokens, which
+            // is only sound if that is exactly how they were recorded
+            let toks = rec_tokens
+                .with_context(|| format!("{}: gather recorded without tokens", spec.name))?;
+            for &g in &gathers {
+                if !tape.gather_ids_match_tokens(g, toks) {
+                    bail!("{}: gather {g} ids are not the token mapping", spec.name);
+                }
+            }
+        }
+
+        // per-node replay actions; eval plans additionally share buffers
+        // (train plans retain every buffer for the backward pass, so
+        // their arena is simply the full op set)
+        let (steal_from, shared, arena_bytes) = if train {
+            let bytes = (0..nn)
+                .filter(|&v| !tape.is_leaf(v))
+                .map(|v| tape.val(v).len() * std::mem::size_of::<f32>())
+                .sum();
+            (vec![None; nn], 0, bytes)
+        } else {
+            assign_slots(&tape, logits)
+        };
+        let mut leaves = 0usize;
+        let mut actions = Vec::with_capacity(nn);
+        for v in 0..nn {
+            let action = match tape.leaf_tag(v) {
+                None => Action::Compute { steal: steal_from[v] },
+                Some(tag) => {
+                    leaves += 1;
+                    match tag {
+                        LeafTag::Input => {
+                            if let Some(i) = t_ids.iter().position(|&t| t == v) {
+                                Action::FillTrainable(i)
+                            } else if f_ids.contains(&v) {
+                                Action::Skip
+                            } else {
+                                let sn = &spec.name;
+                                bail!("{sn}: input leaf {v} is neither trainable nor frozen");
+                            }
+                        }
+                        LeafTag::Const => Action::Skip,
+                        LeafTag::DataX => Action::FillF32 {
+                            input: x_pos
+                                .with_context(|| format!("{}: no data.x input", spec.name))?,
+                        },
+                        LeafTag::MaskEncPad => Action::MaskEncPad {
+                            tokens: tokens_pos
+                                .with_context(|| format!("{}: no data.tokens input", spec.name))?,
+                        },
+                        LeafTag::MaskDecCausal => Action::MaskDecCausal {
+                            tokens: tokens_pos
+                                .with_context(|| format!("{}: no data.tokens input", spec.name))?,
+                        },
+                    }
+                }
+            };
+            actions.push(action);
+        }
+
+        let stats = PlanStats {
+            ops: nn - leaves,
+            leaves,
+            replays: 0,
+            replay_fallbacks: 0,
+            shared_buffers: shared,
+            arena_bytes,
+        };
+        Ok(Plan {
+            tape,
+            train,
+            logits,
+            t_ids: t_ids.to_vec(),
+            actions,
+            shapes,
+            gathers,
+            c3as,
+            expected_len,
+            expected_dtype,
+            t_pos,
+            m_pos,
+            v_pos,
+            tokens_pos,
+            targets_pos,
+            loss_mask_pos,
+            y_pos,
+            y_is_i32,
+            step_pos,
+            lr_pos,
+            wd_pos,
+            decay_exempt: exempt,
+            stats,
+        })
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        self.stats
+    }
+
+    /// Record a replay that errored and was served by the rebuild path
+    /// instead (counted so production degradation is diagnosable from
+    /// [`PlanStats`] rather than invisible).
+    pub fn note_fallback(&mut self) {
+        self.stats.replay_fallbacks += 1;
+    }
+
+    /// Validate the positional literals against the recorded contract.
+    fn validate(&self, spec: &ArtifactSpec, inputs: &[&xla::Literal]) -> Result<()> {
+        if inputs.len() != self.expected_len.len() {
+            bail!(
+                "{}: replay got {} inputs, plan recorded {}",
+                spec.name,
+                inputs.len(),
+                self.expected_len.len()
+            );
+        }
+        for (i, (&want, lit)) in self.expected_len.iter().zip(inputs.iter()).enumerate() {
+            if lit.element_count() != want {
+                bail!(
+                    "{}: input {i} has {} elements, plan recorded {want}",
+                    spec.name,
+                    lit.element_count()
+                );
+            }
+            let rule = self.expected_dtype[i];
+            let bad = (rule == DtypeRule::MustI32 && !lit.is_i32())
+                || (rule == DtypeRule::MustF32 && lit.is_i32());
+            if bad {
+                // bail before any forward work: the caller degrades to
+                // the (dtype-lenient) rebuild path cheaply
+                bail!("{}: input {i} dtype differs from the recorded contract", spec.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase 1 of a replay: refill every variable leaf from the request's
+    /// literals, re-id the token gathers, refresh C3A spectra through the
+    /// session cache.  Frozen parses and constants are untouched.
+    fn fill(
+        &mut self,
+        spec: &ArtifactSpec,
+        cache: &RefCell<InterpCache>,
+        inputs: &[&xla::Literal],
+    ) -> Result<()> {
+        self.validate(spec, inputs)?;
+        let (b, s) = (spec.batch, spec.seq);
+        for v in 0..self.actions.len() {
+            match self.actions[v] {
+                Action::Skip | Action::Compute { .. } => {}
+                Action::FillTrainable(i) => {
+                    let lit = inputs[self.t_pos[i]];
+                    let data = lit
+                        .f32_slice()
+                        .with_context(|| format!("{}: trainable {i} is not f32", spec.name))?;
+                    self.tape.copy_into_leaf(v, data);
+                }
+                Action::FillF32 { input } => {
+                    let data = inputs[input]
+                        .f32_slice()
+                        .with_context(|| format!("{}: data.x is not f32", spec.name))?;
+                    self.tape.copy_into_leaf(v, data);
+                }
+                Action::MaskEncPad { tokens } => {
+                    let toks = inputs[tokens]
+                        .i32_slice()
+                        .with_context(|| format!("{}: data.tokens is not i32", spec.name))?;
+                    self.tape.write_leaf_with(v, |data| {
+                        for (slot, &t) in data.iter_mut().zip(toks.iter()) {
+                            *slot = if t == 0 { NEG } else { 0.0 };
+                        }
+                    });
+                }
+                Action::MaskDecCausal { tokens } => {
+                    let toks = inputs[tokens]
+                        .i32_slice()
+                        .with_context(|| format!("{}: data.tokens is not i32", spec.name))?;
+                    self.tape.write_leaf_with(v, |data| {
+                        for bi in 0..b {
+                            for qi in 0..s {
+                                for ki in 0..s {
+                                    let mut m = 0f32;
+                                    if ki > qi {
+                                        m += NEG;
+                                    }
+                                    if toks[bi * s + ki] == 0 {
+                                        m += NEG;
+                                    }
+                                    data[(bi * s + qi) * s + ki] = m;
+                                }
+                            }
+                        }
+                    });
+                }
+            }
+        }
+        if let Some(tp) = self.tokens_pos {
+            if !self.gathers.is_empty() {
+                let toks = inputs[tp]
+                    .i32_slice()
+                    .with_context(|| format!("{}: data.tokens is not i32", spec.name))?;
+                for i in 0..self.gathers.len() {
+                    let g = self.gathers[i];
+                    self.tape.set_gather_tokens(g, toks);
+                }
+            }
+        }
+        for (op, w, name) in &self.c3as {
+            let spectra = cache.borrow_mut().spectra_for(name, self.tape.val(*w));
+            self.tape.refresh_c3a_spectra(*op, spectra);
+        }
+        Ok(())
+    }
+
+    /// Phase 2: straight-line recompute of every op into its arena slot.
+    fn compute(&mut self) {
+        for v in 0..self.actions.len() {
+            if let Action::Compute { steal } = self.actions[v] {
+                if let Some(d) = steal {
+                    self.tape.steal_buffer(d, v);
+                }
+                self.tape.recompute(v, &self.shapes[v]);
+            }
+        }
+    }
+
+    /// Replay an eval artifact: refill, recompute, move the logits out.
+    pub fn replay_eval(
+        &mut self,
+        spec: &ArtifactSpec,
+        cache: &RefCell<InterpCache>,
+        inputs: &[&xla::Literal],
+    ) -> Result<xla::Literal> {
+        debug_assert!(!self.train, "replay_eval on a train plan");
+        self.fill(spec, cache, inputs)?;
+        self.compute();
+        let out = self.tape.take_val(self.logits);
+        self.stats.replays += 1;
+        Ok(xla::Literal::from_f32(&out.shape, out.data))
+    }
+
+    /// Replay a train artifact: refill, recompute the forward, run the
+    /// shared loss head + backward + AdamW over the replayed values.
+    pub fn replay_train(
+        &mut self,
+        spec: &ArtifactSpec,
+        meta: &ModelMeta,
+        cache: &RefCell<InterpCache>,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        debug_assert!(self.train, "replay_train on an eval plan");
+        self.fill(spec, cache, inputs)?;
+        self.compute();
+
+        let view = LossView {
+            tokens: self.tokens_pos.map(|p| inputs[p].i32_slice()).transpose()?,
+            targets: self.targets_pos.map(|p| inputs[p].i32_slice()).transpose()?,
+            loss_mask: self.loss_mask_pos.map(|p| inputs[p].f32_slice()).transpose()?,
+            y_i32: match self.y_pos {
+                Some(p) if self.y_is_i32 => Some(inputs[p].i32_slice()?),
+                _ => None,
+            },
+            y_f32: match self.y_pos {
+                Some(p) if !self.y_is_i32 => Some(inputs[p].f32_slice()?),
+                _ => None,
+            },
+        };
+        let lv = self.tape.val(self.logits);
+        let (loss, metric, dlogits) = loss_head_view(spec, meta, lv, &view)?;
+        let grads = self.tape.backward(self.logits, dlogits);
+
+        let scalar = |pos: Option<usize>, name: &str| -> Result<f32> {
+            let p = pos.with_context(|| format!("{}: missing scalar {name}", spec.name))?;
+            inputs[p].get_first_element::<f32>()
+        };
+        let step = scalar(self.step_pos, "step")?;
+        let lr = scalar(self.lr_pos, "lr")?;
+        let wd = match self.wd_pos {
+            Some(p) => inputs[p].get_first_element::<f32>()?,
+            None => 0.0,
+        };
+
+        let nt = self.t_ids.len();
+        let mut new_t = Vec::with_capacity(nt);
+        let mut new_m = Vec::with_capacity(nt);
+        let mut new_v = Vec::with_capacity(nt);
+        for i in 0..nt {
+            let p = inputs[self.t_pos[i]].f32_slice()?;
+            let m0 = inputs[self.m_pos[i]].f32_slice()?;
+            let v0 = inputs[self.v_pos[i]].f32_slice()?;
+            let g = grads[self.t_ids[i]].as_deref();
+            let decay = if self.decay_exempt[i] { 0.0 } else { wd };
+            let (pn, mn, vn) = adamw_update(p, g, m0, v0, step, lr, decay);
+            let shape = &self.shapes[self.t_ids[i]];
+            new_t.push(xla::Literal::from_f32(shape, pn));
+            new_m.push(xla::Literal::from_f32(shape, mn));
+            new_v.push(xla::Literal::from_f32(shape, vn));
+        }
+        let mut outs = new_t;
+        outs.extend(new_m);
+        outs.extend(new_v);
+        outs.push(xla::Literal::scalar(loss));
+        outs.push(xla::Literal::scalar(metric));
+        self.stats.replays += 1;
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::ad::Arr;
+
+    /// Hand-built chain: x -> a -> b -> c (same sizes) with a dead early
+    /// node.  `a` is dead after `b`, so `c` must steal `a`'s buffer, and
+    /// the chain closes circularly.
+    #[test]
+    fn slot_assignment_recycles_dead_same_size_buffers() {
+        let mut t = Tape::new();
+        let x = t.leaf(Arr::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]), false);
+        let a = t.scale(x, 2.0); // node 1
+        let b = t.scale(a, 3.0); // node 2: last use of a
+        let c = t.scale(b, 4.0); // node 3: can reuse a's buffer
+        let d = t.scale(c, 5.0); // node 4 (logits): excluded
+        let (steal, shared, bytes) = assign_slots(&t, d);
+        assert_eq!(steal[c], Some(a), "c must steal a's dead buffer");
+        assert_eq!(shared, 1);
+        // circular closure: a re-steals the chain's final owner (c)
+        assert_eq!(steal[a], Some(c));
+        assert_eq!(steal[x], None, "leaves never participate");
+        assert_eq!(steal[d], None, "the excluded output never steals");
+        // arena-resident physical buffers: a's chain (1) + b.  The
+        // excluded output d is moved out per replay, not held.
+        assert_eq!(bytes, 2 * 4 * std::mem::size_of::<f32>());
+        let _ = b;
+    }
+
+    /// Different sizes never share a slot.
+    #[test]
+    fn slot_assignment_is_size_exact() {
+        let mut t = Tape::new();
+        let x = t.leaf(Arr::new(vec![2, 3], vec![0.5; 6]), false);
+        let a = t.transpose2(x); // [3,2], 6 elems
+        let s = t.sum_axis0(a); // [2]: last use of a, but 2 != 6
+        let out = t.scale(s, 1.0);
+        let (steal, shared, _) = assign_slots(&t, out);
+        assert_eq!(shared, 0);
+        assert!(steal.iter().all(|s| s.is_none()));
+    }
+}

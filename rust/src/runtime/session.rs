@@ -235,6 +235,12 @@ impl TrainSession {
         }
         Ok(())
     }
+
+    /// Stats of this session's recorded execution plan (None before the
+    /// first step, on non-plan backends, or under `C3A_PLAN=0`).
+    pub fn plan_stats(&self) -> Option<crate::runtime::plan::PlanStats> {
+        self.exec_state.borrow().plan_stats()
+    }
 }
 
 /// Cached upload of one trainable snapshot (the serving hot path calls
@@ -403,6 +409,15 @@ impl EvalSession {
         }
         let lit = outs.pop().unwrap();
         let shape: Vec<usize> = lit.array_shape()?.dims().iter().map(|&d| d as usize).collect();
-        Ok((lit.to_vec::<f32>()?, shape))
+        // move the logits payload out of the literal — with the plan
+        // replay path this buffer travelled arena -> literal -> caller
+        // without a single full-size copy
+        Ok((lit.into_vec_f32()?, shape))
+    }
+
+    /// Stats of this session's recorded execution plan (None before the
+    /// first `logits` call, on non-plan backends, or under `C3A_PLAN=0`).
+    pub fn plan_stats(&self) -> Option<crate::runtime::plan::PlanStats> {
+        self.exec_state.borrow().plan_stats()
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::runtime::interp::CacheStats;
 use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::plan::PlanStats;
 use crate::runtime::session::{Batch, EvalSession, SessionInit, SharedBackbone};
 use crate::runtime::Engine;
 use crate::substrate::prng::Rng;
@@ -111,6 +112,14 @@ impl AdapterRegistry {
     /// Per-tenant spectra-cache accounting (substrate backend).
     pub fn cache_stats(&self, name: &str) -> Option<CacheStats> {
         self.tenants.get(name).and_then(|t| t.session.cache_stats())
+    }
+
+    /// Per-tenant execution-plan accounting (substrate backend): each
+    /// tenant records its own plan + buffer arena on its first request
+    /// and replays it afterwards.  None before the first request or when
+    /// plans are disabled (`C3A_PLAN=0`).
+    pub fn plan_stats(&self, name: &str) -> Option<PlanStats> {
+        self.tenants.get(name).and_then(|t| t.session.plan_stats())
     }
 
     pub fn tenant_names(&self) -> Vec<String> {

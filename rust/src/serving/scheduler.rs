@@ -190,6 +190,10 @@ pub struct TenantStats {
     pub version: u64,
     pub spectra_hits: u64,
     pub spectra_misses: u64,
+    /// execution-plan replays by this tenant's session (requests minus
+    /// the one recording call, under the steady-state serving pattern;
+    /// 0 when plans are disabled via `C3A_PLAN=0`)
+    pub plan_replays: u64,
 }
 
 /// What the serving thread hands back from [`Scheduler::finish`].
@@ -326,6 +330,7 @@ fn serve_loop(
             version: registry.version(&name).unwrap_or(0),
             spectra_hits: cs.spectra_hits,
             spectra_misses: cs.spectra_misses,
+            plan_replays: registry.plan_stats(&name).map(|p| p.replays).unwrap_or(0),
             name,
         });
     }

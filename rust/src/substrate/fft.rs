@@ -5,6 +5,7 @@
 //! through here.  Real-input convenience wrappers operate on interleaved
 //! `(re, im)` slices to stay allocation-free on the hot path.
 
+use std::cell::RefCell;
 use std::f64::consts::PI;
 
 /// A complex number as (re, im) — kept trivially copyable.
@@ -139,19 +140,36 @@ impl Plan {
 
     fn bluestein_fft(&self, bs: &Bluestein, data: &mut [C]) {
         let n = self.n;
-        let mut a = vec![(0.0, 0.0); bs.m];
-        for k in 0..n {
-            a[k] = c_mul(data[k], bs.chirp[k]);
-        }
-        bs.inner.fft_in_place(&mut a);
-        for (x, y) in a.iter_mut().zip(bs.b_hat.iter()) {
-            *x = c_mul(*x, *y);
-        }
-        bs.inner.ifft_in_place(&mut a);
-        for k in 0..n {
-            data[k] = c_mul(a[k], bs.chirp[k]);
-        }
+        // Padded work buffer comes from a per-thread arena: Bluestein sits
+        // on the steady-state replay hot path (C3A blocks of non-pow2
+        // size), where a fresh `vec![...; m]` per transform would be the
+        // dominant allocation.  Safe against reentrancy because the inner
+        // plan is always a power of two (radix-2 path, never back here).
+        BLUESTEIN_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            buf.clear();
+            buf.resize(bs.m, (0.0, 0.0));
+            let a = &mut buf[..];
+            for k in 0..n {
+                a[k] = c_mul(data[k], bs.chirp[k]);
+            }
+            bs.inner.fft_in_place(a);
+            for (x, y) in a.iter_mut().zip(bs.b_hat.iter()) {
+                *x = c_mul(*x, *y);
+            }
+            bs.inner.ifft_in_place(a);
+            for k in 0..n {
+                data[k] = c_mul(a[k], bs.chirp[k]);
+            }
+        });
     }
+}
+
+thread_local! {
+    /// Per-thread Bluestein work buffer (see [`Plan::bluestein_fft`]).
+    /// Thread-local rather than plan-owned because one `Plan` is shared
+    /// immutably across the substrate worker pool.
+    static BLUESTEIN_SCRATCH: RefCell<Vec<C>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Forward DFT of a real signal; returns complex spectrum.
@@ -161,11 +179,31 @@ pub fn rfft(plan: &Plan, x: &[f64]) -> Vec<C> {
     buf
 }
 
+/// Forward DFT of a real f32 signal into a caller-owned buffer — the
+/// allocation-free entry point for the interpreter's replay hot path.
+/// Bit-identical to `rfft(plan, &x.map(f64::from))`: the f32 -> f64
+/// widening is exact, so staging through an intermediate f64 vector (as
+/// [`rfft`] callers used to) changes nothing.
+pub fn rfft_f32_into(plan: &Plan, x: &[f32], out: &mut Vec<C>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| (v as f64, 0.0)));
+    plan.fft_in_place(out);
+}
+
 /// Inverse DFT, returning only the real part.
 pub fn irfft_real(plan: &Plan, spec: &[C]) -> Vec<f64> {
     let mut buf = spec.to_vec();
     plan.ifft_in_place(&mut buf);
     buf.into_iter().map(|z| z.0).collect()
+}
+
+/// Inverse DFT into a caller-owned complex buffer (real parts are read
+/// out of `out[k].0` by the caller).  Same numerics as [`irfft_real`]
+/// minus its two output allocations.
+pub fn irfft_into(plan: &Plan, spec: &[C], out: &mut Vec<C>) {
+    out.clear();
+    out.extend_from_slice(spec);
+    plan.ifft_in_place(out);
 }
 
 /// Naive O(n²) DFT — the test oracle for the fast paths.
@@ -361,6 +399,29 @@ mod tests {
                     want += a[tau] * b[(t + n - tau) % n];
                 }
                 assert!((got[t] - want).abs() < 1e-9, "n={n} t={t}");
+            }
+        }
+    }
+
+    /// The allocation-free `_into` entry points must be bit-for-bit
+    /// identical to the allocating paths (the replay arena depends on it),
+    /// at radix-2 and Bluestein sizes.
+    #[test]
+    fn into_variants_match_allocating_paths() {
+        for n in [1usize, 2, 7, 13, 16, 100] {
+            let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.31).sin()).collect();
+            let plan = Plan::new(n);
+            let xf64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let want = rfft(&plan, &xf64);
+            let mut got = vec![(9.9, 9.9); 3]; // dirty buffer: must be fully overwritten
+            rfft_f32_into(&plan, &x, &mut got);
+            assert_eq!(got, want, "rfft_f32_into diverged at n={n}");
+            let back_want = irfft_real(&plan, &want);
+            let mut back = Vec::new();
+            irfft_into(&plan, &want, &mut back);
+            assert_eq!(back.len(), back_want.len());
+            for (k, (z, w)) in back.iter().zip(back_want.iter()).enumerate() {
+                assert!(z.0 == *w, "irfft_into diverged at n={n} k={k}: {} vs {w}", z.0);
             }
         }
     }

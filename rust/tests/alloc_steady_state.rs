@@ -1,0 +1,202 @@
+//! Steady-state allocation accounting for the plan-replay hot path: after
+//! warmup, a replayed `EvalSession::logits` call must perform (near-)zero
+//! heap allocations — the plan's arena owns every op buffer, the FFT
+//! scratch is thread-local, and the logits move out instead of copying.
+//! Measured under a counting `#[global_allocator]` at one substrate
+//! thread (`parallel::set_threads(1)`), as the tentpole requires.
+//!
+//! Single `#[test]` on purpose: the counters are process-global, so a
+//! concurrent sibling test would pollute the deltas.
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::session::{build_init, EvalSession, TrainSession};
+use c3a::runtime::Engine;
+use c3a::substrate::parallel;
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::Tensor;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Scoped C3A_PLAN override: restores the prior value (or removes the
+/// var) on drop, so panics and early returns cannot leak the override
+/// into later sessions in this process.
+struct PlanEnvGuard(Option<String>);
+
+impl PlanEnvGuard {
+    fn set(v: &str) -> PlanEnvGuard {
+        let prev = std::env::var("C3A_PLAN").ok();
+        std::env::set_var("C3A_PLAN", v);
+        PlanEnvGuard(prev)
+    }
+}
+
+impl Drop for PlanEnvGuard {
+    fn drop(&mut self) {
+        match &self.0 {
+            Some(v) => std::env::set_var("C3A_PLAN", v),
+            None => std::env::remove_var("C3A_PLAN"),
+        }
+    }
+}
+
+fn snapshot() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
+}
+
+fn delta(before: (u64, u64)) -> (u64, u64) {
+    let now = snapshot();
+    (now.0 - before.0, now.1 - before.1)
+}
+
+/// Per-call allocation ceiling for a replayed eval step.  The residue is
+/// the unavoidable per-request skin: the batch-tensor -> literal
+/// conversion, the output literal + shape vectors, and the one logits
+/// buffer that is re-allocated because the previous call moved it out to
+/// the caller.  The arena, FFT scratch, spectra and plan structure
+/// allocate nothing.
+const EVAL_ALLOCS_PER_CALL: u64 = 64;
+const EVAL_BYTES_PER_CALL: u64 = 64 * 1024;
+
+#[test]
+fn replayed_calls_are_near_allocation_free() {
+    let _lock = parallel::thread_override_lock();
+    let prev_threads = parallel::threads();
+    parallel::set_threads(1);
+
+    let dir = std::env::temp_dir().join("c3a_alloc_steady");
+    let manifest = catalog::synthesize(&dir).unwrap();
+    let engine = Engine::for_manifest(&manifest).unwrap();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let base = catalog::init_base_params(&meta);
+
+    // ---- eval: plan replay must be near-zero ----------------------------
+    let spec = manifest.artifact("enc_tiny__c3a_d8__cls__eval").unwrap().clone();
+    let init = build_init(&spec, &base, None, &mut Rng::seed(3), C3aScheme::Xavier).unwrap();
+    let session = EvalSession::new(&engine, &spec, &init).unwrap();
+    let adapter = init.trainable.clone();
+    let (b, s) = (spec.batch, spec.seq);
+    let toks: Vec<i32> =
+        (0..b * s).map(|i| if i % 5 == 0 { 1 } else { 3 + (i as i32 % 40) }).collect();
+    let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+
+    // warmup: record + two replays (settles arena chains and scratch
+    // capacities at their steady-state sizes)
+    for _ in 0..3 {
+        session.logits(&adapter, &batch).unwrap();
+    }
+    let n = 16u64;
+    let before = snapshot();
+    for _ in 0..n {
+        session.logits(&adapter, &batch).unwrap();
+    }
+    let (allocs, bytes) = delta(before);
+    let (per_call, bytes_per_call) = (allocs / n, bytes / n);
+    println!("eval replay: {per_call} allocs/call, {bytes_per_call} bytes/call");
+    assert!(
+        per_call <= EVAL_ALLOCS_PER_CALL,
+        "replayed eval step allocates too much: {per_call} allocs/call \
+         (budget {EVAL_ALLOCS_PER_CALL})"
+    );
+    assert!(
+        bytes_per_call <= EVAL_BYTES_PER_CALL,
+        "replayed eval step allocates too much: {bytes_per_call} bytes/call \
+         (budget {EVAL_BYTES_PER_CALL})"
+    );
+
+    // ---- eval: the rebuild path must be >= 5x heavier --------------------
+    let legacy = {
+        let _plan_off = PlanEnvGuard::set("0");
+        EvalSession::new(&engine, &spec, &init).unwrap()
+    };
+    for _ in 0..3 {
+        legacy.logits(&adapter, &batch).unwrap();
+    }
+    let before = snapshot();
+    for _ in 0..n {
+        legacy.logits(&adapter, &batch).unwrap();
+    }
+    let (legacy_allocs, _) = delta(before);
+    let legacy_per_call = legacy_allocs / n;
+    println!("eval rebuild: {legacy_per_call} allocs/call");
+    assert!(
+        per_call * 5 <= legacy_per_call,
+        "plan replay must allocate at least 5x less than the rebuild path: \
+         {per_call} vs {legacy_per_call} allocs/call"
+    );
+
+    // ---- train: replayed steps must beat the recording step --------------
+    let tspec = manifest.artifact("enc_tiny__c3a_d8__cls__train").unwrap().clone();
+    let tinit = build_init(&tspec, &base, None, &mut Rng::seed(4), C3aScheme::Xavier).unwrap();
+    let mut train = TrainSession::new(&engine, &tspec, &tinit).unwrap();
+    // data batch sourced from the canonical synthetic-input recipe
+    // (catalog::synth_inputs) rather than a hand-rolled copy of it
+    let tlits = catalog::synth_inputs(&tspec, &meta);
+    let tbatch: Vec<Tensor> = tspec
+        .data_order
+        .iter()
+        .map(|name| {
+            let idx = tspec.inputs.iter().position(|i| &i.name == name).unwrap();
+            let inp = &tspec.inputs[idx];
+            if inp.i32_dtype {
+                Tensor::from_i32(inp.shape.clone(), &tlits[idx].to_vec::<i32>().unwrap())
+            } else {
+                Tensor::from_f32(inp.shape.clone(), &tlits[idx].to_vec::<f32>().unwrap())
+            }
+        })
+        .collect();
+
+    let before = snapshot();
+    train.step(&tbatch, 0.01, 0.0).unwrap(); // records the plan
+    let (record_allocs, _) = delta(before);
+    for _ in 0..2 {
+        train.step(&tbatch, 0.01, 0.0).unwrap(); // warmup replays
+    }
+    let steps = 8u64;
+    let before = snapshot();
+    for _ in 0..steps {
+        train.step(&tbatch, 0.01, 0.0).unwrap();
+    }
+    let (steady_allocs, _) = delta(before);
+    let steady_per_step = steady_allocs / steps;
+    println!("train: record step {record_allocs} allocs, steady {steady_per_step} allocs/step");
+    assert!(
+        steady_per_step * 2 < record_allocs,
+        "replayed train step must allocate well under half of the recording step: \
+         {steady_per_step} vs {record_allocs}"
+    );
+
+    parallel::set_threads(prev_threads);
+}

@@ -147,6 +147,18 @@ fn refs(lits: &[xla::Literal]) -> Vec<&xla::Literal> {
     lits.iter().collect()
 }
 
+/// Frozen literals in frozen_order, extracted from a synthesized input
+/// set (used by the stateful/plan-replay tests).
+fn frozen_of(spec: &ArtifactSpec, lits: &[xla::Literal]) -> Vec<xla::Literal> {
+    spec.frozen_order
+        .iter()
+        .map(|fname| {
+            let idx = spec.inputs.iter().position(|i| &i.name == fname).unwrap();
+            lits[idx].clone()
+        })
+        .collect()
+}
+
 fn input_indices(spec: &ArtifactSpec, role: Role) -> Vec<usize> {
     (0..spec.inputs.len()).filter(|&i| spec.inputs[i].role == role).collect()
 }
@@ -500,4 +512,106 @@ fn full_catalog_sweep_when_enabled() {
          the tiny slice; enc_large/dec_large/vit_large are structural clones of checked presets)"
     );
     report.finish();
+}
+
+/// The plan-replay path (stateful sessions record on call 1 and replay
+/// every later call into the preallocated arena) must stay inside the
+/// same oracle budgets as the rebuild path — and be bit-identical to it —
+/// on every enc_tiny + mlp eval artifact.  The replayed *train* path is
+/// covered by `train_replay_trajectory_is_bit_identical_to_rebuild`
+/// below (note `train_trajectory_cross_check` itself drives the
+/// stateless `execute()`, which never records a plan).
+#[test]
+fn plan_replay_matches_oracle_on_tiny_eval_sweep() {
+    let manifest = catalog::synthesize(&manifest_dir()).unwrap();
+    let mut report = Report::new("plan_replay_eval_sweep");
+    let mut n = 0;
+    for (name, spec) in &manifest.artifacts {
+        if spec.kind != "eval" || (spec.model != "enc_tiny" && spec.model != "mlp") {
+            continue;
+        }
+        let p = pair(&manifest, name);
+        let frozen = frozen_of(&p.spec, &p.lits);
+        let rebuilt = p.sub.execute(&refs(&p.lits)).unwrap()[0].to_vec::<f32>().unwrap();
+        let oracle = p.oracle.execute(&refs(&p.lits)).unwrap()[0].to_vec::<f32>().unwrap();
+        let mut state = p.sub.prepare(&frozen).unwrap();
+        for call in 0..3 {
+            let outs = p.sub.execute_stateful(&mut state, &refs(&p.lits)).unwrap();
+            let replayed = outs[0].to_vec::<f32>().unwrap();
+            if replayed != rebuilt {
+                report.diverge(format!("{name}: call {call} not bit-identical to rebuild"));
+                continue;
+            }
+            if let Some((i, a, b, tol)) = first_divergent(&replayed, &oracle, LOGITS_REL) {
+                report.diverge(format!(
+                    "{name}: replay {call} logits[{i}]: {a:.6e} vs oracle {b:.6e} (tol {tol:.2e})"
+                ));
+            }
+        }
+        let stats = state.plan_stats().expect("plan recorded");
+        if stats.replays != 2 {
+            report.diverge(format!("{name}: expected 2 replays, saw {}", stats.replays));
+        }
+        n += 1;
+    }
+    assert!(n >= 13, "expected the eval slice of enc_tiny+mlp, got {n}");
+    eprintln!("plan replay: {n} eval artifacts cross-checked against the oracle");
+    report.finish();
+}
+
+/// Replayed train steps with *evolving* trainable/optimizer state: a
+/// 4-step stateful trajectory (step 1 records the plan, steps 2-4
+/// replay it) must be bit-identical, at every step, to the same
+/// trajectory driven through the stateless rebuild path.  Together with
+/// `train_trajectory_cross_check` (stateless vs the f64 oracle), this
+/// transitively pins the replayed train path against the oracle —
+/// including bias-corrected AdamW under an advancing `step` scalar and
+/// spectra re-FFTs as the kernels move.
+#[test]
+fn train_replay_trajectory_is_bit_identical_to_rebuild() {
+    let manifest = catalog::synthesize(&manifest_dir()).unwrap();
+    for name in [
+        "enc_tiny__c3a_d8__cls__train",
+        "enc_tiny__full__mlm__train",
+        "mlp__mlp_c3a__cls__train",
+    ] {
+        let p = pair(&manifest, name);
+        let frozen = frozen_of(&p.spec, &p.lits);
+        let mut state = p.sub.prepare(&frozen).unwrap();
+        let t_idx = input_indices(&p.spec, Role::Trainable);
+        let m_idx = input_indices(&p.spec, Role::OptM);
+        let v_idx = input_indices(&p.spec, Role::OptV);
+        let step_idx = p
+            .spec
+            .inputs
+            .iter()
+            .position(|i| i.role == Role::Scalar && i.name == "step")
+            .unwrap();
+        let nt = t_idx.len();
+        let mut lits = p.lits.clone();
+        for step in 0..4usize {
+            lits[step_idx] = xla::Literal::scalar((step + 1) as f32);
+            let r = refs(&lits);
+            let rebuilt = p.sub.execute(&r).unwrap();
+            let replayed = p.sub.execute_stateful(&mut state, &r).unwrap();
+            for (k, (a, b)) in rebuilt.iter().zip(replayed.iter()).enumerate() {
+                assert_eq!(
+                    a.to_vec::<f32>().unwrap(),
+                    b.to_vec::<f32>().unwrap(),
+                    "{name}: step {step} output {k} diverged between rebuild and replay"
+                );
+            }
+            // feed the evolved state back for the next step
+            for (k, &idx) in t_idx.iter().enumerate() {
+                lits[idx] = rebuilt[k].clone();
+            }
+            for (k, &idx) in m_idx.iter().enumerate() {
+                lits[idx] = rebuilt[nt + k].clone();
+            }
+            for (k, &idx) in v_idx.iter().enumerate() {
+                lits[idx] = rebuilt[2 * nt + k].clone();
+            }
+        }
+        assert_eq!(state.plan_stats().unwrap().replays, 3, "{name}: replay count");
+    }
 }

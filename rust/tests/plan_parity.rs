@@ -1,0 +1,217 @@
+//! Tentpole regression tests for the execution-plan subsystem: a replayed
+//! step must be bit-for-bit identical to the legacy rebuild path — for
+//! every enc_tiny/mlp artifact, across repeated calls, across adapter
+//! swaps mid-stream, and at any thread count (the C3A_THREADS=1/4 CI
+//! matrix runs this whole file).
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::interp::InterpExecutable;
+use c3a::runtime::manifest::{Manifest, Role};
+use c3a::runtime::session::{build_init, EvalSession};
+use c3a::runtime::Engine;
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::Tensor;
+use c3a::xla;
+
+/// Serializes the tests in this binary: the kill-switch test toggles the
+/// process-wide `C3A_PLAN` env var, which must not race a concurrent
+/// `prepare` in a sibling test.
+fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Scoped C3A_PLAN override: restores the prior value (or removes the
+/// var) on drop, so panics and early returns cannot leak the override
+/// into later sessions in this process.
+struct PlanEnvGuard(Option<String>);
+
+impl PlanEnvGuard {
+    fn set(v: &str) -> PlanEnvGuard {
+        let prev = std::env::var("C3A_PLAN").ok();
+        std::env::set_var("C3A_PLAN", v);
+        PlanEnvGuard(prev)
+    }
+}
+
+impl Drop for PlanEnvGuard {
+    fn drop(&mut self) {
+        match &self.0 {
+            Some(v) => std::env::set_var("C3A_PLAN", v),
+            None => std::env::remove_var("C3A_PLAN"),
+        }
+    }
+}
+
+fn manifest() -> Manifest {
+    let dir = std::env::temp_dir().join("c3a_plan_parity");
+    catalog::synthesize(&dir).unwrap()
+}
+
+fn lits_to_f32(outs: &[xla::Literal]) -> Vec<Vec<f32>> {
+    outs.iter().map(|l| l.to_vec::<f32>().unwrap()).collect()
+}
+
+/// Frozen literals in frozen_order, extracted from a synthesized input set.
+fn frozen_lits(
+    spec: &c3a::runtime::manifest::ArtifactSpec,
+    lits: &[xla::Literal],
+) -> Vec<xla::Literal> {
+    spec.frozen_order
+        .iter()
+        .map(|name| {
+            let idx = spec.inputs.iter().position(|i| &i.name == name).unwrap();
+            lits[idx].clone()
+        })
+        .collect()
+}
+
+/// Every enc_tiny + mlp + dec_small + vit_base artifact (train and eval,
+/// every PEFT method and head): the recording call and three replays must
+/// all be bit-identical to the stateless rebuild.  This is the plan
+/// subsystem's acceptance pin.  dec_small covers the causal-mask
+/// recomputation + decoder train replay (shifted-token targets) and
+/// vit_base the vec-mode `data.x` leaf + constant mask — paths the
+/// enc_tiny slice alone would leave untested (the differential oracle
+/// sweep excludes these models only because the *naive oracle* is slow;
+/// this test is substrate-vs-substrate and stays cheap).
+#[test]
+fn plan_replay_is_bit_identical_to_rebuild_across_tiny_catalog() {
+    let _env = env_lock();
+    let manifest = manifest();
+    const MODELS: [&str; 4] = ["enc_tiny", "mlp", "dec_small", "vit_base"];
+    let mut covered = 0usize;
+    for (name, spec) in &manifest.artifacts {
+        if !MODELS.contains(&spec.model.as_str()) {
+            continue;
+        }
+        let meta = manifest.model(&spec.model).unwrap().clone();
+        let exe = InterpExecutable::new(spec, &meta).unwrap();
+        let lits = catalog::synth_inputs(spec, &meta);
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let want = lits_to_f32(&exe.execute(&refs).unwrap());
+
+        let mut state = exe.prepare(&frozen_lits(spec, &lits)).unwrap();
+        // call 1 records the plan, calls 2..4 replay it
+        for call in 0..4 {
+            let got = lits_to_f32(&exe.execute_stateful(&mut state, &refs).unwrap());
+            assert_eq!(got, want, "{name}: call {call} diverged from the rebuild path");
+        }
+        let stats = state.plan_stats().expect("plan must be recorded after the first call");
+        assert!(stats.ops > 0, "{name}: empty plan");
+        assert_eq!(stats.replays, 3, "{name}: replay count");
+        covered += 1;
+    }
+    // 39 enc_tiny+mlp + 9 dec_small + 8 vit_base
+    assert!(covered >= 56, "expected the widened artifact slice, got {covered}");
+}
+
+/// Replays must track *changing* inputs: new tokens re-id the embedding
+/// gathers and recompute the attention masks, new kernels re-FFT the
+/// spectra.  Each variation is checked against a fresh stateless run.
+#[test]
+fn plan_replay_tracks_new_tokens_and_kernels() {
+    let _env = env_lock();
+    let manifest = manifest();
+    let spec = manifest.artifact("enc_tiny__c3a_d8__cls__train").unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let exe = InterpExecutable::new(&spec, &meta).unwrap();
+    let mut lits = catalog::synth_inputs(&spec, &meta);
+    let mut state = exe.prepare(&frozen_lits(&spec, &lits)).unwrap();
+    {
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        exe.execute_stateful(&mut state, &refs).unwrap(); // record
+    }
+
+    let (b, s) = (spec.batch, spec.seq);
+    let tok_idx = spec.inputs.iter().position(|i| i.name == "data.tokens").unwrap();
+    let kern_idx = spec
+        .inputs
+        .iter()
+        .position(|i| i.role == Role::Trainable && i.name.contains(".c3a.w"))
+        .unwrap();
+
+    for variant in 0..3 {
+        // new tokens (with fresh pad positions) + a perturbed kernel
+        let toks: Vec<i32> = (0..b * s)
+            .map(|i| if (i + variant) % 5 == 0 { 0 } else { 2 + ((i * 7 + variant) as i32 % 40) })
+            .collect();
+        lits[tok_idx] = xla::Literal::from_i32(&[b, s], toks);
+        let kshape = spec.inputs[kern_idx].shape.clone();
+        let mut kern = lits[kern_idx].to_vec::<f32>().unwrap();
+        for (e, v) in kern.iter_mut().enumerate() {
+            *v += 0.01 * ((e + variant) as f32).sin();
+        }
+        lits[kern_idx] = xla::Literal::from_f32(&kshape, kern);
+
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let want = lits_to_f32(&exe.execute(&refs).unwrap());
+        let got = lits_to_f32(&exe.execute_stateful(&mut state, &refs).unwrap());
+        assert_eq!(got, want, "variant {variant} diverged after token/kernel change");
+    }
+}
+
+/// Eval plans run liveness analysis and recycle dead buffers into later
+/// same-size nodes; train plans must not (backward reads every value).
+#[test]
+fn eval_plans_share_arena_buffers_train_plans_do_not() {
+    let _env = env_lock();
+    let manifest = manifest();
+    let engine = Engine::for_manifest(&manifest).unwrap();
+    let spec = manifest.artifact("enc_tiny__c3a_d8__cls__eval").unwrap().clone();
+    let base = catalog::init_base_params(manifest.model("enc_tiny").unwrap());
+    let init =
+        build_init(&spec, &base, None, &mut Rng::seed(7), C3aScheme::Xavier).unwrap();
+    let session = EvalSession::new(&engine, &spec, &init).unwrap();
+    let (b, s) = (spec.batch, spec.seq);
+    let toks: Vec<i32> =
+        (0..b * s).map(|i| if i % 6 == 0 { 1 } else { 3 + (i as i32 % 37) }).collect();
+    let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+    let adapter = init.trainable.clone();
+    assert!(session.plan_stats().is_none(), "no plan before the first call");
+    let (l0, _) = session.logits(&adapter, &batch).unwrap();
+    let (l1, _) = session.logits(&adapter, &batch).unwrap();
+    assert_eq!(l0, l1, "replay must reproduce the recorded logits bitwise");
+    let stats = session.plan_stats().unwrap();
+    assert!(
+        stats.shared_buffers > 0,
+        "encoder eval plan found no recyclable buffers: {stats:?}"
+    );
+    assert!(stats.arena_bytes > 0);
+
+    // train plan over the same model: sharing disabled
+    let tspec = manifest.artifact("enc_tiny__c3a_d8__cls__train").unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let exe = InterpExecutable::new(&tspec, &meta).unwrap();
+    let lits = catalog::synth_inputs(&tspec, &meta);
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+    let mut state = exe.prepare(&frozen_lits(&tspec, &lits)).unwrap();
+    exe.execute_stateful(&mut state, &refs).unwrap();
+    let tstats = state.plan_stats().unwrap();
+    assert_eq!(tstats.shared_buffers, 0, "train plans must retain every buffer");
+}
+
+/// `C3A_PLAN=0` disables recording: stateful execution stays on the
+/// legacy rebuild path (and stays correct).
+#[test]
+fn plan_kill_switch_falls_back_to_rebuild() {
+    let _env = env_lock();
+    let manifest = manifest();
+    let spec = manifest.artifact("mlp__mlp_c3a__cls__eval").unwrap().clone();
+    let meta = manifest.model("mlp").unwrap().clone();
+    let exe = InterpExecutable::new(&spec, &meta).unwrap();
+    let lits = catalog::synth_inputs(&spec, &meta);
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+    let want = lits_to_f32(&exe.execute(&refs).unwrap());
+
+    let mut state = {
+        let _plan_off = PlanEnvGuard::set("0");
+        exe.prepare(&frozen_lits(&spec, &lits)).unwrap()
+    };
+    for _ in 0..2 {
+        let got = lits_to_f32(&exe.execute_stateful(&mut state, &refs).unwrap());
+        assert_eq!(got, want);
+    }
+    assert!(state.plan_stats().is_none(), "C3A_PLAN=0 must not record a plan");
+}

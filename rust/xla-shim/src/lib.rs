@@ -185,6 +185,26 @@ impl Literal {
             _ => bail!("literal is not f32"),
         }
     }
+
+    /// Zero-copy i32 payload view (shim-native; errors on f32/tuple).
+    pub fn i32_slice(&self) -> Result<&[i32]> {
+        match &self.data {
+            LitData::I32(v) => Ok(v),
+            _ => bail!("literal is not i32"),
+        }
+    }
+
+    /// Consume the literal and take its f32 payload without copying
+    /// (i32 converts; tuples error).  The owning counterpart of
+    /// [`Literal::to_vec`] — eval outputs move through here instead of
+    /// cloning a full logits buffer per request.
+    pub fn into_vec_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            LitData::F32(v) => Ok(v),
+            LitData::I32(v) => Ok(v.into_iter().map(|x| x as f32).collect()),
+            LitData::Tuple(_) => bail!("cannot read a tuple literal as f32"),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -305,6 +325,17 @@ mod tests {
         assert!(l.is_i32());
         assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -2, 3]);
         assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.0]);
+        assert_eq!(l.i32_slice().unwrap(), &[1, -2, 3]);
+        assert!(l.f32_slice().is_err());
+    }
+
+    #[test]
+    fn into_vec_f32_moves_payload() {
+        let l = Literal::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.into_vec_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Literal::vec1(&[5i32, 6]);
+        assert_eq!(i.into_vec_f32().unwrap(), vec![5.0, 6.0]);
+        assert!(Literal::tuple(vec![]).into_vec_f32().is_err());
     }
 
     #[test]

@@ -40,3 +40,5 @@ cat BENCH_interp.json
 
 echo "== BENCH_serve.json =="
 cat BENCH_serve.json
+
+echo "(compare against the committed baselines with scripts/bench_compare.sh)"

@@ -1,0 +1,118 @@
+#!/usr/bin/env bash
+# Diff the just-measured BENCH_interp.json / BENCH_serve.json against the
+# checked-in baselines (the committed versions of the same files, i.e.
+# `git show HEAD:BENCH_*.json`).  Advisory by default: prints per-metric
+# ratios and warns beyond 1.15x.  Hard-fails ONLY on a >2x step-time
+# regression (step_ms_cached_threaded / eval_ms_replay) against a
+# *measured* baseline — a baseline stamped `"provenance": "unmeasured..."`
+# (committed before any toolchain-equipped run) never fails the build.
+#
+# To update the baselines: run scripts/bench.sh and commit the rewritten
+# BENCH_*.json.
+#
+# Usage: scripts/bench_compare.sh
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v python3 >/dev/null 2>&1; then
+  echo "bench_compare: python3 unavailable; skipping (advisory pass)"
+  exit 0
+fi
+if ! command -v git >/dev/null 2>&1 || ! git rev-parse HEAD >/dev/null 2>&1; then
+  echo "bench_compare: not a git checkout; skipping (advisory pass)"
+  exit 0
+fi
+
+status=0
+
+compare() {
+  local file="$1"
+  if [ ! -f "$file" ]; then
+    echo "bench_compare: $file not present (run scripts/bench.sh first); skipping"
+    return
+  fi
+  if ! git cat-file -e "HEAD:$file" 2>/dev/null; then
+    echo "bench_compare: no committed baseline for $file (advisory pass)"
+    return
+  fi
+  local tmp
+  tmp="$(mktemp)"
+  git show "HEAD:$file" >"$tmp"
+  local rc=0
+  python3 - "$file" "$tmp" <<'PY' || rc=$?
+import json
+import sys
+
+cur_path, base_path = sys.argv[1], sys.argv[2]
+cur = json.load(open(cur_path))
+base = json.load(open(base_path))
+prov = str(base.get("provenance", ""))
+if prov.startswith("unmeasured"):
+    print(f"bench_compare: {cur_path}: baseline is unmeasured; advisory pass")
+    print(f"               ({prov})")
+    sys.exit(0)
+
+import os
+
+WARN, FAIL = 1.15, 2.0
+# The hard gate compares wall-clock across runs, which is only
+# meaningful like-for-like: it stays advisory unless the thread counts
+# match, and C3A_BENCH_NO_HARD=1 disarms it entirely (e.g. when the
+# committed baseline came from a different machine class — baselines
+# should be refreshed from the CI bench artifacts, not from dev boxes).
+no_hard = os.environ.get("C3A_BENCH_NO_HARD") == "1"
+threads_match = base.get("threads") == cur.get("threads")
+hard_armed = not no_hard and threads_match
+if not hard_armed:
+    why = "C3A_BENCH_NO_HARD=1" if no_hard else "thread counts differ"
+    print(f"bench_compare: {cur_path}: hard gate advisory-only ({why})")
+
+# lower-is-better step-time metrics; `hard` carries the >2x gate
+hard = ["step_ms_cached_threaded", "eval_ms_replay"]
+soft = ["step_ms_stateless_single", "eval_ms_rebuild", "p50_ms", "p95_ms", "p99_ms"]
+rc = 0
+for key in hard + soft:
+    b, c = base.get(key), cur.get(key)
+    if not isinstance(b, (int, float)) or not isinstance(c, (int, float)) or b <= 0:
+        continue
+    ratio = c / b
+    tag = "ok"
+    if ratio > FAIL and key in hard and hard_armed:
+        tag = "FAIL (>2x step-time regression)"
+        rc = 2
+    elif ratio > WARN:
+        tag = "warn (slower)"
+    print(f"bench_compare: {cur_path}: {key}: {b:.3f} -> {c:.3f} ({ratio:.2f}x) {tag}")
+
+# higher-is-better throughput metrics; advisory only
+for key in ["serve_req_per_s", "req_per_s", "c3a_matvec_ops_per_s", "plan_replay_speedup"]:
+    b, c = base.get(key), cur.get(key)
+    if not isinstance(b, (int, float)) or not isinstance(c, (int, float)) or b <= 0:
+        continue
+    ratio = c / b
+    tag = "ok" if ratio >= 1 / WARN else "warn (slower)"
+    print(f"bench_compare: {cur_path}: {key}: {b:.1f} -> {c:.1f} ({ratio:.2f}x) {tag}")
+sys.exit(rc)
+PY
+  rm -f "$tmp"
+  # exit 0 = pass/advisory, exit 2 = >2x regression; anything else means
+  # the comparison itself broke (corrupt JSON, truncated baseline) — that
+  # must fail too, or the hard gate silently disarms itself.
+  if [ "$rc" -eq 2 ]; then
+    status=1
+  elif [ "$rc" -ne 0 ]; then
+    echo "bench_compare: comparison for $file errored (exit $rc) — failing loudly"
+    status=1
+  fi
+}
+
+compare BENCH_interp.json
+compare BENCH_serve.json
+
+if [ "$status" -ne 0 ]; then
+  echo "bench_compare: HARD FAILURE — >2x step-time regression against a measured baseline," \
+    "or the comparison itself errored (see above)"
+  exit 1
+fi
+echo "bench_compare: done"
