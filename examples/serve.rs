@@ -1,13 +1,14 @@
 //! Serving demo — a thin CLI over `c3a::serving`: fine-tune one adapter,
-//! derive N tenant variants, serve batched classification requests through
-//! the bounded scheduler queue (dynamic batching + `try_submit`
-//! backpressure), hot-swap one tenant mid-stream, and report
-//! latency/throughput percentiles plus per-tenant upload counts.  Writes
-//! `BENCH_serve.json` (override with `C3A_BENCH_SERVE_OUT`) so CI can
-//! archive the smoke run.
+//! derive N tenant variants, and replay a seeded Zipf traffic storm
+//! (bursty arrivals, a mid-storm hot-swap of a Zipf-hot tenant) against
+//! the sharded scheduler.  `--shards N` spreads the tenants over N
+//! tenant-affine workers (each parses its own frozen backbone); shed
+//! backpressure is handled with bounded exponential backoff — never a hot
+//! spin — and every shed/drop is reported.  Writes `BENCH_serve.json`
+//! (override with `C3A_BENCH_SERVE_OUT`) so CI can archive the smoke run.
 //!
 //!     cargo run --release --example serve -- \
-//!         [--requests 256] [--tenants 3] [--pretrain-steps 200]
+//!         [--requests 128] [--tenants 3] [--shards 1] [--pretrain-steps 200]
 
 use c3a::coordinator::run::{self, Ctx};
 use c3a::data::glue_sim::GlueTask;
@@ -15,11 +16,12 @@ use c3a::peft::init::C3aScheme;
 use c3a::runtime::manifest::Manifest;
 use c3a::runtime::session::build_init;
 use c3a::serving::{
-    AdapterRegistry, Scheduler, SchedulerCfg, SubmitError, perturb_c3a_kernels as perturb,
+    perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, ReplayCfg,
+    Scheduler, SchedulerCfg, ShardCtx,
 };
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::TensorMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn flag(args: &[String], name: &str) -> Option<usize> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
@@ -29,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n_requests = flag(&args, "--requests").unwrap_or(128);
     let n_tenants = flag(&args, "--tenants").unwrap_or(3).max(1);
+    let n_shards = flag(&args, "--shards").unwrap_or(1).max(1);
 
     let (model, method, task) = ("enc_tiny", "c3a_d8", GlueTask::Sst2);
 
@@ -53,26 +56,32 @@ fn main() -> anyhow::Result<()> {
             } else {
                 perturb(&run_out.trainable, i as u64, 0.05)
             };
-            (format!("tenant{i}"), params)
+            (tenant_name(i), params)
         })
         .collect();
 
-    // the registry lives on the scheduler thread (sessions are not Send);
-    // the builder gets plain tensors and opens its own Ctx over the cached
-    // artifacts
-    let sched_cfg =
-        SchedulerCfg { queue_cap: 64, max_batch: 0, max_wait: Duration::from_millis(2) };
+    // registries live on the shard worker threads (sessions are not Send);
+    // the builder runs once per shard, opens its own Ctx over the cached
+    // artifacts, and registers only the tenants that hash to its shard
+    let sched_cfg = SchedulerCfg {
+        shards: n_shards,
+        queue_cap: 64,
+        max_batch: 0,
+        max_wait: Duration::from_millis(2),
+    };
     let sched = Scheduler::spawn(sched_cfg, {
         let adapters = adapters.clone();
         let eval_name = eval_name.clone();
-        move || {
+        move |shard: &ShardCtx| {
             let ctx = Ctx::open("artifacts")?;
             let spec = ctx.manifest.artifact(&eval_name)?.clone();
             let mut rng = Rng::seed(1);
             let init = build_init(&spec, &backbone, None, &mut rng, C3aScheme::Xavier)?;
             let mut registry = AdapterRegistry::new(&ctx.engine, &spec, &init)?;
-            for (name, params) in adapters {
-                registry.register(&name, params)?;
+            for (name, params) in &adapters {
+                if shard.owns(name) {
+                    registry.register(name, params.clone())?;
+                }
             }
             Ok(registry)
         }
@@ -80,76 +89,96 @@ fn main() -> anyhow::Result<()> {
     let handle = sched.handle();
 
     let splits = task.splits(meta.vocab, meta.seq, 99);
-    let tokens = &splits.test.tokens;
-    let t_start = Instant::now();
-    let mut tickets = Vec::with_capacity(n_requests);
-    let mut shed_retries = 0usize;
-    for i in 0..n_requests {
-        let tenant = format!("tenant{}", i % n_tenants);
-        // mid-stream hot swap: tenant0 gets a new adapter version half-way
-        if i == n_requests / 2 {
-            let v = handle.hot_swap("tenant0", perturb(&adapters[0].1, 7, 0.02))?;
-            eprintln!("hot-swapped tenant0 -> v{v}");
-        }
-        let toks = tokens[i % tokens.len()].clone();
-        loop {
-            match handle.try_submit(&tenant, toks.clone()) {
-                Ok(t) => {
-                    tickets.push(t);
-                    break;
-                }
-                Err(SubmitError::QueueFull) => {
-                    // backpressure: the demo retries; a real frontend
-                    // would shed or 429
-                    shed_retries += 1;
-                    std::thread::sleep(Duration::from_micros(200));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-    }
-    let mut correct = 0usize;
-    for (i, t) in tickets.into_iter().enumerate() {
-        let r = t.wait()?;
-        if r.pred == splits.test.labels[i % splits.test.len()] as usize {
-            correct += 1;
-        }
-    }
-    let total_s = t_start.elapsed().as_secs_f64();
+    let tokens = splits.test.tokens.clone();
+    let replay_cfg = ReplayCfg {
+        seed: 42,
+        requests: n_requests,
+        tenants: n_tenants,
+        zipf_exponent: 1.1,
+        burst: 16,
+        burst_gap: Duration::from_micros(200),
+        // one hot-swap lands mid-storm, on a Zipf-hot tenant
+        swap_every: (n_requests / 2).max(1),
+        ..ReplayCfg::default()
+    };
+    let swap_base = run_out.trainable.clone();
+    let report = run_replay(
+        &handle,
+        &replay_cfg,
+        |i, _rank| tokens[i % tokens.len()].clone(),
+        move |swap_idx, _rank| perturb(&swap_base, 7 + swap_idx, 0.02),
+    )?;
     drop(handle);
     let stats = sched.finish()?;
+
+    let labels = &splits.test.labels;
+    let correct = report
+        .preds
+        .iter()
+        .enumerate()
+        .filter(|(i, p)| **p == Some(labels[i % labels.len()] as usize))
+        .count();
+    let accuracy = correct as f64 / n_requests as f64;
     let lat = stats.latency();
-    let req_per_s = n_requests as f64 / total_s;
+    let req_per_s = report.req_per_s();
 
     println!("\n=== serve report ===");
-    println!("requests      : {n_requests}  ({n_tenants} tenants)");
-    println!("accuracy      : {:.3}", correct as f64 / n_requests as f64);
+    println!("requests      : {n_requests}  ({n_tenants} Zipf tenants, {n_shards} shards)");
+    println!("accuracy      : {accuracy:.3}");
     println!("throughput    : {req_per_s:.1} req/s");
     println!("threads       : {}", c3a::substrate::parallel::threads());
     println!("mean batch    : {:.1}", stats.mean_batch());
-    println!("shed retries  : {shed_retries}");
+    println!("swaps         : {}", report.swaps);
+    println!("sheds/dropped : {} / {}", report.sheds, report.dropped);
     println!("latency p50   : {:.1} ms", lat.p50_ms);
     println!("latency p95   : {:.1} ms", lat.p95_ms);
     println!("latency p99   : {:.1} ms", lat.p99_ms);
-    // one upload per adapter version: tenant0 was swapped once mid-stream
-    // (2 versions), every other tenant served its whole stream on 1
+    for sh in &stats.shards {
+        println!(
+            "shard {}      : {:>4} served  {:>2} batches  depth hwm {:>3}  sheds {}",
+            sh.shard, sh.served, sh.batches, sh.queue_depth_hwm, sh.sheds
+        );
+    }
+    // one upload per adapter version: the swapped tenant gains a version
+    // mid-storm, every other tenant serves its whole stream on 1
     for t in &stats.tenants {
         println!(
-            "tenant {:<9}: {:>4} reqs  v{}  uploads={}  spectra {}h/{}m",
-            t.name, t.requests, t.version, t.uploads, t.spectra_hits, t.spectra_misses
+            "tenant {:<9}: {:>4} reqs  shard {}  v{}  uploads={}  spectra {}h/{}m  sheds {}",
+            t.name,
+            t.requests,
+            t.shard,
+            t.version,
+            t.uploads,
+            t.spectra_hits,
+            t.spectra_misses,
+            t.sheds
         );
     }
 
     let uploads: Vec<String> =
         stats.tenants.iter().map(|t| format!("\"{}\": {}", t.name, t.uploads)).collect();
+    let per_shard: Vec<String> = stats
+        .shards
+        .iter()
+        .map(|sh| {
+            format!(
+                "{{ \"shard\": {}, \"served\": {}, \"queue_depth_hwm\": {}, \"sheds\": {} }}",
+                sh.shard, sh.served, sh.queue_depth_hwm, sh.sheds
+            )
+        })
+        .collect();
     let json = format!(
-        "{{\n  \"bench\": \"serve_example\",\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"threads\": {},\n  \"req_per_s\": {req_per_s:.1},\n  \"accuracy\": {:.4},\n  \"mean_batch\": {:.2},\n  \"shed_retries\": {shed_retries},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"uploads\": {{ {} }}\n}}\n",
+        "{{\n  \"bench\": \"serve_example\",\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"shards\": {n_shards},\n  \"threads\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {req_per_s:.1},\n  \"accuracy\": {accuracy:.4},\n  \"mean_batch\": {:.2},\n  \"swaps\": {},\n  \"sheds\": {},\n  \"dropped\": {},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"per_shard\": [{}],\n  \"uploads\": {{ {} }}\n}}\n",
         c3a::substrate::parallel::threads(),
-        correct as f64 / n_requests as f64,
+        report.trace_hash,
         stats.mean_batch(),
+        report.swaps,
+        report.sheds,
+        report.dropped,
         lat.p50_ms,
         lat.p95_ms,
         lat.p99_ms,
+        per_shard.join(", "),
         uploads.join(", ")
     );
     let out = std::env::var("C3A_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());

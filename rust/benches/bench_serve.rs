@@ -1,9 +1,15 @@
-//! Multi-adapter serving benchmark: the scheduler + registry over one
-//! shared frozen-backbone parse, at 1 adapter vs N adapters.  Emits
-//! `BENCH_serve.json` (req/s, p50/p95/p99, mean dynamic batch, per-tenant
-//! upload counts) so CI tracks the serving trajectory next to
-//! `BENCH_interp.json`.  `harness = false`; pass `--smoke` for the quick
-//! CI run.
+//! Sharded-serving benchmark: the same seeded Zipf traffic storm (bursty
+//! arrivals, mid-storm hot-swaps, hundreds of adapters in the full run)
+//! replayed at `shards = 1` vs `shards = 4`, so the shard speedup and the
+//! tail under skew are measured against an identical request sequence
+//! ([`ReplayReport::trace_hash`] pins that the two phases really saw the
+//! same storm).  Emits `BENCH_serve.json`: the top-level
+//! `req_per_s`/`p50_ms`/`p95_ms`/`p99_ms` keys are the sharded headline
+//! (what `scripts/bench_compare.sh` tracks), with per-phase and per-shard
+//! detail nested under `shards1`/`shards4`.  Latency percentiles are
+//! always computed over the pooled cross-shard windows — never by
+//! averaging per-shard percentiles.  `harness = false`; pass `--smoke`
+//! for the quick CI run.
 //!
 //!     cargo bench --bench bench_serve [-- --smoke]
 
@@ -12,17 +18,17 @@ use c3a::runtime::catalog;
 use c3a::runtime::session::build_init;
 use c3a::runtime::Engine;
 use c3a::serving::{
-    AdapterRegistry, LatencySummary, Scheduler, SchedulerCfg, ServeStats,
-    perturb_c3a_kernels as perturb,
+    perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, ReplayCfg,
+    ReplayReport, Scheduler, SchedulerCfg, ServeStats, ShardCtx,
 };
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::TensorMap;
 use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 const EVAL: &str = "enc_tiny__c3a_d8__cls__eval";
 
-/// Adapter template + (batch, seq) from the synthesized catalog.
+/// Adapter template + seq from the synthesized catalog.
 fn template(dir: &Path) -> anyhow::Result<(TensorMap, usize)> {
     let manifest = catalog::synthesize(dir)?;
     let spec = manifest.artifact(EVAL)?.clone();
@@ -32,20 +38,25 @@ fn template(dir: &Path) -> anyhow::Result<(TensorMap, usize)> {
     Ok((init.trainable, spec.seq))
 }
 
-/// Serve `n_requests` round-robin over `n_tenants`; returns (req/s, stats).
+/// Replay the seeded storm against a fresh `shards`-worker scheduler.
 fn run_phase(
     dir: &Path,
     adapter: &TensorMap,
     s: usize,
-    n_tenants: usize,
-    n_requests: usize,
-) -> anyhow::Result<(f64, ServeStats)> {
-    let adapters: Vec<(String, TensorMap)> = (0..n_tenants)
-        .map(|i| (format!("tenant{i}"), perturb(adapter, i as u64, 0.05)))
+    shards: usize,
+    replay: &ReplayCfg,
+) -> anyhow::Result<(ReplayReport, ServeStats)> {
+    let adapters: Vec<(String, TensorMap)> = (0..replay.tenants)
+        .map(|i| (tenant_name(i), perturb(adapter, i as u64, 0.05)))
         .collect();
     let dir: PathBuf = dir.to_path_buf();
-    let cfg = SchedulerCfg { queue_cap: 128, max_batch: 0, max_wait: Duration::from_millis(1) };
-    let sched = Scheduler::spawn(cfg, move || {
+    let cfg = SchedulerCfg {
+        shards,
+        queue_cap: 128,
+        max_batch: 0,
+        max_wait: Duration::from_millis(1),
+    };
+    let sched = Scheduler::spawn(cfg, move |ctx: &ShardCtx| {
         let manifest = catalog::synthesize(&dir)?;
         let spec = manifest.artifact(EVAL)?.clone();
         let meta = manifest.model("enc_tiny")?.clone();
@@ -53,82 +64,153 @@ fn run_phase(
         let base = catalog::init_base_params(&meta);
         let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
         let mut registry = AdapterRegistry::new(&engine, &spec, &init)?;
-        for (name, params) in adapters {
-            registry.register(&name, params)?;
+        // each shard parses its own backbone and registers only the
+        // tenants that hash to it
+        for (name, params) in &adapters {
+            if ctx.owns(name) {
+                registry.register(name, params.clone())?;
+            }
         }
         Ok(registry)
     })?;
     let handle = sched.handle();
-    let t0 = Instant::now();
-    let mut tickets = Vec::with_capacity(n_requests);
-    for i in 0..n_requests {
-        let tenant = format!("tenant{}", i % n_tenants);
-        let toks: Vec<i32> = (0..s as i32)
-            .map(|j| if j == 0 { 1 } else { 4 + ((i as i32 * 13 + j * 7) % 40) })
-            .collect();
-        tickets.push(handle.submit(&tenant, toks).map_err(anyhow::Error::from)?);
-    }
-    for t in tickets {
-        t.wait()?;
-    }
-    let req_per_s = n_requests as f64 / t0.elapsed().as_secs_f64();
+    let base_adapter = adapter.clone();
+    let report = run_replay(
+        &handle,
+        replay,
+        |i, _rank| {
+            (0..s as i32)
+                .map(|j| if j == 0 { 1 } else { 4 + ((i as i32 * 13 + j * 7) % 40) })
+                .collect()
+        },
+        move |swap_idx, _rank| perturb(&base_adapter, 500 + swap_idx, 0.1),
+    )?;
     drop(handle);
     let stats = sched.finish()?;
-    Ok((req_per_s, stats))
+    Ok((report, stats))
 }
 
-fn phase_json(req_per_s: f64, stats: &ServeStats) -> String {
-    let lat: LatencySummary = stats.latency();
-    let mean_batch = stats.mean_batch();
+fn phase_json(report: &ReplayReport, stats: &ServeStats) -> String {
+    let lat = stats.latency();
+    let per_shard: Vec<String> = stats
+        .shards
+        .iter()
+        .map(|sh| {
+            let l = sh.latency();
+            let rps =
+                if report.wall_s > 0.0 { sh.served as f64 / report.wall_s } else { 0.0 };
+            format!(
+                "{{ \"shard\": {}, \"served\": {}, \"req_per_s\": {rps:.1}, \
+                 \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"queue_depth_hwm\": {}, \
+                 \"sheds\": {} }}",
+                sh.shard, sh.served, l.p50_ms, l.p99_ms, sh.queue_depth_hwm, sh.sheds
+            )
+        })
+        .collect();
     format!(
-        "{{ \"req_per_s\": {req_per_s:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"mean_batch\": {mean_batch:.2} }}",
+        "{{\n    \"req_per_s\": {:.1},\n    \"p50_ms\": {:.3},\n    \"p95_ms\": {:.3},\n    \"p99_ms\": {:.3},\n    \"mean_batch\": {:.2},\n    \"active_shards\": {},\n    \"sheds\": {},\n    \"dropped\": {},\n    \"swaps\": {},\n    \"per_shard\": [{}]\n  }}",
+        report.req_per_s(),
         lat.p50_ms,
         lat.p95_ms,
-        lat.p99_ms
+        lat.p99_ms,
+        stats.mean_batch(),
+        stats.active_shards(),
+        stats.sheds,
+        report.dropped,
+        report.swaps,
+        per_shard.join(", ")
     )
+}
+
+fn print_phase(label: &str, report: &ReplayReport, stats: &ServeStats) {
+    let lat = stats.latency();
+    println!(
+        "{label}: {:>8.1} req/s  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  \
+         mean batch {:.1}  sheds {}  dropped {}",
+        report.req_per_s(),
+        lat.p50_ms,
+        lat.p95_ms,
+        lat.p99_ms,
+        stats.mean_batch(),
+        stats.sheds,
+        report.dropped
+    );
+    for sh in &stats.shards {
+        println!(
+            "  shard {}: {:>5} served  depth hwm {:>3}  sheds {:>3}  p99 {:.2} ms",
+            sh.shard,
+            sh.served,
+            sh.queue_depth_hwm,
+            sh.sheds,
+            sh.latency().p99_ms
+        );
+    }
 }
 
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let n_requests = if smoke { 64 } else { 512 };
-    let n_tenants = 4;
+    // full run: hundreds of adapters under a long storm; smoke keeps CI fast
+    let (n_requests, n_tenants) = if smoke { (96, 24) } else { (768, 200) };
+    let replay = ReplayCfg {
+        seed: 42,
+        requests: n_requests,
+        tenants: n_tenants,
+        zipf_exponent: 1.1,
+        burst: 16,
+        burst_gap: Duration::from_micros(200),
+        // mid-storm hot-swaps land on Zipf-hot tenants
+        swap_every: (n_requests / 8).max(1),
+        ..ReplayCfg::default()
+    };
     let threads = c3a::substrate::parallel::threads();
     let dir = std::env::temp_dir().join("c3a_bench_serve");
     let (adapter, s) = template(&dir)?;
 
-    println!("== bench_serve: {EVAL}, {n_requests} requests, threads={threads} ==");
-
-    let (rps1, stats1) = run_phase(&dir, &adapter, s, 1, n_requests)?;
-    let l1 = stats1.latency();
     println!(
-        "1 adapter   : {rps1:>8.1} req/s  p50 {:.2} ms  p95 {:.2} ms  mean batch {:.1}",
-        l1.p50_ms,
-        l1.p95_ms,
-        stats1.mean_batch()
+        "== bench_serve: {EVAL}, {n_requests} requests over {n_tenants} Zipf tenants, \
+         threads={threads} =="
     );
 
-    let (rpsn, statsn) = run_phase(&dir, &adapter, s, n_tenants, n_requests)?;
-    let ln = statsn.latency();
-    println!(
-        "{n_tenants} adapters  : {rpsn:>8.1} req/s  p50 {:.2} ms  p95 {:.2} ms  mean batch {:.1}",
-        ln.p50_ms,
-        ln.p95_ms,
-        statsn.mean_batch()
+    let (r1, s1) = run_phase(&dir, &adapter, s, 1, &replay)?;
+    print_phase("shards=1", &r1, &s1);
+    let (r4, s4) = run_phase(&dir, &adapter, s, 4, &replay)?;
+    print_phase("shards=4", &r4, &s4);
+
+    // both phases must have replayed the identical storm
+    assert_eq!(r1.trace_hash, r4.trace_hash, "phases must see the same seeded storm");
+    assert!(
+        s4.active_shards() >= 2,
+        "Zipf tenants must spread over the shards (got {} active)",
+        s4.active_shards()
     );
-    for t in &statsn.tenants {
-        println!(
-            "  tenant {:<8}: {:>4} reqs  uploads={}  spectra {}h/{}m",
-            t.name, t.requests, t.uploads, t.spectra_hits, t.spectra_misses
-        );
-        assert_eq!(t.uploads, 1, "fixed adapter must upload exactly once");
+    for stats in [&s1, &s4] {
+        let per_shard: u64 = stats.shards.iter().map(|sh| sh.served).sum();
+        assert_eq!(per_shard, stats.served, "per-shard served must sum to the aggregate");
+        for t in &stats.tenants {
+            assert!(
+                (t.uploads as u64) <= 1 + r1.swaps,
+                "{}: {} uploads exceeds 1 + {} swaps",
+                t.name,
+                t.uploads,
+                r1.swaps
+            );
+        }
     }
 
-    let uploads: Vec<String> = statsn.tenants.iter().map(|t| t.uploads.to_string()).collect();
+    // headline keys (tracked by scripts/bench_compare.sh) come from the
+    // sharded phase; shards=1 rides along as the degradation baseline
+    let l4 = s4.latency();
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"one_adapter\": {},\n  \"multi_adapter\": {},\n  \"uploads_per_tenant\": [{}]\n}}\n",
-        phase_json(rps1, &stats1),
-        phase_json(rpsn, &statsn),
-        uploads.join(", ")
+        "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"zipf_exponent\": {},\n  \"swap_every\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {:.1},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"shards1\": {},\n  \"shards4\": {}\n}}\n",
+        replay.zipf_exponent,
+        replay.swap_every,
+        r1.trace_hash,
+        r4.req_per_s(),
+        l4.p50_ms,
+        l4.p95_ms,
+        l4.p99_ms,
+        phase_json(&r1, &s1),
+        phase_json(&r4, &s4)
     );
     let out = std::env::var("C3A_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
     std::fs::write(&out, &json)?;

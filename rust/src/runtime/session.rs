@@ -256,6 +256,14 @@ struct TrainableUpload {
 /// built via [`SharedBackbone::session`] reuses the same frozen literals
 /// and (on stateful backends) the same parsed arrays; only the per-session
 /// caches (kernel spectra, trainable uploads) stay private per tenant.
+///
+/// Sharing is deliberately `Rc`, not `Arc`: a backbone and all of its
+/// sessions are affine to one thread.  The sharded serving runtime
+/// (`serving::Scheduler`) therefore builds **one backbone parse per
+/// shard worker**, each on its own thread, with tenants partitioned
+/// across shards by name hash — N shards cost N frozen parses and in
+/// exchange never need a `Send`/`Sync` bound (or a lock) anywhere in the
+/// session layer.
 pub struct SharedBackbone {
     spec: ArtifactSpec,
     exe: std::rc::Rc<super::Executable>,

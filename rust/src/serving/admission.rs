@@ -1,0 +1,262 @@
+//! Shared admission layer: stable tenant→shard routing, per-shard bounded
+//! queues, load-shedding accounting, and the cloneable producer handle.
+//!
+//! Routing is a pure function of the tenant name ([`shard_of`]: FNV-1a
+//! mod shard count), so a tenant's every message — requests *and*
+//! hot-swaps — lands on the same shard's queue in submission order.
+//! Per-tenant FIFO therefore needs no cross-shard coordination at all:
+//! it is inherited from the single `sync_channel` that carries the whole
+//! tenant.  Backpressure is per shard: [`SubmitHandle::try_submit`]
+//! surfaces that shard's full queue as [`SubmitError::QueueFull`]
+//! (counted per shard and per tenant), while `submit` blocks for space.
+
+use crate::substrate::prng::fnv1a;
+use crate::substrate::tensor::TensorMap;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Stable tenant→shard routing: FNV-1a of the tenant name mod the shard
+/// count.  Deterministic across runs, processes, and platforms — the
+/// replay bench and the routing tests pin exact values.
+pub fn shard_of(tenant: &str, shards: usize) -> usize {
+    if shards <= 1 {
+        0
+    } else {
+        (fnv1a(tenant) % shards as u64) as usize
+    }
+}
+
+/// One served request's outcome.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub tenant: String,
+    /// adapter version the request was served under
+    pub tenant_version: u64,
+    /// this request's logits row (flattened per-example chunk)
+    pub logits: Vec<f32>,
+    /// argmax over the logits row (class id for pooled heads)
+    pub pred: usize,
+    /// dynamic batch size this request was served in
+    pub batch_size: usize,
+    /// submit-to-reply latency
+    pub latency_ms: f64,
+}
+
+/// Submission failure.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// the tenant's shard queue is at capacity — shed or retry
+    /// (backpressure; other shards' queues are unaffected)
+    QueueFull,
+    /// scheduler shut down (or the tenant's shard builder failed)
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "shard request queue is full (backpressure)"),
+            SubmitError::Closed => write!(f, "scheduler is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+pub(super) struct Request {
+    pub tenant: String,
+    pub tokens: Vec<i32>,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<std::result::Result<Reply, String>>,
+}
+
+pub(super) enum Msg {
+    Request(Request),
+    Swap {
+        tenant: String,
+        params: TensorMap,
+        ack: mpsc::Sender<std::result::Result<u64, String>>,
+    },
+}
+
+/// Receipt for a submitted request; `wait` blocks for the reply.
+#[derive(Debug)]
+pub struct Ticket {
+    rx: mpsc::Receiver<std::result::Result<Reply, String>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Reply> {
+        match self.rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(anyhow!("{e}")),
+            Err(_) => Err(anyhow!("scheduler dropped the request (shutdown)")),
+        }
+    }
+}
+
+/// One shard's admission-side gauges.  Depth is a signed count because
+/// the worker's dequeue decrement can race slightly ahead of the
+/// producer's post-send increment; the high-water mark only ever moves on
+/// the producer side, after a send is known to have been admitted.
+pub(super) struct ShardGauge {
+    depth: AtomicI64,
+    depth_hwm: AtomicI64,
+    sheds: AtomicU64,
+}
+
+impl ShardGauge {
+    fn new() -> ShardGauge {
+        ShardGauge {
+            depth: AtomicI64::new(0),
+            depth_hwm: AtomicI64::new(0),
+            sheds: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side, after a successful send.
+    fn on_admitted(&self) {
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.depth_hwm.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// Worker side, after each successful receive.
+    pub(super) fn on_dequeue(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn hwm(&self) -> usize {
+        self.depth_hwm.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    pub(super) fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
+    }
+}
+
+/// Admission accounting shared between every [`SubmitHandle`] clone and
+/// the shard workers.
+pub(super) struct Admission {
+    pub(super) gauges: Vec<ShardGauge>,
+    /// tenant → `QueueFull` sheds (admission-side; includes tenants no
+    /// shard has registered)
+    tenant_sheds: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Admission {
+    pub(super) fn new(shards: usize) -> Admission {
+        Admission {
+            gauges: (0..shards).map(|_| ShardGauge::new()).collect(),
+            tenant_sheds: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn record_shed(&self, shard: usize, tenant: &str) {
+        self.gauges[shard].sheds.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.tenant_sheds.lock().unwrap();
+        *map.entry(tenant.to_string()).or_insert(0) += 1;
+    }
+
+    pub(super) fn tenant_sheds(&self) -> BTreeMap<String, u64> {
+        self.tenant_sheds.lock().unwrap().clone()
+    }
+}
+
+/// Cloneable producer handle over every shard queue.  Drop every handle
+/// (and call [`super::Scheduler::finish`]) to let the shard workers drain
+/// and exit.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    txs: Arc<Vec<mpsc::SyncSender<Msg>>>,
+    adm: Arc<Admission>,
+}
+
+impl SubmitHandle {
+    pub(super) fn new(txs: Arc<Vec<mpsc::SyncSender<Msg>>>, adm: Arc<Admission>) -> SubmitHandle {
+        SubmitHandle { txs, adm }
+    }
+
+    /// Shard worker count this handle routes over.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The shard `tenant`'s every message routes to.
+    pub fn shard_for(&self, tenant: &str) -> usize {
+        shard_of(tenant, self.txs.len())
+    }
+
+    fn request(&self, tenant: &str, tokens: Vec<i32>) -> (Msg, Ticket) {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            tenant: tenant.to_string(),
+            tokens,
+            submitted: Instant::now(),
+            reply: rtx,
+        };
+        (Msg::Request(req), Ticket { rx: rrx })
+    }
+
+    /// Non-blocking submit: `Err(QueueFull)` when the tenant's shard
+    /// queue is at capacity (the shed is counted per shard and per
+    /// tenant), `Err(Closed)` after shutdown.
+    pub fn try_submit(
+        &self,
+        tenant: &str,
+        tokens: Vec<i32>,
+    ) -> std::result::Result<Ticket, SubmitError> {
+        let sh = self.shard_for(tenant);
+        let (msg, ticket) = self.request(tenant, tokens);
+        match self.txs[sh].try_send(msg) {
+            Ok(()) => {
+                self.adm.gauges[sh].on_admitted();
+                Ok(ticket)
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.adm.record_shed(sh, tenant);
+                Err(SubmitError::QueueFull)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Blocking submit: waits for space in the tenant's shard queue
+    /// instead of shedding.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        tokens: Vec<i32>,
+    ) -> std::result::Result<Ticket, SubmitError> {
+        let sh = self.shard_for(tenant);
+        let (msg, ticket) = self.request(tenant, tokens);
+        match self.txs[sh].send(msg) {
+            Ok(()) => {
+                self.adm.gauges[sh].on_admitted();
+                Ok(ticket)
+            }
+            Err(_) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Atomically replace `tenant`'s adapter, ordered with respect to its
+    /// shard queue: every request for that tenant submitted before the
+    /// swap serves under the old version (the swap rides the same
+    /// per-shard FIFO as the tenant's requests, so no cross-shard
+    /// coordination is needed).  Blocks until the shard worker acks with
+    /// the new version.
+    pub fn hot_swap(&self, tenant: &str, params: TensorMap) -> Result<u64> {
+        let sh = self.shard_for(tenant);
+        let (atx, arx) = mpsc::channel();
+        let msg = Msg::Swap { tenant: tenant.to_string(), params, ack: atx };
+        self.txs[sh].send(msg).map_err(|_| anyhow!("scheduler is shut down"))?;
+        self.adm.gauges[sh].on_admitted();
+        match arx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(anyhow!("{e}")),
+            Err(_) => Err(anyhow!("scheduler closed before acking hot_swap")),
+        }
+    }
+}

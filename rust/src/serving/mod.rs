@@ -1,32 +1,59 @@
-//! Multi-tenant serving: many C3A adapters over one frozen backbone.
+//! Multi-tenant serving: many C3A adapters over frozen backbones, sharded
+//! across N tenant-affine workers.
 //!
 //! This is the operational payoff of the paper's economics (§1): adapters
-//! are tiny (d²/b params per projection), so a deployment serves one
-//! frozen backbone and swaps cheap per-tenant kernels in front of it.
-//! The subsystem has three layers:
+//! are tiny (d²/b params per projection), so a deployment serves frozen
+//! backbones and swaps cheap per-tenant kernels in front of them.  The
+//! subsystem has five layers:
 //!
 //! * [`stats`] — latency percentile accounting (`total_cmp`-ordered, so a
-//!   NaN-poisoned sample can never panic a report);
+//!   NaN-poisoned sample can never panic a report) and the cross-shard
+//!   merge rules: raw sample windows are pooled before percentiles are
+//!   computed — per-shard percentiles are never averaged;
 //! * [`registry::AdapterRegistry`] — named adapter snapshots over a single
 //!   shared frozen-backbone parse ([`crate::runtime::session::SharedBackbone`]):
 //!   one `EvalSession` (and one private spectra cache / upload slot) per
 //!   tenant, `hot_swap` to atomically replace a tenant's adapter;
-//! * [`scheduler::Scheduler`] — a bounded request queue with dynamic
-//!   batching (max-wait deadline), backpressure via `try_submit`, and
-//!   ordered hot-swaps, running the registry on a dedicated thread
-//!   (sessions are deliberately not `Send`; requests are).
+//! * [`admission`] — stable tenant→shard routing ([`shard_of`]: FNV-1a of
+//!   the tenant name), per-shard bounded queues, `QueueFull` load-shedding
+//!   with per-shard/per-tenant shed and depth accounting, and the
+//!   cloneable [`SubmitHandle`];
+//! * [`worker`] — one thread per shard owning that shard's registry (its
+//!   own backbone parse; sessions stay thread-affine, so nothing is ever
+//!   `Send`), with per-tenant dynamic batching and the FIFO carry slot;
+//! * [`scheduler::Scheduler`] — spawns the shard workers and merges their
+//!   stats on [`Scheduler::finish`].  `shards = 1` (the default) is
+//!   bit-identical to the pre-sharding single-thread scheduler.
 //!
-//! Invalidation contract: a hot-swap bumps only the target tenant's
-//! version; its next request re-uploads the adapter (`upload_count` + 1)
-//! and recomputes its kernel spectra, while every other tenant keeps
-//! hitting its caches.  `rust/tests/serving.rs` pins all of this.
+//! [`replay`] drives it: a seeded traffic generator (Zipf tenant
+//! popularity, bursty arrivals, mid-storm hot-swaps, bounded shed
+//! backoff) whose arrival schedule is a pure function of its seed.
+//!
+//! Invariants pinned by `rust/tests/serving.rs` + `serving_sharded.rs`:
+//! a hot-swap bumps only the target tenant's version (its next request
+//! re-uploads and recomputes spectra tenant-locally); swaps never reorder
+//! against the tenant's in-flight requests, even across the carry slot
+//! and even while other shards keep serving; routing is deterministic
+//! across runs.
+//!
+//! Shard workers compute concurrently on separate cores; inside one
+//! request the substrate thread pool (`C3A_THREADS`) additionally shards
+//! rows, and a pool busy with another shard's region degrades that
+//! region to inline execution — never a deadlock, bit-identical results
+//! (see `substrate/parallel.rs`).
 
+pub mod admission;
 pub mod registry;
+pub mod replay;
 pub mod scheduler;
 pub mod stats;
+pub mod worker;
 
-pub use registry::{AdapterRegistry, perturb_c3a_kernels};
-pub use scheduler::{
-    Reply, Scheduler, SchedulerCfg, ServeStats, SubmitError, SubmitHandle, TenantStats, Ticket,
+pub use admission::{shard_of, Reply, SubmitError, SubmitHandle, Ticket};
+pub use registry::{perturb_c3a_kernels, AdapterRegistry};
+pub use replay::{
+    arrival_schedule, run_replay, tenant_name, ReplayCfg, ReplayReport, ZipfSampler,
 };
-pub use stats::{percentile, LatencySummary};
+pub use scheduler::{Scheduler, SchedulerCfg};
+pub use stats::{percentile, LatencySummary, ServeStats, ShardStats, TenantStats, SAMPLE_CAP};
+pub use worker::ShardCtx;

@@ -43,7 +43,9 @@ struct Tenant {
 /// and (on the substrate backend) the parsed frozen arrays.
 ///
 /// Not `Send` by design (sessions hold `Rc` state): a registry lives on
-/// one serving thread; see [`super::scheduler::Scheduler::spawn`].
+/// exactly one shard worker thread, which builds it there via the
+/// closure passed to [`super::scheduler::Scheduler::spawn`] and owns the
+/// disjoint slice of tenants routing to that shard.
 pub struct AdapterRegistry {
     backbone: SharedBackbone,
     tenants: BTreeMap<String, Tenant>,

@@ -1,28 +1,39 @@
-//! Bounded request queue + dynamic batching over an [`AdapterRegistry`].
+//! The sharded serving runtime: N tenant-affine shard workers behind one
+//! shared admission layer.
 //!
-//! Sessions are not `Send` (they hold `Rc` executor state), so the
-//! scheduler owns a dedicated serving thread: the registry is *built on
-//! that thread* by the closure passed to [`Scheduler::spawn`], and
-//! producers talk to it through a bounded `sync_channel` — `try_submit`
-//! surfaces a full queue as [`SubmitError::QueueFull`] (backpressure),
-//! `submit` blocks for space.  Requests for one tenant are drained into a
-//! dynamic batch of up to `max_batch`, closed early by a `max_wait`
-//! deadline, a message for a different tenant, or a hot-swap (FIFO order
-//! is preserved: requests submitted before a swap serve under the old
-//! adapter version).
+//! Sessions are not `Send` (they hold `Rc` executor state), so each shard
+//! worker *builds its own* [`AdapterRegistry`] — its own `SharedBackbone`
+//! parse, its own sessions — on its own thread: the closure passed to
+//! [`Scheduler::spawn`] runs once per shard with a
+//! [`ShardCtx`](super::ShardCtx) and must register exactly the tenants
+//! that shard [`owns`](super::ShardCtx::owns).  Producers talk to the
+//! shards through per-shard bounded `sync_channel`s behind a
+//! [`SubmitHandle`](super::SubmitHandle): `try_submit` surfaces a full
+//! shard queue as [`SubmitError::QueueFull`](super::SubmitError)
+//! (backpressure + shed accounting), `submit` blocks for space, and
+//! `hot_swap` rides the tenant's own queue so per-tenant FIFO holds
+//! across swaps with no cross-shard coordination.
+//!
+//! `shards = 1` (the default) is the degradation/kill-switch path: one
+//! worker, one queue, bit-identical behavior to the pre-sharding
+//! single-thread scheduler.
 
+use super::admission::{Admission, Msg, SubmitHandle};
 use super::registry::AdapterRegistry;
-use super::stats::LatencySummary;
-use crate::substrate::tensor::{Tensor, TensorMap};
-use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use super::stats::{ServeStats, ShardStats, TenantStats};
+use super::worker::{shard_loop, ShardCtx};
+use anyhow::{anyhow, bail, Result};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 /// Scheduler knobs (see `rust/README.md` § Serving).
 #[derive(Clone, Debug)]
 pub struct SchedulerCfg {
-    /// Bounded queue capacity; `try_submit` sheds load beyond it.
+    /// Shard worker count; each worker owns the tenants that hash to it.
+    /// 1 (the default) reproduces the single-thread scheduler exactly.
+    pub shards: usize,
+    /// Bounded queue capacity **per shard**; `try_submit` sheds load
+    /// beyond it.
     pub queue_cap: usize,
     /// Dynamic batch cap; 0 means "the artifact batch size".
     pub max_batch: usize,
@@ -33,358 +44,110 @@ pub struct SchedulerCfg {
 
 impl Default for SchedulerCfg {
     fn default() -> Self {
-        SchedulerCfg { queue_cap: 256, max_batch: 0, max_wait: Duration::from_millis(2) }
-    }
-}
-
-/// One served request's outcome.
-#[derive(Clone, Debug)]
-pub struct Reply {
-    pub tenant: String,
-    /// adapter version the request was served under
-    pub tenant_version: u64,
-    /// this request's logits row (flattened per-example chunk)
-    pub logits: Vec<f32>,
-    /// argmax over the logits row (class id for pooled heads)
-    pub pred: usize,
-    /// dynamic batch size this request was served in
-    pub batch_size: usize,
-    /// submit-to-reply latency
-    pub latency_ms: f64,
-}
-
-/// Submission failure.
-#[derive(Debug)]
-pub enum SubmitError {
-    /// bounded queue at capacity — shed or retry (backpressure)
-    QueueFull,
-    /// scheduler shut down (or its builder failed)
-    Closed,
-}
-
-impl std::fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::QueueFull => write!(f, "request queue is full (backpressure)"),
-            SubmitError::Closed => write!(f, "scheduler is shut down"),
+        SchedulerCfg {
+            shards: 1,
+            queue_cap: 256,
+            max_batch: 0,
+            max_wait: Duration::from_millis(2),
         }
     }
 }
 
-impl std::error::Error for SubmitError {}
+type ShardOutput = (ShardStats, Vec<TenantStats>);
 
-struct Request {
-    tenant: String,
-    tokens: Vec<i32>,
-    submitted: Instant,
-    reply: mpsc::Sender<std::result::Result<Reply, String>>,
-}
-
-enum Msg {
-    Request(Request),
-    Swap {
-        tenant: String,
-        params: TensorMap,
-        ack: mpsc::Sender<std::result::Result<u64, String>>,
-    },
-}
-
-/// Receipt for a submitted request; `wait` blocks for the reply.
-#[derive(Debug)]
-pub struct Ticket {
-    rx: mpsc::Receiver<std::result::Result<Reply, String>>,
-}
-
-impl Ticket {
-    pub fn wait(self) -> Result<Reply> {
-        match self.rx.recv() {
-            Ok(Ok(r)) => Ok(r),
-            Ok(Err(e)) => Err(anyhow!("{e}")),
-            Err(_) => Err(anyhow!("scheduler dropped the request (shutdown)")),
-        }
-    }
-}
-
-/// Cloneable producer handle.  Drop every handle (and call
-/// [`Scheduler::finish`]) to let the serving thread drain and exit.
-#[derive(Clone)]
-pub struct SubmitHandle {
-    tx: mpsc::SyncSender<Msg>,
-}
-
-impl SubmitHandle {
-    fn request(&self, tenant: &str, tokens: Vec<i32>) -> (Msg, Ticket) {
-        let (rtx, rrx) = mpsc::channel();
-        let req = Request {
-            tenant: tenant.to_string(),
-            tokens,
-            submitted: Instant::now(),
-            reply: rtx,
-        };
-        (Msg::Request(req), Ticket { rx: rrx })
-    }
-
-    /// Non-blocking submit: `Err(QueueFull)` when the bounded queue is at
-    /// capacity, `Err(Closed)` after shutdown.
-    pub fn try_submit(
-        &self,
-        tenant: &str,
-        tokens: Vec<i32>,
-    ) -> std::result::Result<Ticket, SubmitError> {
-        let (msg, ticket) = self.request(tenant, tokens);
-        match self.tx.try_send(msg) {
-            Ok(()) => Ok(ticket),
-            Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::QueueFull),
-            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
-        }
-    }
-
-    /// Blocking submit: waits for queue space instead of shedding.
-    pub fn submit(
-        &self,
-        tenant: &str,
-        tokens: Vec<i32>,
-    ) -> std::result::Result<Ticket, SubmitError> {
-        let (msg, ticket) = self.request(tenant, tokens);
-        self.tx.send(msg).map(|()| ticket).map_err(|_| SubmitError::Closed)
-    }
-
-    /// Atomically replace `tenant`'s adapter, ordered with respect to the
-    /// queue: every request submitted before the swap serves under the old
-    /// version.  Blocks until the serving thread acks with the new version.
-    pub fn hot_swap(&self, tenant: &str, params: TensorMap) -> Result<u64> {
-        let (atx, arx) = mpsc::channel();
-        let msg = Msg::Swap { tenant: tenant.to_string(), params, ack: atx };
-        self.tx.send(msg).map_err(|_| anyhow!("scheduler is shut down"))?;
-        match arx.recv() {
-            Ok(Ok(v)) => Ok(v),
-            Ok(Err(e)) => Err(anyhow!("{e}")),
-            Err(_) => Err(anyhow!("scheduler closed before acking hot_swap")),
-        }
-    }
-}
-
-/// Cap on the per-request/per-batch sample windows ([`ServeStats`]): a
-/// long-lived scheduler must not grow per-request state without bound, so
-/// beyond this many samples the windows become ring buffers holding the
-/// most recent entries (counters and sums stay exact forever).
-const SAMPLE_CAP: usize = 65_536;
-
-/// Push into a capped window: append until [`SAMPLE_CAP`], then overwrite
-/// ring-buffer style using the caller's monotone event counter.
-fn push_sample<T>(window: &mut Vec<T>, event_idx: u64, value: T) {
-    if window.len() < SAMPLE_CAP {
-        window.push(value);
-    } else {
-        window[(event_idx as usize) % SAMPLE_CAP] = value;
-    }
-}
-
-/// Final per-tenant accounting, snapshotted when the scheduler drains.
-#[derive(Clone, Debug)]
-pub struct TenantStats {
-    pub name: String,
-    pub requests: u64,
-    /// adapter uploads (1 per adapter version under the serving pattern)
-    pub uploads: usize,
-    pub version: u64,
-    pub spectra_hits: u64,
-    pub spectra_misses: u64,
-    /// execution-plan replays by this tenant's session (requests minus
-    /// the one recording call, under the steady-state serving pattern;
-    /// 0 when plans are disabled via `C3A_PLAN=0`)
-    pub plan_replays: u64,
-}
-
-/// What the serving thread hands back from [`Scheduler::finish`].
-#[derive(Clone, Debug, Default)]
-pub struct ServeStats {
-    pub served: u64,
-    pub batches: u64,
-    /// requests refused because their tenant was unknown (or inference
-    /// failed); each got an error reply
-    pub failed: u64,
-    /// exact running sum of dynamic batch sizes (drives [`ServeStats::mean_batch`])
-    pub batch_size_sum: u64,
-    /// most recent [`SAMPLE_CAP`] batch sizes (bounded window)
-    pub batch_sizes: Vec<usize>,
-    /// most recent [`SAMPLE_CAP`] request latencies (bounded window; the
-    /// percentile report covers this window, not all-time)
-    pub latencies_ms: Vec<f64>,
-    pub tenants: Vec<TenantStats>,
-}
-
-impl ServeStats {
-    pub fn mean_batch(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.batch_size_sum as f64 / self.batches as f64
-        }
-    }
-
-    pub fn latency(&self) -> LatencySummary {
-        LatencySummary::from_samples(&self.latencies_ms)
-    }
-
-    pub fn tenant(&self, name: &str) -> Option<&TenantStats> {
-        self.tenants.iter().find(|t| t.name == name)
-    }
-}
-
-/// The serving thread plus its queue.  Create with [`Scheduler::spawn`],
+/// The shard workers plus their queues.  Create with [`Scheduler::spawn`],
 /// submit through [`Scheduler::handle`], and call [`Scheduler::finish`]
 /// (after dropping every cloned handle) to drain and collect stats.
 pub struct Scheduler {
-    tx: Option<mpsc::SyncSender<Msg>>,
-    worker: Option<std::thread::JoinHandle<Result<ServeStats>>>,
+    txs: Option<Arc<Vec<mpsc::SyncSender<Msg>>>>,
+    workers: Vec<std::thread::JoinHandle<Result<ShardOutput>>>,
+    adm: Arc<Admission>,
 }
 
 impl Scheduler {
-    /// Spawn the serving thread.  `build` runs *on that thread* (sessions
-    /// are not `Send`) and produces the registry the scheduler serves; if
-    /// it fails, every submit sees `Closed` and `finish` returns the error.
+    /// Spawn `cfg.shards` shard workers.  `build` runs *on each shard
+    /// thread* (sessions are not `Send`) and produces that shard's
+    /// registry; it must register exactly the tenants its
+    /// [`ShardCtx::owns`] — a tenant registered on the wrong shard could
+    /// never receive a request (routing is by name hash), so the worker
+    /// rejects it at startup.  If a shard's build fails, submits routed
+    /// to that shard see `Closed` and `finish` returns the error; other
+    /// shards keep serving until drained.
     pub fn spawn<F>(cfg: SchedulerCfg, build: F) -> Result<Scheduler>
     where
-        F: FnOnce() -> Result<AdapterRegistry> + Send + 'static,
+        F: Fn(&ShardCtx) -> Result<AdapterRegistry> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel(cfg.queue_cap.max(1));
-        let worker = std::thread::Builder::new()
-            .name("c3a-serve".into())
-            .spawn(move || serve_loop(cfg, build()?, rx))?;
-        Ok(Scheduler { tx: Some(tx), worker: Some(worker) })
+        let shards = cfg.shards.max(1);
+        let build = Arc::new(build);
+        let adm = Arc::new(Admission::new(shards));
+        let mut txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = mpsc::sync_channel(cfg.queue_cap.max(1));
+            let build = build.clone();
+            let cfg = cfg.clone();
+            let adm = adm.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("c3a-serve-{shard}"))
+                .spawn(move || -> Result<ShardOutput> {
+                    let ctx = ShardCtx::new(shard, shards);
+                    let registry = build(&ctx)?;
+                    for name in registry.tenant_names() {
+                        if !ctx.owns(&name) {
+                            bail!(
+                                "tenant {name} registered on shard {shard} but routes to \
+                                 shard {} — register only tenants the ShardCtx owns",
+                                super::admission::shard_of(&name, shards)
+                            );
+                        }
+                    }
+                    shard_loop(&cfg, shard, registry, rx, &adm.gauges[shard])
+                })?;
+            txs.push(tx);
+            workers.push(worker);
+        }
+        Ok(Scheduler { txs: Some(Arc::new(txs)), workers, adm })
     }
 
     pub fn handle(&self) -> SubmitHandle {
-        SubmitHandle { tx: self.tx.as_ref().expect("scheduler is live").clone() }
+        SubmitHandle::new(self.txs.as_ref().expect("scheduler is live").clone(), self.adm.clone())
     }
 
-    /// Drop this side of the queue, wait for the serving thread to drain
-    /// every in-flight request, and return its accounting.  Cloned
-    /// [`SubmitHandle`]s must be dropped first or this blocks forever.
+    /// Drop this side of every shard queue, wait for the workers to drain
+    /// every in-flight request, and return the merged accounting (raw
+    /// latency windows pooled across shards — see
+    /// [`ServeStats::merge`]).  Cloned
+    /// [`SubmitHandle`](super::SubmitHandle)s must be dropped first or
+    /// this blocks forever.
     pub fn finish(mut self) -> Result<ServeStats> {
-        self.tx = None;
-        let worker = self.worker.take().expect("finish consumes the scheduler");
-        match worker.join() {
-            Ok(r) => r,
-            Err(_) => Err(anyhow!("serving thread panicked")),
-        }
-    }
-}
-
-fn serve_loop(
-    cfg: SchedulerCfg,
-    mut registry: AdapterRegistry,
-    rx: mpsc::Receiver<Msg>,
-) -> Result<ServeStats> {
-    let b = registry.spec().batch;
-    let s = registry.spec().seq;
-    let max_batch = if cfg.max_batch == 0 { b } else { cfg.max_batch.min(b) };
-    let mut stats = ServeStats::default();
-    let mut tenant_served: BTreeMap<String, u64> = BTreeMap::new();
-    // a message that closed the previous batch; processed before recv so
-    // queue order is never violated
-    let mut carry: Option<Msg> = None;
-    loop {
-        let msg = match carry.take() {
-            Some(m) => m,
-            None => match rx.recv() {
-                Ok(m) => m,
-                Err(_) => break, // every handle dropped and queue drained
-            },
-        };
-        match msg {
-            Msg::Swap { tenant, params, ack } => {
-                let _ = ack.send(registry.hot_swap(&tenant, params).map_err(|e| format!("{e:#}")));
-            }
-            Msg::Request(first) => {
-                let tenant = first.tenant.clone();
-                let deadline = Instant::now() + cfg.max_wait;
-                let mut batch = vec![first];
-                while batch.len() < max_batch {
-                    let remaining = deadline.saturating_duration_since(Instant::now());
-                    if remaining.is_zero() {
-                        break;
-                    }
-                    match rx.recv_timeout(remaining) {
-                        Ok(Msg::Request(r)) if r.tenant == tenant => batch.push(r),
-                        // different tenant or a swap: close this batch and
-                        // handle that message next (FIFO preserved)
-                        Ok(other) => {
-                            carry = Some(other);
-                            break;
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => break,
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                    }
+        self.txs = None;
+        let mut outs: Vec<ShardOutput> = Vec::with_capacity(self.workers.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for (shard, worker) in self.workers.drain(..).enumerate() {
+            match worker.join() {
+                Ok(Ok(out)) => outs.push(out),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
                 }
-                run_batch(&registry, &mut stats, &mut tenant_served, b, s, batch);
+                Err(_) => {
+                    first_err.get_or_insert(anyhow!("serving shard {shard} panicked"));
+                }
             }
         }
-    }
-    for name in registry.tenant_names() {
-        let cs = registry.cache_stats(&name).unwrap_or_default();
-        stats.tenants.push(TenantStats {
-            requests: tenant_served.get(&name).copied().unwrap_or(0),
-            uploads: registry.upload_count(&name).unwrap_or(0),
-            version: registry.version(&name).unwrap_or(0),
-            spectra_hits: cs.spectra_hits,
-            spectra_misses: cs.spectra_misses,
-            plan_replays: registry.plan_stats(&name).map(|p| p.replays).unwrap_or(0),
-            name,
-        });
-    }
-    Ok(stats)
-}
-
-fn run_batch(
-    registry: &AdapterRegistry,
-    stats: &mut ServeStats,
-    tenant_served: &mut BTreeMap<String, u64>,
-    b: usize,
-    s: usize,
-    batch: Vec<Request>,
-) {
-    let tenant = batch[0].tenant.clone();
-    // pad the dynamic batch up to the artifact batch with PAD rows
-    let mut toks = vec![0i32; b * s];
-    for (slot, r) in batch.iter().enumerate() {
-        let n = r.tokens.len().min(s);
-        toks[slot * s..slot * s + n].copy_from_slice(&r.tokens[..n]);
-    }
-    let data = vec![Tensor::from_i32(vec![b, s], &toks)];
-    match registry.infer(&tenant, &data) {
-        Ok((logits, _shape, version)) => {
-            let row_w = logits.len() / b.max(1);
-            let now = Instant::now();
-            let n_batch = batch.len();
-            push_sample(&mut stats.batch_sizes, stats.batches, n_batch);
-            stats.batches += 1;
-            stats.batch_size_sum += n_batch as u64;
-            for (slot, r) in batch.into_iter().enumerate() {
-                let row = logits[slot * row_w..(slot + 1) * row_w].to_vec();
-                let pred = crate::substrate::linalg::argmax(&row);
-                let latency_ms = now.duration_since(r.submitted).as_secs_f64() * 1e3;
-                push_sample(&mut stats.latencies_ms, stats.served, latency_ms);
-                stats.served += 1;
-                *tenant_served.entry(tenant.clone()).or_insert(0) += 1;
-                let reply = Reply {
-                    tenant: tenant.clone(),
-                    tenant_version: version,
-                    logits: row,
-                    pred,
-                    batch_size: n_batch,
-                    latency_ms,
-                };
-                let _ = r.reply.send(Ok(reply));
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // fold the admission-side accounting (sheds, depth high-water
+        // marks) into the shard outputs before merging
+        let tenant_sheds = self.adm.tenant_sheds();
+        for (stats, tenants) in &mut outs {
+            let gauge = &self.adm.gauges[stats.shard];
+            stats.queue_depth_hwm = gauge.hwm();
+            stats.sheds = gauge.sheds();
+            for t in tenants.iter_mut() {
+                t.sheds = tenant_sheds.get(&t.name).copied().unwrap_or(0);
             }
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            stats.failed += batch.len() as u64;
-            for r in batch {
-                let _ = r.reply.send(Err(msg.clone()));
-            }
-        }
+        Ok(ServeStats::merge(outs))
     }
 }

@@ -1,10 +1,20 @@
-//! Latency accounting shared by the serve example, `bench_serve`, and the
-//! serving tests.
+//! Serving statistics: latency percentile accounting plus the per-shard
+//! and per-tenant counters of the sharded runtime, and the cross-shard
+//! merge rules.
 //!
-//! Samples are ordered with `f64::total_cmp`: a NaN latency (clock
-//! weirdness, a poisoned measurement) sorts after +inf instead of
-//! panicking the whole report — the same fix `metrics::ranks` applies to
-//! Spearman inputs.
+//! Two disciplines are load-bearing here:
+//!
+//! * Samples are ordered with `f64::total_cmp`: a NaN latency (clock
+//!   weirdness, a poisoned measurement) sorts after +inf instead of
+//!   panicking the whole report — the same fix `metrics::ranks` applies
+//!   to Spearman inputs.
+//! * Cross-shard aggregation merges the shards' **raw sample windows**
+//!   and computes percentiles over the union.  Per-shard percentiles are
+//!   *never* averaged: the p99 of a union is a rank statistic of the
+//!   pooled samples, and averaging per-shard p99s under-reports the tail
+//!   whenever load (or latency) is skewed across shards — which is the
+//!   normal state under Zipf tenant popularity.
+//!   [`merge_windows_are_pooled_not_averaged`] pins this.
 
 /// Percentile (p in [0, 1]) of an ascending-sorted sample, nearest-rank:
 /// the ⌈p·n⌉-th smallest value (p = 0 yields the minimum).
@@ -51,9 +61,169 @@ impl LatencySummary {
     }
 }
 
+/// Cap on each shard's per-request/per-batch sample windows: a long-lived
+/// worker must not grow per-request state without bound, so beyond this
+/// many samples a window becomes a ring buffer holding the most recent
+/// entries (counters and sums stay exact forever).
+pub const SAMPLE_CAP: usize = 65_536;
+
+/// Push into a capped window: append until [`SAMPLE_CAP`], then overwrite
+/// ring-buffer style using the caller's monotone event counter.
+pub(crate) fn push_sample<T>(window: &mut Vec<T>, event_idx: u64, value: T) {
+    if window.len() < SAMPLE_CAP {
+        window.push(value);
+    } else {
+        window[(event_idx as usize) % SAMPLE_CAP] = value;
+    }
+}
+
+/// Final per-tenant accounting, snapshotted when the scheduler drains.
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    pub name: String,
+    /// shard worker this tenant is affine to (`shard_of(name, shards)`)
+    pub shard: usize,
+    pub requests: u64,
+    /// adapter uploads (1 per adapter version under the serving pattern)
+    pub uploads: usize,
+    pub version: u64,
+    pub spectra_hits: u64,
+    pub spectra_misses: u64,
+    /// execution-plan replays by this tenant's session (requests minus
+    /// the one recording call, under the steady-state serving pattern;
+    /// 0 when plans are disabled via `C3A_PLAN=0`)
+    pub plan_replays: u64,
+    /// `try_submit` rejections for this tenant at the admission layer
+    /// (its shard's bounded queue was full) — filled in at merge time
+    pub sheds: u64,
+}
+
+/// One shard worker's accounting: its own served/failed counters and its
+/// own *raw* sample windows (kept raw so the cross-shard merge can pool
+/// them — see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub served: u64,
+    pub batches: u64,
+    /// requests refused because their tenant was unknown (or inference
+    /// failed); each got an error reply
+    pub failed: u64,
+    /// exact running sum of dynamic batch sizes
+    pub batch_size_sum: u64,
+    /// most recent [`SAMPLE_CAP`] batch sizes (bounded window)
+    pub batch_sizes: Vec<usize>,
+    /// most recent [`SAMPLE_CAP`] request latencies (bounded window)
+    pub latencies_ms: Vec<f64>,
+    /// high-water mark of this shard's queue depth (admitted messages,
+    /// requests and swaps alike)
+    pub queue_depth_hwm: usize,
+    /// `try_submit` rejections against this shard's full queue
+    pub sheds: u64,
+}
+
+impl ShardStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// This shard's own latency percentiles (over its raw window).
+    pub fn latency(&self) -> LatencySummary {
+        LatencySummary::from_samples(&self.latencies_ms)
+    }
+}
+
+/// What [`super::Scheduler::finish`] hands back: the cross-shard
+/// aggregate plus per-shard and per-tenant detail.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub served: u64,
+    pub batches: u64,
+    pub failed: u64,
+    /// exact running sum of dynamic batch sizes (drives [`ServeStats::mean_batch`])
+    pub batch_size_sum: u64,
+    /// union of the shards' batch-size windows (shard order)
+    pub batch_sizes: Vec<usize>,
+    /// union of the shards' raw latency windows (shard order); the
+    /// percentile report covers this pooled window, not all-time
+    pub latencies_ms: Vec<f64>,
+    /// total `try_submit` rejections at the admission layer (includes
+    /// sheds for tenants no shard knows about)
+    pub sheds: u64,
+    /// every shard's tenants, sorted by name
+    pub tenants: Vec<TenantStats>,
+    /// per-shard detail, sorted by shard id
+    pub shards: Vec<ShardStats>,
+}
+
+impl ServeStats {
+    /// Pool the shard outputs into the aggregate view.  Counters add;
+    /// sample windows concatenate in shard order and percentiles are
+    /// computed over the pooled samples (never by averaging per-shard
+    /// percentiles); tenants flatten into one name-sorted list.
+    pub fn merge(mut outs: Vec<(ShardStats, Vec<TenantStats>)>) -> ServeStats {
+        outs.sort_by_key(|(s, _)| s.shard);
+        let mut m = ServeStats::default();
+        for (shard, tenants) in outs {
+            m.served += shard.served;
+            m.batches += shard.batches;
+            m.failed += shard.failed;
+            m.batch_size_sum += shard.batch_size_sum;
+            m.sheds += shard.sheds;
+            m.batch_sizes.extend_from_slice(&shard.batch_sizes);
+            m.latencies_ms.extend_from_slice(&shard.latencies_ms);
+            m.tenants.extend(tenants);
+            m.shards.push(shard);
+        }
+        m.tenants.sort_by(|a, b| a.name.cmp(&b.name));
+        m
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Aggregate latency percentiles over the pooled raw windows.
+    pub fn latency(&self) -> LatencySummary {
+        LatencySummary::from_samples(&self.latencies_ms)
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantStats> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// Shards that actually served at least one request — the replay
+    /// bench asserts load spread with this.
+    pub fn active_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.served > 0).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tenant(name: &str, shard: usize, requests: u64) -> TenantStats {
+        TenantStats {
+            name: name.to_string(),
+            shard,
+            requests,
+            uploads: 1,
+            version: 1,
+            spectra_hits: 0,
+            spectra_misses: 0,
+            plan_replays: 0,
+            sheds: 0,
+        }
+    }
 
     #[test]
     fn percentiles_of_known_sample() {
@@ -107,5 +277,82 @@ mod tests {
         assert_eq!(l.n, 0);
         assert_eq!(l.p50_ms, 0.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    /// The merge rule with teeth: a fast shard and a slow shard.  The
+    /// pooled p99 must be a rank statistic of the union — clearly distinct
+    /// from the mean of the two per-shard p99s, which under-reports the
+    /// tail whenever load is skewed.
+    #[test]
+    fn merge_windows_are_pooled_not_averaged() {
+        // fast shard: 99 samples at 1ms; slow shard: 99 samples at 100ms
+        let fast = ShardStats {
+            shard: 0,
+            served: 99,
+            batches: 99,
+            batch_size_sum: 99,
+            latencies_ms: vec![1.0; 99],
+            batch_sizes: vec![1; 99],
+            ..ShardStats::default()
+        };
+        let slow = ShardStats {
+            shard: 1,
+            served: 99,
+            batches: 33,
+            batch_size_sum: 99,
+            latencies_ms: vec![100.0; 99],
+            batch_sizes: vec![3; 33],
+            ..ShardStats::default()
+        };
+        let p99_fast = fast.latency().p99_ms;
+        let p99_slow = slow.latency().p99_ms;
+        let m = ServeStats::merge(vec![(slow, vec![]), (fast, vec![])]);
+        assert_eq!(m.served, 198);
+        assert_eq!(m.batches, 132);
+        assert_eq!(m.latencies_ms.len(), 198);
+        // pooled nearest-rank p99 over 198 samples = 196th smallest = 100ms
+        let pooled = m.latency();
+        assert_eq!(pooled.p99_ms, 100.0);
+        assert_ne!(
+            pooled.p99_ms,
+            (p99_fast + p99_slow) / 2.0,
+            "pooled p99 must not equal the per-shard average"
+        );
+        // pooled p50 over [99×1ms, 99×100ms]: ⌈.5·198⌉ = 99th smallest = 1ms
+        assert_eq!(pooled.p50_ms, 1.0);
+        // shards come back sorted by id with their raw windows intact
+        assert_eq!(m.shards[0].shard, 0);
+        assert_eq!(m.shards[1].shard, 1);
+        assert_eq!(m.shards[0].latency().p99_ms, p99_fast);
+        assert_eq!(m.shards[1].latency().p99_ms, p99_slow);
+        assert!((m.mean_batch() - 198.0 / 132.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_flattens_and_sorts_tenants() {
+        let s0 = ShardStats { shard: 0, served: 3, ..ShardStats::default() };
+        let s1 = ShardStats { shard: 1, served: 2, sheds: 4, ..ShardStats::default() };
+        let m = ServeStats::merge(vec![
+            (s1, vec![tenant("zeta", 1, 2)]),
+            (s0, vec![tenant("alpha", 0, 1), tenant("mid", 0, 2)]),
+        ]);
+        let names: Vec<&str> = m.tenants.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["alpha", "mid", "zeta"]);
+        assert_eq!(m.tenant("zeta").unwrap().shard, 1);
+        assert_eq!(m.sheds, 4);
+        assert_eq!(m.active_shards(), 2);
+    }
+
+    #[test]
+    fn push_sample_caps_the_window() {
+        let mut w = Vec::new();
+        for i in 0..(SAMPLE_CAP as u64 + 10) {
+            push_sample(&mut w, i, i);
+        }
+        assert_eq!(w.len(), SAMPLE_CAP);
+        // the first 10 ring slots hold the overwrites
+        assert_eq!(w[0], SAMPLE_CAP as u64);
+        assert_eq!(w[9], SAMPLE_CAP as u64 + 9);
+        assert_eq!(w[10], 10);
     }
 }

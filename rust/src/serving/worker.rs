@@ -1,0 +1,185 @@
+//! Per-shard serving worker: one thread owning one [`AdapterRegistry`]
+//! (its own `SharedBackbone` parse, its own sessions — nothing here is
+//! ever `Send`) and draining its shard's bounded queue with dynamic
+//! batching and the FIFO carry slot.
+//!
+//! Requests for one tenant are drained into a dynamic batch of up to
+//! `max_batch`, closed early by a `max_wait` deadline, a message for a
+//! different tenant, or a hot-swap.  FIFO order is preserved *per queue*
+//! (and the admission layer routes each tenant to exactly one queue):
+//! a message that closes a batch parks in the carry slot and is processed
+//! before the next `recv`, so a swap can never overtake the requests
+//! submitted ahead of it — including a carried same-tenant request.
+
+use super::admission::{Msg, Request, ShardGauge};
+use super::registry::AdapterRegistry;
+use super::scheduler::SchedulerCfg;
+use super::stats::{push_sample, ShardStats, TenantStats};
+use crate::substrate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// What a shard builder closure gets: which shard it is building, how
+/// many shards exist, and the ownership predicate.  Register exactly the
+/// tenants this shard [`owns`](ShardCtx::owns) — the scheduler rejects a
+/// registry containing tenants that route elsewhere (they could never
+/// receive a request).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardCtx {
+    shard: usize,
+    shards: usize,
+}
+
+impl ShardCtx {
+    pub(super) fn new(shard: usize, shards: usize) -> ShardCtx {
+        ShardCtx { shard, shards }
+    }
+
+    /// This worker's shard id (0-based).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Total shard worker count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Whether `tenant` routes to this shard ([`super::shard_of`]).
+    pub fn owns(&self, tenant: &str) -> bool {
+        super::admission::shard_of(tenant, self.shards) == self.shard
+    }
+}
+
+/// Drain the shard queue until every producer handle is dropped; returns
+/// this shard's accounting plus its tenants' final stats.
+pub(super) fn shard_loop(
+    cfg: &SchedulerCfg,
+    shard: usize,
+    mut registry: AdapterRegistry,
+    rx: mpsc::Receiver<Msg>,
+    gauge: &ShardGauge,
+) -> Result<(ShardStats, Vec<TenantStats>)> {
+    let b = registry.spec().batch;
+    let s = registry.spec().seq;
+    let max_batch = if cfg.max_batch == 0 { b } else { cfg.max_batch.min(b) };
+    let mut stats = ShardStats { shard, ..ShardStats::default() };
+    let mut tenant_served: BTreeMap<String, u64> = BTreeMap::new();
+    // a message that closed the previous batch; processed before recv so
+    // queue order is never violated
+    let mut carry: Option<Msg> = None;
+    loop {
+        let msg = match carry.take() {
+            Some(m) => m,
+            None => match rx.recv() {
+                Ok(m) => {
+                    gauge.on_dequeue();
+                    m
+                }
+                Err(_) => break, // every handle dropped and queue drained
+            },
+        };
+        match msg {
+            Msg::Swap { tenant, params, ack } => {
+                let _ = ack.send(registry.hot_swap(&tenant, params).map_err(|e| format!("{e:#}")));
+            }
+            Msg::Request(first) => {
+                let tenant = first.tenant.clone();
+                let deadline = Instant::now() + cfg.max_wait;
+                let mut batch = vec![first];
+                while batch.len() < max_batch {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    match rx.recv_timeout(remaining) {
+                        Ok(Msg::Request(r)) if r.tenant == tenant => {
+                            gauge.on_dequeue();
+                            batch.push(r);
+                        }
+                        // different tenant or a swap: close this batch and
+                        // handle that message next (FIFO preserved)
+                        Ok(other) => {
+                            gauge.on_dequeue();
+                            carry = Some(other);
+                            break;
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                run_batch(&registry, &mut stats, &mut tenant_served, b, s, batch);
+            }
+        }
+    }
+    let mut tenants = Vec::new();
+    for name in registry.tenant_names() {
+        let cs = registry.cache_stats(&name).unwrap_or_default();
+        tenants.push(TenantStats {
+            shard,
+            requests: tenant_served.get(&name).copied().unwrap_or(0),
+            uploads: registry.upload_count(&name).unwrap_or(0),
+            version: registry.version(&name).unwrap_or(0),
+            spectra_hits: cs.spectra_hits,
+            spectra_misses: cs.spectra_misses,
+            plan_replays: registry.plan_stats(&name).map(|p| p.replays).unwrap_or(0),
+            sheds: 0, // admission-side count, filled in at merge
+            name,
+        });
+    }
+    Ok((stats, tenants))
+}
+
+fn run_batch(
+    registry: &AdapterRegistry,
+    stats: &mut ShardStats,
+    tenant_served: &mut BTreeMap<String, u64>,
+    b: usize,
+    s: usize,
+    batch: Vec<Request>,
+) {
+    let tenant = batch[0].tenant.clone();
+    // pad the dynamic batch up to the artifact batch with PAD rows
+    let mut toks = vec![0i32; b * s];
+    for (slot, r) in batch.iter().enumerate() {
+        let n = r.tokens.len().min(s);
+        toks[slot * s..slot * s + n].copy_from_slice(&r.tokens[..n]);
+    }
+    let data = vec![Tensor::from_i32(vec![b, s], &toks)];
+    match registry.infer(&tenant, &data) {
+        Ok((logits, _shape, version)) => {
+            let row_w = logits.len() / b.max(1);
+            let now = Instant::now();
+            let n_batch = batch.len();
+            push_sample(&mut stats.batch_sizes, stats.batches, n_batch);
+            stats.batches += 1;
+            stats.batch_size_sum += n_batch as u64;
+            for (slot, r) in batch.into_iter().enumerate() {
+                let row = logits[slot * row_w..(slot + 1) * row_w].to_vec();
+                let pred = crate::substrate::linalg::argmax(&row);
+                let latency_ms = now.duration_since(r.submitted).as_secs_f64() * 1e3;
+                push_sample(&mut stats.latencies_ms, stats.served, latency_ms);
+                stats.served += 1;
+                *tenant_served.entry(tenant.clone()).or_insert(0) += 1;
+                let reply = super::Reply {
+                    tenant: tenant.clone(),
+                    tenant_version: version,
+                    logits: row,
+                    pred,
+                    batch_size: n_batch,
+                    latency_ms,
+                };
+                let _ = r.reply.send(Ok(reply));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            stats.failed += batch.len() as u64;
+            for r in batch {
+                let _ = r.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}

@@ -1,17 +1,22 @@
-//! Serving-subsystem regression tests: one shared frozen-backbone parse
-//! under many adapters, per-tenant cache isolation across hot-swaps, and
-//! the scheduler's dynamic-batching / backpressure contract.
+//! Serving-subsystem regression tests at `shards = 1` — the
+//! degradation/kill-switch path that must stay bit-identical to the
+//! pre-sharding single-thread scheduler: one shared frozen-backbone
+//! parse under many adapters, per-tenant cache isolation across
+//! hot-swaps, and the scheduler's dynamic-batching / backpressure
+//! contract.  Cross-shard behavior is pinned in `serving_sharded.rs`.
 
 use c3a::peft::init::C3aScheme;
 use c3a::runtime::catalog;
 use c3a::runtime::session::build_init;
 use c3a::runtime::Engine;
 use c3a::serving::{
-    AdapterRegistry, Scheduler, SchedulerCfg, SubmitError, perturb_c3a_kernels as perturb,
+    perturb_c3a_kernels as perturb, AdapterRegistry, Scheduler, SchedulerCfg, ShardCtx,
+    SubmitError,
 };
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::{Tensor, TensorMap};
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::Duration;
 
 const EVAL: &str = "enc_tiny__c3a_d8__cls__eval";
@@ -117,10 +122,15 @@ fn hot_swap_invalidates_only_the_swapped_tenant() {
 fn scheduler_drains_partial_batches_under_slow_producer() {
     let dir = std::env::temp_dir().join("c3a_serving_partial");
     let (adapter, _b, s) = template(&dir);
-    let cfg = SchedulerCfg { queue_cap: 16, max_batch: 8, max_wait: Duration::from_millis(5) };
+    let cfg = SchedulerCfg {
+        shards: 1,
+        queue_cap: 16,
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+    };
     let sched = Scheduler::spawn(cfg, {
         let dir = dir.clone();
-        move || build_registry(&dir, vec![("t0".to_string(), adapter)])
+        move |_: &ShardCtx| build_registry(&dir, vec![("t0".to_string(), adapter.clone())])
     })
     .unwrap();
     let handle = sched.handle();
@@ -137,6 +147,8 @@ fn scheduler_drains_partial_batches_under_slow_producer() {
     assert_eq!(stats.served, 4);
     assert_eq!(stats.batches, 4);
     assert_eq!(stats.failed, 0);
+    assert_eq!(stats.sheds, 0);
+    assert_eq!(stats.shards.len(), 1, "shards=1 must report exactly one shard");
 }
 
 #[test]
@@ -146,12 +158,18 @@ fn try_submit_backpressure_then_queued_requests_drain_as_one_batch() {
     // gate the registry build so the worker cannot drain while we fill the
     // bounded queue — makes the backpressure assertion deterministic
     let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
-    let cfg = SchedulerCfg { queue_cap: 4, max_batch: 4, max_wait: Duration::from_millis(1) };
+    let gate_rx = Mutex::new(gate_rx);
+    let cfg = SchedulerCfg {
+        shards: 1,
+        queue_cap: 4,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    };
     let sched = Scheduler::spawn(cfg, {
         let dir = dir.clone();
-        move || {
-            let _ = gate_rx.recv();
-            build_registry(&dir, vec![("t0".to_string(), adapter)])
+        move |_: &ShardCtx| {
+            let _ = gate_rx.lock().unwrap().recv();
+            build_registry(&dir, vec![("t0".to_string(), adapter.clone())])
         }
     })
     .unwrap();
@@ -173,6 +191,10 @@ fn try_submit_backpressure_then_queued_requests_drain_as_one_batch() {
     let stats = sched.finish().unwrap();
     assert_eq!(stats.served, 4);
     assert_eq!(stats.batches, 1);
+    // the shed and the depth high-water mark are on the books
+    assert_eq!(stats.sheds, 1, "the QueueFull rejection must be counted");
+    assert_eq!(stats.tenant("t0").unwrap().sheds, 1, "…and attributed to its tenant");
+    assert_eq!(stats.shards[0].queue_depth_hwm, 4, "hwm must reflect the full queue");
 }
 
 #[test]
@@ -182,10 +204,15 @@ fn hot_swap_mid_stream_changes_predictions_for_exactly_the_swapped_tenant() {
     let names = ["ta", "tb", "tc"];
     let adapters: Vec<(String, TensorMap)> =
         names.iter().map(|n| (n.to_string(), adapter.clone())).collect();
-    let cfg = SchedulerCfg { queue_cap: 16, max_batch: 4, max_wait: Duration::from_millis(1) };
+    let cfg = SchedulerCfg {
+        shards: 1,
+        queue_cap: 16,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    };
     let sched = Scheduler::spawn(cfg, {
         let dir = dir.clone();
-        move || build_registry(&dir, adapters)
+        move |_: &ShardCtx| build_registry(&dir, adapters.clone())
     })
     .unwrap();
     let handle = sched.handle();
@@ -221,7 +248,7 @@ fn three_tenants_interleaved_keep_one_upload_each() {
         (0..3u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
     let sched = Scheduler::spawn(SchedulerCfg::default(), {
         let dir = dir.clone();
-        move || build_registry(&dir, adapters)
+        move |_: &ShardCtx| build_registry(&dir, adapters.clone())
     })
     .unwrap();
     let handle = sched.handle();
@@ -243,6 +270,7 @@ fn three_tenants_interleaved_keep_one_upload_each() {
         assert_eq!(t.requests, 10, "{}: round-robin must serve 10 each", t.name);
         assert_eq!(t.uploads, 1, "{}: interleaving must not evict the upload", t.name);
         assert!(t.spectra_hits > 0, "{}: spectra cache must hit across requests", t.name);
+        assert_eq!(t.shard, 0, "shards=1 puts every tenant on shard 0");
     }
 }
 
@@ -262,12 +290,18 @@ fn hot_swap_behind_carried_same_tenant_message_stays_fifo() {
     // gate the registry build so the whole queue fills before the worker
     // drains anything — makes the batch/carry decomposition deterministic
     let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
-    let cfg = SchedulerCfg { queue_cap: 8, max_batch: 4, max_wait: Duration::from_millis(5) };
+    let gate_rx = Mutex::new(gate_rx);
+    let cfg = SchedulerCfg {
+        shards: 1,
+        queue_cap: 8,
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+    };
     let sched = Scheduler::spawn(cfg, {
         let dir = dir.clone();
-        move || {
-            let _ = gate_rx.recv();
-            build_registry(&dir, adapters)
+        move |_: &ShardCtx| {
+            let _ = gate_rx.lock().unwrap().recv();
+            build_registry(&dir, adapters.clone())
         }
     })
     .unwrap();
@@ -322,7 +356,7 @@ fn unknown_tenant_gets_an_error_reply_not_a_hang() {
     let (adapter, _b, s) = template(&dir);
     let sched = Scheduler::spawn(SchedulerCfg::default(), {
         let dir = dir.clone();
-        move || build_registry(&dir, vec![("t0".to_string(), adapter)])
+        move |_: &ShardCtx| build_registry(&dir, vec![("t0".to_string(), adapter.clone())])
     })
     .unwrap();
     let handle = sched.handle();
@@ -334,4 +368,46 @@ fn unknown_tenant_gets_an_error_reply_not_a_hang() {
     let stats = sched.finish().unwrap();
     assert_eq!(stats.failed, 1);
     assert_eq!(stats.served, 1);
+}
+
+/// The shards=1 scheduler must add no numeric behavior over the bare
+/// registry: the same tenants, adapters, and token rows served through
+/// the queue yield bitwise-identical logits and versions to direct
+/// `AdapterRegistry::infer` calls — the scheduler is pure plumbing.
+#[test]
+fn shards1_scheduler_matches_direct_registry_bitwise() {
+    let dir = std::env::temp_dir().join("c3a_serving_plumbing");
+    let (adapter, b, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..3u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
+    let sched = Scheduler::spawn(SchedulerCfg::default(), {
+        let dir = dir.clone();
+        let adapters = adapters.clone();
+        move |_: &ShardCtx| build_registry(&dir, adapters.clone())
+    })
+    .unwrap();
+    let handle = sched.handle();
+    // slow producer: every batch has size 1, so each reply's logits row is
+    // directly comparable to a one-row direct inference
+    let mut via_scheduler = Vec::new();
+    for i in 0..6 {
+        let tenant = format!("t{}", i % 3);
+        let r = handle.submit(&tenant, toks(i, s)).unwrap().wait().unwrap();
+        via_scheduler.push((tenant, i, r));
+    }
+    drop(handle);
+    sched.finish().unwrap();
+
+    let registry = build_registry(&dir, adapters).unwrap();
+    for (tenant, i, reply) in via_scheduler {
+        let (logits, _, version) =
+            registry.infer(&tenant, &one_row_batch(&toks(i, s), b, s)).unwrap();
+        let row_w = logits.len() / b;
+        assert_eq!(
+            reply.logits,
+            &logits[..row_w],
+            "{tenant} req {i}: scheduler logits must match direct inference bitwise"
+        );
+        assert_eq!(reply.tenant_version, version);
+    }
 }

@@ -1,0 +1,411 @@
+//! Cross-shard serving tests: deterministic tenant→shard routing,
+//! disjoint per-shard registries, per-tenant FIFO across hot-swaps while
+//! *other* shards keep serving, per-shard backpressure accounting, and
+//! seeded Zipf replay reproducibility against a live sharded scheduler.
+//! The `shards = 1` contract lives in `serving.rs`.
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::session::build_init;
+use c3a::runtime::Engine;
+use c3a::serving::{
+    perturb_c3a_kernels as perturb, run_replay, shard_of, tenant_name, AdapterRegistry,
+    ReplayCfg, Scheduler, SchedulerCfg, ShardCtx, SubmitError,
+};
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::TensorMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Duration;
+
+const EVAL: &str = "enc_tiny__c3a_d8__cls__eval";
+
+fn template(dir: &Path) -> (TensorMap, usize) {
+    let manifest = catalog::synthesize(dir).unwrap();
+    let spec = manifest.artifact(EVAL).unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier).unwrap();
+    (init.trainable, spec.seq)
+}
+
+/// Build a shard's registry, registering only the tenants the shard owns
+/// (the scheduler rejects anything else at startup).
+fn build_shard_registry(
+    dir: &Path,
+    adapters: &[(String, TensorMap)],
+    ctx: &ShardCtx,
+) -> anyhow::Result<AdapterRegistry> {
+    let manifest = catalog::synthesize(dir)?;
+    let spec = manifest.artifact(EVAL)?.clone();
+    let meta = manifest.model("enc_tiny")?.clone();
+    let engine = Engine::for_manifest(&manifest)?;
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
+    let mut registry = AdapterRegistry::new(&engine, &spec, &init)?;
+    for (name, params) in adapters {
+        if ctx.owns(name) {
+            registry.register(name, params.clone())?;
+        }
+    }
+    Ok(registry)
+}
+
+fn toks(seed: i32, s: usize) -> Vec<i32> {
+    (0..s as i32).map(|j| if j == 0 { 1 } else { 4 + ((seed * 13 + j * 7) % 40) }).collect()
+}
+
+/// Routing is a pure, platform-independent function of the tenant name:
+/// FNV-1a mod shards.  The exact assignments below are pinned — a routing
+/// change would silently strand every tenant's sessions on the wrong
+/// shard across a rolling restart, so it must show up as a test diff.
+#[test]
+fn routing_is_deterministic_and_pinned() {
+    for (name, two, four) in
+        [("ta", 0, 2), ("tb", 1, 3), ("tc", 0, 0), ("tenant0", 1, 3), ("tenant1", 0, 0)]
+    {
+        assert_eq!(shard_of(name, 2), two, "{name} % 2");
+        assert_eq!(shard_of(name, 4), four, "{name} % 4");
+    }
+    assert_eq!(shard_of("tenant2", 4), 1);
+    assert_eq!(shard_of("tenant3", 4), 2);
+    // shards <= 1 routes everything to shard 0
+    for name in ["ta", "tenant0", ""] {
+        assert_eq!(shard_of(name, 1), 0);
+        assert_eq!(shard_of(name, 0), 0);
+    }
+    // the replay tenant population spreads: no shard is empty and none
+    // takes more than half under the canonical tenant{i} naming
+    let mut counts = [0usize; 4];
+    for i in 0..200 {
+        counts[shard_of(&tenant_name(i), 4)] += 1;
+    }
+    assert_eq!(counts.iter().sum::<usize>(), 200);
+    assert_eq!(counts, [51, 49, 49, 51], "FNV-1a spread over tenant0..199 is pinned");
+}
+
+/// Four shards, four tenants, one per shard: every tenant serves from
+/// exactly the shard its name hashes to, each shard builds its own
+/// registry, and the merged stats tie per-shard counters to the totals.
+#[test]
+fn shards_serve_disjoint_tenant_sets() {
+    let dir = std::env::temp_dir().join("c3a_sharded_disjoint");
+    let (adapter, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..4).map(|i| (format!("tenant{i}"), perturb(&adapter, i as u64, 0.05))).collect();
+    let cfg = SchedulerCfg { shards: 4, ..SchedulerCfg::default() };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move |ctx: &ShardCtx| build_shard_registry(&dir, &adapters, ctx)
+    })
+    .unwrap();
+    let handle = sched.handle();
+    assert_eq!(handle.shards(), 4);
+    let mut tickets = Vec::new();
+    for i in 0..12 {
+        let tenant = format!("tenant{}", i % 4);
+        let ticket = handle.submit(&tenant, toks(i, s)).unwrap();
+        tickets.push((tenant, ticket));
+    }
+    for (tenant, t) in tickets {
+        assert_eq!(t.wait().unwrap().tenant, tenant);
+    }
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 12);
+    assert_eq!(stats.shards.len(), 4);
+    assert_eq!(stats.active_shards(), 4, "one tenant per shard must light up every shard");
+    // pinned assignments: tenant0→3, tenant1→0, tenant2→1, tenant3→2
+    for (name, shard) in [("tenant0", 3), ("tenant1", 0), ("tenant2", 1), ("tenant3", 2)] {
+        let t = stats.tenant(name).unwrap();
+        assert_eq!(t.shard, shard, "{name} must be affine to shard {shard}");
+        assert_eq!(t.requests, 3);
+        assert_eq!(t.uploads, 1);
+        // this shard served exactly this tenant's requests
+        assert_eq!(stats.shards[shard].served, 3);
+    }
+    let per_shard: u64 = stats.shards.iter().map(|sh| sh.served).sum();
+    assert_eq!(per_shard, stats.served, "per-shard served must sum to the aggregate");
+}
+
+/// A registry containing a tenant that routes to a *different* shard is a
+/// deployment bug (that tenant could never receive a request), so the
+/// worker must reject it loudly at startup instead of serving a silent
+/// black hole.
+#[test]
+fn mis_sharded_tenant_is_rejected_at_startup() {
+    let dir = std::env::temp_dir().join("c3a_sharded_missharded");
+    let (adapter, _s) = template(&dir);
+    // every shard registers BOTH tenants — each then holds one foreigner
+    let adapters =
+        vec![("ta".to_string(), adapter.clone()), ("tb".to_string(), adapter.clone())];
+    let cfg = SchedulerCfg { shards: 2, ..SchedulerCfg::default() };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move |_ctx: &ShardCtx| {
+            // deliberately ignore ctx.owns
+            let manifest = catalog::synthesize(&dir)?;
+            let spec = manifest.artifact(EVAL)?.clone();
+            let meta = manifest.model("enc_tiny")?.clone();
+            let engine = Engine::for_manifest(&manifest)?;
+            let base = catalog::init_base_params(&meta);
+            let init =
+                build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
+            let mut registry = AdapterRegistry::new(&engine, &spec, &init)?;
+            for (name, params) in &adapters {
+                registry.register(name, params.clone())?;
+            }
+            Ok(registry)
+        }
+    })
+    .unwrap();
+    let err = sched.finish().expect_err("a mis-sharded registry must fail startup");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("routes to"), "error must name the routing violation: {msg}");
+}
+
+/// The tentpole FIFO invariant under load: gate the shard that owns `ta`
+/// so its queue backs up with [req, req, swap, req], and meanwhile prove
+/// the *other* shard keeps serving `tb` to completion.  When the gate
+/// opens, ta's pre-swap requests must serve v1, the swap must ack v2, and
+/// the post-swap request must serve v2 — FIFO per tenant, with zero
+/// cross-shard coordination.
+#[test]
+fn fifo_across_hot_swap_on_a_loaded_shard_while_other_shards_serve() {
+    let dir = std::env::temp_dir().join("c3a_sharded_fifo_swap");
+    let (adapter, s) = template(&dir);
+    let adapters =
+        vec![("ta".to_string(), adapter.clone()), ("tb".to_string(), adapter.clone())];
+    // gate ONLY shard 0 (ta's shard under shards=2); shard 1 builds free
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let gate_rx = Mutex::new(gate_rx);
+    let cfg = SchedulerCfg {
+        shards: 2,
+        queue_cap: 8,
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+    };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move |ctx: &ShardCtx| {
+            if ctx.shard() == 0 {
+                let _ = gate_rx.lock().unwrap().recv();
+            }
+            build_shard_registry(&dir, &adapters, ctx)
+        }
+    })
+    .unwrap();
+    let handle = sched.handle();
+    assert_eq!(handle.shard_for("ta"), 0);
+    assert_eq!(handle.shard_for("tb"), 1);
+
+    let a1 = handle.try_submit("ta", toks(1, s)).expect("shard 0 queue has room");
+    let a2 = handle.try_submit("ta", toks(2, s)).expect("shard 0 queue has room");
+    // the swap blocks for its ack, so it needs a helper thread; it lands
+    // in shard 0's queue strictly after a1/a2
+    let swapper = {
+        let handle = handle.clone();
+        let params = perturb(&adapter, 7, 0.5);
+        std::thread::spawn(move || handle.hot_swap("ta", params).expect("swap acked"))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+    // submitted after the swap message: must serve the NEW version
+    let a3 = handle.submit("ta", toks(3, s)).unwrap();
+
+    // shard 1 serves tb to completion WHILE shard 0 is still gated — this
+    // wait returning before gate_tx fires is the cross-shard liveness proof
+    let rb = handle.submit("tb", toks(4, s)).unwrap().wait().unwrap();
+    assert_eq!(rb.tenant_version, 1);
+    assert_eq!(rb.tenant, "tb");
+
+    gate_tx.send(()).unwrap();
+    assert_eq!(a1.wait().unwrap().tenant_version, 1, "pre-swap request must serve v1");
+    assert_eq!(a2.wait().unwrap().tenant_version, 1, "pre-swap request must serve v1");
+    assert_eq!(swapper.join().unwrap(), 2, "swap must ack with the bumped version");
+    assert_eq!(a3.wait().unwrap().tenant_version, 2, "post-swap request must serve v2");
+
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.failed, 0);
+    let ta = stats.tenant("ta").unwrap();
+    let tb = stats.tenant("tb").unwrap();
+    assert_eq!((ta.shard, ta.version, ta.uploads), (0, 2, 2));
+    assert_eq!((tb.shard, tb.version, tb.uploads), (1, 1, 1));
+}
+
+/// Backpressure is per shard: filling the gated shard's queue sheds new
+/// `try_submit`s with exact per-shard/per-tenant accounting, while the
+/// other shard's queue stays open for business.
+#[test]
+fn sheds_and_depth_are_accounted_per_shard() {
+    let dir = std::env::temp_dir().join("c3a_sharded_sheds");
+    let (adapter, s) = template(&dir);
+    let adapters =
+        vec![("ta".to_string(), adapter.clone()), ("tb".to_string(), adapter.clone())];
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let gate_rx = Mutex::new(gate_rx);
+    let cfg = SchedulerCfg {
+        shards: 2,
+        queue_cap: 4,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        move |ctx: &ShardCtx| {
+            if ctx.shard() == 0 {
+                let _ = gate_rx.lock().unwrap().recv();
+            }
+            build_shard_registry(&dir, &adapters, ctx)
+        }
+    })
+    .unwrap();
+    let handle = sched.handle();
+    let mut tickets = Vec::new();
+    for i in 0..4 {
+        tickets.push(handle.try_submit("ta", toks(i, s)).expect("queue has room"));
+    }
+    for _ in 0..2 {
+        match handle.try_submit("ta", toks(9, s)) {
+            Err(SubmitError::QueueFull) => {}
+            other => panic!("expected QueueFull on the gated shard, got {other:?}"),
+        }
+    }
+    // shard 1's queue is untouched: tb admits (and serves) immediately
+    tickets.push(handle.try_submit("tb", toks(5, s)).expect("other shard must admit"));
+    gate_tx.send(()).unwrap();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 5);
+    assert_eq!(stats.sheds, 2);
+    assert_eq!(stats.shards[0].sheds, 2, "both sheds hit the gated shard");
+    assert_eq!(stats.shards[1].sheds, 0);
+    assert_eq!(stats.shards[0].queue_depth_hwm, 4, "hwm must reflect the full queue");
+    assert!(stats.shards[1].queue_depth_hwm >= 1);
+    assert_eq!(stats.tenant("ta").unwrap().sheds, 2, "sheds must attribute to the tenant");
+    assert_eq!(stats.tenant("tb").unwrap().sheds, 0);
+}
+
+/// Sharding must not change what is served: the same slow-producer request
+/// sequence through shards=1 and shards=4 yields bitwise-identical logits,
+/// predictions, and versions per request — each shard's own backbone
+/// parse is built from the same seeded init, and row math is independent
+/// of which worker runs it.
+#[test]
+fn shards1_and_shards4_serve_bitwise_identical_replies() {
+    let dir = std::env::temp_dir().join("c3a_sharded_bitwise");
+    let (adapter, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..4).map(|i| (format!("tenant{i}"), perturb(&adapter, i as u64, 0.05))).collect();
+    let serve = |shards: usize| {
+        let cfg = SchedulerCfg { shards, ..SchedulerCfg::default() };
+        let sched = Scheduler::spawn(cfg, {
+            let dir = dir.clone();
+            let adapters = adapters.clone();
+            move |ctx: &ShardCtx| build_shard_registry(&dir, &adapters, ctx)
+        })
+        .unwrap();
+        let handle = sched.handle();
+        // slow producer: one reply in hand before the next submit, so the
+        // request→batch decomposition is identical under any shard count
+        let mut replies = Vec::new();
+        for i in 0..8 {
+            let tenant = format!("tenant{}", i % 4);
+            replies.push(handle.submit(&tenant, toks(i, s)).unwrap().wait().unwrap());
+        }
+        drop(handle);
+        sched.finish().unwrap();
+        replies
+    };
+    let one = serve(1);
+    let four = serve(4);
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.logits, b.logits, "{}: logits must be bitwise identical", a.tenant);
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(a.tenant_version, b.tenant_version);
+        assert_eq!(a.batch_size, b.batch_size);
+    }
+}
+
+/// The replay driver against a live sharded scheduler: the storm (tenant
+/// sequence, swap points) is a pure function of the seed, so two fresh
+/// scheduler runs must report the same trace hash, per-tenant arrivals,
+/// swap count, and — because swaps are FIFO per tenant — the same
+/// predictions request-for-request.
+#[test]
+fn zipf_replay_is_reproducible_against_a_live_scheduler() {
+    let dir = std::env::temp_dir().join("c3a_sharded_replay");
+    let (adapter, s) = template(&dir);
+    let n_tenants = 6usize;
+    let adapters: Vec<(String, TensorMap)> = (0..n_tenants)
+        .map(|i| (tenant_name(i), perturb(&adapter, i as u64, 0.05)))
+        .collect();
+    let replay_cfg = ReplayCfg {
+        seed: 42,
+        requests: 64,
+        tenants: n_tenants,
+        zipf_exponent: 1.1,
+        burst: 8,
+        burst_gap: Duration::from_micros(100),
+        swap_every: 24,
+        ..ReplayCfg::default()
+    };
+    let run = || {
+        let cfg =
+            SchedulerCfg { shards: 2, queue_cap: 64, ..SchedulerCfg::default() };
+        let sched = Scheduler::spawn(cfg, {
+            let dir = dir.clone();
+            let adapters = adapters.clone();
+            move |ctx: &ShardCtx| build_shard_registry(&dir, &adapters, ctx)
+        })
+        .unwrap();
+        let handle = sched.handle();
+        let adapter = adapter.clone();
+        let report = run_replay(
+            &handle,
+            &replay_cfg,
+            |i, _rank| toks(i as i32, s),
+            move |swap_idx, _rank| perturb(&adapter, 1000 + swap_idx, 0.3),
+        )
+        .unwrap();
+        drop(handle);
+        (report, sched.finish().unwrap())
+    };
+    let (r1, s1) = run();
+    let (r2, s2) = run();
+    assert_ne!(r1.trace_hash, 0);
+    assert_eq!(r1.trace_hash, r2.trace_hash, "same seed must replay the same storm");
+    assert_eq!(r1.per_tenant, r2.per_tenant);
+    assert_eq!(r1.per_tenant.iter().sum::<u64>(), 64);
+    assert!(
+        r1.per_tenant[0] > r1.per_tenant[n_tenants - 1],
+        "Zipf rank 0 must out-draw the coldest rank: {:?}",
+        r1.per_tenant
+    );
+    assert_eq!(r1.swaps, 2, "i = 24 and i = 48 fire mid-storm swaps");
+    assert_eq!(r1.swaps, r2.swaps);
+    // per-tenant FIFO makes version assignment deterministic, so the
+    // predictions must agree request-for-request across runs
+    assert_eq!(r1.preds, r2.preds, "replay predictions must be reproducible");
+    assert_eq!(r1.completed + r1.failed + r1.dropped, 64);
+    assert_eq!(r1.failed, 0);
+    for stats in [&s1, &s2] {
+        assert_eq!(stats.served + stats.failed, (r1.completed + r1.failed) as u64);
+        let per_shard: u64 = stats.shards.iter().map(|sh| sh.served).sum();
+        assert_eq!(per_shard, stats.served);
+        // uploads are bounded by 1 + this tenant's swaps
+        for t in &stats.tenants {
+            assert!(
+                t.uploads as u64 <= 1 + r1.swaps,
+                "{}: {} uploads exceeds 1 + {} swaps",
+                t.name,
+                t.uploads,
+                r1.swaps
+            );
+        }
+    }
+}

@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # Perf tracking: the Table-1 operator bench, the interp train/serve bench
-# (stateless-single-thread vs cached-multi-thread), and the multi-adapter
-# serving bench (scheduler + registry at 1 vs N adapters).  Emits
-# BENCH_interp.json + BENCH_serve.json at the repo root so CI can follow
-# the perf trajectory.
+# (stateless-single-thread vs cached-multi-thread), and the sharded
+# serving bench (the same seeded Zipf replay storm at shards=1 vs 4).
+# Emits BENCH_interp.json + BENCH_serve.json at the repo root so CI can
+# follow the perf trajectory.
 #
 # Usage: scripts/bench.sh [--smoke]
 #   --smoke   reduced dims/step counts for CI
