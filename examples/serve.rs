@@ -4,11 +4,16 @@
 //! the sharded scheduler.  `--shards N` spreads the tenants over N
 //! tenant-affine workers (each parses its own frozen backbone); shed
 //! backpressure is handled with bounded exponential backoff — never a hot
-//! spin — and every shed/drop is reported.  Writes `BENCH_serve.json`
-//! (override with `C3A_BENCH_SERVE_OUT`) so CI can archive the smoke run.
+//! spin — and every shed/drop is reported.  `--max-resident K` caps each
+//! shard's resident sessions: the rest of the tenants live as checksummed
+//! snapshots in the adapter store (`--store-dir`, default
+//! `artifacts/adapter_store`) and reload bit-identically through the
+//! measured cold-start path.  Writes `BENCH_serve.json` (override with
+//! `C3A_BENCH_SERVE_OUT`) so CI can archive the smoke run.
 //!
 //!     cargo run --release --example serve -- \
-//!         [--requests 128] [--tenants 3] [--shards 1] [--pretrain-steps 200]
+//!         [--requests 128] [--tenants 3] [--shards 1] [--pretrain-steps 200] \
+//!         [--max-resident 2] [--store-dir artifacts/adapter_store]
 
 use c3a::coordinator::run::{self, Ctx};
 use c3a::data::glue_sim::GlueTask;
@@ -16,15 +21,20 @@ use c3a::peft::init::C3aScheme;
 use c3a::runtime::manifest::Manifest;
 use c3a::runtime::session::build_init;
 use c3a::serving::{
-    perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, ReplayCfg,
-    Scheduler, SchedulerCfg, ShardCtx,
+    perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, AdapterStore,
+    ReplayCfg, ResidentPolicy, Scheduler, SchedulerCfg, ShardCtx,
 };
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::TensorMap;
+use std::path::PathBuf;
 use std::time::Duration;
 
 fn flag(args: &[String], name: &str) -> Option<usize> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+}
+
+fn str_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -32,6 +42,12 @@ fn main() -> anyhow::Result<()> {
     let n_requests = flag(&args, "--requests").unwrap_or(128);
     let n_tenants = flag(&args, "--tenants").unwrap_or(3).max(1);
     let n_shards = flag(&args, "--shards").unwrap_or(1).max(1);
+    // 0 (default) keeps every tenant resident; K > 0 caps each shard's
+    // resident sessions and spills the rest to the adapter store
+    let max_resident = flag(&args, "--max-resident").unwrap_or(0);
+    let store_dir = PathBuf::from(
+        str_flag(&args, "--store-dir").unwrap_or_else(|| "artifacts/adapter_store".into()),
+    );
 
     let (model, method, task) = ("enc_tiny", "c3a_d8", GlueTask::Sst2);
 
@@ -69,15 +85,30 @@ fn main() -> anyhow::Result<()> {
         max_batch: 0,
         max_wait: Duration::from_millis(2),
     };
+    if max_resident > 0 {
+        // start from an empty store so every snapshot in it is this run's
+        let _ = std::fs::remove_dir_all(&store_dir);
+    }
     let sched = Scheduler::spawn(sched_cfg, {
         let adapters = adapters.clone();
         let eval_name = eval_name.clone();
+        let store_dir = store_dir.clone();
         move |shard: &ShardCtx| {
             let ctx = Ctx::open("artifacts")?;
             let spec = ctx.manifest.artifact(&eval_name)?.clone();
             let mut rng = Rng::seed(1);
             let init = build_init(&spec, &backbone, None, &mut rng, C3aScheme::Xavier)?;
             let mut registry = AdapterRegistry::new(&ctx.engine, &spec, &init)?;
+            // residency before registration: tenants then start as store
+            // snapshots and materialize through the cold-start path.  All
+            // shards share one dir — tenant routing is a partition, so
+            // their files never collide.
+            if max_resident > 0 {
+                registry.set_residency(
+                    ResidentPolicy::max_resident(max_resident),
+                    AdapterStore::open(&store_dir)?,
+                )?;
+            }
             for (name, params) in &adapters {
                 if shard.owns(name) {
                     registry.register(name, params.clone())?;
@@ -120,7 +151,10 @@ fn main() -> anyhow::Result<()> {
         .count();
     let accuracy = correct as f64 / n_requests as f64;
     let lat = stats.latency();
+    let cold = stats.cold_start_latency();
     let req_per_s = report.req_per_s();
+    let resident_now = stats.resident_now();
+    let evicted_now = n_tenants.saturating_sub(resident_now);
 
     println!("\n=== serve report ===");
     println!("requests      : {n_requests}  ({n_tenants} Zipf tenants, {n_shards} shards)");
@@ -133,17 +167,30 @@ fn main() -> anyhow::Result<()> {
     println!("latency p50   : {:.1} ms", lat.p50_ms);
     println!("latency p95   : {:.1} ms", lat.p95_ms);
     println!("latency p99   : {:.1} ms", lat.p99_ms);
+    if max_resident > 0 {
+        println!(
+            "resident      : {resident_now} now / {evicted_now} evicted  (hwm {}, cap {max_resident}/shard)",
+            stats.resident_hwm()
+        );
+        println!("evictions     : {}", stats.evictions);
+        println!(
+            "cold starts   : {}  (p50 {:.1} ms, p95 {:.1} ms)",
+            stats.cold_starts, cold.p50_ms, cold.p95_ms
+        );
+    }
     for sh in &stats.shards {
         println!(
             "shard {}      : {:>4} served  {:>2} batches  depth hwm {:>3}  sheds {}",
             sh.shard, sh.served, sh.batches, sh.queue_depth_hwm, sh.sheds
         );
     }
-    // one upload per adapter version: the swapped tenant gains a version
-    // mid-storm, every other tenant serves its whole stream on 1
+    // uploads track adapter versions plus tier churn: the swapped tenant
+    // gains a version mid-storm, and every cold start re-uploads the
+    // reloaded snapshot; a never-swapped, never-evicted tenant serves its
+    // whole stream on 1
     for t in &stats.tenants {
         println!(
-            "tenant {:<9}: {:>4} reqs  shard {}  v{}  uploads={}  spectra {}h/{}m  sheds {}",
+            "tenant {:<9}: {:>4} reqs  shard {}  v{}  uploads={}  spectra {}h/{}m  sheds {}  {}",
             t.name,
             t.requests,
             t.shard,
@@ -151,7 +198,12 @@ fn main() -> anyhow::Result<()> {
             t.uploads,
             t.spectra_hits,
             t.spectra_misses,
-            t.sheds
+            t.sheds,
+            if t.resident {
+                "resident".to_string()
+            } else {
+                format!("evicted (cold starts {})", t.cold_starts)
+            }
         );
     }
 
@@ -168,7 +220,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let json = format!(
-        "{{\n  \"bench\": \"serve_example\",\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"shards\": {n_shards},\n  \"threads\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {req_per_s:.1},\n  \"accuracy\": {accuracy:.4},\n  \"mean_batch\": {:.2},\n  \"swaps\": {},\n  \"sheds\": {},\n  \"dropped\": {},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"per_shard\": [{}],\n  \"uploads\": {{ {} }}\n}}\n",
+        "{{\n  \"bench\": \"serve_example\",\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"shards\": {n_shards},\n  \"max_resident\": {max_resident},\n  \"threads\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {req_per_s:.1},\n  \"accuracy\": {accuracy:.4},\n  \"mean_batch\": {:.2},\n  \"swaps\": {},\n  \"sheds\": {},\n  \"dropped\": {},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"resident_now\": {resident_now},\n  \"resident_hwm\": {},\n  \"evictions\": {},\n  \"cold_starts\": {},\n  \"cold_start_ms_p95\": {:.3},\n  \"per_shard\": [{}],\n  \"uploads\": {{ {} }}\n}}\n",
         c3a::substrate::parallel::threads(),
         report.trace_hash,
         stats.mean_batch(),
@@ -178,6 +230,10 @@ fn main() -> anyhow::Result<()> {
         lat.p50_ms,
         lat.p95_ms,
         lat.p99_ms,
+        stats.resident_hwm(),
+        stats.evictions,
+        stats.cold_starts,
+        cold.p95_ms,
         per_shard.join(", "),
         uploads.join(", ")
     );

@@ -1,11 +1,17 @@
 //! Sharded-serving benchmark: the same seeded Zipf traffic storm (bursty
-//! arrivals, mid-storm hot-swaps, hundreds of adapters in the full run)
+//! arrivals, mid-storm hot-swaps, thousands of adapters in the full run)
 //! replayed at `shards = 1` vs `shards = 4`, so the shard speedup and the
 //! tail under skew are measured against an identical request sequence
 //! ([`ReplayReport::trace_hash`] pins that the two phases really saw the
-//! same storm).  Emits `BENCH_serve.json`: the top-level
-//! `req_per_s`/`p50_ms`/`p95_ms`/`p99_ms` keys are the sharded headline
-//! (what `scripts/bench_compare.sh` tracks), with per-phase and per-shard
+//! same storm).  Tenancy is tiered: every phase runs under a
+//! `ResidentPolicy` (full run: 2000 registered tenants over
+//! `max_resident = 64` per shard), so Zipf-hot tenants stay resident and
+//! warm-replay while the tail churns through the adapter store — the
+//! report splits warm latency from the measured cold-start path.  Emits
+//! `BENCH_serve.json`: the top-level
+//! `req_per_s`/`p50_ms`/`p95_ms`/`p99_ms`/`cold_start_ms_p95`/
+//! `resident_hwm` keys are the sharded headline (what
+//! `scripts/bench_compare.sh` tracks), with per-phase and per-shard
 //! detail nested under `shards1`/`shards4`.  Latency percentiles are
 //! always computed over the pooled cross-shard windows — never by
 //! averaging per-shard percentiles.  `harness = false`; pass `--smoke`
@@ -18,8 +24,8 @@ use c3a::runtime::catalog;
 use c3a::runtime::session::build_init;
 use c3a::runtime::Engine;
 use c3a::serving::{
-    perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, ReplayCfg,
-    ReplayReport, Scheduler, SchedulerCfg, ServeStats, ShardCtx,
+    perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, AdapterStore,
+    ReplayCfg, ReplayReport, ResidentPolicy, Scheduler, SchedulerCfg, ServeStats, ShardCtx,
 };
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::TensorMap;
@@ -44,11 +50,16 @@ fn run_phase(
     adapter: &TensorMap,
     s: usize,
     shards: usize,
+    max_resident: usize,
     replay: &ReplayCfg,
 ) -> anyhow::Result<(ReplayReport, ServeStats)> {
     let adapters: Vec<(String, TensorMap)> = (0..replay.tenants)
         .map(|i| (tenant_name(i), perturb(adapter, i as u64, 0.05)))
         .collect();
+    // one store dir per phase, shared by all of its shard workers —
+    // tenant→shard routing is a partition, so files never collide
+    let store_dir = dir.join(format!("store_shards{shards}"));
+    let _ = std::fs::remove_dir_all(&store_dir);
     let dir: PathBuf = dir.to_path_buf();
     let cfg = SchedulerCfg {
         shards,
@@ -64,6 +75,12 @@ fn run_phase(
         let base = catalog::init_base_params(&meta);
         let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
         let mut registry = AdapterRegistry::new(&engine, &spec, &init)?;
+        // residency first, so registration is a snapshot write (lazy
+        // session): registering thousands of tenants stays cheap
+        registry.set_residency(
+            ResidentPolicy::max_resident(max_resident),
+            AdapterStore::open(&store_dir)?,
+        )?;
         // each shard parses its own backbone and registers only the
         // tenants that hash to it
         for (name, params) in &adapters {
@@ -92,6 +109,7 @@ fn run_phase(
 
 fn phase_json(report: &ReplayReport, stats: &ServeStats) -> String {
     let lat = stats.latency();
+    let cold = stats.cold_start_latency();
     let per_shard: Vec<String> = stats
         .shards
         .iter()
@@ -102,13 +120,20 @@ fn phase_json(report: &ReplayReport, stats: &ServeStats) -> String {
             format!(
                 "{{ \"shard\": {}, \"served\": {}, \"req_per_s\": {rps:.1}, \
                  \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"queue_depth_hwm\": {}, \
-                 \"sheds\": {} }}",
-                sh.shard, sh.served, l.p50_ms, l.p99_ms, sh.queue_depth_hwm, sh.sheds
+                 \"sheds\": {}, \"resident_hwm\": {}, \"cold_starts\": {} }}",
+                sh.shard,
+                sh.served,
+                l.p50_ms,
+                l.p99_ms,
+                sh.queue_depth_hwm,
+                sh.sheds,
+                sh.resident_hwm,
+                sh.cold_starts
             )
         })
         .collect();
     format!(
-        "{{\n    \"req_per_s\": {:.1},\n    \"p50_ms\": {:.3},\n    \"p95_ms\": {:.3},\n    \"p99_ms\": {:.3},\n    \"mean_batch\": {:.2},\n    \"active_shards\": {},\n    \"sheds\": {},\n    \"dropped\": {},\n    \"swaps\": {},\n    \"per_shard\": [{}]\n  }}",
+        "{{\n    \"req_per_s\": {:.1},\n    \"p50_ms\": {:.3},\n    \"p95_ms\": {:.3},\n    \"p99_ms\": {:.3},\n    \"mean_batch\": {:.2},\n    \"active_shards\": {},\n    \"sheds\": {},\n    \"dropped\": {},\n    \"swaps\": {},\n    \"resident_now\": {},\n    \"resident_hwm\": {},\n    \"evictions\": {},\n    \"cold_starts\": {},\n    \"cold_start_ms_p50\": {:.3},\n    \"cold_start_ms_p95\": {:.3},\n    \"per_shard\": [{}]\n  }}",
         report.req_per_s(),
         lat.p50_ms,
         lat.p95_ms,
@@ -118,12 +143,19 @@ fn phase_json(report: &ReplayReport, stats: &ServeStats) -> String {
         stats.sheds,
         report.dropped,
         report.swaps,
+        stats.resident_now(),
+        stats.resident_hwm(),
+        stats.evictions,
+        stats.cold_starts,
+        cold.p50_ms,
+        cold.p95_ms,
         per_shard.join(", ")
     )
 }
 
 fn print_phase(label: &str, report: &ReplayReport, stats: &ServeStats) {
     let lat = stats.latency();
+    let cold = stats.cold_start_latency();
     println!(
         "{label}: {:>8.1} req/s  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  \
          mean batch {:.1}  sheds {}  dropped {}",
@@ -135,22 +167,37 @@ fn print_phase(label: &str, report: &ReplayReport, stats: &ServeStats) {
         stats.sheds,
         report.dropped
     );
+    println!(
+        "  tiering: resident {} (hwm {})  evictions {}  cold starts {}  \
+         cold p50 {:.2} ms  cold p95 {:.2} ms",
+        stats.resident_now(),
+        stats.resident_hwm(),
+        stats.evictions,
+        stats.cold_starts,
+        cold.p50_ms,
+        cold.p95_ms
+    );
     for sh in &stats.shards {
         println!(
-            "  shard {}: {:>5} served  depth hwm {:>3}  sheds {:>3}  p99 {:.2} ms",
+            "  shard {}: {:>5} served  depth hwm {:>3}  sheds {:>3}  p99 {:.2} ms  \
+             resident hwm {:>3}  cold {:>4}",
             sh.shard,
             sh.served,
             sh.queue_depth_hwm,
             sh.sheds,
-            sh.latency().p99_ms
+            sh.latency().p99_ms,
+            sh.resident_hwm,
+            sh.cold_starts
         );
     }
 }
 
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    // full run: hundreds of adapters under a long storm; smoke keeps CI fast
-    let (n_requests, n_tenants) = if smoke { (96, 24) } else { (768, 200) };
+    // full run: 2000 registered adapters churning through a 64-resident
+    // tier under a long storm; smoke keeps CI fast
+    let (n_requests, n_tenants, max_resident) =
+        if smoke { (96, 24, 8) } else { (1024, 2000, 64) };
     let replay = ReplayCfg {
         seed: 42,
         requests: n_requests,
@@ -168,12 +215,12 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "== bench_serve: {EVAL}, {n_requests} requests over {n_tenants} Zipf tenants, \
-         threads={threads} =="
+         max_resident={max_resident}/shard, threads={threads} =="
     );
 
-    let (r1, s1) = run_phase(&dir, &adapter, s, 1, &replay)?;
+    let (r1, s1) = run_phase(&dir, &adapter, s, 1, max_resident, &replay)?;
     print_phase("shards=1", &r1, &s1);
-    let (r4, s4) = run_phase(&dir, &adapter, s, 4, &replay)?;
+    let (r4, s4) = run_phase(&dir, &adapter, s, 4, max_resident, &replay)?;
     print_phase("shards=4", &r4, &s4);
 
     // both phases must have replayed the identical storm
@@ -186,13 +233,27 @@ fn main() -> anyhow::Result<()> {
     for stats in [&s1, &s4] {
         let per_shard: u64 = stats.shards.iter().map(|sh| sh.served).sum();
         assert_eq!(per_shard, stats.served, "per-shard served must sum to the aggregate");
+        for sh in &stats.shards {
+            assert!(
+                sh.resident_hwm <= max_resident,
+                "shard {}: resident hwm {} exceeds policy {max_resident}",
+                sh.shard,
+                sh.resident_hwm
+            );
+        }
+        assert_eq!(
+            stats.cold_start_ms.len() as u64,
+            stats.cold_starts,
+            "every cold start must land one sample in the pooled window"
+        );
         for t in &stats.tenants {
             assert!(
-                (t.uploads as u64) <= 1 + r1.swaps,
-                "{}: {} uploads exceeds 1 + {} swaps",
+                (t.uploads as u64) <= 1 + r1.swaps + t.cold_starts,
+                "{}: {} uploads exceeds 1 + {} swaps + {} cold starts",
                 t.name,
                 t.uploads,
-                r1.swaps
+                r1.swaps,
+                t.cold_starts
             );
         }
     }
@@ -200,8 +261,9 @@ fn main() -> anyhow::Result<()> {
     // headline keys (tracked by scripts/bench_compare.sh) come from the
     // sharded phase; shards=1 rides along as the degradation baseline
     let l4 = s4.latency();
+    let c4 = s4.cold_start_latency();
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"zipf_exponent\": {},\n  \"swap_every\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {:.1},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"shards1\": {},\n  \"shards4\": {}\n}}\n",
+        "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"max_resident\": {max_resident},\n  \"zipf_exponent\": {},\n  \"swap_every\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {:.1},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"cold_start_ms_p95\": {:.3},\n  \"resident_hwm\": {},\n  \"cold_starts\": {},\n  \"evictions\": {},\n  \"shards1\": {},\n  \"shards4\": {}\n}}\n",
         replay.zipf_exponent,
         replay.swap_every,
         r1.trace_hash,
@@ -209,6 +271,10 @@ fn main() -> anyhow::Result<()> {
         l4.p50_ms,
         l4.p95_ms,
         l4.p99_ms,
+        c4.p95_ms,
+        s4.resident_hwm(),
+        s4.cold_starts,
+        s4.evictions,
         phase_json(&r1, &s1),
         phase_json(&r4, &s4)
     );

@@ -428,4 +428,21 @@ impl EvalSession {
     pub fn plan_stats(&self) -> Option<crate::runtime::plan::PlanStats> {
         self.exec_state.borrow().plan_stats()
     }
+
+    /// Cheap estimate of this session's private memory: the plan arena
+    /// (`plan_stats().arena_bytes`, 0 before the first request or with
+    /// plans off) plus the cached trainable-upload literals.  Shared
+    /// state — the frozen literals and the backbone parse — is excluded:
+    /// it does not release on eviction.  Drives the serving layer's
+    /// `ResidentPolicy::bytes_budget`.
+    pub fn resident_bytes(&self) -> usize {
+        let arena = self.plan_stats().map(|p| p.arena_bytes).unwrap_or(0);
+        let upload = self
+            .t_upload
+            .borrow()
+            .as_ref()
+            .map(|u| u.lits.iter().map(|l| l.element_count() * 4).sum::<usize>())
+            .unwrap_or(0);
+        arena + upload
+    }
 }

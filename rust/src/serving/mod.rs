@@ -4,16 +4,22 @@
 //! This is the operational payoff of the paper's economics (§1): adapters
 //! are tiny (d²/b params per projection), so a deployment serves frozen
 //! backbones and swaps cheap per-tenant kernels in front of them.  The
-//! subsystem has five layers:
+//! subsystem has six layers:
 //!
 //! * [`stats`] — latency percentile accounting (`total_cmp`-ordered, so a
 //!   NaN-poisoned sample can never panic a report) and the cross-shard
 //!   merge rules: raw sample windows are pooled before percentiles are
 //!   computed — per-shard percentiles are never averaged;
+//! * [`store::AdapterStore`] — the disk tier: one versioned, checksummed
+//!   snapshot file per tenant, bitwise round-trips, crash-safe temp+rename
+//!   writes; the source of truth for evicted tenants;
 //! * [`registry::AdapterRegistry`] — named adapter snapshots over a single
 //!   shared frozen-backbone parse ([`crate::runtime::session::SharedBackbone`]):
 //!   one `EvalSession` (and one private spectra cache / upload slot) per
-//!   tenant, `hot_swap` to atomically replace a tenant's adapter;
+//!   *resident* tenant, `hot_swap` to atomically replace a tenant's
+//!   adapter, and a tiered lifecycle under [`registry::ResidentPolicy`] —
+//!   LRU eviction to the store, measured cold-start reloads, bit-identical
+//!   either way;
 //! * [`admission`] — stable tenant→shard routing ([`shard_of`]: FNV-1a of
 //!   the tenant name), per-shard bounded queues, `QueueFull` load-shedding
 //!   with per-shard/per-tenant shed and depth accounting, and the
@@ -47,13 +53,15 @@ pub mod registry;
 pub mod replay;
 pub mod scheduler;
 pub mod stats;
+pub mod store;
 pub mod worker;
 
 pub use admission::{shard_of, Reply, SubmitError, SubmitHandle, Ticket};
-pub use registry::{perturb_c3a_kernels, AdapterRegistry};
+pub use registry::{perturb_c3a_kernels, AdapterRegistry, ResidentPolicy};
 pub use replay::{
     arrival_schedule, run_replay, tenant_name, ReplayCfg, ReplayReport, ZipfSampler,
 };
 pub use scheduler::{Scheduler, SchedulerCfg};
 pub use stats::{percentile, LatencySummary, ServeStats, ShardStats, TenantStats, SAMPLE_CAP};
+pub use store::AdapterStore;
 pub use worker::ShardCtx;

@@ -1,4 +1,18 @@
-//! Named adapter snapshots over one shared frozen-backbone parse.
+//! Named adapter snapshots over one shared frozen-backbone parse, with a
+//! tiered tenant lifecycle: **resident** (live session + uploaded
+//! literals + spectra + plan arena, warm replay) or **evicted** (only a
+//! compact snapshot in the [`AdapterStore`]).
+//!
+//! Residency is governed by [`ResidentPolicy`]: when admitting a tenant
+//! would exceed `max_resident`, the least-recently-served resident is
+//! evicted first (session and arena dropped — `shared_parse_refs` falls —
+//! and the snapshot persisted); when `bytes_budget` is exceeded after a
+//! request, residents are evicted LRU-first until the estimate fits.  A
+//! request for an evicted tenant takes the measured cold-start path:
+//! load snapshot → new session → upload → spectra recompute → plan
+//! re-record, all timed into the registry's cold-start window.  Reload is
+//! bit-identical to never having evicted: the store round-trips kernel
+//! bits exactly, and spectra/plans are deterministic functions of them.
 
 use crate::runtime::interp::CacheStats;
 use crate::runtime::manifest::ArtifactSpec;
@@ -9,15 +23,23 @@ use crate::substrate::prng::Rng;
 use crate::substrate::tensor::{Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::time::Instant;
+
+use super::stats::push_sample;
+use super::store::AdapterStore;
 
 /// Derive an adapter variant by deterministically perturbing the C3A
 /// kernels (seeded, `eps`-scaled noise).  Stands in for per-tenant
 /// fine-tuning in the serve demo/bench/tests, and doubles as a
 /// cache-invalidation probe: any kernel change must re-upload and
 /// recompute exactly that tenant's spectra.
+///
+/// Only `.c3a.w` entries are rebuilt; every other tensor in the returned
+/// map *shares storage* with the input (tensor payloads are `Arc`ed), so
+/// deriving thousands of tenant variants costs kernels, not backbones.
 pub fn perturb_c3a_kernels(adapter: &TensorMap, seed: u64, eps: f32) -> TensorMap {
     let mut rng = Rng::seed(0xC3A0_5EED ^ seed);
-    let mut out = adapter.clone();
+    let mut out = adapter.clone(); // shallow: payloads shared until perturbed
     for (name, t) in adapter {
         if !name.contains(".c3a.w") {
             continue;
@@ -31,16 +53,79 @@ pub fn perturb_c3a_kernels(adapter: &TensorMap, seed: u64, eps: f32) -> TensorMa
     out
 }
 
+/// Caps on the resident tenant set (0 = unlimited).  `max_resident` is
+/// enforced *before* admission (the set never exceeds it); `bytes_budget`
+/// is checked against [`AdapterRegistry::resident_bytes`] after each
+/// request (plan arenas only exist after the first request).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResidentPolicy {
+    pub max_resident: usize,
+    pub bytes_budget: usize,
+}
+
+impl ResidentPolicy {
+    pub fn unlimited() -> ResidentPolicy {
+        ResidentPolicy::default()
+    }
+
+    pub fn max_resident(n: usize) -> ResidentPolicy {
+        ResidentPolicy { max_resident: n, bytes_budget: 0 }
+    }
+
+    fn bounded(&self) -> bool {
+        self.max_resident > 0 || self.bytes_budget > 0
+    }
+}
+
+enum TenantState {
+    /// Warm: live session (uploaded literals, spectra cache, plan arena)
+    /// plus the in-memory params the upload is checked against.
+    Resident { session: EvalSession, params: TensorMap },
+    /// Cold: nothing in memory — the adapter store holds the snapshot.
+    Evicted,
+}
+
+/// Session counters survive eviction by accumulating here when the
+/// session is dropped; accessors report `carried + live`.
+#[derive(Default)]
+struct CarriedCounters {
+    uploads: usize,
+    spectra_hits: u64,
+    spectra_misses: u64,
+    plan_replays: u64,
+}
+
 struct Tenant {
-    session: EvalSession,
-    params: TensorMap,
+    state: TenantState,
     version: u64,
+    /// version the store snapshot was last written at (0 = never)
+    persisted_version: u64,
+    /// registry clock tick of the last request — the LRU order
+    last_served: u64,
+    evictions: u64,
+    cold_starts: u64,
+    carried: CarriedCounters,
+}
+
+impl Tenant {
+    fn session(&self) -> Option<&EvalSession> {
+        match &self.state {
+            TenantState::Resident { session, .. } => Some(session),
+            TenantState::Evicted => None,
+        }
+    }
+
+    fn is_resident(&self) -> bool {
+        matches!(self.state, TenantState::Resident { .. })
+    }
 }
 
 /// Many named C3A adapters served over a *single* frozen-backbone parse:
 /// one [`EvalSession`] — and therefore one private spectra cache and one
-/// trainable-upload slot — per tenant, all sharing the backbone literals
-/// and (on the substrate backend) the parsed frozen arrays.
+/// trainable-upload slot — per **resident** tenant, all sharing the
+/// backbone literals and (on the substrate backend) the parsed frozen
+/// arrays.  Evicted tenants keep only a version + counters here; their
+/// params live in the [`AdapterStore`].
 ///
 /// Not `Send` by design (sessions hold `Rc` state): a registry lives on
 /// exactly one shard worker thread, which builds it there via the
@@ -49,12 +134,25 @@ struct Tenant {
 pub struct AdapterRegistry {
     backbone: SharedBackbone,
     tenants: BTreeMap<String, Tenant>,
+    store: Option<AdapterStore>,
+    policy: ResidentPolicy,
+    /// monotone request clock driving the LRU order
+    clock: u64,
+    resident_now: usize,
+    resident_hwm: usize,
+    evictions_total: u64,
+    cold_starts_total: u64,
+    /// bounded window of cold-start wall times (ms), pooled across
+    /// shards like the latency windows
+    cold_start_ms: Vec<f64>,
 }
 
 impl AdapterRegistry {
     /// Build the shared backbone from an eval artifact + init.  Only the
     /// frozen half of `init` is used; it is uploaded and parsed once, for
-    /// every tenant ever registered.
+    /// every tenant ever registered.  Every tenant stays resident until
+    /// [`set_residency`](AdapterRegistry::set_residency) installs a store
+    /// + policy.
     pub fn new(
         engine: &Engine,
         spec: &ArtifactSpec,
@@ -63,6 +161,14 @@ impl AdapterRegistry {
         Ok(AdapterRegistry {
             backbone: SharedBackbone::new(engine, spec, init)?,
             tenants: BTreeMap::new(),
+            store: None,
+            policy: ResidentPolicy::unlimited(),
+            clock: 0,
+            resident_now: 0,
+            resident_hwm: 0,
+            evictions_total: 0,
+            cold_starts_total: 0,
+            cold_start_ms: Vec::new(),
         })
     }
 
@@ -70,58 +176,303 @@ impl AdapterRegistry {
         self.backbone.spec()
     }
 
-    /// Register a tenant with its adapter snapshot (version 1).
+    /// Install the disk tier: snapshots persist to `store`, and `policy`
+    /// bounds the resident set (enforced immediately against already-
+    /// registered tenants, LRU first).  Tenants registered *after* this
+    /// start evicted — their first request is a cold start — so
+    /// registering far more tenants than `max_resident` is cheap.
+    pub fn set_residency(&mut self, policy: ResidentPolicy, store: AdapterStore) -> Result<()> {
+        self.store = Some(store);
+        self.policy = policy;
+        // persist + evict down to policy (oldest first; all-zero
+        // last_served falls back to BTreeMap name order)
+        if self.policy.max_resident > 0 {
+            self.evict_down_to(self.policy.max_resident, None)?;
+        }
+        self.enforce_bytes(None)
+    }
+
+    pub fn policy(&self) -> ResidentPolicy {
+        self.policy
+    }
+
+    /// Register a tenant with its adapter snapshot (version 1).  With a
+    /// store installed the snapshot is persisted and the tenant starts
+    /// evicted (lazy session); without one it is immediately resident.
     pub fn register(&mut self, name: &str, params: TensorMap) -> Result<()> {
         if self.tenants.contains_key(name) {
             bail!("tenant {name} already registered");
         }
-        let session = self.backbone.session()?;
-        self.tenants.insert(name.to_string(), Tenant { session, params, version: 1 });
+        let tenant = match &self.store {
+            Some(store) => {
+                store.save(name, 1, &params)?;
+                Tenant {
+                    state: TenantState::Evicted,
+                    version: 1,
+                    persisted_version: 1,
+                    last_served: 0,
+                    evictions: 0,
+                    cold_starts: 0,
+                    carried: CarriedCounters::default(),
+                }
+            }
+            None => Tenant {
+                state: TenantState::Resident { session: self.backbone.session()?, params },
+                version: 1,
+                persisted_version: 0,
+                last_served: 0,
+                evictions: 0,
+                cold_starts: 0,
+                carried: CarriedCounters::default(),
+            },
+        };
+        if tenant.is_resident() {
+            self.resident_now += 1;
+            self.resident_hwm = self.resident_hwm.max(self.resident_now);
+        }
+        self.tenants.insert(name.to_string(), tenant);
         Ok(())
     }
 
     /// Atomically replace `name`'s adapter; returns the new version.
     ///
-    /// Invalidation is exact and tenant-local: the swapped tenant's next
+    /// Invalidation is exact and tenant-local: a resident tenant's next
     /// request re-uploads the snapshot (its `upload_count` rises by one)
     /// and its kernel spectra recompute via equality invalidation; every
-    /// other tenant's caches keep hitting untouched.
+    /// other tenant's caches keep hitting untouched.  An evicted tenant's
+    /// new snapshot goes straight to the store — it becomes resident (and
+    /// pays its cold start) only when traffic arrives.
     pub fn hot_swap(&mut self, name: &str, params: TensorMap) -> Result<u64> {
         let t = self.tenants.get_mut(name).with_context(|| format!("unknown tenant {name}"))?;
-        t.params = params;
         t.version += 1;
-        Ok(t.version)
+        let version = t.version;
+        match &mut t.state {
+            TenantState::Resident { params: p, .. } => *p = params,
+            TenantState::Evicted => {
+                let store = self.store.as_ref().context("evicted tenant without a store")?;
+                store.save(name, version, &params)?;
+                t.persisted_version = version;
+            }
+        }
+        Ok(version)
     }
 
     /// Forward one batch through `name`'s adapter; returns (flat logits,
-    /// shape, adapter version the batch was served under).
-    pub fn infer(&self, name: &str, batch: &Batch) -> Result<(Vec<f32>, Vec<usize>, u64)> {
+    /// shape, adapter version the batch was served under).  An evicted
+    /// tenant is cold-started first: snapshot loaded (checksum-verified),
+    /// a fresh session registered, and the serve below re-uploads,
+    /// recomputes spectra, and re-records the plan — the whole sequence
+    /// timed into [`cold_start_window`](AdapterRegistry::cold_start_window).
+    pub fn infer(&mut self, name: &str, batch: &Batch) -> Result<(Vec<f32>, Vec<usize>, u64)> {
+        self.clock += 1;
+        let tick = self.clock;
         let t = self.tenants.get(name).with_context(|| format!("unknown tenant {name}"))?;
-        let (logits, shape) = t.session.logits(&t.params, batch)?;
-        Ok((logits, shape, t.version))
+        let cold = !t.is_resident();
+        let t0 = Instant::now();
+        if cold {
+            // make room first so the resident set never exceeds policy
+            self.make_room(Some(name))?;
+            let store = self.store.as_ref().context("evicted tenant without a store")?;
+            let (params, stored_version) = store.load(name)?;
+            let t = self.tenants.get_mut(name).unwrap();
+            if stored_version != t.version {
+                bail!(
+                    "tenant {name}: store snapshot at version {stored_version} \
+                     but registry expects {version}",
+                    version = t.version
+                );
+            }
+            t.state = TenantState::Resident { session: self.backbone.session()?, params };
+            t.cold_starts += 1;
+            self.resident_now += 1;
+            self.resident_hwm = self.resident_hwm.max(self.resident_now);
+        }
+        let t = self.tenants.get_mut(name).unwrap();
+        t.last_served = tick;
+        let version = t.version;
+        let TenantState::Resident { session, params } = &t.state else { unreachable!() };
+        let out = session.logits(params, batch)?;
+        if cold {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            push_sample(&mut self.cold_start_ms, self.cold_starts_total, ms);
+            self.cold_starts_total += 1;
+        }
+        if self.policy.bytes_budget > 0 {
+            self.enforce_bytes(Some(name))?;
+        }
+        Ok((out.0, out.1, version))
     }
 
-    /// How many times `name`'s adapter has been uploaded (1 per version
-    /// under the serving pattern).
+    /// Evict `name`: persist its snapshot (if the stored version is
+    /// stale) and drop its session — uploaded literals, spectra cache,
+    /// and plan arena all release, and the session's frozen-parse ref
+    /// falls off [`shared_parse_refs`](AdapterRegistry::shared_parse_refs).
+    /// Requires a store; errors if the tenant is unknown or not resident.
+    pub fn evict(&mut self, name: &str) -> Result<()> {
+        let store = self.store.as_ref().context("evict requires an adapter store")?;
+        let t = self.tenants.get(name).with_context(|| format!("unknown tenant {name}"))?;
+        match &t.state {
+            TenantState::Resident { params, .. } => {
+                if t.persisted_version != t.version {
+                    store.save(name, t.version, params)?;
+                }
+            }
+            TenantState::Evicted => bail!("tenant {name} is not resident"),
+        }
+        let t = self.tenants.get_mut(name).unwrap();
+        t.persisted_version = t.version;
+        if let TenantState::Resident { session, .. } =
+            std::mem::replace(&mut t.state, TenantState::Evicted)
+        {
+            t.carried.uploads += session.upload_count();
+            if let Some(cs) = session.cache_stats() {
+                t.carried.spectra_hits += cs.spectra_hits;
+                t.carried.spectra_misses += cs.spectra_misses;
+            }
+            t.carried.plan_replays += session.plan_stats().map(|p| p.replays).unwrap_or(0);
+            // session drops here: arena, uploads, and the parse ref go
+        }
+        t.evictions += 1;
+        self.evictions_total += 1;
+        self.resident_now -= 1;
+        Ok(())
+    }
+
+    /// Least-recently-served resident tenant (excluding `protect`).
+    fn lru_victim(&self, protect: Option<&str>) -> Option<String> {
+        self.tenants
+            .iter()
+            .filter(|(n, t)| t.is_resident() && Some(n.as_str()) != protect)
+            .min_by_key(|(_, t)| t.last_served)
+            .map(|(n, _)| n.clone())
+    }
+
+    /// Evict LRU-first until the resident count is at most `limit`.
+    fn evict_down_to(&mut self, limit: usize, protect: Option<&str>) -> Result<()> {
+        while self.resident_now > limit {
+            match self.lru_victim(protect) {
+                Some(v) => self.evict(&v)?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    /// Evict LRU-first until one more tenant fits under `max_resident`.
+    fn make_room(&mut self, protect: Option<&str>) -> Result<()> {
+        if self.policy.max_resident == 0 || self.store.is_none() {
+            return Ok(());
+        }
+        self.evict_down_to(self.policy.max_resident - 1, protect)
+    }
+
+    /// Evict LRU-first until the resident-bytes estimate fits the budget.
+    fn enforce_bytes(&mut self, protect: Option<&str>) -> Result<()> {
+        if self.policy.bytes_budget == 0 || self.store.is_none() {
+            return Ok(());
+        }
+        while self.resident_bytes() > self.policy.bytes_budget {
+            match self.lru_victim(protect) {
+                Some(v) => self.evict(&v)?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    /// How many times `name`'s adapter has been uploaded (1 per cold
+    /// start or resident version change under the serving pattern) —
+    /// carried across evictions.
     pub fn upload_count(&self, name: &str) -> Option<usize> {
-        self.tenants.get(name).map(|t| t.session.upload_count())
+        let t = self.tenants.get(name)?;
+        Some(t.carried.uploads + t.session().map(|s| s.upload_count()).unwrap_or(0))
     }
 
     pub fn version(&self, name: &str) -> Option<u64> {
         self.tenants.get(name).map(|t| t.version)
     }
 
-    /// Per-tenant spectra-cache accounting (substrate backend).
+    /// Per-tenant spectra-cache accounting (substrate backend) — carried
+    /// across evictions.
     pub fn cache_stats(&self, name: &str) -> Option<CacheStats> {
-        self.tenants.get(name).and_then(|t| t.session.cache_stats())
+        let t = self.tenants.get(name)?;
+        let mut cs = t.session().and_then(|s| s.cache_stats()).unwrap_or_default();
+        cs.spectra_hits += t.carried.spectra_hits;
+        cs.spectra_misses += t.carried.spectra_misses;
+        Some(cs)
     }
 
     /// Per-tenant execution-plan accounting (substrate backend): each
-    /// tenant records its own plan + buffer arena on its first request
-    /// and replays it afterwards.  None before the first request or when
-    /// plans are disabled (`C3A_PLAN=0`).
+    /// resident tenant records its own plan + buffer arena on its first
+    /// request and replays it afterwards.  None before the first request
+    /// or when plans are disabled (`C3A_PLAN=0`); replay counts from
+    /// evicted incarnations are folded in.
     pub fn plan_stats(&self, name: &str) -> Option<PlanStats> {
-        self.tenants.get(name).and_then(|t| t.session.plan_stats())
+        let t = self.tenants.get(name)?;
+        let mut ps = t.session().and_then(|s| s.plan_stats())?;
+        ps.replays += t.carried.plan_replays;
+        Some(ps)
+    }
+
+    /// Total plan replays for `name` across all incarnations (survives
+    /// eviction even when the live session has no plan yet).
+    pub fn plan_replays(&self, name: &str) -> u64 {
+        let t = match self.tenants.get(name) {
+            Some(t) => t,
+            None => return 0,
+        };
+        t.carried.plan_replays
+            + t.session().and_then(|s| s.plan_stats()).map(|p| p.replays).unwrap_or(0)
+    }
+
+    pub fn is_resident(&self, name: &str) -> Option<bool> {
+        self.tenants.get(name).map(|t| t.is_resident())
+    }
+
+    pub fn evictions(&self, name: &str) -> Option<u64> {
+        self.tenants.get(name).map(|t| t.evictions)
+    }
+
+    pub fn cold_starts(&self, name: &str) -> Option<u64> {
+        self.tenants.get(name).map(|t| t.cold_starts)
+    }
+
+    /// Residents right now / the high-water mark since construction.
+    pub fn resident_now(&self) -> usize {
+        self.resident_now
+    }
+
+    pub fn resident_hwm(&self) -> usize {
+        self.resident_hwm
+    }
+
+    pub fn evictions_total(&self) -> u64 {
+        self.evictions_total
+    }
+
+    pub fn cold_starts_total(&self) -> u64 {
+        self.cold_starts_total
+    }
+
+    /// Bounded window of cold-start wall times (ms).
+    pub fn cold_start_window(&self) -> &[f64] {
+        &self.cold_start_ms
+    }
+
+    /// Estimated bytes held by resident tenants: per-session plan-arena +
+    /// uploaded-literal bytes ([`EvalSession::resident_bytes`]) plus the
+    /// in-memory params payload.
+    pub fn resident_bytes(&self) -> usize {
+        self.tenants
+            .values()
+            .map(|t| match &t.state {
+                TenantState::Resident { session, params } => {
+                    session.resident_bytes()
+                        + params.values().map(|p| p.len() * 4).sum::<usize>()
+                }
+                TenantState::Evicted => 0,
+            })
+            .sum()
     }
 
     pub fn tenant_names(&self) -> Vec<String> {
@@ -137,7 +488,8 @@ impl AdapterRegistry {
     }
 
     /// Executor states sharing the frozen parse, the backbone's own handle
-    /// included: `n_tenants + 1` when every tenant shares one parse.
+    /// included: `n_resident + 1` when every resident shares one parse —
+    /// eviction makes this fall, reload makes it recover.
     pub fn shared_parse_refs(&self) -> usize {
         self.backbone.parse_refs()
     }

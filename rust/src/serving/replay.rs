@@ -15,7 +15,7 @@
 //! is reported, never silently retried away.
 
 use super::admission::{SubmitError, SubmitHandle, Ticket};
-use crate::substrate::prng::Rng;
+use crate::substrate::prng::{fnv1a_fold, Rng, FNV1A_OFFSET};
 use crate::substrate::tensor::TensorMap;
 use anyhow::{bail, Context, Result};
 use std::time::{Duration, Instant};
@@ -148,14 +148,6 @@ pub fn arrival_schedule(cfg: &ReplayCfg) -> Vec<usize> {
     (0..cfg.requests).map(|_| zipf.sample(&mut rng)).collect()
 }
 
-fn fnv1a_fold(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
 /// Replay the seeded storm against a live scheduler.  `tokens_for(req_idx,
 /// tenant_rank)` produces each request's tokens; `swap_params(swap_idx,
 /// tenant_rank)` produces the adapter snapshot for each mid-storm
@@ -172,7 +164,7 @@ pub fn run_replay(
         preds: Vec::with_capacity(cfg.requests),
         ..ReplayReport::default()
     };
-    report.trace_hash = 0xcbf29ce484222325;
+    report.trace_hash = FNV1A_OFFSET;
     for &t in &seq {
         report.trace_hash = fnv1a_fold(report.trace_hash, &(t as u64).to_le_bytes());
         report.per_tenant[t] += 1;

@@ -96,6 +96,14 @@ pub struct TenantStats {
     /// `try_submit` rejections for this tenant at the admission layer
     /// (its shard's bounded queue was full) — filled in at merge time
     pub sheds: u64,
+    /// whether the tenant was resident (session + arena live) when the
+    /// scheduler drained
+    pub resident: bool,
+    /// times this tenant's session was evicted to the adapter store
+    pub evictions: u64,
+    /// requests that found this tenant evicted and paid the cold-start
+    /// path (load → session → upload → spectra → plan re-record)
+    pub cold_starts: u64,
 }
 
 /// One shard worker's accounting: its own served/failed counters and its
@@ -120,6 +128,16 @@ pub struct ShardStats {
     pub queue_depth_hwm: usize,
     /// `try_submit` rejections against this shard's full queue
     pub sheds: u64,
+    /// resident tenants when the shard drained / the high-water mark —
+    /// the hwm must never exceed `ResidentPolicy::max_resident`
+    pub resident_now: usize,
+    pub resident_hwm: usize,
+    /// total evictions / cold starts on this shard
+    pub evictions: u64,
+    pub cold_starts: u64,
+    /// most recent [`SAMPLE_CAP`] cold-start wall times (bounded window,
+    /// pooled across shards exactly like `latencies_ms`)
+    pub cold_start_ms: Vec<f64>,
 }
 
 impl ShardStats {
@@ -134,6 +152,11 @@ impl ShardStats {
     /// This shard's own latency percentiles (over its raw window).
     pub fn latency(&self) -> LatencySummary {
         LatencySummary::from_samples(&self.latencies_ms)
+    }
+
+    /// This shard's own cold-start percentiles (over its raw window).
+    pub fn cold_start_latency(&self) -> LatencySummary {
+        LatencySummary::from_samples(&self.cold_start_ms)
     }
 }
 
@@ -154,6 +177,11 @@ pub struct ServeStats {
     /// total `try_submit` rejections at the admission layer (includes
     /// sheds for tenants no shard knows about)
     pub sheds: u64,
+    /// total evictions / cold starts across shards
+    pub evictions: u64,
+    pub cold_starts: u64,
+    /// union of the shards' raw cold-start windows (shard order)
+    pub cold_start_ms: Vec<f64>,
     /// every shard's tenants, sorted by name
     pub tenants: Vec<TenantStats>,
     /// per-shard detail, sorted by shard id
@@ -174,8 +202,11 @@ impl ServeStats {
             m.failed += shard.failed;
             m.batch_size_sum += shard.batch_size_sum;
             m.sheds += shard.sheds;
+            m.evictions += shard.evictions;
+            m.cold_starts += shard.cold_starts;
             m.batch_sizes.extend_from_slice(&shard.batch_sizes);
             m.latencies_ms.extend_from_slice(&shard.latencies_ms);
+            m.cold_start_ms.extend_from_slice(&shard.cold_start_ms);
             m.tenants.extend(tenants);
             m.shards.push(shard);
         }
@@ -194,6 +225,24 @@ impl ServeStats {
     /// Aggregate latency percentiles over the pooled raw windows.
     pub fn latency(&self) -> LatencySummary {
         LatencySummary::from_samples(&self.latencies_ms)
+    }
+
+    /// Aggregate cold-start percentiles over the pooled raw windows
+    /// (same discipline as [`latency`](ServeStats::latency): never an
+    /// average of per-shard percentiles).
+    pub fn cold_start_latency(&self) -> LatencySummary {
+        LatencySummary::from_samples(&self.cold_start_ms)
+    }
+
+    /// Residents across shards when the scheduler drained.
+    pub fn resident_now(&self) -> usize {
+        self.shards.iter().map(|s| s.resident_now).sum()
+    }
+
+    /// Largest per-shard resident high-water mark — under a
+    /// `max_resident` policy this must stay ≤ the per-shard cap.
+    pub fn resident_hwm(&self) -> usize {
+        self.shards.iter().map(|s| s.resident_hwm).max().unwrap_or(0)
     }
 
     pub fn tenant(&self, name: &str) -> Option<&TenantStats> {
@@ -222,6 +271,9 @@ mod tests {
             spectra_misses: 0,
             plan_replays: 0,
             sheds: 0,
+            resident: true,
+            evictions: 0,
+            cold_starts: 0,
         }
     }
 
@@ -341,6 +393,40 @@ mod tests {
         assert_eq!(m.tenant("zeta").unwrap().shard, 1);
         assert_eq!(m.sheds, 4);
         assert_eq!(m.active_shards(), 2);
+    }
+
+    /// Cold-start windows follow the same merge discipline as latencies:
+    /// pooled raw samples, rank-statistic percentiles, counters additive,
+    /// and the resident hwm is a max (a per-shard bound), never a sum.
+    #[test]
+    fn merge_pools_cold_start_windows_and_maxes_resident_hwm() {
+        let warm = ShardStats {
+            shard: 0,
+            resident_now: 3,
+            resident_hwm: 4,
+            evictions: 10,
+            cold_starts: 2,
+            cold_start_ms: vec![5.0, 6.0],
+            ..ShardStats::default()
+        };
+        let churny = ShardStats {
+            shard: 1,
+            resident_now: 2,
+            resident_hwm: 2,
+            evictions: 90,
+            cold_starts: 99,
+            cold_start_ms: vec![50.0; 99],
+            ..ShardStats::default()
+        };
+        let m = ServeStats::merge(vec![(churny, vec![]), (warm, vec![])]);
+        assert_eq!(m.evictions, 100);
+        assert_eq!(m.cold_starts, 101);
+        assert_eq!(m.cold_start_ms.len(), 101);
+        assert_eq!(m.resident_now(), 5);
+        assert_eq!(m.resident_hwm(), 4, "hwm is a per-shard bound: max, not sum");
+        // pooled p50 over [5, 6, 50×99]: ⌈.5·101⌉ = 51st smallest = 50ms
+        assert_eq!(m.cold_start_latency().p50_ms, 50.0);
+        assert_eq!(m.shards[0].cold_start_latency().p99_ms, 6.0);
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Disk tier of the adapter lifecycle: a versioned binary store holding
+//! one serialized adapter snapshot per tenant.
+//!
+//! This is the source of truth for evicted tenants — the registry drops
+//! their session/arena/params entirely and reloads from here on the next
+//! request (the measured cold-start path).  Three properties carry the
+//! serving contract onto disk:
+//!
+//! * **Bitwise round-trips.** Payloads are written as the tensor's raw
+//!   little-endian words ([`Tensor::bits`]), so `load(save(m)) == m`
+//!   bit-for-bit — which is what makes evict→reload logits bit-identical
+//!   (spectra and plans are deterministic functions of the kernel bits).
+//! * **Fail-closed loads.** Every file ends in an FNV-1a checksum over
+//!   the full preceding contents; a flipped bit or truncated file makes
+//!   `load` fail with an error naming the tenant — a corrupt snapshot is
+//!   never served.
+//! * **Crash-safe writes.** `save` writes a temp file in the same dir and
+//!   renames it over the target, so a crash mid-write leaves either the
+//!   old complete snapshot or a stray `.tmp` — never a torn file under
+//!   the tenant's name.
+//!
+//! One file per tenant (name percent-escaped into the filename) means
+//! shard workers sharing one store dir can never collide: tenant→shard
+//! routing is a partition, so no two shards ever write the same tenant.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic "C3AS" | format u32 | adapter_version u64 | count u32
+//! repeat count: name_len u32 | name | dtype u8 | ndim u32 | dims u64… | payload u32…
+//! fnv1a-of-everything-above u64
+//! ```
+
+use crate::substrate::prng::fnv1a_bytes;
+use crate::substrate::tensor::{DType, Tensor, TensorMap};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const STORE_MAGIC: &[u8; 4] = b"C3AS";
+const STORE_FORMAT: u32 = 1;
+/// magic + format + version + count + trailing checksum
+const HEADER_BYTES: usize = 4 + 4 + 8 + 4;
+const CHECKSUM_BYTES: usize = 8;
+
+/// Percent-escape a tenant name into a filesystem-safe, injective
+/// filename stem (`/`, `%`, and anything non-alphanumeric beyond `._-`
+/// become `%XX`).
+fn escape_tenant(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for b in name.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'.' | b'_' | b'-' => out.push(b as char),
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// A directory of per-tenant adapter snapshots.  Cheap to clone the
+/// handle conceptually (it is just a path); every operation is stateless
+/// against the filesystem.
+#[derive(Clone, Debug)]
+pub struct AdapterStore {
+    dir: PathBuf,
+}
+
+impl AdapterStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open<P: Into<PathBuf>>(dir: P) -> Result<AdapterStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("adapter store: creating {}", dir.display()))?;
+        Ok(AdapterStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The snapshot file a tenant serializes to.
+    pub fn path_for(&self, tenant: &str) -> PathBuf {
+        self.dir.join(format!("{}.c3aa", escape_tenant(tenant)))
+    }
+
+    pub fn contains(&self, tenant: &str) -> bool {
+        self.path_for(tenant).exists()
+    }
+
+    /// Persist `tenant`'s adapter at `version` (temp file + rename; see
+    /// the module docs for the crash-safety contract).
+    pub fn save(&self, tenant: &str, version: u64, params: &TensorMap) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(STORE_MAGIC);
+        buf.extend_from_slice(&STORE_FORMAT.to_le_bytes());
+        buf.extend_from_slice(&version.to_le_bytes());
+        buf.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        for (name, t) in params {
+            let nb = name.as_bytes();
+            buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.push(t.dtype.code());
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &w in t.bits() {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        let checksum = fnv1a_bytes(&buf);
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        let path = self.path_for(tenant);
+        let tmp = path.with_extension("tmp");
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, &path)
+        };
+        write().with_context(|| {
+            format!("adapter store: persisting tenant {tenant} to {}", path.display())
+        })
+    }
+
+    /// Load `tenant`'s snapshot; returns the bitwise-identical map and
+    /// the adapter version it was persisted at.  Fails closed (naming the
+    /// tenant) on missing files, bad magic, truncation, or a checksum
+    /// mismatch.
+    pub fn load(&self, tenant: &str) -> Result<(TensorMap, u64)> {
+        let path = self.path_for(tenant);
+        let bytes = std::fs::read(&path).with_context(|| {
+            format!("adapter store: no snapshot for tenant {tenant} at {}", path.display())
+        })?;
+        if bytes.len() < HEADER_BYTES + CHECKSUM_BYTES {
+            bail!("adapter store: tenant {tenant}: truncated snapshot ({} bytes)", bytes.len());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - CHECKSUM_BYTES);
+        let expect = u64::from_le_bytes(tail.try_into().unwrap());
+        let got = fnv1a_bytes(body);
+        if got != expect {
+            bail!(
+                "adapter store: tenant {tenant}: checksum mismatch \
+                 (stored {expect:016x}, computed {got:016x}) — refusing to serve"
+            );
+        }
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > body.len() {
+                bail!("adapter store: tenant {tenant}: truncated snapshot body");
+            }
+            let s = &body[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != STORE_MAGIC {
+            bail!("adapter store: tenant {tenant}: bad magic");
+        }
+        let format = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if format != STORE_FORMAT {
+            bail!("adapter store: tenant {tenant}: unsupported format {format}");
+        }
+        let version = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let mut out = TensorMap::new();
+        for _ in 0..count {
+            let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+                .with_context(|| format!("adapter store: tenant {tenant}: bad tensor name"))?;
+            let dtype = DType::from_code(take(&mut pos, 1)?[0])?;
+            let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+            }
+            let n = shape.iter().product::<usize>().max(1);
+            let raw = take(&mut pos, 4 * n)?;
+            let vals: Vec<u32> =
+                raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+            let t = match dtype {
+                DType::F32 => Tensor::from_f32(
+                    shape,
+                    &vals.iter().map(|&b| f32::from_bits(b)).collect::<Vec<_>>(),
+                ),
+                DType::I32 => Tensor::from_i32(
+                    shape,
+                    &vals.iter().map(|&b| b as i32).collect::<Vec<_>>(),
+                ),
+            };
+            out.insert(name, t);
+        }
+        if pos != body.len() {
+            bail!("adapter store: tenant {tenant}: {} trailing bytes", body.len() - pos);
+        }
+        Ok((out, version))
+    }
+
+    /// Delete `tenant`'s snapshot (missing is fine).
+    pub fn remove(&self, tenant: &str) -> Result<()> {
+        let path = self.path_for(tenant);
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| {
+                format!("adapter store: removing tenant {tenant} at {}", path.display())
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> AdapterStore {
+        let dir = std::env::temp_dir().join(format!("c3a_store_unit_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        AdapterStore::open(dir).unwrap()
+    }
+
+    fn sample_map() -> TensorMap {
+        let mut m = TensorMap::new();
+        m.insert("l0.c3a.w".into(), Tensor::from_f32(vec![2, 4], &[0.5; 8]));
+        m.insert("head.b".into(), Tensor::from_f32(vec![3], &[1.0, -0.0, f32::NAN]));
+        m.insert("ids".into(), Tensor::from_i32(vec![2], &[7, -7]));
+        m
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_and_versioned() {
+        let store = tmp_store("rt");
+        let m = sample_map();
+        store.save("t0", 3, &m).unwrap();
+        assert!(store.contains("t0"));
+        let (back, version) = store.load("t0").unwrap();
+        assert_eq!(version, 3);
+        assert_eq!(back, m, "store round-trip must be bitwise (incl. NaN and -0.0)");
+        for (name, t) in &m {
+            assert_eq!(back[name].bits(), t.bits());
+        }
+    }
+
+    #[test]
+    fn checksum_mismatch_fails_closed_naming_the_tenant() {
+        let store = tmp_store("sum");
+        store.save("victim", 1, &sample_map()).unwrap();
+        let path = store.path_for("victim");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", store.load("victim").unwrap_err());
+        assert!(err.contains("victim"), "error must name the tenant: {err}");
+        assert!(err.contains("checksum"), "error must say why: {err}");
+    }
+
+    #[test]
+    fn truncated_file_fails_closed_naming_the_tenant() {
+        let store = tmp_store("trunc");
+        store.save("short", 1, &sample_map()).unwrap();
+        let path = store.path_for("short");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..HEADER_BYTES + 2]).unwrap();
+        let err = format!("{:#}", store.load("short").unwrap_err());
+        assert!(err.contains("short"), "error must name the tenant: {err}");
+    }
+
+    #[test]
+    fn missing_tenant_fails_closed() {
+        let store = tmp_store("missing");
+        let err = format!("{:#}", store.load("ghost").unwrap_err());
+        assert!(err.contains("ghost"));
+    }
+
+    #[test]
+    fn tenant_names_escape_injectively() {
+        assert_eq!(escape_tenant("tenant0"), "tenant0");
+        assert_eq!(escape_tenant("a/b"), "a%2Fb");
+        assert_eq!(escape_tenant("a%2Fb"), "a%252Fb");
+        assert_ne!(escape_tenant("a/b"), escape_tenant("a%2Fb"));
+        let store = tmp_store("esc");
+        store.save("a/b", 1, &sample_map()).unwrap();
+        store.save("a%2Fb", 2, &sample_map()).unwrap();
+        assert_eq!(store.load("a/b").unwrap().1, 1);
+        assert_eq!(store.load("a%2Fb").unwrap().1, 2);
+    }
+
+    #[test]
+    fn remove_is_idempotent() {
+        let store = tmp_store("rm");
+        store.save("gone", 1, &sample_map()).unwrap();
+        store.remove("gone").unwrap();
+        assert!(!store.contains("gone"));
+        store.remove("gone").unwrap();
+    }
+}

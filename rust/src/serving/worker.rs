@@ -110,10 +110,16 @@ pub(super) fn shard_loop(
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                run_batch(&registry, &mut stats, &mut tenant_served, b, s, batch);
+                run_batch(&mut registry, &mut stats, &mut tenant_served, b, s, batch);
             }
         }
     }
+    // snapshot the registry's residency accounting into this shard's stats
+    stats.resident_now = registry.resident_now();
+    stats.resident_hwm = registry.resident_hwm();
+    stats.evictions = registry.evictions_total();
+    stats.cold_starts = registry.cold_starts_total();
+    stats.cold_start_ms = registry.cold_start_window().to_vec();
     let mut tenants = Vec::new();
     for name in registry.tenant_names() {
         let cs = registry.cache_stats(&name).unwrap_or_default();
@@ -124,8 +130,11 @@ pub(super) fn shard_loop(
             version: registry.version(&name).unwrap_or(0),
             spectra_hits: cs.spectra_hits,
             spectra_misses: cs.spectra_misses,
-            plan_replays: registry.plan_stats(&name).map(|p| p.replays).unwrap_or(0),
+            plan_replays: registry.plan_replays(&name),
             sheds: 0, // admission-side count, filled in at merge
+            resident: registry.is_resident(&name).unwrap_or(false),
+            evictions: registry.evictions(&name).unwrap_or(0),
+            cold_starts: registry.cold_starts(&name).unwrap_or(0),
             name,
         });
     }
@@ -133,7 +142,7 @@ pub(super) fn shard_loop(
 }
 
 fn run_batch(
-    registry: &AdapterRegistry,
+    registry: &mut AdapterRegistry,
     stats: &mut ShardStats,
     tenant_served: &mut BTreeMap<String, u64>,
     b: usize,

@@ -4,15 +4,29 @@
 //! projections, synthetic dataset generation, and shuffling — so every
 //! experiment is reproducible from a single seed.
 
-/// FNV-1a over a string — the shared seed-derivation hash (decorrelates
-/// per-name RNG streams for tasks, models, etc.).
-pub fn fnv1a(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
+/// FNV-1a offset basis (the empty-input hash / fold seed).
+pub const FNV1A_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Fold more bytes into a running FNV-1a hash (start from
+/// [`FNV1A_OFFSET`]).  Shared by the seed-derivation hash, the replay
+/// trace hash, and the adapter store's content checksum.
+pub fn fnv1a_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    fnv1a_fold(FNV1A_OFFSET, bytes)
+}
+
+/// FNV-1a over a string — the shared seed-derivation hash (decorrelates
+/// per-name RNG streams for tasks, models, etc.).
+pub fn fnv1a(s: &str) -> u64 {
+    fnv1a_bytes(s.as_bytes())
 }
 
 /// xoshiro256** with splitmix64 initialization.

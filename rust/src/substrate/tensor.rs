@@ -6,6 +6,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -33,28 +34,55 @@ impl DType {
 /// A host tensor: shape + raw little-endian storage.
 /// Equality is bitwise on the stored payload (exact, NaN-safe) — used by
 /// session caches to detect unchanged parameters.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// The payload sits behind an `Arc`: tensors are immutable after
+/// construction, and the serving layer clones whole `TensorMap`s far more
+/// often than it builds them (per-shard registration, upload snapshots,
+/// store persistence), so `clone` shares storage instead of deep-copying.
+#[derive(Clone, Debug)]
 pub struct Tensor {
     pub dtype: DType,
     pub shape: Vec<usize>,
-    /// f32 storage (bit-cast for i32)
-    data: Vec<u32>,
+    /// f32 storage (bit-cast for i32), shared across clones
+    data: Arc<Vec<u32>>,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.dtype == other.dtype
+            && self.shape == other.shape
+            && (Arc::ptr_eq(&self.data, &other.data) || self.data == other.data)
+    }
 }
 
 impl Tensor {
     pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
         assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
-        Self { dtype: DType::F32, shape, data: values.iter().map(|v| v.to_bits()).collect() }
+        let data = Arc::new(values.iter().map(|v| v.to_bits()).collect());
+        Self { dtype: DType::F32, shape, data }
     }
 
     pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
         assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
-        Self { dtype: DType::I32, shape, data: values.iter().map(|&v| v as u32).collect() }
+        let data = Arc::new(values.iter().map(|&v| v as u32).collect());
+        Self { dtype: DType::I32, shape, data }
     }
 
     pub fn zeros_f32(shape: Vec<usize>) -> Self {
         let n = shape.iter().product::<usize>().max(1);
-        Self { dtype: DType::F32, shape, data: vec![0u32; n] }
+        Self { dtype: DType::F32, shape, data: Arc::new(vec![0u32; n]) }
+    }
+
+    /// Raw little-endian payload words (bit-exact view, dtype-agnostic) —
+    /// what serializers hash and write so round-trips stay bitwise.
+    pub fn bits(&self) -> &[u32] {
+        &self.data
+    }
+
+    /// Whether two tensors share one payload allocation (clone-sharing
+    /// observability; equality is still by value).
+    pub fn shares_storage(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     pub fn len(&self) -> usize {
@@ -101,7 +129,7 @@ pub fn save<P: AsRef<Path>>(path: P, tensors: &TensorMap) -> Result<()> {
         for &d in &t.shape {
             buf.extend_from_slice(&(d as u64).to_le_bytes());
         }
-        for &w in &t.data {
+        for &w in t.data.iter() {
             buf.extend_from_slice(&w.to_le_bytes());
         }
     }
@@ -147,7 +175,7 @@ pub fn load<P: AsRef<Path>>(path: P) -> Result<TensorMap> {
         let n = shape.iter().product::<usize>().max(1);
         let raw = take(&mut pos, 4 * n)?;
         let data = raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
-        out.insert(name, Tensor { dtype, shape, data });
+        out.insert(name, Tensor { dtype, shape, data: Arc::new(data) });
     }
     Ok(out)
 }
@@ -188,6 +216,19 @@ mod tests {
         assert_eq!(t.dtype, DType::F32);
         assert_eq!(t.shape.len(), 2);
         assert!(t.as_f32().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn clone_shares_storage_and_stays_bitwise_equal() {
+        let t = Tensor::from_f32(vec![3], &[1.0, f32::NAN, -0.0]);
+        let c = t.clone();
+        assert!(t.shares_storage(&c), "clone must share the payload allocation");
+        assert_eq!(t, c, "NaN payloads still compare equal bitwise");
+        // an equal-by-value rebuild does NOT share storage but IS equal
+        let r = Tensor::from_f32(vec![3], &[1.0, f32::NAN, -0.0]);
+        assert!(!t.shares_storage(&r));
+        assert_eq!(t, r);
+        assert_eq!(t.bits(), r.bits());
     }
 
     #[test]

@@ -26,7 +26,7 @@ use c3a::runtime::manifest::{ArtifactSpec, Manifest, Role};
 use c3a::runtime::refbackend::{RefBackend, RefExecutable};
 use c3a::runtime::session::build_init;
 use c3a::runtime::Engine;
-use c3a::serving::{perturb_c3a_kernels as perturb, AdapterRegistry};
+use c3a::serving::{perturb_c3a_kernels as perturb, AdapterRegistry, AdapterStore, ResidentPolicy};
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::Tensor;
 use c3a::xla;
@@ -450,8 +450,8 @@ fn serving_registry_oracle_matches_substrate_across_hot_swaps() {
     let mut report = Report::new("serving_registry_oracle");
     let compare = |report: &mut Report,
                    tag: &str,
-                   reg_sub: &AdapterRegistry,
-                   reg_orc: &AdapterRegistry| {
+                   reg_sub: &mut AdapterRegistry,
+                   reg_orc: &mut AdapterRegistry| {
         for t in ["t0", "t1"] {
             let (ls, _, vs) = reg_sub.infer(t, &batch).unwrap();
             let (lo, _, vo) = reg_orc.infer(t, &batch).unwrap();
@@ -463,17 +463,37 @@ fn serving_registry_oracle_matches_substrate_across_hot_swaps() {
             }
         }
     };
-    compare(&mut report, "pre-swap", &reg_sub, &reg_orc);
+    compare(&mut report, "pre-swap", &mut reg_sub, &mut reg_orc);
 
     let swapped = perturb(&init.trainable, 99, 0.5);
     let vs = reg_sub.hot_swap("t1", swapped.clone()).unwrap();
     let vo = reg_orc.hot_swap("t1", swapped).unwrap();
     assert_eq!(vs, 2);
     assert_eq!(vo, 2);
-    compare(&mut report, "post-swap", &reg_sub, &reg_orc);
+    compare(&mut report, "post-swap", &mut reg_sub, &mut reg_orc);
     // substrate-side cache bookkeeping still holds next to the oracle
     assert_eq!(reg_sub.upload_count("t1"), Some(2));
     assert_eq!(reg_sub.upload_count("t0"), Some(1));
+
+    // tiered leg: serve → evict → reload → serve on the substrate side
+    // must be bitwise-identical to the warm path AND still match the f64
+    // oracle's never-evicted registry within the forward budget
+    let store_dir = std::env::temp_dir().join("c3a_diff_tier_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    reg_sub
+        .set_residency(ResidentPolicy::unlimited(), AdapterStore::open(&store_dir).unwrap())
+        .unwrap();
+    let (warm, _, _) = reg_sub.infer("t0", &batch).unwrap();
+    let refs = reg_sub.shared_parse_refs();
+    reg_sub.evict("t0").unwrap();
+    assert_eq!(reg_sub.is_resident("t0"), Some(false));
+    assert_eq!(reg_sub.shared_parse_refs(), refs - 1, "eviction must release the parse ref");
+    let (cold, _, vc) = reg_sub.infer("t0", &batch).unwrap();
+    assert_eq!(vc, 1);
+    assert_eq!(warm, cold, "evict→reload must serve bitwise-identical logits");
+    assert_eq!(reg_sub.shared_parse_refs(), refs, "reload must recover the parse ref");
+    assert_eq!(reg_sub.cold_starts("t0"), Some(1));
+    compare(&mut report, "post-evict-reload", &mut reg_sub, &mut reg_orc);
     report.finish();
 }
 

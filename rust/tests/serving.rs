@@ -66,7 +66,7 @@ fn registry_shares_one_frozen_parse_across_tenants() {
     let (adapter, b, s) = template(&dir);
     let adapters: Vec<(String, TensorMap)> =
         (0..3u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
-    let registry = build_registry(&dir, adapters).unwrap();
+    let mut registry = build_registry(&dir, adapters).unwrap();
     assert_eq!(registry.len(), 3);
     // the acceptance invariant: 3 tenant states + the backbone handle all
     // sit on ONE parse of the frozen backbone
@@ -398,7 +398,7 @@ fn shards1_scheduler_matches_direct_registry_bitwise() {
     drop(handle);
     sched.finish().unwrap();
 
-    let registry = build_registry(&dir, adapters).unwrap();
+    let mut registry = build_registry(&dir, adapters).unwrap();
     for (tenant, i, reply) in via_scheduler {
         let (logits, _, version) =
             registry.infer(&tenant, &one_row_batch(&toks(i, s), b, s)).unwrap();

@@ -1,0 +1,336 @@
+//! Tiered adapter lifecycle: the disk-backed [`AdapterStore`], LRU
+//! eviction under [`ResidentPolicy`], and the measured cold-start path.
+//!
+//! The invariants with teeth:
+//! * store round-trips are bitwise over every tiny-catalog adapter;
+//! * evict→reload logits are bitwise-identical to the never-evicted
+//!   path (spectra and plans are deterministic functions of kernel bits);
+//! * `shared_parse_refs` falls on eviction and recovers on reload;
+//! * the resident set never exceeds `max_resident` (hwm ≤ policy);
+//! * shard-disjoint tenants can share one store dir concurrently.
+
+use c3a::peft::init::C3aScheme;
+use c3a::runtime::catalog;
+use c3a::runtime::session::build_init;
+use c3a::runtime::Engine;
+use c3a::serving::{
+    perturb_c3a_kernels as perturb, shard_of, AdapterRegistry, AdapterStore, ResidentPolicy,
+    Scheduler, SchedulerCfg, ShardCtx,
+};
+use c3a::substrate::prng::Rng;
+use c3a::substrate::tensor::{Tensor, TensorMap};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const EVAL: &str = "enc_tiny__c3a_d8__cls__eval";
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("c3a_tiered_{tag}"));
+    let _ = std::fs::remove_dir_all(dir.join("store"));
+    dir
+}
+
+/// Adapter template + (batch, seq) from the synthesized catalog.
+fn template(dir: &Path) -> (TensorMap, usize, usize) {
+    let manifest = catalog::synthesize(dir).unwrap();
+    let spec = manifest.artifact(EVAL).unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier).unwrap();
+    (init.trainable, spec.batch, spec.seq)
+}
+
+/// Registry with residency installed BEFORE registration, so every
+/// tenant starts evicted and the first request is a measured cold start.
+fn build_tiered(
+    dir: &Path,
+    policy: ResidentPolicy,
+    adapters: Vec<(String, TensorMap)>,
+) -> anyhow::Result<AdapterRegistry> {
+    let manifest = catalog::synthesize(dir)?;
+    let spec = manifest.artifact(EVAL)?.clone();
+    let meta = manifest.model("enc_tiny")?.clone();
+    let engine = Engine::for_manifest(&manifest)?;
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(1), C3aScheme::Xavier)?;
+    let mut registry = AdapterRegistry::new(&engine, &spec, &init)?;
+    registry.set_residency(policy, AdapterStore::open(dir.join("store"))?)?;
+    for (name, params) in adapters {
+        registry.register(&name, params)?;
+    }
+    Ok(registry)
+}
+
+fn one_row_batch(seed: i32, b: usize, s: usize) -> Vec<Tensor> {
+    let mut t = vec![0i32; b * s];
+    for j in 0..s as i32 {
+        t[j as usize] = if j == 0 { 1 } else { 4 + ((seed * 13 + j * 7) % 40) };
+    }
+    vec![Tensor::from_i32(vec![b, s], &t)]
+}
+
+/// Every adapter the tiny catalog can synthesize must survive the store
+/// bitwise — not just C3A kernels: every method's trainable map.
+#[test]
+fn store_roundtrips_every_tiny_catalog_adapter_bitwise() {
+    let dir = tmp("catalog_rt");
+    let manifest = catalog::synthesize(&dir).unwrap();
+    let store = AdapterStore::open(dir.join("store")).unwrap();
+    let mut n = 0usize;
+    for (name, spec) in &manifest.artifacts {
+        if spec.model != "enc_tiny" && spec.model != "mlp" {
+            continue;
+        }
+        let meta = manifest.model(&spec.model).unwrap().clone();
+        let base = catalog::init_base_params(&meta);
+        let init = build_init(spec, &base, None, &mut Rng::seed(7), C3aScheme::Xavier).unwrap();
+        store.save(name, (n + 1) as u64, &init.trainable).unwrap();
+        let (back, version) = store.load(name).unwrap();
+        assert_eq!(version, (n + 1) as u64);
+        assert_eq!(back.len(), init.trainable.len(), "{name}: tensor count");
+        for (tname, t) in &init.trainable {
+            assert_eq!(back[tname].shape, t.shape, "{name}/{tname}: shape");
+            assert_eq!(back[tname].bits(), t.bits(), "{name}/{tname}: payload bits");
+        }
+        assert_eq!(back, init.trainable, "{name}: bitwise map equality");
+        n += 1;
+    }
+    assert!(n >= 4, "tiny catalog should expose several adapters, saw {n}");
+}
+
+/// The tentpole invariant: serve → evict → reload → serve is bitwise
+/// identical to the never-evicted path, and the shared parse ref count
+/// falls on eviction and recovers on reload.
+#[test]
+fn evict_reload_is_bitwise_identical_and_releases_the_parse_ref() {
+    let dir = tmp("evict_reload");
+    let (adapter, b, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..2u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
+    let mut registry = build_tiered(&dir, ResidentPolicy::unlimited(), adapters).unwrap();
+    let batch = one_row_batch(3, b, s);
+
+    // lazily registered: nothing resident, only the backbone holds the parse
+    assert_eq!(registry.resident_now(), 0);
+    assert_eq!(registry.shared_parse_refs(), 1);
+
+    let (warm, _, v) = registry.infer("t0", &batch).unwrap();
+    assert_eq!(v, 1);
+    assert_eq!(registry.cold_starts("t0"), Some(1), "first request pays the cold start");
+    assert_eq!(registry.is_resident("t0"), Some(true));
+    assert_eq!(registry.shared_parse_refs(), 2);
+    let (again, _, _) = registry.infer("t0", &batch).unwrap();
+    assert_eq!(warm, again, "warm replay must be deterministic");
+    assert_eq!(registry.upload_count("t0"), Some(1), "warm requests reuse the upload");
+    assert_eq!(registry.cold_start_window().len(), 1);
+
+    registry.evict("t0").unwrap();
+    assert_eq!(registry.is_resident("t0"), Some(false));
+    assert_eq!(registry.evictions("t0"), Some(1));
+    assert_eq!(registry.resident_now(), 0);
+    assert_eq!(registry.shared_parse_refs(), 1, "eviction must drop the session's parse ref");
+    assert!(registry.evict("t0").is_err(), "evicting an evicted tenant must fail");
+
+    let (cold, _, vc) = registry.infer("t0", &batch).unwrap();
+    assert_eq!(vc, 1);
+    assert_eq!(cold, warm, "evict→reload logits must be bitwise-identical");
+    assert_eq!(registry.shared_parse_refs(), 2, "reload must recover the parse ref");
+    assert_eq!(registry.cold_starts("t0"), Some(2));
+    assert_eq!(registry.upload_count("t0"), Some(2), "a cold start re-uploads once");
+    assert_eq!(registry.cold_start_window().len(), 2);
+}
+
+/// `max_resident` is a hard bound enforced before admission, and the
+/// victim is always the least-recently-served resident.
+#[test]
+fn lru_eviction_keeps_the_resident_set_at_policy() {
+    let dir = tmp("lru");
+    let (adapter, b, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..4u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
+    let mut registry = build_tiered(&dir, ResidentPolicy::max_resident(2), adapters).unwrap();
+    let batch = one_row_batch(5, b, s);
+
+    registry.infer("t0", &batch).unwrap();
+    registry.infer("t1", &batch).unwrap();
+    assert_eq!(registry.resident_now(), 2);
+    registry.infer("t2", &batch).unwrap(); // t0 is LRU → evicted
+    assert_eq!(registry.is_resident("t0"), Some(false), "LRU victim must be t0");
+    assert_eq!(registry.is_resident("t1"), Some(true));
+    assert_eq!(registry.is_resident("t2"), Some(true));
+    registry.infer("t0", &batch).unwrap(); // t1 is now LRU → evicted
+    assert_eq!(registry.is_resident("t1"), Some(false), "LRU victim must be t1");
+    assert_eq!(registry.is_resident("t2"), Some(true));
+    registry.infer("t3", &batch).unwrap();
+    assert_eq!(registry.resident_now(), 2);
+    assert_eq!(registry.resident_hwm(), 2, "resident set must never exceed max_resident");
+    assert_eq!(registry.evictions_total(), 3);
+    assert_eq!(registry.cold_starts_total(), 5);
+    // a serving-sized window of cold starts is on the books
+    assert_eq!(registry.cold_start_window().len(), 5);
+    assert!(registry.cold_start_window().iter().all(|&ms| ms >= 0.0));
+}
+
+/// Hot-swapping an evicted tenant writes the new snapshot straight to
+/// the store; the tenant cold-starts at the swapped version and serves
+/// the swapped adapter — bit-stably across a further evict/reload.
+#[test]
+fn hot_swap_on_evicted_tenant_lands_in_the_store() {
+    let dir = tmp("swap_evicted");
+    let (adapter, b, s) = template(&dir);
+    let adapters = vec![
+        ("t0".to_string(), adapter.clone()),
+        ("t1".to_string(), adapter.clone()),
+    ];
+    let mut registry = build_tiered(&dir, ResidentPolicy::max_resident(1), adapters).unwrap();
+    let batch = one_row_batch(7, b, s);
+
+    let (plain, _, _) = registry.infer("t1", &batch).unwrap();
+    registry.infer("t0", &batch).unwrap(); // evicts t1 (max_resident = 1)
+    assert_eq!(registry.is_resident("t1"), Some(false));
+
+    let v = registry.hot_swap("t1", perturb(&adapter, 42, 0.5)).unwrap();
+    assert_eq!(v, 2, "swap on an evicted tenant must still bump the version");
+    let (swapped, _, vs) = registry.infer("t1", &batch).unwrap();
+    assert_eq!(vs, 2);
+    assert_ne!(plain, swapped, "reloaded tenant must serve the swapped adapter");
+
+    // and the swapped state survives another evict/reload bitwise
+    registry.infer("t0", &batch).unwrap();
+    assert_eq!(registry.is_resident("t1"), Some(false));
+    let (reloaded, _, vr) = registry.infer("t1", &batch).unwrap();
+    assert_eq!(vr, 2);
+    assert_eq!(swapped, reloaded, "swapped snapshot must round-trip bitwise");
+}
+
+/// A tiny `bytes_budget` forces eviction as soon as a session's arena +
+/// upload bytes are on the books; the just-served tenant is protected.
+#[test]
+fn bytes_budget_evicts_down_to_the_protected_tenant() {
+    let dir = tmp("bytes");
+    let (adapter, b, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..3u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
+    let policy = ResidentPolicy { max_resident: 0, bytes_budget: 1 };
+    let mut registry = build_tiered(&dir, policy, adapters).unwrap();
+    let batch = one_row_batch(2, b, s);
+    for name in ["t0", "t1", "t2"] {
+        let (logits, _, _) = registry.infer(name, &batch).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert!(
+            registry.resident_now() <= 1,
+            "a 1-byte budget must evict everyone but the protected tenant"
+        );
+        assert_eq!(registry.is_resident(name), Some(true), "{name} was just served");
+    }
+    assert!(registry.resident_bytes() > 0, "the survivor's bytes estimate must be non-zero");
+}
+
+/// `EvalSession::resident_bytes` must grow once a request has recorded a
+/// plan arena + cached an upload — it is what makes the budget honest.
+#[test]
+fn resident_bytes_estimate_grows_after_first_request() {
+    let dir = tmp("bytes_estimate");
+    let (adapter, b, s) = template(&dir);
+    let mut registry =
+        build_tiered(&dir, ResidentPolicy::unlimited(), vec![("t0".into(), adapter)]).unwrap();
+    assert_eq!(registry.resident_bytes(), 0, "nothing resident → nothing counted");
+    registry.infer("t0", &one_row_batch(1, b, s)).unwrap();
+    let after = registry.resident_bytes();
+    // at minimum the uploaded adapter literals + params are counted
+    assert!(after > 0, "resident bytes must be visible after a request, got {after}");
+}
+
+/// Shard workers share one store dir: tenant→shard routing is a
+/// partition, so concurrent per-shard saves can never collide on a file.
+#[test]
+fn concurrent_shard_disjoint_stores_share_one_dir() {
+    let dir = tmp("concurrent");
+    let store_dir = dir.join("store");
+    const SHARDS: usize = 4;
+    const TENANTS: usize = 64;
+    let handles: Vec<_> = (0..SHARDS)
+        .map(|shard| {
+            let store_dir = store_dir.clone();
+            std::thread::spawn(move || {
+                let store = AdapterStore::open(&store_dir).unwrap();
+                for i in 0..TENANTS {
+                    let name = format!("tenant{i}");
+                    if shard_of(&name, SHARDS) != shard {
+                        continue;
+                    }
+                    let mut m = TensorMap::new();
+                    m.insert("w".into(), Tensor::from_f32(vec![8], &[i as f32; 8]));
+                    store.save(&name, i as u64 + 1, &m).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let store = AdapterStore::open(&store_dir).unwrap();
+    for i in 0..TENANTS {
+        let name = format!("tenant{i}");
+        let (m, version) = store.load(&name).unwrap();
+        assert_eq!(version, i as u64 + 1, "{name}: version");
+        assert_eq!(m["w"].as_f32(), vec![i as f32; 8], "{name}: payload");
+    }
+}
+
+/// Full stack under a deliberately tiny policy: the scheduler serves 6
+/// tenants over `max_resident = 2`, so eviction churn happens mid-storm;
+/// the drained stats must carry the residency accounting and the bound.
+#[test]
+fn scheduler_reports_residency_and_cold_starts_under_churn() {
+    let dir = tmp("sched");
+    let (adapter, _b, s) = template(&dir);
+    let adapters: Vec<(String, TensorMap)> =
+        (0..6u64).map(|i| (format!("t{i}"), perturb(&adapter, i, 0.05))).collect();
+    let cfg = SchedulerCfg {
+        shards: 1,
+        queue_cap: 64,
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+    };
+    let sched = Scheduler::spawn(cfg, {
+        let dir = dir.clone();
+        let adapters = adapters.clone();
+        move |_: &ShardCtx| build_tiered(&dir, ResidentPolicy::max_resident(2), adapters.clone())
+    })
+    .unwrap();
+    let handle = sched.handle();
+    let mut tickets = Vec::new();
+    for _round in 0..3 {
+        for i in 0..6 {
+            let toks: Vec<i32> = (0..s as i32).map(|j| 1 + ((i as i32 + j) % 40)).collect();
+            tickets.push(handle.submit(&format!("t{i}"), toks).unwrap());
+        }
+    }
+    for t in tickets {
+        assert!(t.wait().unwrap().logits.iter().all(|x| x.is_finite()));
+    }
+    drop(handle);
+    let stats = sched.finish().unwrap();
+    assert_eq!(stats.served, 18);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.resident_hwm() <= 2, "hwm {} must respect max_resident", stats.resident_hwm());
+    assert!(stats.resident_now() <= 2);
+    assert!(stats.cold_starts >= 6, "every tenant pays at least one cold start");
+    assert!(stats.evictions >= 4, "6 tenants over 2 slots must churn");
+    assert_eq!(stats.cold_start_ms.len() as u64, stats.cold_starts);
+    assert!(stats.cold_start_latency().p95_ms >= 0.0);
+    let resident: usize = stats.tenants.iter().filter(|t| t.resident).count();
+    assert!(resident <= 2, "at most max_resident tenants can drain resident");
+    for t in &stats.tenants {
+        assert_eq!(t.requests, 3);
+        assert!(t.cold_starts >= 1, "{}: must have cold-started", t.name);
+        assert!(
+            (t.uploads as u64) <= 1 + t.cold_starts,
+            "{}: uploads {} vs cold starts {}",
+            t.name,
+            t.uploads,
+            t.cold_starts
+        );
+    }
+}

@@ -70,7 +70,14 @@ if not hard_armed:
 
 # lower-is-better step-time metrics; `hard` carries the >2x gate
 hard = ["step_ms_cached_threaded", "eval_ms_replay"]
-soft = ["step_ms_stateless_single", "eval_ms_rebuild", "p50_ms", "p95_ms", "p99_ms"]
+soft = [
+    "step_ms_stateless_single",
+    "eval_ms_rebuild",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "cold_start_ms_p95",
+]
 rc = 0
 for key in hard + soft:
     b, c = base.get(key), cur.get(key)
@@ -84,6 +91,14 @@ for key in hard + soft:
     elif ratio > WARN:
         tag = "warn (slower)"
     print(f"bench_compare: {cur_path}: {key}: {b:.3f} -> {c:.3f} ({ratio:.2f}x) {tag}")
+
+# capacity gauges; advisory, direction-free (a changed residency policy
+# moves these legitimately — they are printed so drift is visible)
+for key in ["resident_hwm", "cold_starts", "evictions"]:
+    b, c = base.get(key), cur.get(key)
+    if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+        continue
+    print(f"bench_compare: {cur_path}: {key}: {b} -> {c} (gauge)")
 
 # higher-is-better throughput metrics; advisory only
 for key in ["serve_req_per_s", "req_per_s", "c3a_matvec_ops_per_s", "plan_replay_speedup"]:
