@@ -18,6 +18,7 @@ use c3a::runtime::Engine;
 use c3a::substrate::circulant::BlockCirculant;
 use c3a::substrate::parallel;
 use c3a::substrate::prng::Rng;
+use c3a::substrate::simd;
 use c3a::substrate::tensor::Tensor;
 use c3a::xla;
 use std::time::Instant;
@@ -113,6 +114,27 @@ fn main() -> anyhow::Result<()> {
     let speedup = step_ms_single / step_ms_cached;
     println!("cached  multi-thread    : {step_ms_cached:>8.2} ms/step  ({speedup:.2}x)");
 
+    // -- scalar vs SIMD: the same cached session with the vector kernels
+    // forced off (only meaningful when built with --features simd; the
+    // kernels are bitwise identical to scalar, so this measures pure
+    // throughput — docs/DETERMINISM.md § SIMD).
+    let (step_ms_scalar, simd_step_speedup) = if simd::available() && simd::enabled() {
+        let _g = simd::override_lock();
+        simd::set_enabled(false);
+        session.step(&batch, 0.01, 0.0)?; // warmup scalar path
+        let ts = Instant::now();
+        for _ in 0..steps {
+            session.step(&batch, 0.01, 0.0)?;
+        }
+        simd::set_enabled(true);
+        let ms = ts.elapsed().as_secs_f64() * 1e3 / steps as f64;
+        let sx = ms / step_ms_cached;
+        println!("scalar  (C3A_SIMD=0)    : {ms:>8.2} ms/step  (simd {sx:.2}x vs scalar)");
+        (format!("{ms:.3}"), format!("{sx:.3}"))
+    } else {
+        ("null".into(), "null".into())
+    };
+
     // -- serve-style loop: repeated EvalSession::logits with a fixed
     // adapter (trainable upload + frozen parse + spectra + execution plan
     // all reused)
@@ -187,11 +209,19 @@ fn main() -> anyhow::Result<()> {
     let ops_per_s = iters as f64 / t3.elapsed().as_secs_f64();
     println!("c3a matvec d={d} b={blk}  : {ops_per_s:>8.0} ops/s");
 
-    // -- JSON report (no serde offline; fields are flat and numeric)
+    // -- JSON report (no serde offline; fields are flat and numeric).
+    // `features` + `c3a_threads` stamp the measurement config so
+    // bench_compare never hard-gates across unlike configurations
+    // (docs/BENCHMARKS.md).
     let plan_ops = pstats.ops;
     let plan_shared = pstats.shared_buffers;
+    let features = if simd::available() { "simd" } else { "default" };
+    let c3a_threads = match std::env::var("C3A_THREADS") {
+        Ok(v) => format!("\"{v}\""),
+        Err(_) => "null".into(),
+    };
     let json = format!(
-        "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"eval_ms_rebuild\": {eval_ms_rebuild:.3},\n  \"eval_ms_replay\": {eval_ms_replay:.3},\n  \"plan_replay_speedup\": {plan_speedup:.3},\n  \"plan_ops\": {plan_ops},\n  \"plan_shared_buffers\": {plan_shared},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
+        "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"c3a_threads\": {c3a_threads},\n  \"features\": \"{features}\",\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"step_ms_cached_scalar\": {step_ms_scalar},\n  \"simd_step_speedup\": {simd_step_speedup},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"eval_ms_rebuild\": {eval_ms_rebuild:.3},\n  \"eval_ms_replay\": {eval_ms_replay:.3},\n  \"plan_replay_speedup\": {plan_speedup:.3},\n  \"plan_ops\": {plan_ops},\n  \"plan_shared_buffers\": {plan_shared},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
     );
     // cargo bench runs with the package dir as cwd; the bench script sets
     // C3A_BENCH_OUT to pin the report to the repo root

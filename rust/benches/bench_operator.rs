@@ -99,4 +99,54 @@ fn main() {
             dense / lora_us
         );
     }
+
+    // -- dense O(b²) vs FFT block-circulant matvec across block sizes:
+    // the measured basis for BlockCirculant::DENSE_CROSSOVER_B (the
+    // matvec_auto heuristic).  Fixed total dim, b sweeps the divisors;
+    // both paths are deterministic but round differently, so this is a
+    // speed table, not a parity check (docs/DETERMINISM.md §3).
+    let d = if smoke { 256 } else { 512 };
+    println!(
+        "\n== dense-vs-FFT crossover (d = {d}, auto switches at b <= {}) ==",
+        BlockCirculant::DENSE_CROSSOVER_B
+    );
+    println!(
+        "{:<8} {:>12} {:>12} {:>10}  {}",
+        "b",
+        "dense us/op",
+        "fft us/op",
+        "dense/fft",
+        "auto"
+    );
+    for b in [4usize, 8, 16, 32, 64, 128] {
+        if b > d {
+            break;
+        }
+        let m = d / b;
+        let mut rng = Rng::seed(b as u64);
+        let bc = BlockCirculant::new(m, m, b, (0..m * m * b).map(|_| rng.normal()).collect());
+        let p = bc.prepared();
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let (mut yd, mut yf) = (vec![0.0; d], vec![0.0; d]);
+        let iters = if smoke { 20 } else { 50 };
+        let mut quiet_med = |f: &mut dyn FnMut()| -> f64 {
+            for _ in 0..3 {
+                f();
+            }
+            let mut times = Vec::with_capacity(5);
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    f();
+                }
+                times.push(t0.elapsed().as_secs_f64() * 1e6 / iters as f64);
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            times[2]
+        };
+        let dense_us = quiet_med(&mut || bc.matvec_dense_into(&x, &mut yd));
+        let fft_us = quiet_med(&mut || p.matvec_into(&x, &mut yf));
+        let auto = if b <= BlockCirculant::DENSE_CROSSOVER_B { "dense" } else { "fft" };
+        println!("{b:<8} {dense_us:>12.2} {fft_us:>12.2} {:>9.2}x  {auto}", dense_us / fft_us);
+    }
 }

@@ -262,8 +262,13 @@ fn main() -> anyhow::Result<()> {
     // sharded phase; shards=1 rides along as the degradation baseline
     let l4 = s4.latency();
     let c4 = s4.cold_start_latency();
+    let features = if c3a::substrate::simd::available() { "simd" } else { "default" };
+    let c3a_threads = match std::env::var("C3A_THREADS") {
+        Ok(v) => format!("\"{v}\""),
+        Err(_) => "null".into(),
+    };
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"max_resident\": {max_resident},\n  \"zipf_exponent\": {},\n  \"swap_every\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {:.1},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"cold_start_ms_p95\": {:.3},\n  \"resident_hwm\": {},\n  \"cold_starts\": {},\n  \"evictions\": {},\n  \"shards1\": {},\n  \"shards4\": {}\n}}\n",
+        "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"c3a_threads\": {c3a_threads},\n  \"features\": \"{features}\",\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"max_resident\": {max_resident},\n  \"zipf_exponent\": {},\n  \"swap_every\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {:.1},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"cold_start_ms_p95\": {:.3},\n  \"resident_hwm\": {},\n  \"cold_starts\": {},\n  \"evictions\": {},\n  \"shards1\": {},\n  \"shards4\": {}\n}}\n",
         replay.zipf_exponent,
         replay.swap_every,
         r1.trace_hash,

@@ -1,4 +1,5 @@
 //! C3A — Parameter-Efficient Fine-Tuning via Circular Convolution.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 /// Re-export of the execution-literal crate (the in-tree shim by default,
 /// real PJRT bindings when vendored) so tests and downstream tools can
@@ -13,4 +14,5 @@ pub mod data;
 pub mod metrics;
 pub mod peft;
 pub mod serving;
+#[deny(missing_docs)]
 pub mod substrate;

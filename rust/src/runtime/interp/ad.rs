@@ -187,13 +187,23 @@ pub struct Tape {
 /// C[m,n] = A[m,k] · B[k,n] into a caller-owned buffer, row-major.
 /// Output rows are sharded across the substrate pool above a work floor;
 /// each row keeps its sequential accumulation order, so results are
-/// identical at any thread count.
+/// identical at any thread count.  The SIMD microkernel vectorizes
+/// across j only (p stays sequential per element, same `av == 0.0`
+/// whole-row skip), so it is additionally bitwise identical to the
+/// scalar loop — docs/DETERMINISM.md § SIMD.
 fn mm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     c.fill(0.0);
     if m == 0 || n == 0 {
+        return;
+    }
+    #[cfg(feature = "simd")]
+    if crate::substrate::simd::enabled() {
+        parallel::for_rows(c, n, m * k * n >= PAR_MIN_WORK, |i, crow| {
+            crate::substrate::simd::mm_row_f32(crow, &a[i * k..(i + 1) * k], b, n)
+        });
         return;
     }
     let row_mul = |i: usize, crow: &mut [f32]| {
@@ -616,13 +626,7 @@ fn eval_op(nodes: &[Node], op: &Op, out: &mut Arr, scratch: &mut Scratch) {
                         s.acc.clear();
                         s.acc.resize(b, (0f64, 0f64));
                         for j in 0..n {
-                            let wij = &wf[i * n + j];
-                            let xfj = &s.xf[j];
-                            for k in 0..b {
-                                let p = fft::c_mul(wij[k], xfj[k]);
-                                s.acc[k].0 += p.0;
-                                s.acc[k].1 += p.1;
-                            }
+                            fft::cmul_acc(&mut s.acc, &wf[i * n + j], &s.xf[j]);
                         }
                         fft::irfft_into(plan, &s.acc, &mut s.time);
                         for k in 0..b {
@@ -1462,12 +1466,7 @@ impl Tape {
                 for j in 0..n {
                     let mut acc = vec![(0f64, 0f64); b];
                     for i in 0..m {
-                        let wc = &wf_conj[i * n + j];
-                        for k in 0..b {
-                            let p = fft::c_mul(wc[k], dyf[i][k]);
-                            acc[k].0 += p.0;
-                            acc[k].1 += p.1;
-                        }
+                        fft::cmul_acc(&mut acc, &wf_conj[i * n + j], &dyf[i]);
                     }
                     let z = fft::irfft_real(plan, &acc);
                     for k in 0..b {
@@ -1497,13 +1496,8 @@ impl Tape {
                         .collect();
                     for i in 0..m {
                         for j in 0..n {
-                            let xc = &xf_conj[j];
                             let slot = &mut part[(i * n + j) * b..(i * n + j + 1) * b];
-                            for k in 0..b {
-                                let p = fft::c_mul(xc[k], dyf[i][k]);
-                                slot[k].0 += p.0;
-                                slot[k].1 += p.1;
-                            }
+                            fft::cmul_acc(slot, &xf_conj[j], &dyf[i]);
                         }
                     }
                 }

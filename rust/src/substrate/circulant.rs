@@ -7,33 +7,59 @@
 //!   * host-side inference of merged/unmerged adapters (`serve`),
 //!   * the paper's §4.1 *rank* measurements of learned kernels,
 //!   * the Table 1 operator benchmarks.
+//!
+//! # Determinism obligations
+//!
+//! Every matvec shards *output blocks* across the pool (disjoint writes)
+//! and keeps the per-block j-then-k accumulation order fixed, so results
+//! are bit-identical at any `C3A_THREADS` setting; the spectral
+//! accumulate routes through `fft::cmul_acc`, whose SIMD variant is
+//! bitwise the scalar loop.  The FFT path and the dense path
+//! ([`BlockCirculant::matvec_dense`]) are each deterministic but are
+//! *different* rounding sequences — callers pinning bitwise outputs
+//! (the interpreter's C3A op pins FFT) must never switch between them.
+//! docs/DETERMINISM.md is normative.
 
-use super::fft::{self, c_mul, Plan, C};
+use super::fft::{self, Plan, C};
 use super::parallel;
+use std::cell::RefCell;
 
 /// Work floor (roughly m·n·b) below which the block loops stay sequential.
 const PAR_MIN_WORK: usize = 16 * 1024;
 
+thread_local! {
+    /// Doubled-kernel scratch for the dense matvec — thread-local because
+    /// the block loop is sharded across the pool, and per-call allocation
+    /// would break the steady-state allocation budget.
+    static DENSE_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
 /// Kernels of a block-circular operator: `m × n` blocks, each length `b`.
 #[derive(Clone, Debug)]
 pub struct BlockCirculant {
+    /// Output block count (d_out = m·b).
     pub m: usize,
+    /// Input block count (d_in = n·b).
     pub n: usize,
+    /// Block (kernel) length.
     pub b: usize,
-    /// row-major [m][n][b]
+    /// row-major `m` × `n` × `b`
     pub w: Vec<f64>,
 }
 
 impl BlockCirculant {
+    /// Wrap `m·n` kernels of length `b` (row-major, panics on mismatch).
     pub fn new(m: usize, n: usize, b: usize, w: Vec<f64>) -> Self {
         assert_eq!(w.len(), m * n * b);
         Self { m, n, b, w }
     }
 
+    /// All-zero operator of the given block structure.
     pub fn zeros(m: usize, n: usize, b: usize) -> Self {
         Self { m, n, b, w: vec![0.0; m * n * b] }
     }
 
+    /// Kernel of block (i, j).
     #[inline]
     pub fn kernel(&self, i: usize, j: usize) -> &[f64] {
         let o = (i * self.n + j) * self.b;
@@ -45,10 +71,12 @@ impl BlockCirculant {
         self.m * self.n * self.b
     }
 
+    /// Output dimension m·b.
     pub fn d_out(&self) -> usize {
         self.m * self.b
     }
 
+    /// Input dimension n·b.
     pub fn d_in(&self) -> usize {
         self.n * self.b
     }
@@ -74,17 +102,91 @@ impl BlockCirculant {
             let mut acc = vec![(0.0, 0.0); b];
             for j in 0..self.n {
                 let wf = fft::rfft(plan, self.kernel(i, j));
-                for k in 0..b {
-                    let p = c_mul(wf[k], xf[j][k]);
-                    acc[k].0 += p.0;
-                    acc[k].1 += p.1;
-                }
+                fft::cmul_acc(&mut acc, &wf, &xf[j]);
             }
             let zi = fft::irfft_real(plan, &acc);
             out_i.copy_from_slice(&zi);
         };
         parallel::for_rows(&mut out, b, self.m * self.n * b >= PAR_MIN_WORK, block);
         out
+    }
+
+    /// Δz = C_blk(Δw)·x via the dense O(b²)-per-block kernel — no FFT.
+    ///
+    /// For small blocks the FFT path's constants (three length-b
+    /// transforms' worth of complex arithmetic per block pair) dominate
+    /// its O(b log b) asymptotics; the dense kernel streams a doubled
+    /// kernel buffer contiguously instead and wins below
+    /// [`Self::DENSE_CROSSOVER_B`].  Deterministic like every matvec
+    /// here, but a *different* rounding sequence than the FFT path —
+    /// this is a separate opt-in API precisely so bitwise-pinned callers
+    /// (the interpreter's C3A operator) never switch paths implicitly.
+    pub fn matvec_dense(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d_out()];
+        self.matvec_dense_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free dense matvec (the doubled-kernel scratch is
+    /// thread-local).  Output blocks are sharded across the pool; each
+    /// output row's c-ascending accumulation is identical at any thread
+    /// count, and the SIMD kernel (`simd::circ_rows`, 4 rows per
+    /// register with one lane per row) is bitwise the scalar loop.
+    pub fn matvec_dense_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.d_in());
+        assert_eq!(out.len(), self.d_out());
+        let b = self.b;
+        let block = |i: usize, out_i: &mut [f64]| {
+            out_i.fill(0.0);
+            DENSE_SCRATCH.with(|cell| {
+                let mut wd = cell.borrow_mut();
+                wd.clear();
+                wd.resize(2 * b, 0.0);
+                for j in 0..self.n {
+                    let w = self.kernel(i, j);
+                    // doubled kernel: wd[r + b - c] == w[(r + b - c) % b]
+                    // without the modulo, so row loads are contiguous
+                    wd[..b].copy_from_slice(w);
+                    wd[b..].copy_from_slice(w);
+                    let xj = &x[j * b..(j + 1) * b];
+                    #[cfg(feature = "simd")]
+                    if crate::substrate::simd::enabled() {
+                        crate::substrate::simd::circ_rows(out_i, &wd, xj);
+                        continue;
+                    }
+                    for r in 0..b {
+                        let mut acc = 0.0;
+                        for (c, &xv) in xj.iter().enumerate() {
+                            acc += wd[r + b - c] * xv;
+                        }
+                        out_i[r] += acc;
+                    }
+                }
+            });
+        };
+        parallel::for_rows(out, b, self.m * self.n * b * b >= PAR_MIN_WORK, block);
+    }
+
+    /// FFT-vs-dense crossover block length for [`Self::matvec_auto`].
+    ///
+    /// Heuristic, not a contract: on the operator bench the dense kernel
+    /// wins for b at or below roughly this size when kernel spectra are
+    /// not cached (it skips the per-call kernel FFTs entirely and its
+    /// b² inner loop is branch-free and contiguous); with cached spectra
+    /// the FFT path catches up around b ≈ 32.  Re-measure with
+    /// `bench_operator` (crossover table) when tuning.
+    pub const DENSE_CROSSOVER_B: usize = 64;
+
+    /// Heuristic dispatch: the dense kernel at or below
+    /// [`Self::DENSE_CROSSOVER_B`], the FFT path above it.  The two
+    /// paths round differently — callers that pin bitwise outputs must
+    /// call one of them explicitly instead.
+    pub fn matvec_auto(&self, x: &[f64]) -> Vec<f64> {
+        if self.b <= Self::DENSE_CROSSOVER_B {
+            self.matvec_dense(x)
+        } else {
+            self.matvec(x)
+        }
     }
 
     /// Precompute kernel spectra once; then matvecs skip the per-call
@@ -126,15 +228,19 @@ impl BlockCirculant {
 
 /// Spectra-cached operator for the inference hot path.
 pub struct PreparedBlockCirculant {
+    /// Output block count.
     pub m: usize,
+    /// Input block count.
     pub n: usize,
+    /// Block length.
     pub b: usize,
     plan: Plan,
-    /// [m*n] spectra, each of length b
+    /// `m·n` spectra, each of length b
     spectra: Vec<Vec<C>>,
 }
 
 impl PreparedBlockCirculant {
+    /// Spectra-cached FFT matvec (allocating wrapper).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; self.m * self.b];
         self.matvec_into(x, &mut out);
@@ -153,12 +259,7 @@ impl PreparedBlockCirculant {
         let block = |i: usize, out_i: &mut [f64]| {
             let mut acc = vec![(0.0, 0.0); b];
             for j in 0..self.n {
-                let wf = &self.spectra[i * self.n + j];
-                for k in 0..b {
-                    let p = c_mul(wf[k], xf[j][k]);
-                    acc[k].0 += p.0;
-                    acc[k].1 += p.1;
-                }
+                fft::cmul_acc(&mut acc, &self.spectra[i * self.n + j], &xf[j]);
             }
             let zi = fft::irfft_real(&self.plan, &acc);
             out_i.copy_from_slice(&zi);
@@ -184,6 +285,7 @@ pub fn circulant_rank(w: &[f64], tol: f64) -> usize {
     circulant_rank_with(&Plan::new(w.len()), w, tol)
 }
 
+/// [`circulant_rank`] with a reusable plan (hot path of `block_ranks`).
 pub fn circulant_rank_with(plan: &Plan, w: &[f64], tol: f64) -> usize {
     let spec = fft::rfft(plan, w);
     // Relative tolerance against the true max DFT magnitude.  Flooring the
@@ -362,6 +464,70 @@ mod tests {
         let bc = BlockCirculant::new(1, 1, d, (0..d).map(|_| rng.normal()).collect());
         let mat = bc.materialize();
         assert_eq!(dense_rank(&mat, d, d, 1e-9), d); // full rank from d params
+    }
+
+    /// The dense O(b²) path must agree with the FFT path to rounding
+    /// headroom at every shape class (it is a different rounding
+    /// sequence, so equality is approximate by design).
+    #[test]
+    fn dense_matvec_matches_fft_path() {
+        let mut rng = Rng::seed(9);
+        for &(m, n, b) in &[(1usize, 1usize, 1usize), (1, 1, 4), (2, 3, 5), (3, 2, 16), (2, 2, 33)]
+        {
+            let bc = rand_bc(&mut rng, m, n, b);
+            let x: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            let got = bc.matvec_dense(&x);
+            let want = bc.matvec(&x);
+            for (r, (u, v)) in got.iter().zip(&want).enumerate() {
+                assert!((u - v).abs() < 1e-9, "({m},{n},{b}) r={r}: {u} vs {v}");
+            }
+            // the auto heuristic picks one of the two real paths
+            assert_eq!(bc.matvec_auto(&x).len(), got.len());
+        }
+    }
+
+    /// Dense-path thread parity: the block loop crosses the m·n·b² work
+    /// gate and must stay bit-for-bit across thread counts.
+    #[test]
+    fn dense_matvec_threaded_parity() {
+        let _lock = parallel::thread_override_lock();
+        let mut rng = Rng::seed(10);
+        // 4·4·40·40 = 25600 crosses PAR_MIN_WORK = 16384
+        let bc = rand_bc(&mut rng, 4, 4, 40);
+        let x: Vec<f64> = (0..bc.d_in()).map(|_| rng.normal()).collect();
+        let prev = parallel::threads();
+        parallel::set_threads(1);
+        let y1 = bc.matvec_dense(&x);
+        parallel::set_threads(4);
+        let y4 = bc.matvec_dense(&x);
+        parallel::set_threads(prev);
+        assert_eq!(y1, y4, "dense matvec must be bit-for-bit across thread counts");
+    }
+
+    /// Scalar vs SIMD bitwise parity for both the FFT and dense paths,
+    /// including a block length with a sub-tile tail.  Vacuous without
+    /// `--features simd`; the catalog pin lives in tests/simd_parity.rs.
+    #[test]
+    fn matvec_simd_bitwise_parity() {
+        use crate::substrate::simd;
+        let _guard = simd::override_lock();
+        let prev = simd::enabled();
+        let mut rng = Rng::seed(12);
+        for &(m, n, b) in &[(1usize, 1usize, 3usize), (2, 3, 8), (3, 2, 13), (2, 2, 32)] {
+            let bc = rand_bc(&mut rng, m, n, b);
+            let x: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            let run = |on: bool| {
+                simd::set_enabled(on);
+                let fft_y = bc.prepared().matvec(&x);
+                let dense_y = bc.matvec_dense(&x);
+                simd::set_enabled(prev);
+                (fft_y, dense_y)
+            };
+            let (f_scalar, d_scalar) = run(false);
+            let (f_simd, d_simd) = run(true);
+            assert_eq!(f_scalar, f_simd, "fft path diverged at ({m},{n},{b})");
+            assert_eq!(d_scalar, d_simd, "dense path diverged at ({m},{n},{b})");
+        }
     }
 
     #[test]

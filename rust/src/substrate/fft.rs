@@ -4,6 +4,18 @@
 //! (§3.5): circulant matvecs, rank analysis, and adapter merging all run
 //! through here.  Real-input convenience wrappers operate on interleaved
 //! `(re, im)` slices to stay allocation-free on the hot path.
+//!
+//! # Determinism obligations
+//!
+//! A transform's result is a function of its input and `Plan::n` alone —
+//! never of the thread count, the `simd` feature, or the `C3A_SIMD`
+//! switch (docs/DETERMINISM.md is normative).  Concretely: twiddles are
+//! computed once at plan build and only ever *copied* (the per-stage
+//! SIMD tables are copies of the scalar table, not recomputations);
+//! butterflies and pointwise products are elementwise, so the SIMD
+//! kernels in [`crate::substrate::simd`] replay the scalar op order per
+//! element exactly; and the `cmul_*` helpers below are the single
+//! dispatch point every spectral accumulate in the crate goes through.
 
 use std::cell::RefCell;
 use std::f64::consts::PI;
@@ -11,23 +23,77 @@ use std::f64::consts::PI;
 /// A complex number as (re, im) — kept trivially copyable.
 pub type C = (f64, f64);
 
+/// Complex addition (componentwise).
 #[inline]
 pub fn c_add(a: C, b: C) -> C {
     (a.0 + b.0, a.1 + b.1)
 }
 
+/// Complex subtraction (componentwise).
 #[inline]
 pub fn c_sub(a: C, b: C) -> C {
     (a.0 - b.0, a.1 - b.1)
 }
 
+/// Complex multiplication.  This exact operation sequence — two products
+/// and one subtraction for the real part, two products and one addition
+/// for the imaginary part, no FMA — is the contract the SIMD kernels
+/// reproduce bitwise; see `simd::cmul2`.
 #[inline]
 pub fn c_mul(a: C, b: C) -> C {
     (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
 }
 
+/// Pointwise multiply-accumulate `acc[k] += a[k]·b[k]` over equal-length
+/// complex slices — the block-circulant spectral accumulate, and the
+/// single dispatch point for its SIMD variant.  Both paths are bitwise
+/// identical: bins are independent lanes and each bin keeps the scalar
+/// product/sum order (docs/DETERMINISM.md § SIMD).
+pub fn cmul_acc(acc: &mut [C], a: &[C], b: &[C]) {
+    debug_assert!(acc.len() == a.len() && a.len() == b.len());
+    #[cfg(feature = "simd")]
+    if crate::substrate::simd::enabled() {
+        crate::substrate::simd::cmul_acc(acc, a, b);
+        return;
+    }
+    for k in 0..acc.len() {
+        let p = c_mul(a[k], b[k]);
+        acc[k].0 += p.0;
+        acc[k].1 += p.1;
+    }
+}
+
+/// Pointwise multiply `out[k] = a[k]·b[k]` into a disjoint output slice
+/// (Bluestein's chirp products); SIMD-dispatched like [`cmul_acc`].
+pub fn cmul_into(out: &mut [C], a: &[C], b: &[C]) {
+    debug_assert!(out.len() == a.len() && a.len() == b.len());
+    #[cfg(feature = "simd")]
+    if crate::substrate::simd::enabled() {
+        crate::substrate::simd::cmul_into(out, a, b);
+        return;
+    }
+    for k in 0..out.len() {
+        out[k] = c_mul(a[k], b[k]);
+    }
+}
+
+/// In-place pointwise multiply `x[k] = x[k]·y[k]` (convolution-theorem
+/// products); SIMD-dispatched like [`cmul_acc`].
+pub fn cmul_inplace(x: &mut [C], y: &[C]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(feature = "simd")]
+    if crate::substrate::simd::enabled() {
+        crate::substrate::simd::cmul_inplace(x, y);
+        return;
+    }
+    for k in 0..x.len() {
+        x[k] = c_mul(x[k], y[k]);
+    }
+}
+
 /// Twiddle-factor table for a radix-2 FFT of size `n` (power of two).
 pub struct Plan {
+    /// Transform size this plan was built for.
     pub n: usize,
     /// twiddles[k] = exp(-2πik/n) for k < n/2
     twiddles: Vec<C>,
@@ -35,6 +101,12 @@ pub struct Plan {
     rev: Vec<u32>,
     /// Bluestein scratch (None when n is a power of two)
     bluestein: Option<Bluestein>,
+    /// Per-stage contiguous twiddle tables for the SIMD butterflies:
+    /// `stage_tw[s][k] = twiddles[k · step]` for the stage with
+    /// `len = 2^(s+1)` — copies of the scalar table (bit-identical
+    /// factors), laid out unit-stride so the vector loads are contiguous.
+    #[cfg(feature = "simd")]
+    stage_tw: Vec<Vec<C>>,
 }
 
 struct Bluestein {
@@ -61,7 +133,25 @@ impl Plan {
             let rev = (0..n as u32)
                 .map(|i| if bits == 0 { 0 } else { i.reverse_bits() >> (32 - bits) })
                 .collect();
-            Plan { n, twiddles, rev, bluestein: None }
+            #[cfg(feature = "simd")]
+            let stage_tw = {
+                let mut tables = Vec::new();
+                let mut len = 2;
+                while len <= n {
+                    let (half, step) = (len / 2, n / len);
+                    tables.push((0..half).map(|k| twiddles[k * step]).collect());
+                    len <<= 1;
+                }
+                tables
+            };
+            Plan {
+                n,
+                twiddles,
+                rev,
+                bluestein: None,
+                #[cfg(feature = "simd")]
+                stage_tw,
+            }
         } else {
             let m = (2 * n - 1).next_power_of_two();
             let mut chirp = Vec::with_capacity(n);
@@ -85,6 +175,8 @@ impl Plan {
                 twiddles: Vec::new(),
                 rev: Vec::new(),
                 bluestein: Some(Bluestein { m, chirp, b_hat: b, inner }),
+                #[cfg(feature = "simd")]
+                stage_tw: Vec::new(),
             }
         }
     }
@@ -119,6 +211,11 @@ impl Plan {
                 data.swap(i, j);
             }
         }
+        #[cfg(feature = "simd")]
+        if crate::substrate::simd::enabled() {
+            self.radix2_stages_simd(data);
+            return;
+        }
         let mut len = 2;
         while len <= n {
             let half = len / 2;
@@ -138,6 +235,35 @@ impl Plan {
         }
     }
 
+    /// Post-permutation stage loop with `simd::butterfly_stage` on every
+    /// stage with half ≥ 2 bins; the len=2 stage (half = 1, only 1/log₂n
+    /// of the work) keeps the scalar loop.  Twiddles come from the
+    /// per-stage tables copied out of `twiddles` at plan build, and the
+    /// len=2 stage performs the full `w·v` multiply exactly like scalar
+    /// (never a shortcut add) so non-finite inputs propagate identically.
+    #[cfg(feature = "simd")]
+    fn radix2_stages_simd(&self, data: &mut [C]) {
+        let n = self.n;
+        let mut len = 2;
+        let mut stage = 0;
+        while len <= n {
+            if len / 2 >= 2 {
+                crate::substrate::simd::butterfly_stage(data, len, &self.stage_tw[stage]);
+            } else {
+                let mut i = 0;
+                while i < n {
+                    let u = data[i];
+                    let t = c_mul(self.twiddles[0], data[i + 1]);
+                    data[i] = c_add(u, t);
+                    data[i + 1] = c_sub(u, t);
+                    i += 2;
+                }
+            }
+            len <<= 1;
+            stage += 1;
+        }
+    }
+
     fn bluestein_fft(&self, bs: &Bluestein, data: &mut [C]) {
         let n = self.n;
         // Padded work buffer comes from a per-thread arena: Bluestein sits
@@ -150,17 +276,11 @@ impl Plan {
             buf.clear();
             buf.resize(bs.m, (0.0, 0.0));
             let a = &mut buf[..];
-            for k in 0..n {
-                a[k] = c_mul(data[k], bs.chirp[k]);
-            }
+            cmul_into(&mut a[..n], &data[..n], &bs.chirp);
             bs.inner.fft_in_place(a);
-            for (x, y) in a.iter_mut().zip(bs.b_hat.iter()) {
-                *x = c_mul(*x, *y);
-            }
+            cmul_inplace(a, &bs.b_hat);
             bs.inner.ifft_in_place(a);
-            for k in 0..n {
-                data[k] = c_mul(a[k], bs.chirp[k]);
-            }
+            cmul_into(data, &a[..n], &bs.chirp);
         });
     }
 }
@@ -232,15 +352,14 @@ pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
 pub fn circular_convolve_with(plan: &Plan, a: &[f64], b: &[f64]) -> Vec<f64> {
     let mut fa = rfft(plan, a);
     let fb = rfft(plan, b);
-    for (x, y) in fa.iter_mut().zip(fb.iter()) {
-        *x = c_mul(*x, *y);
-    }
+    cmul_inplace(&mut fa, &fb);
     irfft_real(plan, &fa)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::substrate::simd;
 
     fn assert_close(a: &[C], b: &[C], tol: f64) {
         assert_eq!(a.len(), b.len());
@@ -249,8 +368,32 @@ mod tests {
         }
     }
 
-    #[test]
-    fn radix2_matches_naive() {
+    /// Runs a property-test body under BOTH kernel configurations —
+    /// scalar and, when compiled with `--features simd`, the SIMD
+    /// microkernels (same body, same budgets).  Without the feature the
+    /// second pass degenerates to a scalar re-run, which keeps the test
+    /// list identical across configurations.
+    macro_rules! both_configs {
+        ($(#[doc = $doc:expr])* $name:ident, $body:block) => {
+            $(#[doc = $doc])*
+            #[test]
+            fn $name() {
+                let _guard = simd::override_lock();
+                let prev = simd::enabled();
+                for on in [false, true] {
+                    simd::set_enabled(on);
+                    let res = std::panic::catch_unwind(|| $body);
+                    simd::set_enabled(prev);
+                    if let Err(e) = res {
+                        eprintln!("{}: failed with simd enabled = {on}", stringify!($name));
+                        std::panic::resume_unwind(e);
+                    }
+                }
+            }
+        };
+    }
+
+    both_configs!(radix2_matches_naive, {
         for n in [1usize, 2, 4, 8, 64, 256] {
             let x: Vec<C> =
                 (0..n).map(|i| ((i as f64 * 0.7).sin(), (i as f64 * 0.3).cos())).collect();
@@ -260,10 +403,9 @@ mod tests {
             plan.fft_in_place(&mut got);
             assert_close(&got, &want, 1e-9 * (n as f64 + 1.0));
         }
-    }
+    });
 
-    #[test]
-    fn bluestein_matches_naive() {
+    both_configs!(bluestein_matches_naive, {
         for n in [3usize, 5, 6, 7, 12, 48, 100, 192, 320, 768] {
             let x: Vec<C> =
                 (0..n).map(|i| ((i as f64 * 1.1).sin(), (i as f64 * 0.5).sin())).collect();
@@ -273,10 +415,9 @@ mod tests {
             plan.fft_in_place(&mut got);
             assert_close(&got, &want, 1e-8 * (n as f64 + 1.0));
         }
-    }
+    });
 
-    #[test]
-    fn ifft_inverts_fft() {
+    both_configs!(ifft_inverts_fft, {
         for n in [4usize, 7, 16, 100] {
             let x: Vec<C> = (0..n).map(|i| (i as f64, -(i as f64) * 0.5)).collect();
             let plan = Plan::new(n);
@@ -284,6 +425,34 @@ mod tests {
             plan.fft_in_place(&mut y);
             plan.ifft_in_place(&mut y);
             assert_close(&y, &x, 1e-8 * (n as f64 + 1.0));
+        }
+    });
+
+    /// The SIMD transforms must be BITWISE the scalar ones — not merely
+    /// close — at radix-2 and Bluestein sizes, forward and inverse
+    /// (docs/DETERMINISM.md § SIMD; the full-catalog pin lives in
+    /// tests/simd_parity.rs).  Vacuous without `--features simd` (both
+    /// legs run scalar), and kept in the test list so the names match.
+    #[test]
+    fn simd_transforms_bitwise_match_scalar() {
+        let _guard = simd::override_lock();
+        let prev = simd::enabled();
+        for (i, &n) in [1usize, 2, 4, 8, 13, 100, 256, 768, 1024].iter().enumerate() {
+            let x = rand_signal(n, 0x5eed ^ ((i as u64) << 21));
+            let plan = Plan::new(n);
+            let run = |on: bool| {
+                simd::set_enabled(on);
+                let mut fwd = x.clone();
+                plan.fft_in_place(&mut fwd);
+                let mut inv = fwd.clone();
+                plan.ifft_in_place(&mut inv);
+                simd::set_enabled(prev);
+                (fwd, inv)
+            };
+            let (f_scalar, i_scalar) = run(false);
+            let (f_simd, i_simd) = run(true);
+            assert_eq!(f_scalar, f_simd, "forward fft diverged at n={n}");
+            assert_eq!(i_scalar, i_simd, "inverse fft diverged at n={n}");
         }
     }
 
@@ -315,11 +484,10 @@ mod tests {
         2e-14 * stages * bluestein * max_abs.max(1.0)
     }
 
-    /// Randomized ifft∘fft round-trips at the block sizes the C3A operator
-    /// actually sees: degenerate (1, 2), odd/Bluestein (3, 7, 13, 101),
-    /// and large power-of-two (1024, 4096).
-    #[test]
-    fn ifft_roundtrip_randomized_sizes_and_budget() {
+    // Randomized ifft∘fft round-trips at the block sizes the C3A operator
+    // actually sees: degenerate (1, 2), odd/Bluestein (3, 7, 13, 101),
+    // and large power-of-two (1024, 4096).
+    both_configs!(ifft_roundtrip_randomized_sizes_and_budget, {
         for (i, &n) in [1usize, 2, 3, 7, 13, 101, 1024, 4096].iter().enumerate() {
             let x = rand_signal(n, 0x9e3779b97f4a7c15 ^ ((i as u64) << 17));
             let max_abs = x.iter().map(|z| z.0.abs().max(z.1.abs())).fold(0.0, f64::max);
@@ -329,12 +497,11 @@ mod tests {
             plan.ifft_in_place(&mut y);
             assert_close(&y, &x, roundtrip_budget(n, max_abs));
         }
-    }
+    });
 
-    /// The real-signal wrappers (the substrate's actual hot path) must
-    /// also round-trip: irfft_real(rfft(x)) == x under the same budget.
-    #[test]
-    fn rfft_irfft_real_roundtrip() {
+    // The real-signal wrappers (the substrate's actual hot path) must
+    // also round-trip: irfft_real(rfft(x)) == x under the same budget.
+    both_configs!(rfft_irfft_real_roundtrip, {
         for (i, &n) in [1usize, 2, 5, 12, 64, 2048].iter().enumerate() {
             let x: Vec<f64> = rand_signal(n, 0xabcdef ^ ((i as u64) << 9))
                 .into_iter()
@@ -348,7 +515,7 @@ mod tests {
                 assert!((a - b).abs() < tol, "n={n} k={k}: {a} vs {b} (tol {tol})");
             }
         }
-    }
+    });
 
     /// DC normalization pin: the mean of a signal must survive a
     /// round-trip exactly to budget at every size class (this is where a
@@ -379,8 +546,7 @@ mod tests {
         assert!((e_time - e_freq).abs() < 1e-8);
     }
 
-    #[test]
-    fn convolution_theorem_vs_direct() {
+    both_configs!(convolution_theorem_vs_direct, {
         // property-style: seeded sweep over sizes incl non-pow2
         let mut seed = 0x9e3779b97f4a7c15u64;
         let mut next = move || {
@@ -401,13 +567,12 @@ mod tests {
                 assert!((got[t] - want).abs() < 1e-9, "n={n} t={t}");
             }
         }
-    }
+    });
 
-    /// The allocation-free `_into` entry points must be bit-for-bit
-    /// identical to the allocating paths (the replay arena depends on it),
-    /// at radix-2 and Bluestein sizes.
-    #[test]
-    fn into_variants_match_allocating_paths() {
+    // The allocation-free `_into` entry points must be bit-for-bit
+    // identical to the allocating paths (the replay arena depends on it),
+    // at radix-2 and Bluestein sizes.
+    both_configs!(into_variants_match_allocating_paths, {
         for n in [1usize, 2, 7, 13, 16, 100] {
             let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.31).sin()).collect();
             let plan = Plan::new(n);
@@ -424,7 +589,7 @@ mod tests {
                 assert!(z.0 == *w, "irfft_into diverged at n={n} k={k}: {} vs {w}", z.0);
             }
         }
-    }
+    });
 
     #[test]
     fn impulse_response() {

@@ -6,17 +6,25 @@ use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value (numbers are f64, objects are ordered maps).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number, held as f64.
     Num(f64),
+    /// A string (escapes decoded).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; `BTreeMap` keeps key order deterministic.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document; trailing bytes are an error.
     pub fn parse(s: &str) -> Result<Json> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -28,6 +36,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup; `None` for non-objects or missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -35,6 +44,7 @@ impl Json {
         }
     }
 
+    /// Array element lookup; `None` for non-arrays or out-of-range.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -42,6 +52,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -49,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -56,10 +68,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Borrow as an array slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -67,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an object map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -140,14 +155,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Wrap an f64 as a [`Json::Num`].
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Wrap a string as a [`Json::Str`].
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Wrap a vector as a [`Json::Arr`].
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

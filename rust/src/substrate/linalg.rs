@@ -1,12 +1,20 @@
 //! Minimal dense linear algebra for baselines and the Table 1 benches:
 //! LoRA / VeRA delta matvecs, dense matmul, norms.  Row-major f64.
 //!
+//! # Determinism obligations
+//!
 //! `matvec`/`matmul` shard their output rows across the substrate thread
 //! pool above a work threshold.  Rows are disjoint and each row's
 //! accumulation order is unchanged, so results are bit-for-bit identical
-//! at any `C3A_THREADS` setting.
+//! at any `C3A_THREADS` setting.  The SIMD microkernels (behind the
+//! `simd` feature + `C3A_SIMD` switch) vectorize across output columns
+//! (matmul) or put one whole row per lane (matvec) — never splitting a
+//! row's reduction across lanes — so they are additionally bitwise
+//! identical to the scalar loops (docs/DETERMINISM.md is normative).
 
 use super::parallel;
+#[cfg(feature = "simd")]
+use super::simd;
 
 /// Flop-count floor below which row-sharding is not worth the dispatch.
 const PAR_MIN_WORK: usize = 64 * 1024;
@@ -22,6 +30,22 @@ pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64]) -> Vec<f64> {
 
 /// Allocation-free matvec for hot loops (row-sharded when large).
 pub fn matvec_into(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+    #[cfg(feature = "simd")]
+    if simd::enabled() {
+        let y = &mut y[..rows];
+        if rows * cols >= PAR_MIN_WORK && rows >= 2 && parallel::threads() > 1 {
+            // 4-row register tiles: chunk on a multiple of 4 so only the
+            // final span carries a sub-tile tail (the tail rows compute
+            // the identical c-ascending dot either way)
+            let chunk = parallel::row_chunk(rows, 4).next_multiple_of(4);
+            parallel::par_chunks_mut(y, chunk, |ci, span| {
+                simd::matvec_span_f64(span, a, x, ci * chunk)
+            });
+        } else {
+            simd::matvec_span_f64(y, a, x, 0);
+        }
+        return;
+    }
     let row_dot = |r: usize| -> f64 {
         let row = &a[r * cols..(r + 1) * cols];
         let mut acc = 0.0;
@@ -37,10 +61,18 @@ pub fn matvec_into(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]
 
 /// C = A·B, A is m×k, B is k×n (row-major).  Output rows are sharded
 /// across the pool; each row keeps its sequential p-loop, so the result
-/// does not depend on the thread count.
+/// does not depend on the thread count (nor on the SIMD switch — the
+/// microkernel vectorizes across j only).
 pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     let mut c = vec![0.0; m * n];
     if m == 0 || n == 0 {
+        return c;
+    }
+    #[cfg(feature = "simd")]
+    if simd::enabled() {
+        parallel::for_rows(&mut c, n, m * k * n >= PAR_MIN_WORK, |i, crow| {
+            simd::mm_row_f64(crow, &a[i * k..(i + 1) * k], b, n)
+        });
         return c;
     }
     let row_mul = |i: usize, crow: &mut [f64]| {
@@ -61,15 +93,22 @@ pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
 
 /// LoRA delta matvec: y = B·(A·x); A r×d_in, B d_out×r.
 pub struct LoRaDelta {
+    /// Down-projection A, row-major r×d_in.
     pub a: Vec<f64>,
+    /// Up-projection B, row-major d_out×r.
     pub b: Vec<f64>,
+    /// LoRA rank.
     pub r: usize,
+    /// Input dimension.
     pub d_in: usize,
+    /// Output dimension.
     pub d_out: usize,
+    /// Post-scale (α/r in the paper's convention).
     pub scale: f64,
 }
 
 impl LoRaDelta {
+    /// Δy = scale·B·(A·x).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         let hidden = matvec(&self.a, self.r, self.d_in, x);
         let mut y = matvec(&self.b, self.d_out, self.r, &hidden);
@@ -79,6 +118,7 @@ impl LoRaDelta {
         y
     }
 
+    /// Allocation-free [`Self::matvec`] with caller-owned buffers.
     pub fn matvec_into(&self, x: &[f64], hidden: &mut [f64], y: &mut [f64]) {
         matvec_into(&self.a, self.r, self.d_in, x, hidden);
         matvec_into(&self.b, self.d_out, self.r, hidden, y);
@@ -99,16 +139,24 @@ impl LoRaDelta {
 
 /// VeRA delta matvec: y = λb ∘ (B·(λd ∘ (A·x))); frozen A (r_v×d_in), B (d_out×r_v).
 pub struct VeraDelta {
+    /// Frozen shared down-projection A, row-major r_v×d_in.
     pub a: Vec<f64>,
+    /// Frozen shared up-projection B, row-major d_out×r_v.
     pub b: Vec<f64>,
+    /// Trainable hidden scaling λd (length r_v).
     pub ld: Vec<f64>,
+    /// Trainable output scaling λb (length d_out).
     pub lb: Vec<f64>,
+    /// VeRA rank.
     pub r_v: usize,
+    /// Input dimension.
     pub d_in: usize,
+    /// Output dimension.
     pub d_out: usize,
 }
 
 impl VeraDelta {
+    /// Δy = λb ∘ (B·(λd ∘ (A·x))).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         let mut h = matvec(&self.a, self.r_v, self.d_in, x);
         for (v, s) in h.iter_mut().zip(&self.ld) {
@@ -122,14 +170,17 @@ impl VeraDelta {
     }
 }
 
+/// Sequential dot product (analysis/test use; not SIMD-dispatched).
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Euclidean norm via [`dot`].
 pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
+/// Largest elementwise absolute difference between two slices.
 pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
 }
@@ -273,6 +324,36 @@ mod tests {
         assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
         assert_eq!(argmax(&[]), 0);
         assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN]), 0);
+    }
+
+    /// Scalar vs SIMD microkernels must agree BITWISE — including sizes
+    /// with scalar tails (n not a multiple of the lane tile) and a
+    /// sparse A exercising the zero-skip.  Vacuous without
+    /// `--features simd` (both legs run scalar); the catalog-level pin
+    /// lives in tests/simd_parity.rs.
+    #[test]
+    fn matvec_matmul_simd_bitwise_parity() {
+        use crate::substrate::simd;
+        let _guard = simd::override_lock();
+        let prev = simd::enabled();
+        let mut rng = Rng::seed(11);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (8, 16, 33), (16, 9, 40)] {
+            let mut a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            for v in a.iter_mut().step_by(3) {
+                *v = 0.0; // exercise the av == 0.0 skip on both paths
+            }
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            simd::set_enabled(false);
+            let c_scalar = matmul(&a, &b, m, k, n);
+            let y_scalar = matvec(&a, m, k, &x);
+            simd::set_enabled(true);
+            let c_simd = matmul(&a, &b, m, k, n);
+            let y_simd = matvec(&a, m, k, &x);
+            simd::set_enabled(prev);
+            assert_eq!(c_scalar, c_simd, "matmul diverged at ({m},{k},{n})");
+            assert_eq!(y_scalar, y_simd, "matvec diverged at ({m},{k})");
+        }
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! paper contributes), exact rank analysis, PRNG for adapter/projection
 //! initialization, dense linear algebra for baselines, and the JSON /
 //! config parsers (no serde available offline — see DESIGN.md §3).
+//!
+//! Every numeric routine in this layer is bound by the bit-determinism
+//! contract in docs/DETERMINISM.md: same artifact + inputs produce
+//! bitwise-identical results at any thread count, and (when the `simd`
+//! feature is compiled) with the vector kernels on or off.
 
 pub mod circulant;
 pub mod fft;
@@ -13,5 +18,6 @@ pub mod linalg;
 pub mod parallel;
 pub mod polynomial;
 pub mod prng;
+pub mod simd;
 pub mod tensor;
 pub mod toml;

@@ -11,8 +11,10 @@
 /// normalized in `Poly::gcd`, which keeps magnitudes small in practice).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Rat {
+    /// Numerator (carries the sign).
     pub num: i128,
-    pub den: i128, // > 0
+    /// Denominator, always > 0.
+    pub den: i128,
 }
 
 fn gcd_i128(a: i128, b: i128) -> i128 {
@@ -26,10 +28,12 @@ fn gcd_i128(a: i128, b: i128) -> i128 {
 }
 
 impl Rat {
+    /// The integer `n` as a rational.
     pub fn int(n: i64) -> Self {
         Self { num: n as i128, den: 1 }
     }
 
+    /// num/den reduced to lowest terms with a positive denominator.
     pub fn new(num: i128, den: i128) -> Self {
         assert!(den != 0);
         let sign = if den < 0 { -1 } else { 1 };
@@ -37,22 +41,27 @@ impl Rat {
         Self { num: sign * num / g, den: sign * den / g }
     }
 
+    /// Whether this is exactly zero.
     pub fn is_zero(self) -> bool {
         self.num == 0
     }
 
+    /// Exact sum.
     pub fn add(self, o: Rat) -> Rat {
         Rat::new(self.num * o.den + o.num * self.den, self.den * o.den)
     }
 
+    /// Exact difference.
     pub fn sub(self, o: Rat) -> Rat {
         Rat::new(self.num * o.den - o.num * self.den, self.den * o.den)
     }
 
+    /// Exact product.
     pub fn mul(self, o: Rat) -> Rat {
         Rat::new(self.num * o.num, self.den * o.den)
     }
 
+    /// Exact quotient; panics on division by zero.
     pub fn div(self, o: Rat) -> Rat {
         assert!(!o.is_zero());
         Rat::new(self.num * o.den, self.den * o.num)
@@ -62,10 +71,12 @@ impl Rat {
 /// Dense polynomial over Q; coeffs[i] multiplies x^i.  Always trimmed.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Poly {
+    /// Coefficients, low degree first; trailing zeros trimmed by `new`.
     pub coeffs: Vec<Rat>,
 }
 
 impl Poly {
+    /// Build from coefficients, trimming trailing zeros (zero keeps one).
     pub fn new(mut coeffs: Vec<Rat>) -> Self {
         while coeffs.len() > 1 && coeffs.last().is_some_and(|c| c.is_zero()) {
             coeffs.pop();
@@ -76,18 +87,22 @@ impl Poly {
         Self { coeffs }
     }
 
+    /// Polynomial with the given integer coefficients (low degree first).
     pub fn from_ints(v: &[i64]) -> Self {
         Self::new(v.iter().map(|&n| Rat::int(n)).collect())
     }
 
+    /// The zero polynomial.
     pub fn zero() -> Self {
         Self::from_ints(&[0])
     }
 
+    /// Whether this is the zero polynomial.
     pub fn is_zero(&self) -> bool {
         self.coeffs.len() == 1 && self.coeffs[0].is_zero()
     }
 
+    /// Degree (0 for constants, including zero).
     pub fn degree(&self) -> usize {
         self.coeffs.len() - 1
     }

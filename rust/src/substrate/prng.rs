@@ -3,6 +3,14 @@
 //! adapter initialization (incl. the paper's Fig. 3 schemes), VeRA's frozen
 //! projections, synthetic dataset generation, and shuffling — so every
 //! experiment is reproducible from a single seed.
+//!
+//! # Determinism obligations
+//!
+//! Draw sequences are part of the bit-determinism contract
+//! (docs/DETERMINISM.md): a given seed must produce the same byte-for-byte
+//! stream on every platform and at every thread count.  Never sample from
+//! a shared `Rng` inside parallel code — fork per-unit streams first
+//! ([`Rng::fork`]) so the consumption order is schedule-independent.
 
 /// FNV-1a offset basis (the empty-input hash / fold seed).
 pub const FNV1A_OFFSET: u64 = 0xcbf29ce484222325;
@@ -46,6 +54,8 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the generator: four splitmix64 draws initialize the
+    /// xoshiro256** state, so nearby seeds still give decorrelated streams.
     pub fn seed(seed: u64) -> Self {
         let mut sm = seed;
         let s =
@@ -58,6 +68,7 @@ impl Rng {
         Rng::seed(self.next_u64() ^ tag.wrapping_mul(0xd1342543de82ef95))
     }
 
+    /// Next raw 64-bit draw (xoshiro256** update).
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -106,10 +117,12 @@ impl Rng {
         }
     }
 
+    /// `n` draws from N(0, std²), rounded to f32 (parameter init).
     pub fn normal_vec(&mut self, n: usize, std: f64) -> Vec<f32> {
         (0..n).map(|_| (self.normal() * std) as f32).collect()
     }
 
+    /// `n` uniform draws from [lo, hi), rounded to f32 (parameter init).
     pub fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f32> {
         (0..n).map(|_| self.range(lo, hi) as f32).collect()
     }

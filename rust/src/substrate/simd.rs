@@ -1,0 +1,391 @@
+//! Portable-SIMD microkernels behind the `simd` cargo feature, plus the
+//! process-wide runtime switch (`C3A_SIMD`) that selects them.
+//!
+//! # Determinism obligations
+//!
+//! Every kernel in this module is **bitwise identical** to the scalar
+//! reference loop it replaces (the normative statement lives in
+//! `docs/DETERMINISM.md` § SIMD).  That is only possible because the
+//! kernels obey two rules:
+//!
+//! 1. **Lanes map to independent output elements.**  A vector lane never
+//!    participates in another lane's reduction: the matmul vectorizes
+//!    across output columns, the matvec and dense circulant across
+//!    output rows, the FFT butterflies and spectral accumulates across
+//!    frequency bins.  Per output element the sequence of IEEE-754
+//!    operations — and therefore every intermediate rounding — is
+//!    exactly the scalar path's.
+//! 2. **No contraction, no reassociation.**  `a * b + c` stays a rounded
+//!    multiply followed by a rounded add (`std::simd` never contracts to
+//!    FMA), dot-product-style reductions keep the scalar accumulation
+//!    order by putting whole rows in single lanes, and no horizontal
+//!    lane sum exists anywhere in this module.
+//!
+//! The switch: with the feature compiled in, the kernels are ON unless
+//! the process started with `C3A_SIMD=0`; [`set_enabled`] flips the
+//! choice at runtime (used by `tests/simd_parity.rs` and
+//! `benches/bench_interp.rs` to compare both paths inside one process).
+//! Without the feature, [`enabled`] is a constant `false`, the kernels
+//! are not compiled, and the build's numerics are untouched.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// True when the crate was built with `--features simd` — the kernels
+/// exist — independent of the runtime switch.
+pub fn available() -> bool {
+    cfg!(feature = "simd")
+}
+
+#[cfg(feature = "simd")]
+fn cell() -> &'static std::sync::atomic::AtomicBool {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::OnceLock;
+    static CELL: OnceLock<AtomicBool> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let on = std::env::var("C3A_SIMD").map(|v| v != "0").unwrap_or(true);
+        AtomicBool::new(on)
+    })
+}
+
+/// True when the SIMD kernels are compiled in *and* switched on.
+/// Constant `false` without the `simd` feature, so every dispatch site
+/// folds back to the scalar path at compile time.
+#[inline]
+pub fn enabled() -> bool {
+    #[cfg(feature = "simd")]
+    {
+        cell().load(std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        false
+    }
+}
+
+/// Flip the process-wide SIMD switch.  Never changes results — the
+/// kernels are bitwise identical to the scalar loops — only which code
+/// runs.  A no-op without the `simd` feature (the scalar build has
+/// nothing to switch to).
+pub fn set_enabled(on: bool) {
+    #[cfg(feature = "simd")]
+    cell().store(on, std::sync::atomic::Ordering::Relaxed);
+    #[cfg(not(feature = "simd"))]
+    let _ = on;
+}
+
+/// Serializes tests and benches that toggle [`set_enabled`]: the switch
+/// is process-global, so concurrent toggles in one test binary would
+/// race each other.  When also overriding thread counts, take
+/// `parallel::thread_override_lock` first, then this.
+pub fn override_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(feature = "simd")]
+pub use kernels::{
+    butterfly_stage, circ_rows, cmul_acc, cmul_inplace, cmul_into, matvec_span_f64, mm_row_f32,
+    mm_row_f64,
+};
+
+#[cfg(feature = "simd")]
+mod kernels {
+    use crate::substrate::fft::{c_mul, C};
+    use std::simd::{f32x8, f64x4, simd_swizzle};
+
+    // The interleaved [re, im, re, im, ...] f64 view of a complex slice
+    // relies on `(f64, f64)` putting `.0` at offset 0 and `.1` at
+    // offset 8.  Checked against bit patterns of 1.0 / 2.0 so a layout
+    // change fails the build, not the numerics.
+    const _: () = {
+        assert!(std::mem::size_of::<C>() == 16 && std::mem::align_of::<C>() == 8);
+        let bits = unsafe { std::mem::transmute::<C, [u64; 2]>((1.0, 2.0)) };
+        assert!(bits[0] == 0x3ff0000000000000 && bits[1] == 0x4000000000000000);
+    };
+
+    #[inline(always)]
+    fn re_im(z: &[C]) -> &[f64] {
+        // SAFETY: layout checked by the const assertion above; the view
+        // has twice the length and f64 alignment.
+        unsafe { std::slice::from_raw_parts(z.as_ptr().cast::<f64>(), z.len() * 2) }
+    }
+
+    #[inline(always)]
+    fn re_im_mut(z: &mut [C]) -> &mut [f64] {
+        // SAFETY: as `re_im`; the borrow is exclusive.
+        unsafe { std::slice::from_raw_parts_mut(z.as_mut_ptr().cast::<f64>(), z.len() * 2) }
+    }
+
+    /// Two complex products per register; lanes are `[re0, im0, re1, im1]`.
+    /// Per pair this expands to exactly the scalar `fft::c_mul` sequence:
+    /// `re = a.0·b.0 + (−(a.1·b.1))` (IEEE addition of a negated operand
+    /// *is* subtraction) and `im = a.0·b.1 + a.1·b.0` — same products,
+    /// same add order, bitwise the scalar result.
+    #[inline(always)]
+    fn cmul2(a: f64x4, b: f64x4) -> f64x4 {
+        let re = simd_swizzle!(a, [0, 0, 2, 2]);
+        let im = simd_swizzle!(a, [1, 1, 3, 3]);
+        let sw = simd_swizzle!(b, [1, 0, 3, 2]);
+        re * b + im * sw * f64x4::from_array([-1.0, 1.0, -1.0, 1.0])
+    }
+
+    /// One output row of the f32 matmul: `crow[j] = Σ_p arow[p]·b[p·n+j]`
+    /// with `j` vectorized 8 wide (4 accumulator registers = a 32-column
+    /// tile held in registers across the whole `p` loop), `p` strictly
+    /// ascending per element, and the scalar path's whole-row
+    /// `a == 0.0` skip — bitwise identical to the scalar row loop in
+    /// `runtime::interp`'s `mm_into`.
+    pub fn mm_row_f32(crow: &mut [f32], arow: &[f32], b: &[f32], n: usize) {
+        const W: usize = 8;
+        const TILE: usize = 4 * W;
+        debug_assert_eq!(crow.len(), n);
+        debug_assert_eq!(b.len(), arow.len() * n);
+        let mut j = 0;
+        while j + TILE <= n {
+            let mut c0 = f32x8::splat(0.0);
+            let mut c1 = f32x8::splat(0.0);
+            let mut c2 = f32x8::splat(0.0);
+            let mut c3 = f32x8::splat(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n + j..p * n + j + TILE];
+                let a = f32x8::splat(av);
+                c0 = c0 + a * f32x8::from_slice(&brow[..W]);
+                c1 = c1 + a * f32x8::from_slice(&brow[W..2 * W]);
+                c2 = c2 + a * f32x8::from_slice(&brow[2 * W..3 * W]);
+                c3 = c3 + a * f32x8::from_slice(&brow[3 * W..]);
+            }
+            c0.copy_to_slice(&mut crow[j..j + W]);
+            c1.copy_to_slice(&mut crow[j + W..j + 2 * W]);
+            c2.copy_to_slice(&mut crow[j + 2 * W..j + 3 * W]);
+            c3.copy_to_slice(&mut crow[j + 3 * W..j + TILE]);
+            j += TILE;
+        }
+        while j + W <= n {
+            let mut c0 = f32x8::splat(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                c0 = c0 + f32x8::splat(av) * f32x8::from_slice(&b[p * n + j..p * n + j + W]);
+            }
+            c0.copy_to_slice(&mut crow[j..j + W]);
+            j += W;
+        }
+        for jj in j..n {
+            let mut acc = 0.0f32;
+            for (p, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    acc += av * b[p * n + jj];
+                }
+            }
+            crow[jj] = acc;
+        }
+    }
+
+    /// One output row of the f64 matmul (`substrate::linalg::matmul`),
+    /// structured exactly like [`mm_row_f32`] with 4-wide f64 lanes.
+    pub fn mm_row_f64(crow: &mut [f64], arow: &[f64], b: &[f64], n: usize) {
+        const W: usize = 4;
+        const TILE: usize = 4 * W;
+        debug_assert_eq!(crow.len(), n);
+        debug_assert_eq!(b.len(), arow.len() * n);
+        let mut j = 0;
+        while j + TILE <= n {
+            let mut c0 = f64x4::splat(0.0);
+            let mut c1 = f64x4::splat(0.0);
+            let mut c2 = f64x4::splat(0.0);
+            let mut c3 = f64x4::splat(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n + j..p * n + j + TILE];
+                let a = f64x4::splat(av);
+                c0 = c0 + a * f64x4::from_slice(&brow[..W]);
+                c1 = c1 + a * f64x4::from_slice(&brow[W..2 * W]);
+                c2 = c2 + a * f64x4::from_slice(&brow[2 * W..3 * W]);
+                c3 = c3 + a * f64x4::from_slice(&brow[3 * W..]);
+            }
+            c0.copy_to_slice(&mut crow[j..j + W]);
+            c1.copy_to_slice(&mut crow[j + W..j + 2 * W]);
+            c2.copy_to_slice(&mut crow[j + 2 * W..j + 3 * W]);
+            c3.copy_to_slice(&mut crow[j + 3 * W..j + TILE]);
+            j += TILE;
+        }
+        while j + W <= n {
+            let mut c0 = f64x4::splat(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                c0 = c0 + f64x4::splat(av) * f64x4::from_slice(&b[p * n + j..p * n + j + W]);
+            }
+            c0.copy_to_slice(&mut crow[j..j + W]);
+            j += W;
+        }
+        for jj in j..n {
+            let mut acc = 0.0f64;
+            for (p, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    acc += av * b[p * n + jj];
+                }
+            }
+            crow[jj] = acc;
+        }
+    }
+
+    /// A span of f64 matvec output rows, 4 rows per register with one
+    /// *lane per row*: lane `r` accumulates `y[r] = Σ_c a[r][c]·x[c]`
+    /// with `c` strictly ascending, replaying the scalar row dot exactly
+    /// — the reduction is never split across lanes.  `base_row` locates
+    /// the span inside `a` when the caller shards `y`.
+    pub fn matvec_span_f64(y: &mut [f64], a: &[f64], x: &[f64], base_row: usize) {
+        let cols = x.len();
+        let rows = y.len();
+        let mut r = 0;
+        while r + 4 <= rows {
+            let r0 = (base_row + r) * cols;
+            let row0 = &a[r0..r0 + cols];
+            let row1 = &a[r0 + cols..r0 + 2 * cols];
+            let row2 = &a[r0 + 2 * cols..r0 + 3 * cols];
+            let row3 = &a[r0 + 3 * cols..r0 + 4 * cols];
+            let mut acc = f64x4::splat(0.0);
+            for (c, &xv) in x.iter().enumerate() {
+                let col = f64x4::from_array([row0[c], row1[c], row2[c], row3[c]]);
+                acc = acc + col * f64x4::splat(xv);
+            }
+            acc.copy_to_slice(&mut y[r..r + 4]);
+            r += 4;
+        }
+        for rr in r..rows {
+            let row = &a[(base_row + rr) * cols..(base_row + rr + 1) * cols];
+            let mut acc = 0.0;
+            for (v, xv) in row.iter().zip(x.iter()) {
+                acc += v * xv;
+            }
+            y[rr] = acc;
+        }
+    }
+
+    /// Pointwise complex multiply-accumulate `acc[k] += a[k]·b[k]`, two
+    /// bins per register.  Bins are independent lanes, so per bin the
+    /// products and both running sums round exactly as the scalar loop
+    /// in `fft::cmul_acc`.
+    pub fn cmul_acc(acc: &mut [C], a: &[C], b: &[C]) {
+        let pairs = acc.len() / 2;
+        let (af, bf, accf) = (re_im(a), re_im(b), re_im_mut(acc));
+        for k in 0..pairs {
+            let o = 4 * k;
+            let av = f64x4::from_slice(&af[o..o + 4]);
+            let bv = f64x4::from_slice(&bf[o..o + 4]);
+            let cur = f64x4::from_slice(&accf[o..o + 4]);
+            (cur + cmul2(av, bv)).copy_to_slice(&mut accf[o..o + 4]);
+        }
+        for i in 2 * pairs..acc.len() {
+            let p = c_mul(a[i], b[i]);
+            acc[i].0 += p.0;
+            acc[i].1 += p.1;
+        }
+    }
+
+    /// Pointwise complex multiply `out[k] = a[k]·b[k]`, two bins per
+    /// register; bitwise the scalar `fft::c_mul` per bin.
+    pub fn cmul_into(out: &mut [C], a: &[C], b: &[C]) {
+        let pairs = out.len() / 2;
+        {
+            let (af, bf) = (re_im(a), re_im(b));
+            let of = re_im_mut(out);
+            for k in 0..pairs {
+                let o = 4 * k;
+                let av = f64x4::from_slice(&af[o..o + 4]);
+                let bv = f64x4::from_slice(&bf[o..o + 4]);
+                cmul2(av, bv).copy_to_slice(&mut of[o..o + 4]);
+            }
+        }
+        for i in 2 * pairs..out.len() {
+            out[i] = c_mul(a[i], b[i]);
+        }
+    }
+
+    /// In-place pointwise complex multiply `x[k] = x[k]·y[k]`, two bins
+    /// per register; bitwise the scalar `fft::c_mul` per bin.
+    pub fn cmul_inplace(x: &mut [C], y: &[C]) {
+        let pairs = x.len() / 2;
+        {
+            let yf = re_im(y);
+            let xf = re_im_mut(x);
+            for k in 0..pairs {
+                let o = 4 * k;
+                let xv = f64x4::from_slice(&xf[o..o + 4]);
+                let yv = f64x4::from_slice(&yf[o..o + 4]);
+                cmul2(xv, yv).copy_to_slice(&mut xf[o..o + 4]);
+            }
+        }
+        for i in 2 * pairs..x.len() {
+            x[i] = c_mul(x[i], y[i]);
+        }
+    }
+
+    /// Every radix-2 butterfly of one FFT stage (`len = 2·half`,
+    /// `half ≥ 2`): for each block and bin `k`,
+    /// `t = w[k]·data[i+k+half]`, `data[i+k] = u + t`,
+    /// `data[i+k+half] = u − t`, two bins per register.  The twiddles in
+    /// `tw` are *copies* of the scalar table (never recomputed) and the
+    /// per-bin op order matches the scalar stage loop in `fft::Plan`.
+    pub fn butterfly_stage(data: &mut [C], len: usize, tw: &[C]) {
+        let half = len / 2;
+        debug_assert!(half >= 2 && half % 2 == 0, "scalar caller handles the len=2 stage");
+        debug_assert_eq!(tw.len(), half);
+        let n = data.len();
+        let twf = re_im(tw);
+        let df = re_im_mut(data);
+        let mut i = 0;
+        while i < n {
+            let (lo, hi) = (2 * i, 2 * (i + half));
+            let mut k = 0;
+            while k < 2 * half {
+                let w = f64x4::from_slice(&twf[k..k + 4]);
+                let u = f64x4::from_slice(&df[lo + k..lo + k + 4]);
+                let v = f64x4::from_slice(&df[hi + k..hi + k + 4]);
+                let t = cmul2(w, v);
+                (u + t).copy_to_slice(&mut df[lo + k..lo + k + 4]);
+                (u - t).copy_to_slice(&mut df[hi + k..hi + k + 4]);
+                k += 4;
+            }
+            i += len;
+        }
+    }
+
+    /// Dense circulant block accumulate `z[r] += Σ_c wd[r+b−c]·x[c]`
+    /// where `wd` is the doubled kernel (`wd[i] = w[i mod b]`, length
+    /// `2b`) and `b = z.len()`.  Four output rows per register, one lane
+    /// per row, `c` ascending — each lane replays the scalar dense row
+    /// sum in `circulant::matvec_dense_into` exactly.
+    pub fn circ_rows(z: &mut [f64], wd: &[f64], x: &[f64]) {
+        let b = z.len();
+        debug_assert_eq!(wd.len(), 2 * b);
+        debug_assert_eq!(x.len(), b);
+        let mut r = 0;
+        while r + 4 <= b {
+            let mut acc = f64x4::splat(0.0);
+            for (c, &xv) in x.iter().enumerate() {
+                let base = r + b - c;
+                let col = f64x4::from_slice(&wd[base..base + 4]);
+                acc = acc + col * f64x4::splat(xv);
+            }
+            let zc = f64x4::from_slice(&z[r..r + 4]);
+            (zc + acc).copy_to_slice(&mut z[r..r + 4]);
+            r += 4;
+        }
+        for rr in r..b {
+            let mut acc = 0.0;
+            for (c, &xv) in x.iter().enumerate() {
+                acc += wd[rr + b - c] * xv;
+            }
+            z[rr] += acc;
+        }
+    }
+}

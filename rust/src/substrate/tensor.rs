@@ -8,13 +8,17 @@ use std::io::{Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
+/// Element type of a [`Tensor`] (the C3AT container carries only these).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE 754 float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 impl DType {
+    /// Wire code used in the C3AT header (0 = f32, 1 = i32).
     pub fn code(self) -> u8 {
         match self {
             DType::F32 => 0,
@@ -22,6 +26,7 @@ impl DType {
         }
     }
 
+    /// Inverse of [`DType::code`]; errors on unknown codes.
     pub fn from_code(c: u8) -> Result<Self> {
         Ok(match c {
             0 => DType::F32,
@@ -41,7 +46,9 @@ impl DType {
 /// store persistence), so `clone` shares storage instead of deep-copying.
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// Element type of the payload.
     pub dtype: DType,
+    /// Row-major dimensions; empty for scalars (payload length 1).
     pub shape: Vec<usize>,
     /// f32 storage (bit-cast for i32), shared across clones
     data: Arc<Vec<u32>>,
@@ -56,18 +63,22 @@ impl PartialEq for Tensor {
 }
 
 impl Tensor {
+    /// Build an f32 tensor; `values.len()` must equal the shape's element
+    /// count (1 for scalars).
     pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
         assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
         let data = Arc::new(values.iter().map(|v| v.to_bits()).collect());
         Self { dtype: DType::F32, shape, data }
     }
 
+    /// Build an i32 tensor; same length rule as [`Tensor::from_f32`].
     pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
         assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
         let data = Arc::new(values.iter().map(|&v| v as u32).collect());
         Self { dtype: DType::I32, shape, data }
     }
 
+    /// All-zeros f32 tensor of the given shape.
     pub fn zeros_f32(shape: Vec<usize>) -> Self {
         let n = shape.iter().product::<usize>().max(1);
         Self { dtype: DType::F32, shape, data: Arc::new(vec![0u32; n]) }
@@ -85,19 +96,23 @@ impl Tensor {
         Arc::ptr_eq(&self.data, &other.data)
     }
 
+    /// Number of stored elements (1 for scalars).
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the payload is empty (only possible for zero-sized dims).
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Decode the payload as f32 values; panics on dtype mismatch.
     pub fn as_f32(&self) -> Vec<f32> {
         assert_eq!(self.dtype, DType::F32);
         self.data.iter().map(|&b| f32::from_bits(b)).collect()
     }
 
+    /// Decode the payload as i32 values; panics on dtype mismatch.
     pub fn as_i32(&self) -> Vec<i32> {
         assert_eq!(self.dtype, DType::I32);
         self.data.iter().map(|&b| b as i32).collect()

@@ -8,16 +8,23 @@
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+/// A parsed TOML value (the subset the run configs use).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A double-quoted string (basic escapes decoded).
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A homogeneous inline array.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// Borrow as a string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -25,6 +32,7 @@ impl Value {
         }
     }
 
+    /// Integer value, if this is an `Int`.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -32,6 +40,7 @@ impl Value {
         }
     }
 
+    /// Float value (`Int` widens), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -40,6 +49,7 @@ impl Value {
         }
     }
 
+    /// Boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -51,6 +61,7 @@ impl Value {
 /// section -> key -> value; top-level keys live in section "".
 pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
 
+/// Parse a TOML-subset document into sections of key/value pairs.
 pub fn parse(text: &str) -> Result<Doc> {
     let mut doc = Doc::new();
     let mut section = String::new();

@@ -14,6 +14,7 @@ use c3a::runtime::session::{build_init, EvalSession, TrainSession};
 use c3a::runtime::Engine;
 use c3a::substrate::parallel;
 use c3a::substrate::prng::Rng;
+use c3a::substrate::simd;
 use c3a::substrate::tensor::Tensor;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -135,6 +136,35 @@ fn replayed_calls_are_near_allocation_free() {
         "replayed eval step allocates too much: {bytes_per_call} bytes/call \
          (budget {EVAL_BYTES_PER_CALL})"
     );
+
+    // ---- simd: the vector kernels must add ZERO steady-state allocs ------
+    // (they work lane-wise in the same preallocated buffers; the only
+    // scratch they touch is the thread-local dense-circulant buffer,
+    // which reaches steady capacity during warmup)
+    if simd::available() {
+        let _simd_lock = simd::override_lock();
+        let prev = simd::enabled();
+        let mut per_config = [0u64; 2];
+        for (slot, on) in [(0usize, false), (1usize, true)] {
+            simd::set_enabled(on);
+            for _ in 0..2 {
+                session.logits(&adapter, &batch).unwrap(); // settle scratch
+            }
+            let before = snapshot();
+            for _ in 0..n {
+                session.logits(&adapter, &batch).unwrap();
+            }
+            per_config[slot] = delta(before).0 / n;
+        }
+        simd::set_enabled(prev);
+        let [scalar_pc, simd_pc] = per_config;
+        println!("eval replay: scalar {scalar_pc} vs simd {simd_pc} allocs/call");
+        assert!(
+            simd_pc <= scalar_pc,
+            "SIMD kernels must not allocate in steady state: \
+             {simd_pc} allocs/call vs scalar {scalar_pc}"
+        );
+    }
 
     // ---- eval: the rebuild path must be >= 5x heavier --------------------
     let legacy = {

@@ -1,0 +1,95 @@
+//! SIMD parity: with `--features simd`, the vector microkernels must be
+//! **bitwise** identical to the scalar reference — logits, loss, and
+//! gradients, across the tiny catalog, crossed with thread counts
+//! (docs/DETERMINISM.md §3).  Built without the feature, every test is a
+//! trivial pass (there is nothing to compare), so this file runs in both
+//! CI configurations unchanged.
+
+use c3a::runtime::catalog;
+use c3a::runtime::interp::InterpExecutable;
+use c3a::substrate::parallel;
+use c3a::substrate::simd;
+use c3a::xla;
+
+fn manifest_dir() -> std::path::PathBuf {
+    std::env::temp_dir().join("c3a_simd_parity")
+}
+
+fn lits_to_f32(outs: &[xla::Literal]) -> Vec<Vec<f32>> {
+    outs.iter().map(|l| l.to_vec::<f32>().unwrap()).collect()
+}
+
+/// Run one artifact with the given SIMD setting and thread count; the
+/// caller holds both override locks.
+fn run_config(
+    spec: &c3a::runtime::manifest::ArtifactSpec,
+    meta: &c3a::runtime::manifest::ModelMeta,
+    lits: &[xla::Literal],
+    simd_on: bool,
+    threads: usize,
+) -> Vec<Vec<f32>> {
+    simd::set_enabled(simd_on);
+    parallel::set_threads(threads);
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+    let exe = InterpExecutable::new(spec, meta).unwrap();
+    let outs = exe.execute(&refs).unwrap();
+    lits_to_f32(&outs)
+}
+
+/// Every enc_tiny + mlp artifact: the scalar single-thread run is the
+/// reference; SIMD on/off × threads 1/4 must all reproduce its exact
+/// bits.  Eval artifacts pin logits; train artifacts pin the full output
+/// contract (updated params, opt state, loss, metric) — which covers
+/// every forward matmul, the C3A spectral accumulates, the backward
+/// passes, and the kernel-gradient reduction.
+#[test]
+fn tiny_catalog_simd_bitwise_parity() {
+    if !simd::available() {
+        eprintln!("simd_parity: built without --features simd; trivially passing");
+        return;
+    }
+    let _simd_lock = simd::override_lock();
+    let _thread_lock = parallel::thread_override_lock();
+    let prev_threads = parallel::threads();
+    let prev_simd = simd::enabled();
+
+    let manifest = catalog::synthesize(&manifest_dir()).unwrap();
+    let mut n = 0;
+    for (name, spec) in &manifest.artifacts {
+        if spec.model != "enc_tiny" && spec.model != "mlp" {
+            continue;
+        }
+        let meta = manifest.model(&spec.model).unwrap();
+        let lits = catalog::synth_inputs(spec, meta);
+        let reference = run_config(spec, meta, &lits, false, 1);
+        for (simd_on, threads) in [(false, 4), (true, 1), (true, 4)] {
+            let got = run_config(spec, meta, &lits, simd_on, threads);
+            assert_eq!(
+                reference, got,
+                "{name}: simd={simd_on} threads={threads} diverged from scalar/1-thread"
+            );
+        }
+        n += 1;
+    }
+    parallel::set_threads(prev_threads);
+    simd::set_enabled(prev_simd);
+    assert!(n >= 39, "expected the full enc_tiny+mlp slice, got {n}");
+    eprintln!("simd parity: {n} artifacts bitwise-identical across simd x threads");
+}
+
+/// The runtime switch must be wired: with the feature compiled,
+/// `set_enabled` toggles `enabled()` and the env default is on.
+#[test]
+fn runtime_switch_roundtrip() {
+    if !simd::available() {
+        assert!(!simd::enabled(), "enabled() must be const-false without the feature");
+        return;
+    }
+    let _lock = simd::override_lock();
+    let prev = simd::enabled();
+    simd::set_enabled(false);
+    assert!(!simd::enabled());
+    simd::set_enabled(true);
+    assert!(simd::enabled());
+    simd::set_enabled(prev);
+}

@@ -58,14 +58,21 @@ import os
 WARN, FAIL = 1.15, 2.0
 # The hard gate compares wall-clock across runs, which is only
 # meaningful like-for-like: it stays advisory unless the thread counts
-# match, and C3A_BENCH_NO_HARD=1 disarms it entirely (e.g. when the
-# committed baseline came from a different machine class — baselines
-# should be refreshed from the CI bench artifacts, not from dev boxes).
+# AND the compiled feature set match (a SIMD build must never be
+# hard-gated against a scalar baseline or vice versa), and
+# C3A_BENCH_NO_HARD=1 disarms it entirely (e.g. when the committed
+# baseline came from a different machine class — baselines should be
+# refreshed from the CI bench artifacts, not from dev boxes).
 no_hard = os.environ.get("C3A_BENCH_NO_HARD") == "1"
 threads_match = base.get("threads") == cur.get("threads")
-hard_armed = not no_hard and threads_match
+features_match = base.get("features") == cur.get("features")
+hard_armed = not no_hard and threads_match and features_match
 if not hard_armed:
-    why = "C3A_BENCH_NO_HARD=1" if no_hard else "thread counts differ"
+    why = (
+        "C3A_BENCH_NO_HARD=1"
+        if no_hard
+        else "thread counts differ" if not threads_match else "feature sets differ"
+    )
     print(f"bench_compare: {cur_path}: hard gate advisory-only ({why})")
 
 # lower-is-better step-time metrics; `hard` carries the >2x gate

@@ -29,6 +29,26 @@ cargo test -q
 echo "== compile examples + benches =="
 cargo build --release --examples --benches
 
+echo "== doc gate: cargo doc --no-deps, warnings denied =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# SIMD leg: the vector microkernels need std::simd (nightly).  Prefer an
+# installed nightly toolchain; fall back to RUSTC_BOOTSTRAP=1 on the
+# default toolchain so the leg still runs in single-toolchain containers.
+# The scalar build above stays the tier-1 reference either way.
+echo "== simd feature: build + bitwise-parity tests =="
+(
+  if cargo +nightly --version >/dev/null 2>&1; then
+    SIMD_TOOLCHAIN="+nightly"
+  else
+    echo "   (no nightly toolchain; using RUSTC_BOOTSTRAP=1)"
+    export RUSTC_BOOTSTRAP=1
+    SIMD_TOOLCHAIN=""
+  fi
+  cargo $SIMD_TOOLCHAIN build --release --features simd
+  cargo $SIMD_TOOLCHAIN test -q --features simd
+)
+
 if [ "$QUICK" -eq 0 ]; then
   echo "== quickstart on the fallback backend =="
   cargo run --release --example quickstart
