@@ -20,7 +20,8 @@ fn main() -> anyhow::Result<()> {
             .cloned()
             .unwrap_or_else(|| dflt.to_string())
     };
-    let model = get("--model", "enc_tiny"); // enc_base learns too, but needs --steps >>100 on one core
+    // enc_base learns too, but needs --steps well over 100 on one core
+    let model = get("--model", "enc_tiny");
     let steps: usize = get("--steps", "250").parse()?;
     let methods = ["lora", "c3a_d8"];
 

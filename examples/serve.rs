@@ -24,6 +24,7 @@ use c3a::serving::{
     perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, AdapterStore,
     ReplayCfg, ResidentPolicy, Scheduler, SchedulerCfg, ShardCtx,
 };
+use c3a::substrate::env;
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::TensorMap;
 use std::path::PathBuf;
@@ -237,7 +238,7 @@ fn main() -> anyhow::Result<()> {
         per_shard.join(", "),
         uploads.join(", ")
     );
-    let out = std::env::var("C3A_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let out = env::bench_serve_out();
     std::fs::write(&out, &json)?;
     println!("\nwrote {out}");
     Ok(())

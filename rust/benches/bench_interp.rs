@@ -16,6 +16,7 @@ use c3a::runtime::manifest::ArtifactSpec;
 use c3a::runtime::session::{build_init, EvalSession, TrainSession};
 use c3a::runtime::Engine;
 use c3a::substrate::circulant::BlockCirculant;
+use c3a::substrate::env;
 use c3a::substrate::parallel;
 use c3a::substrate::prng::Rng;
 use c3a::substrate::simd;
@@ -41,28 +42,6 @@ fn build_batch(spec: &ArtifactSpec) -> Vec<Tensor> {
         }
     }
     batch
-}
-
-/// Scoped C3A_PLAN override: restores the prior value (or removes the
-/// var) on drop, so panics and early returns cannot leak the override
-/// into later sessions in this process.
-struct PlanEnvGuard(Option<String>);
-
-impl PlanEnvGuard {
-    fn set(v: &str) -> PlanEnvGuard {
-        let prev = std::env::var("C3A_PLAN").ok();
-        std::env::set_var("C3A_PLAN", v);
-        PlanEnvGuard(prev)
-    }
-}
-
-impl Drop for PlanEnvGuard {
-    fn drop(&mut self) {
-        match &self.0 {
-            Some(v) => std::env::set_var("C3A_PLAN", v),
-            None => std::env::remove_var("C3A_PLAN"),
-        }
-    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -159,7 +138,7 @@ fn main() -> anyhow::Result<()> {
     // vs enabled (record once, replay into the arena).  Sessions are
     // built while the env var is set; it only gates state construction.
     let rebuild_session = {
-        let _plan_off = PlanEnvGuard::set("0");
+        let _plan_off = env::ScopedSet::set(env::PLAN, "0");
         EvalSession::new(&engine, &eval_spec, &eval_init)?
     };
     let replay_session = EvalSession::new(&engine, &eval_spec, &eval_init)?;
@@ -216,16 +195,16 @@ fn main() -> anyhow::Result<()> {
     let plan_ops = pstats.ops;
     let plan_shared = pstats.shared_buffers;
     let features = if simd::available() { "simd" } else { "default" };
-    let c3a_threads = match std::env::var("C3A_THREADS") {
-        Ok(v) => format!("\"{v}\""),
-        Err(_) => "null".into(),
+    let c3a_threads = match env::raw(env::THREADS) {
+        Some(v) => format!("\"{v}\""),
+        None => "null".into(),
     };
     let json = format!(
         "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"c3a_threads\": {c3a_threads},\n  \"features\": \"{features}\",\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"step_ms_cached_scalar\": {step_ms_scalar},\n  \"simd_step_speedup\": {simd_step_speedup},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"eval_ms_rebuild\": {eval_ms_rebuild:.3},\n  \"eval_ms_replay\": {eval_ms_replay:.3},\n  \"plan_replay_speedup\": {plan_speedup:.3},\n  \"plan_ops\": {plan_ops},\n  \"plan_shared_buffers\": {plan_shared},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
     );
     // cargo bench runs with the package dir as cwd; the bench script sets
     // C3A_BENCH_OUT to pin the report to the repo root
-    let out = std::env::var("C3A_BENCH_OUT").unwrap_or_else(|_| "BENCH_interp.json".into());
+    let out = env::bench_out();
     std::fs::write(&out, &json)?;
     println!("\nwrote {out}:\n{json}");
     Ok(())

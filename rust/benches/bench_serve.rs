@@ -27,6 +27,7 @@ use c3a::serving::{
     perturb_c3a_kernels as perturb, run_replay, tenant_name, AdapterRegistry, AdapterStore,
     ReplayCfg, ReplayReport, ResidentPolicy, Scheduler, SchedulerCfg, ServeStats, ShardCtx,
 };
+use c3a::substrate::env;
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::TensorMap;
 use std::path::{Path, PathBuf};
@@ -263,9 +264,9 @@ fn main() -> anyhow::Result<()> {
     let l4 = s4.latency();
     let c4 = s4.cold_start_latency();
     let features = if c3a::substrate::simd::available() { "simd" } else { "default" };
-    let c3a_threads = match std::env::var("C3A_THREADS") {
-        Ok(v) => format!("\"{v}\""),
-        Err(_) => "null".into(),
+    let c3a_threads = match env::raw(env::THREADS) {
+        Some(v) => format!("\"{v}\""),
+        None => "null".into(),
     };
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"model\": \"{EVAL}\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \"c3a_threads\": {c3a_threads},\n  \"features\": \"{features}\",\n  \"requests\": {n_requests},\n  \"tenants\": {n_tenants},\n  \"max_resident\": {max_resident},\n  \"zipf_exponent\": {},\n  \"swap_every\": {},\n  \"trace_hash\": \"{:#018x}\",\n  \"req_per_s\": {:.1},\n  \"p50_ms\": {:.3},\n  \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"cold_start_ms_p95\": {:.3},\n  \"resident_hwm\": {},\n  \"cold_starts\": {},\n  \"evictions\": {},\n  \"shards1\": {},\n  \"shards4\": {}\n}}\n",
@@ -283,7 +284,7 @@ fn main() -> anyhow::Result<()> {
         phase_json(&r1, &s1),
         phase_json(&r4, &s4)
     );
-    let out = std::env::var("C3A_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let out = env::bench_serve_out();
     std::fs::write(&out, &json)?;
     println!("\nwrote {out}:\n{json}");
     Ok(())

@@ -30,7 +30,7 @@ use crate::runtime::plan::{Plan, PlanStats};
 use crate::substrate::fft::Plan as FftPlan;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 const BETA1: f32 = 0.9;
@@ -56,11 +56,13 @@ struct SpectraEntry {
 /// Interior caches the interpreter keeps warm across calls: FFT plans per
 /// block size and C3A kernel spectra per parameter name.  Spectra entries
 /// are invalidated by exact kernel comparison, so a stale entry can cost
-/// a recompute but never wrong numerics.
+/// a recompute but never wrong numerics.  `BTreeMap` (not `HashMap`) per
+/// lint rule D2: numeric-path maps keep a deterministic iteration order
+/// so no future traversal can depend on hash-seed ordering.
 #[derive(Default)]
 pub struct InterpCache {
-    plans: HashMap<usize, Rc<FftPlan>>,
-    spectra: HashMap<String, SpectraEntry>,
+    plans: BTreeMap<usize, Rc<FftPlan>>,
+    spectra: BTreeMap<String, SpectraEntry>,
     stats: CacheStats,
 }
 
@@ -113,7 +115,7 @@ pub type FrozenParse = Rc<Vec<(String, Rc<Arr>)>>;
 /// falls back to the per-request rebuild — the bench uses this to measure
 /// the rebuild-vs-replay gap, and it doubles as a kill switch).
 fn plan_enabled_from_env() -> bool {
-    std::env::var("C3A_PLAN").map(|v| v.trim() != "0").unwrap_or(true)
+    crate::substrate::env::plan_enabled()
 }
 
 /// Per-session interpreter state ([`crate::runtime::backend::ExecutorState`]

@@ -28,7 +28,7 @@ use super::manifest::{ArtifactSpec, ModelMeta, Role};
 use crate::runtime::interp::model::NEG;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Observability snapshot of a recorded plan (exposed through
 /// [`ExecutorState::plan_stats`](super::backend::ExecutorState::plan_stats)).
@@ -146,7 +146,9 @@ fn assign_slots(tape: &Tape, exclude: V) -> (Vec<Option<V>>, usize, usize) {
             release_at[last_use[v]].push(v);
         }
     }
-    let mut free: HashMap<usize, Vec<V>> = HashMap::new();
+    // BTreeMap per lint rule D2 (deterministic order); keyed lookups
+    // only, so the container swap cannot change slot assignment anyway.
+    let mut free: BTreeMap<usize, Vec<V>> = BTreeMap::new();
     let mut steal_from: Vec<Option<V>> = vec![None; nn];
     for v in 0..nn {
         if v > 0 {

@@ -119,20 +119,31 @@ impl ShardGauge {
 
     /// Producer side, after a successful send.
     fn on_admitted(&self) {
+        // Relaxed: gauges are observability-only — nothing is published
+        // through them (the queued message rides the channel, which has
+        // its own synchronization), so cross-gauge ordering is free.
         let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        // Relaxed: monotonic max over this producer-side counter; racing
+        // producers each fold in the depth *they* observed, and the hwm
+        // only ever grows, so no ordering constraint tightens the bound.
         self.depth_hwm.fetch_max(d, Ordering::Relaxed);
     }
 
     /// Worker side, after each successful receive.
     pub(super) fn on_dequeue(&self) {
+        // Relaxed: may transiently race ahead of the producer's increment
+        // (depth is signed for exactly that reason); observability only.
         self.depth.fetch_sub(1, Ordering::Relaxed);
     }
 
     pub(super) fn hwm(&self) -> usize {
+        // Relaxed: read at stats-collection time, after `finish` joined
+        // the workers — already synchronized by the join.
         self.depth_hwm.load(Ordering::Relaxed).max(0) as usize
     }
 
     pub(super) fn sheds(&self) -> u64 {
+        // Relaxed: observability counter, same argument as `hwm`.
         self.sheds.load(Ordering::Relaxed)
     }
 }
@@ -155,6 +166,7 @@ impl Admission {
     }
 
     fn record_shed(&self, shard: usize, tenant: &str) {
+        // Relaxed: shed tally (observability only; no memory published).
         self.gauges[shard].sheds.fetch_add(1, Ordering::Relaxed);
         let mut map = self.tenant_sheds.lock().unwrap();
         *map.entry(tenant.to_string()).or_insert(0) += 1;

@@ -1,0 +1,194 @@
+//! Single choke point for every `C3A_*` environment switch.
+//!
+//! Every runtime knob the repo reads from the process environment is
+//! declared, documented, and parsed **here** — nowhere else.  The
+//! determinism linter enforces this as rule **D4** (`tools/detlint`):
+//! any `env::var("C3A_*")` / `set_var("C3A_*")` with a raw string
+//! literal outside this module fails `scripts/lint.sh`.  Centralizing
+//! the reads buys three things:
+//!
+//! * **One parsing convention.**  Boolean switches all go through
+//!   [`truthy`]: unset or empty means the documented default; a trimmed,
+//!   ASCII-case-insensitive `0` / `false` / `off` disables; anything
+//!   else enables.  Before this module existed, `C3A_PLAN` trimmed its
+//!   value and `C3A_SIMD` did not — two conventions for the same kind of
+//!   knob.
+//! * **A complete inventory.**  The quick-reference table in
+//!   docs/DETERMINISM.md is generated from the constants below by
+//!   inspection; a knob that is not listed here does not exist.
+//! * **Test hygiene.**  [`ScopedSet`] is the one save/override/restore
+//!   guard for tests and benches that must flip a knob process-wide
+//!   (it replaced three hand-rolled copies of the same Drop guard).
+//!
+//! None of these switches may change numerics: every knob here trades
+//! wall-clock, output paths, or test scope — the bit-determinism
+//! contract (docs/DETERMINISM.md) holds at every setting.
+
+/// `C3A_THREADS` — substrate pool size (see [`super::parallel`]).
+/// Default: `available_parallelism()`.  Wall-clock only.
+pub const THREADS: &str = "C3A_THREADS";
+
+/// `C3A_PLAN` — execution-plan recording/replay kill switch (see
+/// `runtime/plan`).  Default on; `0` rebuilds every call.  Wall-clock
+/// only.
+pub const PLAN: &str = "C3A_PLAN";
+
+/// `C3A_SIMD` — runtime switch for the vector microkernels when the
+/// crate was built with `--features simd` (see [`super::simd`]).
+/// Default on; a no-op in scalar builds.  Wall-clock only.
+pub const SIMD: &str = "C3A_SIMD";
+
+/// `C3A_DIFF_FULL` — widens `tests/differential.rs` from the tiny
+/// catalog to the full small-model sweep.  Default off.
+pub const DIFF_FULL: &str = "C3A_DIFF_FULL";
+
+/// `C3A_DIFF_REPORT` — divergence-report path written by
+/// `tests/differential.rs`.  Default `DIFF_REPORT.txt`.
+pub const DIFF_REPORT: &str = "C3A_DIFF_REPORT";
+
+/// `C3A_BENCH_OUT` — report path written by `benches/bench_interp.rs`.
+/// Default `BENCH_interp.json`.
+pub const BENCH_OUT: &str = "C3A_BENCH_OUT";
+
+/// `C3A_BENCH_SERVE_OUT` — report path written by
+/// `benches/bench_serve.rs` and `examples/serve.rs`.  Default
+/// `BENCH_serve.json`.
+pub const BENCH_SERVE_OUT: &str = "C3A_BENCH_SERVE_OUT";
+
+/// Raw (unparsed, untrimmed) value of a `C3A_*` variable, `None` when
+/// unset or not valid UTF-8.  For observability stamps (the bench
+/// reports record the operator's literal `C3A_THREADS`) and for
+/// [`ScopedSet`]'s save/restore; everything else should use the typed
+/// accessors below.
+pub fn raw(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// The one boolean-parsing convention (rule **D4** rationale): unset or
+/// blank → `default`; trimmed, ASCII-case-insensitive `0` / `false` /
+/// `off` → `false`; any other value → `true`.
+pub fn truthy(name: &str, default: bool) -> bool {
+    match raw(name) {
+        None => default,
+        Some(v) => {
+            let t = v.trim();
+            if t.is_empty() {
+                default
+            } else {
+                !(t == "0" || t.eq_ignore_ascii_case("false") || t.eq_ignore_ascii_case("off"))
+            }
+        }
+    }
+}
+
+/// [`THREADS`] parsed: `Some(n)` for an integer ≥ 1, `None` when unset,
+/// unparsable, or zero (callers then fall back to
+/// `available_parallelism()` — see `parallel::default_threads`).
+pub fn threads() -> Option<usize> {
+    raw(THREADS).and_then(|v| v.trim().parse::<usize>().ok()).filter(|&n| n >= 1)
+}
+
+/// [`PLAN`]: whether execution-plan recording/replay is enabled
+/// (default yes).
+pub fn plan_enabled() -> bool {
+    truthy(PLAN, true)
+}
+
+/// [`SIMD`]: whether the vector microkernels are switched on at process
+/// start (default yes; only consulted when built with the feature).
+pub fn simd_enabled() -> bool {
+    truthy(SIMD, true)
+}
+
+/// [`DIFF_FULL`]: whether the differential suite runs the widened
+/// sweep (default no).
+pub fn diff_full() -> bool {
+    truthy(DIFF_FULL, false)
+}
+
+/// [`DIFF_REPORT`] or its default path.
+pub fn diff_report_path() -> String {
+    raw(DIFF_REPORT).unwrap_or_else(|| "DIFF_REPORT.txt".into())
+}
+
+/// [`BENCH_OUT`] or its default path.
+pub fn bench_out() -> String {
+    raw(BENCH_OUT).unwrap_or_else(|| "BENCH_interp.json".into())
+}
+
+/// [`BENCH_SERVE_OUT`] or its default path.
+pub fn bench_serve_out() -> String {
+    raw(BENCH_SERVE_OUT).unwrap_or_else(|| "BENCH_serve.json".into())
+}
+
+/// Scoped environment override: saves the prior value on construction,
+/// sets the new one, and restores (or removes) on drop — so panics and
+/// early returns cannot leak an override into later sessions in the
+/// same process.  Callers that toggle process-global knobs from
+/// concurrent tests must additionally hold their subsystem's serializer
+/// (e.g. `parallel::thread_override_lock`).
+pub struct ScopedSet {
+    name: &'static str,
+    prev: Option<String>,
+}
+
+impl ScopedSet {
+    /// Override `name` (one of this module's constants) with `value`
+    /// until the guard drops.
+    pub fn set(name: &'static str, value: &str) -> ScopedSet {
+        let prev = raw(name);
+        std::env::set_var(name, value);
+        ScopedSet { name, prev }
+    }
+}
+
+impl Drop for ScopedSet {
+    fn drop(&mut self) {
+        match &self.prev {
+            Some(v) => std::env::set_var(self.name, v),
+            None => std::env::remove_var(self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A name no other code reads: these tests mutate the process
+    // environment, so they stay off the real knobs entirely.
+    const SCRATCH: &str = "C3A_ENV_RS_TEST_SCRATCH";
+
+    #[test]
+    fn truthy_convention() {
+        let _g = ScopedSet::set(SCRATCH, "1");
+        assert!(truthy(SCRATCH, false));
+        for off in ["0", "false", "FALSE", "off", " Off ", " 0 "] {
+            let _h = ScopedSet::set(SCRATCH, off);
+            assert!(!truthy(SCRATCH, true), "{off:?} should disable");
+        }
+        for on in ["1", "yes", "on", "2", "anything"] {
+            let _h = ScopedSet::set(SCRATCH, on);
+            assert!(truthy(SCRATCH, false), "{on:?} should enable");
+        }
+        // blank falls back to the default, either way
+        let _h = ScopedSet::set(SCRATCH, "  ");
+        assert!(truthy(SCRATCH, true));
+        assert!(!truthy(SCRATCH, false));
+    }
+
+    #[test]
+    fn scoped_set_restores_prior_value() {
+        std::env::remove_var(SCRATCH);
+        {
+            let _g = ScopedSet::set(SCRATCH, "a");
+            assert_eq!(raw(SCRATCH).as_deref(), Some("a"));
+            {
+                let _h = ScopedSet::set(SCRATCH, "b");
+                assert_eq!(raw(SCRATCH).as_deref(), Some("b"));
+            }
+            assert_eq!(raw(SCRATCH).as_deref(), Some("a"));
+        }
+        assert_eq!(raw(SCRATCH), None);
+    }
+}

@@ -12,6 +12,7 @@
 //! feature is compiled) with the vector kernels on or off.
 
 pub mod circulant;
+pub mod env;
 pub mod fft;
 pub mod json;
 pub mod linalg;

@@ -29,12 +29,8 @@ use std::sync::{Condvar, Mutex, OnceLock};
 // ---------------------------------------------------------------------------
 
 fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("C3A_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    if let Some(n) = crate::substrate::env::threads() {
+        return n;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -46,12 +42,15 @@ fn threads_cell() -> &'static AtomicUsize {
 
 /// Current worker budget (including the calling thread).
 pub fn threads() -> usize {
+    // Relaxed: an isolated config word — no other memory is published
+    // through it, and a stale read only mis-sizes a chunk heuristic.
     threads_cell().load(Ordering::Relaxed)
 }
 
 /// Override the worker budget at runtime (clamped to >= 1).  Results are
 /// bit-for-bit identical at any setting; this only trades wall-clock.
 pub fn set_threads(n: usize) {
+    // Relaxed: see `threads` — the value is self-contained config.
     threads_cell().store(n.max(1), Ordering::Relaxed);
 }
 
@@ -72,6 +71,9 @@ struct Job {
     panicked: *const AtomicBool,
 }
 
+// SAFETY: the raw pointers target the submitting stack frame, which
+// `run_chunked` keeps alive until every worker has checked out of the
+// epoch (the done_cv handshake); `f` is additionally `Sync`.
 unsafe impl Send for Job {}
 
 struct PoolState {
@@ -132,16 +134,25 @@ fn worker_loop(p: &'static Pool) {
             }
         };
         let f = job.f;
+        // SAFETY: both pointers stay valid for the whole epoch — the
+        // submitter blocks on done_cv until this worker checks out below.
         let counter = unsafe { &*job.counter };
+        // SAFETY: same lifetime argument as `counter` above.
         let panicked = unsafe { &*job.panicked };
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            // Relaxed: the counter only hands out chunk indices; the
+            // chunk data itself is published by the state-mutex fences.
             let i = counter.fetch_add(1, Ordering::Relaxed);
+            // Relaxed: advisory early-exit flag — missing an update just
+            // runs one more chunk before stopping.
             if i >= job.n_chunks || panicked.load(Ordering::Relaxed) {
                 break;
             }
             f(i);
         }));
         if res.is_err() {
+            // Relaxed: advisory flag (see the load above); the authoritative
+            // panic propagation happens through the submitter's catch.
             panicked.store(true, Ordering::Relaxed);
         }
         let mut st = p.state.lock().unwrap();
@@ -194,8 +205,9 @@ fn run_chunked(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
                 .expect("spawning pool worker");
             st.workers += 1;
         }
-        // erase the borrow lifetimes: the wait-for-checkout below keeps
-        // `f`/`counter`/`panicked` alive past every worker access
+        // SAFETY: erases the borrow lifetime only — the wait-for-checkout
+        // below keeps `f`/`counter`/`panicked` alive past every worker
+        // access, so no worker can observe the referent after it dies.
         let f_static: &'static (dyn Fn(usize) + Sync) =
             unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
         st.job = Some(Job {
@@ -211,7 +223,10 @@ fn run_chunked(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
     // participate from the submitting thread
     IN_REGION.with(|flag| flag.set(true));
     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+        // Relaxed: chunk-index handout only (see worker_loop) — the
+        // chunk results are published by the done_cv mutex handshake.
         let i = counter.fetch_add(1, Ordering::Relaxed);
+        // Relaxed: advisory early-exit flag, same as the worker side.
         if i >= n_chunks || panicked.load(Ordering::Relaxed) {
             break;
         }
@@ -219,6 +234,7 @@ fn run_chunked(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
     }));
     IN_REGION.with(|flag| flag.set(false));
     if res.is_err() {
+        // Relaxed: advisory — this thread rethrows its own panic below.
         panicked.store(true, Ordering::Relaxed);
     }
     // wait for every worker to check out before the closure/counter die
@@ -232,6 +248,8 @@ fn run_chunked(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
     if let Err(e) = res {
         std::panic::resume_unwind(e);
     }
+    // Relaxed: every worker that could have stored checked out under the
+    // state mutex above, so this read is ordered after all stores.
     if panicked.load(Ordering::Relaxed) {
         panic!("c3a-pool worker panicked");
     }
@@ -278,7 +296,8 @@ pub fn map_chunks<R: Send>(
         let slots = SharedSlice::new(&mut out);
         run_chunked(n_chunks, &|i| {
             let r = f(chunk_range(i, chunk, n));
-            // each chunk index writes exactly its own slot
+            // SAFETY: each chunk index writes exactly its own slot, and
+            // the submitter outlives the region (SharedSlice contract).
             unsafe { *slots.get_mut(i) = Some(r) };
         });
     }
@@ -331,6 +350,8 @@ pub fn par_chunks_mut<T: Send>(
     let base = SharedSlice::new(data);
     run_chunked(n_chunks, &|i| {
         let r = chunk_range(i, chunk_len, n);
+        // SAFETY: chunk_range spans are pairwise disjoint by construction
+        // and the backing slice outlives the region (SharedSlice contract).
         let span = unsafe { base.slice_mut(r) };
         f(i, span);
     });
@@ -344,7 +365,11 @@ struct SharedSlice<T> {
     len: usize,
 }
 
+// SAFETY: the handle is only shared within one parallel region whose
+// submitter blocks until every worker checks out, and the safety
+// contract above guarantees chunk-disjoint access to `T: Send` elements.
 unsafe impl<T: Send> Send for SharedSlice<T> {}
+// SAFETY: as for Send — disjointness makes concurrent `&self` use sound.
 unsafe impl<T: Send> Sync for SharedSlice<T> {}
 
 impl<T> SharedSlice<T> {
@@ -401,9 +426,11 @@ mod tests {
         let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
         for_each_chunk(n, 17, |r| {
             for i in r {
+                // Relaxed: per-slot counter; the region's join orders it.
                 hits[i].fetch_add(1, Ordering::Relaxed);
             }
         });
+        // Relaxed: read after the region joined — already synchronized.
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
@@ -452,9 +479,11 @@ mod tests {
         for_each_chunk(8, 1, |_| {
             // nested region must not deadlock on the submit lock
             for_each_chunk(4, 1, |r| {
+                // Relaxed: plain tally; the outer region's join orders it.
                 count.fetch_add(r.len() as u64, Ordering::Relaxed);
             });
         });
+        // Relaxed: read after the region joined — already synchronized.
         assert_eq!(count.load(Ordering::Relaxed), 32);
     }
 }

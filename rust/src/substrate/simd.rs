@@ -41,10 +41,7 @@ fn cell() -> &'static std::sync::atomic::AtomicBool {
     use std::sync::atomic::AtomicBool;
     use std::sync::OnceLock;
     static CELL: OnceLock<AtomicBool> = OnceLock::new();
-    CELL.get_or_init(|| {
-        let on = std::env::var("C3A_SIMD").map(|v| v != "0").unwrap_or(true);
-        AtomicBool::new(on)
-    })
+    CELL.get_or_init(|| AtomicBool::new(crate::substrate::env::simd_enabled()))
 }
 
 /// True when the SIMD kernels are compiled in *and* switched on.
@@ -54,6 +51,8 @@ fn cell() -> &'static std::sync::atomic::AtomicBool {
 pub fn enabled() -> bool {
     #[cfg(feature = "simd")]
     {
+        // Relaxed: isolated on/off word; selects bitwise-identical code
+        // paths, so even a stale read cannot change results.
         cell().load(std::sync::atomic::Ordering::Relaxed)
     }
     #[cfg(not(feature = "simd"))]
@@ -67,6 +66,8 @@ pub fn enabled() -> bool {
 /// runs.  A no-op without the `simd` feature (the scalar build has
 /// nothing to switch to).
 pub fn set_enabled(on: bool) {
+    // Relaxed: see `enabled` — an isolated switch between bit-identical
+    // kernels; no other memory is published through it.
     #[cfg(feature = "simd")]
     cell().store(on, std::sync::atomic::Ordering::Relaxed);
     #[cfg(not(feature = "simd"))]
@@ -99,6 +100,8 @@ mod kernels {
     // change fails the build, not the numerics.
     const _: () = {
         assert!(std::mem::size_of::<C>() == 16 && std::mem::align_of::<C>() == 8);
+        // SAFETY: size/align asserted above; any field-order change trips
+        // the bit-pattern assertion below at compile time.
         let bits = unsafe { std::mem::transmute::<C, [u64; 2]>((1.0, 2.0)) };
         assert!(bits[0] == 0x3ff0000000000000 && bits[1] == 0x4000000000000000);
     };

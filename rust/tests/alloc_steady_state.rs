@@ -12,6 +12,7 @@ use c3a::peft::init::C3aScheme;
 use c3a::runtime::catalog;
 use c3a::runtime::session::{build_init, EvalSession, TrainSession};
 use c3a::runtime::Engine;
+use c3a::substrate::env;
 use c3a::substrate::parallel;
 use c3a::substrate::prng::Rng;
 use c3a::substrate::simd;
@@ -24,25 +25,37 @@ struct CountingAlloc;
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 static BYTES: AtomicU64 = AtomicU64::new(0);
 
+/// Count one allocation event of `bytes` bytes.
+fn count(bytes: u64) {
+    // Relaxed: monotonic tallies; the test reads them on the same thread
+    // that allocates (set_threads(1)), so no ordering is needed.
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
+    // Relaxed: as above — the two counters need no mutual ordering.
+    BYTES.fetch_add(bytes, Ordering::Relaxed);
+}
+
+// SAFETY: pure pass-through to `System` (which upholds the GlobalAlloc
+// contract); the added counting never touches the returned memory.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds the GlobalAlloc contract; delegated as-is.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        count(layout.size() as u64);
         System.alloc(layout)
     }
 
+    // SAFETY: caller upholds the GlobalAlloc contract; delegated as-is.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        count(layout.size() as u64);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller upholds the GlobalAlloc contract; delegated as-is.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        count(new_size as u64);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller upholds the GlobalAlloc contract; delegated as-is.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
@@ -51,29 +64,9 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static COUNTER: CountingAlloc = CountingAlloc;
 
-/// Scoped C3A_PLAN override: restores the prior value (or removes the
-/// var) on drop, so panics and early returns cannot leak the override
-/// into later sessions in this process.
-struct PlanEnvGuard(Option<String>);
-
-impl PlanEnvGuard {
-    fn set(v: &str) -> PlanEnvGuard {
-        let prev = std::env::var("C3A_PLAN").ok();
-        std::env::set_var("C3A_PLAN", v);
-        PlanEnvGuard(prev)
-    }
-}
-
-impl Drop for PlanEnvGuard {
-    fn drop(&mut self) {
-        match &self.0 {
-            Some(v) => std::env::set_var("C3A_PLAN", v),
-            None => std::env::remove_var("C3A_PLAN"),
-        }
-    }
-}
-
 fn snapshot() -> (u64, u64) {
+    // Relaxed: monotonic tallies read for deltas on the measuring thread
+    // itself (set_threads(1)); no cross-thread publication rides on them.
     (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
 }
 
@@ -168,7 +161,7 @@ fn replayed_calls_are_near_allocation_free() {
 
     // ---- eval: the rebuild path must be >= 5x heavier --------------------
     let legacy = {
-        let _plan_off = PlanEnvGuard::set("0");
+        let _plan_off = env::ScopedSet::set(env::PLAN, "0");
         EvalSession::new(&engine, &spec, &init).unwrap()
     };
     for _ in 0..3 {

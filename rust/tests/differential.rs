@@ -27,6 +27,7 @@ use c3a::runtime::refbackend::{RefBackend, RefExecutable};
 use c3a::runtime::session::build_init;
 use c3a::runtime::Engine;
 use c3a::serving::{perturb_c3a_kernels as perturb, AdapterRegistry, AdapterStore, ResidentPolicy};
+use c3a::substrate::env;
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::Tensor;
 use c3a::xla;
@@ -77,7 +78,7 @@ struct Report {
 }
 
 fn report_path() -> String {
-    std::env::var("C3A_DIFF_REPORT").unwrap_or_else(|_| "DIFF_REPORT.txt".into())
+    env::diff_report_path()
 }
 
 impl Report {
@@ -501,7 +502,7 @@ fn serving_registry_oracle_matches_substrate_across_hot_swaps() {
 /// `C3A_DIFF_FULL=1` (CI does, in release, at C3A_THREADS=1 and 4).
 #[test]
 fn full_catalog_sweep_when_enabled() {
-    if std::env::var("C3A_DIFF_FULL").as_deref() != Ok("1") {
+    if !env::diff_full() {
         eprintln!("skipping full catalog sweep (C3A_DIFF_FULL=1 / scripts/diff_check.sh --full)");
         return;
     }

@@ -10,6 +10,7 @@ use c3a::runtime::interp::InterpExecutable;
 use c3a::runtime::manifest::{Manifest, Role};
 use c3a::runtime::session::{build_init, EvalSession};
 use c3a::runtime::Engine;
+use c3a::substrate::env;
 use c3a::substrate::prng::Rng;
 use c3a::substrate::tensor::Tensor;
 use c3a::xla;
@@ -20,28 +21,6 @@ use c3a::xla;
 fn env_lock() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
     LOCK.get_or_init(|| std::sync::Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
-}
-
-/// Scoped C3A_PLAN override: restores the prior value (or removes the
-/// var) on drop, so panics and early returns cannot leak the override
-/// into later sessions in this process.
-struct PlanEnvGuard(Option<String>);
-
-impl PlanEnvGuard {
-    fn set(v: &str) -> PlanEnvGuard {
-        let prev = std::env::var("C3A_PLAN").ok();
-        std::env::set_var("C3A_PLAN", v);
-        PlanEnvGuard(prev)
-    }
-}
-
-impl Drop for PlanEnvGuard {
-    fn drop(&mut self) {
-        match &self.0 {
-            Some(v) => std::env::set_var("C3A_PLAN", v),
-            None => std::env::remove_var("C3A_PLAN"),
-        }
-    }
 }
 
 fn manifest() -> Manifest {
@@ -206,7 +185,7 @@ fn plan_kill_switch_falls_back_to_rebuild() {
     let want = lits_to_f32(&exe.execute(&refs).unwrap());
 
     let mut state = {
-        let _plan_off = PlanEnvGuard::set("0");
+        let _plan_off = env::ScopedSet::set(env::PLAN, "0");
         exe.prepare(&frozen_lits(&spec, &lits)).unwrap()
     };
     for _ in 0..2 {

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Determinism lint gate: build and run tools/detlint over the gate set
+# (rust/src, rust/tests, rust/benches, examples, and detlint's own
+# sources).  See docs/LINTING.md for the rules and allowlist syntax.
+#
+# Usage: scripts/lint.sh [extra detlint args...]
+#   With args, they replace the default path list (e.g.
+#   `scripts/lint.sh rust/src/substrate` to lint one subtree).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export CARGO_NET_OFFLINE=true
+
+cargo run --release -q -p detlint -- "$@"

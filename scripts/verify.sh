@@ -20,6 +20,9 @@ done
 
 export CARGO_NET_OFFLINE=true
 
+echo "== determinism lint: scripts/lint.sh =="
+scripts/lint.sh
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 

@@ -1,0 +1,389 @@
+//! A minimal hand-rolled Rust lexer — just enough token structure for the
+//! determinism rules: identifiers, string/char literals with exact
+//! line/column spans, comments (with nesting and own-line tracking), and
+//! single-char punctuation.  It does not build an AST and it does not
+//! need to: every rule in [`crate::rules`] works on the token stream plus
+//! per-line comment metadata.
+//!
+//! Deliberate simplifications (documented so the rules stay honest):
+//! raw identifiers (`r#fn`) lex as `r` + `#` + ident, and multi-char
+//! operators arrive as individual punct tokens.  Neither shape affects
+//! any rule.
+
+/// Token classification.  `Str` carries the literal's *contents* (no
+/// quotes/prefix) so rules can match on payloads such as `C3A_*`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    /// Identifier or keyword (the lexer does not distinguish).
+    Ident,
+    /// Numeric literal, including suffixes (`1_000u64`, `1e-3`).
+    Num,
+    /// String literal contents: plain, raw, byte, or raw-byte.
+    Str,
+    /// Char literal (contents not needed by any rule).
+    Char,
+    /// Lifetime (`'a`) — kept distinct so it never looks like a char.
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One lexed token with an inclusive start and exclusive end position
+/// (1-based lines and columns, measured in chars).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Classification of this token.
+    pub kind: TokKind,
+    /// Token text (for `Str`: the unquoted contents).
+    pub text: String,
+    /// 1-based line of the first char.
+    pub line: usize,
+    /// 1-based column of the first char.
+    pub col: usize,
+    /// 1-based line just past the last char.
+    pub end_line: usize,
+    /// 1-based column just past the last char.
+    pub end_col: usize,
+}
+
+/// One comment (line or block), with the span it covers and whether it
+/// starts its own line — rules only accept own-line comments (or attrs)
+/// when walking upward from a flagged line.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// Full comment text including the `//` / `/*` markers.
+    pub text: String,
+    /// 1-based first line.
+    pub line: usize,
+    /// 1-based last line.
+    pub end_line: usize,
+    /// True when nothing but whitespace precedes it on its first line.
+    pub own_line: bool,
+}
+
+/// Lexer output: code tokens and comments, each in source order.
+pub struct Lexed {
+    /// All non-comment tokens.
+    pub toks: Vec<Tok>,
+    /// All comments.
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor {
+    s: Vec<char>,
+    i: usize,
+    line: usize,
+    col: usize,
+}
+
+impl Cursor {
+    fn at(&self, k: usize) -> Option<char> {
+        self.s.get(self.i + k).copied()
+    }
+
+    /// Advance `n` chars, maintaining the 1-based line/col counters.
+    fn adv(&mut self, n: usize) {
+        for _ in 0..n {
+            if self.s[self.i] == '\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            self.i += 1;
+        }
+    }
+
+    fn text(&self, a: usize, b: usize) -> String {
+        self.s[a..b].iter().collect()
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + comments.  Never panics on malformed input
+/// (unterminated literals/comments consume to end of file) — the linter
+/// must degrade gracefully on files rustc itself would reject.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { s: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let n = cur.s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    // true until the first non-whitespace char of the current line
+    let mut line_start_ws = true;
+
+    while cur.i < n {
+        let c = cur.s[cur.i];
+        if c == '\n' {
+            cur.adv(1);
+            line_start_ws = true;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            cur.adv(1);
+            continue;
+        }
+        // line comment
+        if c == '/' && cur.at(1) == Some('/') {
+            let l0 = cur.line;
+            let own = line_start_ws;
+            let start = cur.i;
+            let mut end = cur.i;
+            while end < n && cur.s[end] != '\n' {
+                end += 1;
+            }
+            let text = cur.text(start, end);
+            cur.adv(end - start);
+            comments.push(Comment { text, line: l0, end_line: l0, own_line: own });
+            continue;
+        }
+        // block comment (nesting per Rust semantics)
+        if c == '/' && cur.at(1) == Some('*') {
+            let l0 = cur.line;
+            let own = line_start_ws;
+            let start = cur.i;
+            let mut depth = 0usize;
+            let mut end = cur.i;
+            while end < n {
+                if cur.s[end] == '/' && cur.s.get(end + 1) == Some(&'*') {
+                    depth += 1;
+                    end += 2;
+                } else if cur.s[end] == '*' && cur.s.get(end + 1) == Some(&'/') {
+                    depth -= 1;
+                    end += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    end += 1;
+                }
+            }
+            let text = cur.text(start, end);
+            cur.adv(end - start);
+            comments.push(Comment { text, line: l0, end_line: cur.line, own_line: own });
+            line_start_ws = false;
+            continue;
+        }
+        line_start_ws = false;
+        // plain string literal
+        if c == '"' {
+            lex_quoted(&mut cur, n, 1, &mut toks);
+            continue;
+        }
+        // raw / byte string prefixes: r" r#" br" b" (otherwise ident)
+        if c == 'r' || c == 'b' {
+            let mut k = 1usize;
+            let mut raw = c == 'r';
+            if c == 'b' && cur.at(1) == Some('r') {
+                raw = true;
+                k = 2;
+            }
+            if raw {
+                let mut hashes = 0usize;
+                while cur.at(k + hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if cur.at(k + hashes) == Some('"') {
+                    lex_raw_string(&mut cur, n, k + hashes + 1, hashes, &mut toks);
+                    continue;
+                }
+            }
+            if c == 'b' && cur.at(1) == Some('"') {
+                lex_quoted(&mut cur, n, 2, &mut toks);
+                continue;
+            }
+            // fall through: identifier starting with r/b
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            lex_tick(&mut cur, n, &mut toks);
+            continue;
+        }
+        if is_ident_start(c) {
+            let (l0, c0) = (cur.line, cur.col);
+            let start = cur.i;
+            let mut end = cur.i;
+            while end < n && is_ident_cont(cur.s[end]) {
+                end += 1;
+            }
+            let text = cur.text(start, end);
+            cur.adv(end - start);
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text,
+                line: l0,
+                col: c0,
+                end_line: cur.line,
+                end_col: cur.col,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (l0, c0) = (cur.line, cur.col);
+            let start = cur.i;
+            let mut end = cur.i;
+            while end < n {
+                let ch = cur.s[end];
+                if ch.is_alphanumeric() || ch == '_' {
+                    end += 1;
+                } else if ch == '.' && cur.s.get(end + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    end += 1;
+                } else if (ch == '+' || ch == '-')
+                    && end > start
+                    && matches!(cur.s[end - 1], 'e' | 'E')
+                {
+                    end += 1;
+                } else {
+                    break;
+                }
+            }
+            let text = cur.text(start, end);
+            cur.adv(end - start);
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text,
+                line: l0,
+                col: c0,
+                end_line: cur.line,
+                end_col: cur.col,
+            });
+            continue;
+        }
+        let (l0, c0) = (cur.line, cur.col);
+        cur.adv(1);
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line: l0,
+            col: c0,
+            end_line: cur.line,
+            end_col: cur.col,
+        });
+    }
+    Lexed { toks, comments }
+}
+
+/// Lex a `"..."`-style literal whose opening delimiter (including any
+/// `b` prefix) is `skip` chars long; backslash escapes are honored.
+fn lex_quoted(cur: &mut Cursor, n: usize, skip: usize, toks: &mut Vec<Tok>) {
+    let (l0, c0) = (cur.line, cur.col);
+    let start = cur.i;
+    let mut end = cur.i + skip;
+    while end < n {
+        if cur.s[end] == '\\' {
+            end += 2;
+            continue;
+        }
+        if cur.s[end] == '"' {
+            end += 1;
+            break;
+        }
+        end += 1;
+    }
+    let end = end.min(n);
+    // contents: strip the prefix+quote and (when present) the close quote
+    let close = usize::from(end > start + skip && cur.s[end - 1] == '"');
+    let text = cur.text(start + skip, end - close);
+    cur.adv(end - start);
+    toks.push(Tok {
+        kind: TokKind::Str,
+        text,
+        line: l0,
+        col: c0,
+        end_line: cur.line,
+        end_col: cur.col,
+    });
+}
+
+/// Lex a raw string whose opening `r##"` span is `open` chars and whose
+/// closing delimiter is `"` followed by `hashes` `#`s.
+fn lex_raw_string(cur: &mut Cursor, n: usize, open: usize, hashes: usize, toks: &mut Vec<Tok>) {
+    let (l0, c0) = (cur.line, cur.col);
+    let start = cur.i;
+    let body = cur.i + open;
+    let mut end = body;
+    let mut content_end = n;
+    while end < n {
+        if cur.s[end] == '"' && (1..=hashes).all(|h| cur.s.get(end + h) == Some(&'#')) {
+            content_end = end;
+            end += 1 + hashes;
+            break;
+        }
+        end += 1;
+    }
+    let end = end.min(n);
+    let text = cur.text(body, content_end.min(end));
+    cur.adv(end - start);
+    toks.push(Tok {
+        kind: TokKind::Str,
+        text,
+        line: l0,
+        col: c0,
+        end_line: cur.line,
+        end_col: cur.col,
+    });
+}
+
+/// Disambiguate `'x'` / `'\n'` (char literals) from `'a` (lifetimes).
+fn lex_tick(cur: &mut Cursor, n: usize, toks: &mut Vec<Tok>) {
+    let (l0, c0) = (cur.line, cur.col);
+    let start = cur.i;
+    if cur.at(1) == Some('\\') {
+        // escaped char literal: consume through the closing quote
+        let mut end = (start + 3).min(n);
+        while end < n && cur.s[end] != '\'' {
+            end += 1;
+        }
+        let end = (end + 1).min(n);
+        cur.adv(end - start);
+        push_mark(toks, TokKind::Char, l0, c0, cur);
+        return;
+    }
+    if cur.at(1).is_some_and(is_ident_start) {
+        let mut end = start + 1;
+        while end < n && is_ident_cont(cur.s[end]) {
+            end += 1;
+        }
+        if cur.s.get(end) == Some(&'\'') {
+            cur.adv(end + 1 - start);
+            push_mark(toks, TokKind::Char, l0, c0, cur);
+        } else {
+            let text = cur.text(start + 1, end);
+            cur.adv(end - start);
+            toks.push(Tok {
+                kind: TokKind::Lifetime,
+                text,
+                line: l0,
+                col: c0,
+                end_line: cur.line,
+                end_col: cur.col,
+            });
+        }
+        return;
+    }
+    if cur.at(1).is_some() && cur.at(2) == Some('\'') {
+        // non-ident char like '(' or '+'
+        cur.adv(3);
+        push_mark(toks, TokKind::Char, l0, c0, cur);
+        return;
+    }
+    // stray quote: consume it alone and move on
+    cur.adv(1);
+}
+
+fn push_mark(toks: &mut Vec<Tok>, kind: TokKind, l0: usize, c0: usize, cur: &Cursor) {
+    toks.push(Tok {
+        kind,
+        text: String::new(),
+        line: l0,
+        col: c0,
+        end_line: cur.line,
+        end_col: cur.col,
+    });
+}

@@ -1,0 +1,44 @@
+//! detlint — the determinism linter for this tree.
+//!
+//! Machine-enforces the contract in docs/DETERMINISM.md: rules D1–D6
+//! over `rust/src`, `rust/tests`, `rust/benches`, `examples`, and its
+//! own sources.  Zero dependencies by design — the lexer is hand-rolled
+//! in [`lexer`], the rules live in [`rules`], and the binary in
+//! `main.rs` is a thin directory walk over [`lint_source`].
+//!
+//! See docs/LINTING.md for the runbook (running locally, the allowlist
+//! syntax, and how to add a rule).
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, Finding, RULE_IDS};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Recursively collect every `.rs` file under `root` (or `root` itself
+/// when it is a file), appending to `out` in sorted order so lint
+/// output — and therefore CI logs — are byte-stable across runs.
+pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(root)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

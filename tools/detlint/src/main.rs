@@ -1,0 +1,59 @@
+//! CLI entry point: `detlint [path ...]` lints every `.rs` file under
+//! the given paths (files or directories, repo-relative) and prints one
+//! `path:line: RULE message` finding per line.  With no arguments it
+//! lints the default gate set — the same list scripts/lint.sh passes.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use detlint::{collect_rs_files, lint_source};
+use std::path::Path;
+use std::process::ExitCode;
+
+const DEFAULT_ROOTS: &[&str] =
+    &["rust/src", "rust/tests", "rust/benches", "examples", "tools/detlint/src"];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<String> = if args.is_empty() {
+        DEFAULT_ROOTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        args
+    };
+
+    let mut files = Vec::new();
+    for root in &roots {
+        let path = Path::new(root);
+        if !path.exists() {
+            eprintln!("detlint: path not found: {root} (run from the repo root)");
+            return ExitCode::from(2);
+        }
+        if let Err(err) = collect_rs_files(path, &mut files) {
+            eprintln!("detlint: walking {root}: {err}");
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut findings = 0usize;
+    for file in &files {
+        let rel = file.to_string_lossy();
+        let src = match std::fs::read_to_string(file) {
+            Ok(src) => src,
+            Err(err) => {
+                eprintln!("detlint: reading {rel}: {err}");
+                return ExitCode::from(2);
+            }
+        };
+        for f in lint_source(&rel, &src) {
+            println!("{rel}:{}: {} {}", f.line, f.rule, f.msg);
+            findings += 1;
+        }
+    }
+
+    if findings == 0 {
+        println!("detlint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("detlint: {findings} finding(s)");
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,474 @@
+//! The determinism rules (D1–D6) and the allowlist machinery.  Every
+//! rule is a pass over the token stream from [`crate::lexer`] plus
+//! per-line comment metadata; scoping is by repo-relative path, so the
+//! same engine lints real files and fixture snippets alike.
+//!
+//! Rule catalogue (mirrored in docs/DETERMINISM.md §6 and
+//! docs/LINTING.md):
+//!
+//! - **D1** — no FMA/fast-math contraction (`mul_add`, `fma`,
+//!   `f*_fast`, `f*_algebraic`) in numeric modules.
+//! - **D2** — no `HashMap`/`HashSet` in determinism-scoped paths
+//!   (numeric modules plus serialization/stats files): iteration order
+//!   is seeded per-process.
+//! - **D3** — no wall-clock (`std::time`, `Instant`, `SystemTime`) in
+//!   numeric modules; timing belongs to benches and serving stats.
+//! - **D4** — every `C3A_*` env access goes through `substrate::env`.
+//! - **D5** — every `unsafe` carries a `SAFETY` comment and every
+//!   atomic `Ordering::*` operation a rationale comment.
+//! - **D6** — 100-column limit (string-literal spans exempt: rustfmt
+//!   cannot split them) and rustfmt import order.
+//!
+//! Suppression: `// detlint: allow(D2) <reason>` on (or on the own-line
+//! comment directly above) the offending line.  A missing reason or an
+//! unknown rule id is itself a finding (**A0**), so the allowlist stays
+//! auditable.
+
+use crate::lexer::{lex, Tok, TokKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One lint finding, anchored to a 1-based line of the linted file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// 1-based line the finding anchors to.
+    pub line: usize,
+    /// Rule id: `"D1"`..`"D6"`, or `"A0"` for a bad allow directive.
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+/// The suppressible rule ids, in catalogue order.
+pub const RULE_IDS: &[&str] = &["D1", "D2", "D3", "D4", "D5", "D6"];
+
+const D1_IDENTS: &[&str] = &[
+    "mul_add",
+    "fma",
+    "fadd_fast",
+    "fmul_fast",
+    "fsub_fast",
+    "fdiv_fast",
+    "fadd_algebraic",
+    "fmul_algebraic",
+    "fsub_algebraic",
+];
+const ENV_FNS: &[&str] = &["var", "var_os", "set_var", "remove_var"];
+const ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Modules under the scalar-reference determinism contract (D1/D3, and
+/// the core of D2).
+const NUMERIC_PREFIXES: &[&str] = &[
+    "rust/src/substrate/",
+    "rust/src/runtime/interp/",
+    "rust/src/runtime/plan/",
+    "rust/src/runtime/refbackend/",
+];
+/// Extra D2 scope: files whose output must be byte-stable across runs.
+const D2_EXTRA: &[&str] = &["rust/src/serving/store.rs", "rust/src/serving/stats.rs"];
+/// The one module allowed to touch `C3A_*` env vars directly.
+const ENV_MODULE: &str = "rust/src/substrate/env.rs";
+
+/// Lint one file.  `rel` is its repo-relative path (used for rule
+/// scoping); `src` is the file contents.  Findings come back sorted by
+/// (line, rule, message).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let rel = rel.replace('\\', "/");
+    let rel = rel.strip_prefix("./").unwrap_or(&rel).to_string();
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let n_toks = toks.len();
+
+    let numeric = NUMERIC_PREFIXES.iter().any(|p| rel.starts_with(p));
+    let d2 = numeric || D2_EXTRA.contains(&rel.as_str());
+    let is_env = rel == ENV_MODULE;
+
+    // ---- per-line comment / attribute metadata --------------------------
+    let mut comment_text_by_line: BTreeMap<usize, String> = BTreeMap::new();
+    let mut own_comment_lines: BTreeSet<usize> = BTreeSet::new();
+    for c in &lexed.comments {
+        for line in c.line..=c.end_line {
+            comment_text_by_line.entry(line).or_default().push_str(&c.text);
+        }
+        if c.own_line {
+            own_comment_lines.extend(c.line..=c.end_line);
+        }
+    }
+    let mut attr_lines: BTreeSet<usize> = BTreeSet::new();
+    for (idx, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Punct || t.text != "#" {
+            continue;
+        }
+        let Some(next) = toks.get(idx + 1) else { continue };
+        if next.kind != TokKind::Punct || (next.text != "[" && next.text != "!") {
+            continue;
+        }
+        attr_lines.insert(t.line);
+        let mut depth = 0i32;
+        let mut j = idx + 1;
+        if toks[j].text == "!" {
+            j += 1;
+        }
+        while j < n_toks {
+            let tj = &toks[j];
+            if tj.kind == TokKind::Punct && tj.text == "[" {
+                depth += 1;
+            } else if tj.kind == TokKind::Punct && tj.text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    attr_lines.extend(t.line..=tj.line);
+                    break;
+                }
+            }
+            j += 1;
+        }
+    }
+
+    // ---- allow directives ----------------------------------------------
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allows: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    let tok_lines: Vec<usize> = {
+        let set: BTreeSet<usize> = toks.iter().map(|t| t.line).collect();
+        set.into_iter().collect()
+    };
+    for c in &lexed.comments {
+        let Some(pos) = c.text.find("detlint:") else { continue };
+        let rest = c.text[pos + "detlint:".len()..].trim_start();
+        let Some(list) = rest.strip_prefix("allow(") else {
+            findings.push(Finding {
+                line: c.line,
+                rule: "A0",
+                msg: "malformed detlint directive (expected `detlint: allow(Dn) reason`)".into(),
+            });
+            continue;
+        };
+        let Some(close) = list.find(')') else {
+            findings.push(Finding {
+                line: c.line,
+                rule: "A0",
+                msg: "malformed detlint directive (unclosed allow list)".into(),
+            });
+            continue;
+        };
+        let ids: Vec<&str> =
+            list[..close].split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+        let reason = list[close + 1..].trim();
+        if let Some(bad) = ids.iter().find(|id| !RULE_IDS.contains(id)) {
+            findings.push(Finding {
+                line: c.line,
+                rule: "A0",
+                msg: format!("unknown rule id {bad} in allow directive"),
+            });
+            continue;
+        }
+        if reason.is_empty() {
+            findings.push(Finding {
+                line: c.line,
+                rule: "A0",
+                msg: "allow directive requires a reason: `// detlint: allow(Dn) <why>`".into(),
+            });
+            continue;
+        }
+        // an own-line directive covers the next code line; an inline one
+        // covers its own line
+        let target = if c.own_line {
+            match tok_lines.binary_search(&c.end_line) {
+                Ok(i) => tok_lines.get(i + 1).copied(),
+                Err(i) => tok_lines.get(i).copied(),
+            }
+        } else {
+            Some(c.line)
+        };
+        if let Some(target) = target {
+            allows.entry(target).or_default().extend(ids.iter().map(|s| s.to_string()));
+        }
+    }
+
+    let mut emit = |findings: &mut Vec<Finding>, line: usize, rule: &'static str, msg: String| {
+        if allows.get(&line).is_some_and(|set| set.contains(rule)) {
+            return;
+        }
+        findings.push(Finding { line, rule, msg });
+    };
+
+    // anchor lines whose comments can justify a finding on `line`: the
+    // line itself, plus the contiguous run of own-line comments and
+    // attributes directly above it
+    let cov_lines = |line: usize| -> Vec<usize> {
+        let mut out = Vec::new();
+        if comment_text_by_line.contains_key(&line) {
+            out.push(line);
+        }
+        let mut l = line.saturating_sub(1);
+        while l >= 1 && (own_comment_lines.contains(&l) || attr_lines.contains(&l)) {
+            if own_comment_lines.contains(&l) {
+                out.push(l);
+            }
+            l -= 1;
+        }
+        out
+    };
+    let has_marker = |line: usize, markers: &[&str]| -> bool {
+        cov_lines(line).iter().any(|l| {
+            let txt = comment_text_by_line.get(l).map(String::as_str).unwrap_or("");
+            markers.iter().any(|m| txt.contains(m))
+        })
+    };
+
+    let d1_msg = |name: &str| {
+        format!("`{name}`: FMA/fast-math contraction is forbidden in numeric modules")
+    };
+    let d2_msg = |name: &str| {
+        format!(
+            "`{name}` in a determinism-scoped path (iteration order is nondeterministic); \
+             use BTreeMap/BTreeSet or allowlist with proof it is never iterated"
+        )
+    };
+    let d3_msg = |name: &str| {
+        format!("`{name}`: wall-clock inside a numeric module (timing belongs to benches)")
+    };
+
+    // ---- token walk: D1–D5 + use-statement collection -------------------
+    struct UseStmt {
+        start_line: usize,
+        end_line: usize,
+        depth: usize,
+        segs: Vec<String>,
+    }
+    let mut use_stmts: Vec<UseStmt> = Vec::new();
+    let mut depth = 0usize;
+    // last significant char: ';' '{' '}' ']' etc., 'x' for non-punct
+    let mut prev_sig: Option<char> = None;
+    let mut idx = 0usize;
+    while idx < n_toks {
+        let t = &toks[idx];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+        }
+        let is_ident = t.kind == TokKind::Ident;
+        if numeric && is_ident && D1_IDENTS.contains(&t.text.as_str()) {
+            emit(&mut findings, t.line, "D1", d1_msg(&t.text));
+        }
+        if d2 && is_ident && (t.text == "HashMap" || t.text == "HashSet") {
+            emit(&mut findings, t.line, "D2", d2_msg(&t.text));
+        }
+        if numeric && is_ident && (t.text == "Instant" || t.text == "SystemTime") {
+            emit(&mut findings, t.line, "D3", d3_msg(&t.text));
+        }
+        if numeric && is_ident && t.text == "std" && path_next(toks, idx, "time") {
+            emit(&mut findings, t.line, "D3", "`std::time` inside a numeric module".into());
+        }
+        if !is_env && is_ident && ENV_FNS.contains(&t.text.as_str()) {
+            let call = toks.get(idx + 1).is_some_and(|p| p.kind == TokKind::Punct && p.text == "(");
+            let c3a = toks.get(idx + 2).is_some_and(|a| {
+                a.kind == TokKind::Str && a.text.starts_with("C3A_")
+            });
+            if call && c3a {
+                emit(
+                    &mut findings,
+                    t.line,
+                    "D4",
+                    format!(
+                        "raw `{}(\"{}\")` outside substrate/env.rs — use the substrate::env \
+                         accessors/constants",
+                        t.text,
+                        toks[idx + 2].text
+                    ),
+                );
+            }
+        }
+        if is_ident && t.text == "unsafe" {
+            // rustfmt may wrap a statement so `unsafe` lands on a
+            // continuation line; also accept a SAFETY comment above the
+            // statement start (the token after the last ';'/'{'/'}')
+            let mut j = idx;
+            while j > 0 {
+                let tj = &toks[j - 1];
+                if tj.kind == TokKind::Punct && matches!(tj.text.as_str(), ";" | "{" | "}") {
+                    break;
+                }
+                j -= 1;
+            }
+            let stmt_line = toks[j].line;
+            if !has_marker(t.line, &["SAFETY", "Safety"])
+                && !has_marker(stmt_line, &["SAFETY", "Safety"])
+            {
+                emit(
+                    &mut findings,
+                    t.line,
+                    "D5",
+                    "`unsafe` without a `// SAFETY:` justification".into(),
+                );
+            }
+        }
+        if is_ident && t.text == "Ordering" {
+            let which = toks
+                .get(idx + 3)
+                .filter(|o| {
+                    o.kind == TokKind::Ident
+                        && ORDERINGS.contains(&o.text.as_str())
+                        && toks[idx + 1].text == ":"
+                        && toks[idx + 2].text == ":"
+                })
+                .map(|o| o.text.clone());
+            if let Some(which) = which {
+                if cov_lines(t.line).is_empty() {
+                    emit(
+                        &mut findings,
+                        t.line,
+                        "D5",
+                        format!(
+                            "atomic `Ordering::{which}` without a rationale comment on or \
+                             above this line"
+                        ),
+                    );
+                }
+            }
+        }
+        // use statements: collect path segments for D6 import order
+        let starts_stmt = matches!(prev_sig, None | Some(';' | '{' | '}' | ']'));
+        if is_ident && t.text == "use" && starts_stmt {
+            let start_line = t.line;
+            let mut end_line = t.line;
+            let mut segs: Vec<String> = Vec::new();
+            let mut sdepth = 0usize;
+            let mut j = idx + 1;
+            while j < n_toks {
+                let tj = &toks[j];
+                // imported idents still face the token rules (catches
+                // `use std::collections::HashMap as Map;` aliasing)
+                if tj.kind == TokKind::Ident {
+                    if numeric && D1_IDENTS.contains(&tj.text.as_str()) {
+                        emit(&mut findings, tj.line, "D1", d1_msg(&tj.text));
+                    }
+                    if d2 && (tj.text == "HashMap" || tj.text == "HashSet") {
+                        emit(&mut findings, tj.line, "D2", d2_msg(&tj.text));
+                    }
+                    if numeric && (tj.text == "Instant" || tj.text == "SystemTime") {
+                        emit(&mut findings, tj.line, "D3", d3_msg(&tj.text));
+                    }
+                }
+                if tj.kind == TokKind::Punct && tj.text == "{" {
+                    if sdepth == 0 {
+                        segs.push("{".into());
+                    }
+                    sdepth += 1;
+                } else if tj.kind == TokKind::Punct && tj.text == "}" {
+                    sdepth = sdepth.saturating_sub(1);
+                } else if tj.kind == TokKind::Punct && tj.text == ";" && sdepth == 0 {
+                    end_line = tj.line;
+                    break;
+                } else if sdepth == 0 && tj.kind == TokKind::Ident {
+                    if tj.text == "as" {
+                        j += 1; // skip the alias ident
+                    } else {
+                        segs.push(tj.text.clone());
+                    }
+                }
+                j += 1;
+            }
+            if !segs.is_empty() {
+                use_stmts.push(UseStmt { start_line, end_line, depth, segs });
+            }
+            idx = j + 1;
+            prev_sig = Some(';');
+            continue;
+        }
+        if is_ident && t.text == "pub" {
+            // transparent: `pub use` still starts a statement
+            idx += 1;
+            continue;
+        }
+        prev_sig = if t.kind == TokKind::Punct { t.text.chars().next() } else { Some('x') };
+        idx += 1;
+    }
+
+    // ---- D6: line length (string spans exempt) --------------------------
+    for (ln0, text) in src.split('\n').enumerate() {
+        let ln = ln0 + 1;
+        let width = text.chars().count();
+        if width <= 100 {
+            continue;
+        }
+        let exempt = toks.iter().any(|t| {
+            t.kind == TokKind::Str
+                && t.line <= ln
+                && ln <= t.end_line
+                && (t.line < ln || t.end_line > ln || t.end_col > 100)
+        });
+        if !exempt {
+            emit(&mut findings, ln, "D6", format!("line exceeds 100 columns ({width})"));
+        }
+    }
+
+    // ---- D6: import order within contiguous use groups ------------------
+    let mut group: Vec<&UseStmt> = Vec::new();
+    let mut flush = |group: &mut Vec<&UseStmt>, findings: &mut Vec<Finding>| {
+        for pair in group.windows(2) {
+            let (a, b) = (pair[0], pair[1]);
+            let ka: Vec<_> = a.segs.iter().map(|s| seg_key(s)).collect();
+            let kb: Vec<_> = b.segs.iter().map(|s| seg_key(s)).collect();
+            if kb < ka {
+                emit(
+                    findings,
+                    b.start_line,
+                    "D6",
+                    format!(
+                        "import out of order: `{}` sorts before `{}`",
+                        b.segs.join("::"),
+                        a.segs.join("::")
+                    ),
+                );
+            }
+        }
+        group.clear();
+    };
+    for st in &use_stmts {
+        let adjacent = group
+            .last()
+            .is_some_and(|prev| st.depth == prev.depth && st.start_line == prev.end_line + 1);
+        if !group.is_empty() && !adjacent {
+            flush(&mut group, &mut findings);
+        }
+        group.push(st);
+    }
+    flush(&mut group, &mut findings);
+
+    findings.sort_by(|a, b| (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg)));
+    findings
+}
+
+/// True when `toks[idx]` is followed by `::ident` matching `name`.
+fn path_next(toks: &[Tok], idx: usize, name: &str) -> bool {
+    toks.get(idx + 1).is_some_and(|t| t.text == ":")
+        && toks.get(idx + 2).is_some_and(|t| t.text == ":")
+        && toks.get(idx + 3).is_some_and(|t| t.kind == TokKind::Ident && t.text == name)
+}
+
+/// rustfmt's import-segment ordering, validated against the tree:
+/// `self < super < crate <` everything else; within plain identifiers
+/// `snake_case < CamelCase < UPPER_SNAKE_CASE`, plain ASCII inside each
+/// class; a brace list sorts after any named segment.
+fn seg_key(seg: &str) -> (u8, u8, String) {
+    match seg {
+        "self" => (0, 0, String::new()),
+        "super" => (1, 0, String::new()),
+        "crate" => (2, 0, String::new()),
+        "{" => (4, 0, String::new()),
+        _ => {
+            let upper_snake =
+                seg.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_');
+            let case = if upper_snake {
+                2
+            } else if seg.starts_with(|c: char| c.is_ascii_uppercase()) {
+                1
+            } else {
+                0
+            };
+            (3, case, seg.to_string())
+        }
+    }
+}

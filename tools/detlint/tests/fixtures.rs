@@ -1,0 +1,111 @@
+//! Fixture corpus: every bad fixture must produce exactly the expected
+//! `(line, rule)` findings when linted under its scoped pseudo-path, and
+//! every good fixture must come back clean.  The fixtures live as real
+//! `.rs` files (never compiled — cargo only builds top-level files in
+//! tests/) so the corpus is readable and greppable.
+
+use detlint::lint_source;
+
+fn check(rel: &str, src: &str, want: &[(usize, &str)]) {
+    let findings = lint_source(rel, src);
+    let got: Vec<(usize, &str)> = findings.iter().map(|f| (f.line, f.rule)).collect();
+    assert_eq!(got, want, "fixture {rel}");
+}
+
+#[test]
+fn d1_flags_fma_in_numeric_scope() {
+    check("rust/src/substrate/fx.rs", include_str!("fixtures/d1_bad.rs"), &[(4, "D1")]);
+}
+
+#[test]
+fn d1_accepts_plain_mul_add_spelling() {
+    check("rust/src/substrate/fx.rs", include_str!("fixtures/d1_good.rs"), &[]);
+}
+
+#[test]
+fn d1_is_scoped_to_numeric_modules() {
+    // the same source outside the numeric scope is not D1's business
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d1_bad.rs"), &[]);
+}
+
+#[test]
+fn d2_flags_hash_containers_on_import_and_use() {
+    check(
+        "rust/src/runtime/interp/fx.rs",
+        include_str!("fixtures/d2_bad.rs"),
+        &[(3, "D2"), (6, "D2")],
+    );
+}
+
+#[test]
+fn d2_respects_reasoned_allow_directives() {
+    check("rust/src/runtime/interp/fx.rs", include_str!("fixtures/d2_allowed.rs"), &[]);
+}
+
+#[test]
+fn d2_covers_the_serialization_extra_scope() {
+    check("rust/src/serving/store.rs", include_str!("fixtures/d2_bad.rs"), &[(3, "D2"), (6, "D2")]);
+}
+
+#[test]
+fn d3_flags_wall_clock_in_numeric_scope() {
+    check("rust/src/substrate/fx.rs", include_str!("fixtures/d3_bad.rs"), &[(3, "D3"), (6, "D3")]);
+}
+
+#[test]
+fn d4_flags_raw_c3a_env_access_only() {
+    // line 4: set_var("C3A_PLAN"); line 7: var("C3A_THREADS"); the HOME
+    // read between them is out of scope
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d4_bad.rs"), &[(4, "D4"), (7, "D4")]);
+}
+
+#[test]
+fn d4_exempts_the_env_module_itself() {
+    check("rust/src/substrate/env.rs", include_str!("fixtures/d4_bad.rs"), &[]);
+}
+
+#[test]
+fn d5_flags_unsafe_without_safety_comment() {
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d5_unsafe_bad.rs"), &[(3, "D5")]);
+}
+
+#[test]
+fn d5_accepts_all_safety_comment_placements() {
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d5_unsafe_good.rs"), &[]);
+}
+
+#[test]
+fn d5_flags_uncommented_atomic_orderings() {
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d5_atomic_bad.rs"), &[(8, "D5")]);
+}
+
+#[test]
+fn d6_flags_long_code_lines() {
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d6_long_bad.rs"), &[(4, "D6")]);
+}
+
+#[test]
+fn d6_exempts_string_literals_spanning_the_limit() {
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d6_string_ok.rs"), &[]);
+}
+
+#[test]
+fn d6_flags_misordered_imports() {
+    check("rust/src/serving/fx.rs", include_str!("fixtures/d6_import_bad.rs"), &[(5, "D6")]);
+}
+
+#[test]
+fn d6_accepts_rustfmt_import_order() {
+    check("rust/src/fx.rs", include_str!("fixtures/d6_import_good.rs"), &[]);
+}
+
+#[test]
+fn a0_flags_bad_directives_and_keeps_findings() {
+    // line 4: reasonless allow; line 8: unknown rule id — neither
+    // suppresses, so the D2s on lines 5 and 9 still fire
+    check(
+        "rust/src/runtime/interp/fx.rs",
+        include_str!("fixtures/a0_bad.rs"),
+        &[(4, "A0"), (5, "D2"), (8, "A0"), (9, "D2")],
+    );
+}

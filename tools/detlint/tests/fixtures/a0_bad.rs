@@ -1,0 +1,10 @@
+// Fixture: malformed allow directives. Expected: A0 for the missing
+// reason, A0 for the unknown rule id, and the D2 findings still fire
+// because neither directive is accepted.
+// detlint: allow(D2)
+use std::collections::HashMap;
+
+pub struct Cache {
+    // detlint: allow(D9) not a real rule
+    entries: HashMap<String, Vec<f32>>,
+}

@@ -1,0 +1,5 @@
+// Fixture: FMA contraction inside a numeric module (linted under a
+// pseudo-path in rust/src/substrate/). Expected: D1 on the mul_add line.
+pub fn axpy(a: f32, x: f32, y: f32) -> f32 {
+    a.mul_add(x, y)
+}

@@ -1,0 +1,4 @@
+// Fixture: the deterministic spelling of the same update. Expected: clean.
+pub fn axpy(a: f32, x: f32, y: f32) -> f32 {
+    a * x + y
+}

@@ -1,0 +1,9 @@
+// Fixture: the same hash container, allowlisted with a reason. Expected:
+// clean — the directive suppresses D2 on the line it precedes / shares.
+// detlint: allow(D2) keyed lookups only; this map is never iterated
+use std::collections::HashMap;
+
+pub struct Cache {
+    // detlint: allow(D2) keyed lookups only; this map is never iterated
+    entries: HashMap<String, Vec<f32>>,
+}

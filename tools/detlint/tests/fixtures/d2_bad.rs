@@ -1,0 +1,7 @@
+// Fixture: hash containers in a determinism-scoped path. Expected: D2 on
+// both the import line and the field line.
+use std::collections::HashMap;
+
+pub struct Cache {
+    entries: HashMap<String, Vec<f32>>,
+}

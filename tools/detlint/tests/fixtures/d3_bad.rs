@@ -1,0 +1,8 @@
+// Fixture: wall-clock in a numeric module. Expected: D3 (import line and
+// call line).
+use std::time::Instant;
+
+pub fn timed() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

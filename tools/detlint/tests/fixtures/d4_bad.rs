@@ -1,0 +1,8 @@
+// Fixture: raw C3A_* env access outside substrate/env.rs. Expected: D4 on
+// both reads (var and set_var); the non-C3A read is out of scope.
+pub fn threads() -> usize {
+    std::env::set_var("C3A_PLAN", "0");
+    let home = std::env::var("HOME");
+    drop(home);
+    std::env::var("C3A_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}

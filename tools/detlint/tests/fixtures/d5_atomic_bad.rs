@@ -1,0 +1,14 @@
+// Fixture: atomic op without an ordering-rationale comment. Expected: D5
+// on the fetch_add line (the commented load is fine).
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub static N: AtomicUsize = AtomicUsize::new(0);
+
+pub fn bump() -> usize {
+    N.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn peek() -> usize {
+    // Relaxed: monotonic counter, no ordering needed.
+    N.load(Ordering::Relaxed)
+}

@@ -1,0 +1,22 @@
+// Fixture: the accepted comment placements for unsafe. Expected: clean.
+pub fn read_first(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above guarantees index 0 is in bounds.
+    unsafe { *v.get_unchecked(0) }
+}
+
+/// # Safety
+/// Caller must guarantee `v` is non-empty.
+pub unsafe fn read_first_unchecked(v: &[u8]) -> u8 {
+    // SAFETY: forwarded to the caller via this fn's own contract.
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub fn wrapped(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: bounds asserted above; the comment sits on the statement
+    // start while rustfmt wraps `unsafe` onto a continuation line.
+    let first: u8 =
+        unsafe { *v.get_unchecked(0) };
+    first
+}

@@ -1,0 +1,8 @@
+// Fixture: import block violating rustfmt order (std::sync before
+// std::path, CamelCase before snake_case). Expected: D6 on each line that
+// sorts before its predecessor.
+use std::sync::Arc;
+use std::path::Path;
+use std::sync::mpsc;
+
+pub fn f(_: Arc<u8>, _: &Path, _: mpsc::Sender<u8>) {}

@@ -1,0 +1,14 @@
+// Fixture: the rustfmt ordering detlint models — self/super/crate ranks,
+// snake_case < CamelCase, brace lists after named segments. Expected:
+// clean when linted at a crate-root pseudo-path.
+use crate::alpha::zeta;
+use crate::beta::Gamma;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+pub fn f(_: &Path, _: Arc<u8>, _: mpsc::Sender<u8>) -> Result<()> {
+    let _ = (zeta, Gamma, bail!("x")).1;
+    Context::custom()
+}

@@ -1,0 +1,5 @@
+// Fixture: a code line past 100 columns with no string crossing the
+// boundary. Expected: D6 on the long line.
+pub fn total(values: &[u64]) -> u64 {
+    values.iter().copied().fold(0u64, |accumulator, element| accumulator.wrapping_add(element).wrapping_add(1))
+}

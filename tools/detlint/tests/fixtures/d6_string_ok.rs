@@ -1,0 +1,6 @@
+// Fixture: the long line is a string literal spanning column 100 —
+// rustfmt cannot split string tokens, so detlint exempts it. Expected:
+// clean.
+pub fn template() -> &'static str {
+    "{\n  \"bench\": \"fixture\",\n  \"requests\": 0,\n  \"tenants\": 0,\n  \"threads\": null,\n  \"p50\": 0.0\n}"
+}

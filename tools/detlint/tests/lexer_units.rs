@@ -1,0 +1,72 @@
+//! Targeted lexer cases the rules depend on: comment/string/char
+//! disambiguation and the exact column spans D6 uses for its
+//! string-literal exemption.
+
+use detlint::lexer::{lex, TokKind};
+
+fn kinds(src: &str) -> Vec<(TokKind, String)> {
+    lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+}
+
+#[test]
+fn raw_strings_keep_embedded_quotes() {
+    let toks = kinds("let s = r#\"a \" b\"#;");
+    assert!(toks.contains(&(TokKind::Str, "a \" b".to_string())), "{toks:?}");
+}
+
+#[test]
+fn lifetimes_are_not_char_literals() {
+    let toks = kinds("fn f<'a>(x: &'a str) -> &'a str { x }");
+    let lifetimes = toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count();
+    let chars = toks.iter().filter(|(k, _)| *k == TokKind::Char).count();
+    assert_eq!((lifetimes, chars), (3, 0), "{toks:?}");
+}
+
+#[test]
+fn char_literals_cover_escapes_and_punctuation() {
+    let toks = kinds("let a = 'x'; let b = '\\n'; let c = '('; let d = '\\'';");
+    let chars = toks.iter().filter(|(k, _)| *k == TokKind::Char).count();
+    assert_eq!(chars, 4, "{toks:?}");
+}
+
+#[test]
+fn block_comments_nest() {
+    let lexed = lex("/* a /* b */ c */ let x = 1;");
+    assert_eq!(lexed.comments.len(), 1);
+    assert_eq!(lexed.comments[0].text, "/* a /* b */ c */");
+    assert!(lexed.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "let"));
+}
+
+#[test]
+fn comment_markers_inside_strings_are_inert() {
+    let lexed = lex("let s = \"// not a comment\";\n// real comment\n");
+    assert_eq!(lexed.comments.len(), 1);
+    assert_eq!(lexed.comments[0].text, "// real comment");
+    assert!(lexed.toks.iter().any(|t| t.kind == TokKind::Str && t.text == "// not a comment"));
+}
+
+#[test]
+fn own_line_flag_distinguishes_tail_comments() {
+    let lexed = lex("let x = 1; // tail\n    // own\nlet y = 2;\n");
+    assert_eq!(lexed.comments.len(), 2);
+    assert!(!lexed.comments[0].own_line);
+    assert!(lexed.comments[1].own_line);
+}
+
+#[test]
+fn string_span_columns_are_exact() {
+    // "let s = " is 8 chars, so the opening quote sits at column 9 and
+    // the 102-char token (quote + 100 + quote) ends just past column 110
+    let src = format!("let s = \"{}\";\n", "x".repeat(100));
+    let lexed = lex(&src);
+    let s = lexed.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+    assert_eq!((s.line, s.col), (1, 9));
+    assert_eq!((s.end_line, s.end_col), (1, 9 + 102));
+}
+
+#[test]
+fn unterminated_literals_do_not_panic() {
+    for src in ["let s = \"abc", "let s = r#\"abc", "/* open", "let c = '"] {
+        let _ = lex(src);
+    }
+}

@@ -1,0 +1,26 @@
+//! detlint lints itself: its own sources sit inside the gate set that
+//! scripts/lint.sh passes, so they must hold to the same contract they
+//! enforce.
+
+use detlint::lint_source;
+
+#[test]
+fn detlint_sources_are_clean() {
+    for (rel, src) in [
+        ("tools/detlint/src/lexer.rs", include_str!("../src/lexer.rs")),
+        ("tools/detlint/src/lib.rs", include_str!("../src/lib.rs")),
+        ("tools/detlint/src/main.rs", include_str!("../src/main.rs")),
+        ("tools/detlint/src/rules.rs", include_str!("../src/rules.rs")),
+    ] {
+        let findings = lint_source(rel, src);
+        assert!(
+            findings.is_empty(),
+            "{rel} has lint findings:\n{}",
+            findings
+                .iter()
+                .map(|f| format!("{rel}:{}: {} {}", f.line, f.rule, f.msg))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

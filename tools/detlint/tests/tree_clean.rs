@@ -1,0 +1,33 @@
+//! The whole gated tree must lint clean.  This runs as part of plain
+//! `cargo test` at the workspace root, so the determinism contract is
+//! enforced even on machines that never invoke scripts/lint.sh.
+
+use detlint::{collect_rs_files, lint_source};
+use std::path::Path;
+
+#[test]
+fn gated_tree_is_lint_clean() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let mut files = Vec::new();
+    for root in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        collect_rs_files(&repo.join(root), &mut files)
+            .unwrap_or_else(|e| panic!("walking {root}: {e}"));
+    }
+    assert!(files.len() > 40, "suspiciously few files found: {}", files.len());
+
+    let mut report = String::new();
+    let mut count = 0usize;
+    for file in &files {
+        let rel = file
+            .strip_prefix(&repo)
+            .expect("walked file outside repo root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(file).unwrap();
+        for f in lint_source(&rel, &src) {
+            report.push_str(&format!("{rel}:{}: {} {}\n", f.line, f.rule, f.msg));
+            count += 1;
+        }
+    }
+    assert!(count == 0, "tree has {count} lint finding(s):\n{report}");
+}
