@@ -169,6 +169,45 @@ fn main() -> anyhow::Result<()> {
         pstats.ops, pstats.shared_buffers
     );
 
+    // -- hoist-on vs hoist-off cached eval step: C3A keeps its adapter
+    // math on the request side, so the hoisting pass is measured on a
+    // BOFT artifact (its rotation construction depends only on the
+    // adapter version and is the hoisted prefix).  One session, both
+    // configs: `C3A_HOIST` is re-read per replay, so the kill switch
+    // flips the same recorded plan between skipping and full recompute.
+    let hoist_spec = manifest.artifact("enc_tiny__boft__cls__eval")?.clone();
+    let hoist_init = build_init(&hoist_spec, &base, None, &mut Rng::seed(5), C3aScheme::Xavier)?;
+    let hoist_session = EvalSession::new(&engine, &hoist_spec, &hoist_init)?;
+    let hoist_adapter = hoist_init.trainable.clone();
+    for _ in 0..3 {
+        hoist_session.logits(&hoist_adapter, &eval_batch)?; // record + settle
+    }
+    let t_hoist_on = Instant::now();
+    for _ in 0..serve_calls {
+        hoist_session.logits(&hoist_adapter, &eval_batch)?;
+    }
+    let eval_ms_hoist_on = t_hoist_on.elapsed().as_secs_f64() * 1e3 / serve_calls as f64;
+    let eval_ms_hoist_off = {
+        let _hoist_off = env::ScopedSet::set(env::HOIST, "0");
+        hoist_session.logits(&hoist_adapter, &eval_batch)?; // warmup full replay
+        let t = Instant::now();
+        for _ in 0..serve_calls {
+            hoist_session.logits(&hoist_adapter, &eval_batch)?;
+        }
+        t.elapsed().as_secs_f64() * 1e3 / serve_calls as f64
+    };
+    let hoist_speedup = eval_ms_hoist_off / eval_ms_hoist_on;
+    let hstats = hoist_session.plan_stats().unwrap_or_default();
+    if hstats.hoisted_ops == 0 {
+        println!("hoisted replay          : DISABLED (C3A_PLAN=0 or C3A_HOIST=0 at record)");
+    }
+    println!(
+        "hoisted replay (boft)   : {eval_ms_hoist_on:>8.3} ms/req vs full \
+         {eval_ms_hoist_off:.3} ms/req ({hoist_speedup:.2}x; {} of {} ops hoisted, \
+         {} skips)",
+        hstats.hoisted_ops, hstats.ops, hstats.hoist_skips
+    );
+
     // -- spectra-cached C3A matvec ops/s (production inference operator)
     let d = 1024usize;
     let blk = d / 8;
@@ -194,13 +233,14 @@ fn main() -> anyhow::Result<()> {
     // (docs/BENCHMARKS.md).
     let plan_ops = pstats.ops;
     let plan_shared = pstats.shared_buffers;
+    let plan_hoisted = hstats.hoisted_ops;
     let features = if simd::available() { "simd" } else { "default" };
     let c3a_threads = match env::raw(env::THREADS) {
         Some(v) => format!("\"{v}\""),
         None => "null".into(),
     };
     let json = format!(
-        "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"c3a_threads\": {c3a_threads},\n  \"features\": \"{features}\",\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"step_ms_cached_scalar\": {step_ms_scalar},\n  \"simd_step_speedup\": {simd_step_speedup},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"eval_ms_rebuild\": {eval_ms_rebuild:.3},\n  \"eval_ms_replay\": {eval_ms_replay:.3},\n  \"plan_replay_speedup\": {plan_speedup:.3},\n  \"plan_ops\": {plan_ops},\n  \"plan_shared_buffers\": {plan_shared},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
+        "{{\n  \"bench\": \"interp\",\n  \"model\": \"enc_tiny/c3a_d8\",\n  \"smoke\": {smoke},\n  \"threads\": {max_threads},\n  \"c3a_threads\": {c3a_threads},\n  \"features\": \"{features}\",\n  \"steps\": {steps},\n  \"step_ms_stateless_single\": {step_ms_single:.3},\n  \"step_ms_cached_threaded\": {step_ms_cached:.3},\n  \"speedup\": {speedup:.3},\n  \"step_ms_cached_scalar\": {step_ms_scalar},\n  \"simd_step_speedup\": {simd_step_speedup},\n  \"serve_req_per_s\": {serve_req_s:.1},\n  \"serve_uploads\": {uploads},\n  \"eval_ms_rebuild\": {eval_ms_rebuild:.3},\n  \"eval_ms_replay\": {eval_ms_replay:.3},\n  \"plan_replay_speedup\": {plan_speedup:.3},\n  \"plan_ops\": {plan_ops},\n  \"plan_shared_buffers\": {plan_shared},\n  \"eval_ms_hoist_on\": {eval_ms_hoist_on:.3},\n  \"eval_ms_hoist_off\": {eval_ms_hoist_off:.3},\n  \"hoist_step_speedup\": {hoist_speedup:.3},\n  \"plan_hoisted_ops\": {plan_hoisted},\n  \"c3a_matvec_ops_per_s\": {ops_per_s:.0}\n}}\n"
     );
     // cargo bench runs with the package dir as cwd; the bench script sets
     // C3A_BENCH_OUT to pin the report to the repo root

@@ -1003,6 +1003,19 @@ impl Tape {
         }
     }
 
+    /// Whether leaf `v` currently holds exactly `data` — bitwise, NaN
+    /// payloads included (`to_bits`, not `==`).  This is the plan's
+    /// hoist-epoch fingerprint: a version-invariant op may be skipped on
+    /// replay only while every trainable leaf feeding it still matches
+    /// the incoming literal bit-for-bit (the same equality-invalidation
+    /// rule the spectra and upload caches apply).
+    pub fn leaf_bits_match(&self, v: V, data: &[f32]) -> bool {
+        debug_assert!(matches!(self.nodes[v].op, Op::Leaf(_)), "leaf_bits_match on op node {v}");
+        let cur = &self.nodes[v].val.data;
+        cur.len() == data.len()
+            && cur.iter().zip(data.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
     /// Overwrite a leaf's payload in place (replay of trainable / data
     /// leaves).  Falls back to a fresh buffer if the old one is still
     /// shared (only possible transiently right after recording).

@@ -16,16 +16,34 @@
 //! recording used — bit-for-bit identity with the legacy rebuild path is
 //! structural, not incidental.
 //!
+//! **Version-invariant prefix hoisting:** eval plans additionally
+//! classify every op by whether its transitive leaf set contains a
+//! request-varying leaf (`DataX`, token-derived masks, token-gather
+//! ids).  Ops fed only by `Input` + `Const` leaves depend on the
+//! (frozen backbone, adapter version) pair, not on the request — DoRA's
+//! normalized-weight chain, BOFT's rotation construction, weight-side
+//! transposes.  Their buffers are pinned in *retained* arena slots
+//! (exempt from the circular steal chains) and their recomputation is
+//! skipped on every replay whose hoist fingerprint holds: bitwise
+//! equality between the incoming trainable literals and the leaf
+//! buffers the retained values were computed from.  A hot-swap, train
+//! step, or cold-start upload changes those bits and recomputes the
+//! prefix on the next replay.  A skipped op would have recomputed
+//! identical bits from identical inputs, so bit-identity is by
+//! construction; `C3A_HOIST=0` degrades to the full replay.
+//!
 //! Ownership: one plan per [`InterpState`](super::interp::InterpState),
 //! i.e. per session / per serving tenant.  A plan is never invalidated in
 //! normal operation (shapes are static per artifact); adapter hot-swaps
-//! only invalidate spectra + uploads, not the plan.  `C3A_PLAN=0`
-//! disables recording and falls back to the per-request rebuild.
+//! only invalidate spectra + uploads + the hoist epoch, not the plan.
+//! `C3A_PLAN=0` disables recording and falls back to the per-request
+//! rebuild.
 
 use super::interp::ad::{LeafTag, Tape, V};
 use super::interp::{adamw_update, decay_exempt, loss_head_view, InterpCache, LossView};
 use super::manifest::{ArtifactSpec, ModelMeta, Role};
 use crate::runtime::interp::model::NEG;
+use crate::substrate::env;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -50,6 +68,14 @@ pub struct PlanStats {
     pub shared_buffers: usize,
     /// bytes of distinct op-output buffers the arena holds live
     pub arena_bytes: usize,
+    /// op nodes classified version-invariant by the hoisting pass
+    /// (computed once per adapter version, retained arena slots)
+    pub hoisted_ops: usize,
+    /// op recomputations skipped by hoisting, cumulative over replays
+    pub hoist_skips: u64,
+    /// replays on which the hoist fingerprint changed (hot-swap, train
+    /// step, cold-start re-upload) and the invariant prefix recomputed
+    pub hoist_invalidations: u64,
 }
 
 /// Dtype contract of one positional input, checked up front by
@@ -95,6 +121,15 @@ pub struct Plan {
     shapes: Vec<Vec<usize>>,
     /// embedding gathers to re-id from the request tokens
     gathers: Vec<V>,
+    /// per-node: version-invariant op (hoisting pass; always false on
+    /// train plans and under `C3A_HOIST=0` at build time)
+    hoisted: Vec<bool>,
+    /// (trainable leaf node, positional input) pairs feeding the hoisted
+    /// set — the hoist fingerprint is their bitwise leaf equality
+    hoist_feed: Vec<(V, usize)>,
+    /// per-node: trainable leaf read *only* by hoisted ops, so its
+    /// refill is skipped on replays whose fingerprint holds
+    hoist_only: Vec<bool>,
     /// (c3a op node, kernel leaf node, kernel parameter name)
     c3as: Vec<(V, V, String)>,
     /// expected element count per positional input literal
@@ -125,8 +160,12 @@ pub struct Plan {
 /// chain steals the final owner's stale buffer from the previous replay),
 /// so steady-state replays never allocate.  `exclude` (the logits node)
 /// neither donates — its buffer is moved out as the eval output — nor
-/// steals.  Returns (steal_from, shared_count, arena_bytes).
-fn assign_slots(tape: &Tape, exclude: V) -> (Vec<Option<V>>, usize, usize) {
+/// steals.  `retained` marks hoisted nodes, which behave like leaves:
+/// their buffers must survive across replays (a skipped op's value is
+/// read long after its liveness window), so they never donate into the
+/// steal chains and never steal a donor whose bits a skip would then
+/// resurrect stale.  Returns (steal_from, shared_count, arena_bytes).
+fn assign_slots(tape: &Tape, exclude: V, retained: &[bool]) -> (Vec<Option<V>>, usize, usize) {
     let nn = tape.node_count();
     let mut last_use = vec![0usize; nn];
     let mut ids: Vec<V> = Vec::new();
@@ -137,8 +176,9 @@ fn assign_slots(tape: &Tape, exclude: V) -> (Vec<Option<V>>, usize, usize) {
             last_use[u] = v;
         }
     }
-    let participates =
-        |v: usize| -> bool { !tape.is_leaf(v) && v != exclude && last_use[v] > v };
+    let participates = |v: usize| -> bool {
+        !tape.is_leaf(v) && v != exclude && !retained[v] && last_use[v] > v
+    };
     // donors become free after the op that last reads them
     let mut release_at: Vec<Vec<V>> = vec![Vec::new(); nn];
     for v in 0..nn {
@@ -156,7 +196,7 @@ fn assign_slots(tape: &Tape, exclude: V) -> (Vec<Option<V>>, usize, usize) {
                 free.entry(tape.val(d).len()).or_default().push(d);
             }
         }
-        if tape.is_leaf(v) || v == exclude {
+        if tape.is_leaf(v) || v == exclude || retained[v] {
             continue;
         }
         if let Some(list) = free.get_mut(&tape.val(v).len()) {
@@ -178,7 +218,8 @@ fn assign_slots(tape: &Tape, exclude: V) -> (Vec<Option<V>>, usize, usize) {
     }
     // `exclude` (the logits output) is not arena-resident: its buffer is
     // moved out to the caller on every replay, so it does not count
-    // toward steady-state held memory.
+    // toward steady-state held memory.  Retained (hoisted) nodes never
+    // steal, so they are counted here as the sole owners they are.
     let mut arena_bytes = 0usize;
     for v in 0..nn {
         if !tape.is_leaf(v) && v != exclude && steal_from[v].is_none() {
@@ -311,6 +352,81 @@ impl Plan {
             }
         }
 
+        // ---- hoisting pass: version-invariant prefix -------------------
+        // One forward sweep over the (topologically ordered) op list
+        // propagates "request-varying": data leaves and token-derived
+        // masks seed it, gathers are forced varying (their recorded ids
+        // are token-derived even though the op only lists its table
+        // input — see `op_inputs`), and an op is varying iff any input
+        // is.  Everything else depends only on `Input` + `Const` leaves,
+        // i.e. on the adapter version, and is hoisted.  Train plans
+        // never hoist: the backward pass reads every forward value and
+        // the trainables advance every step anyway.  The logits node is
+        // excluded even when invariant — its buffer moves out to the
+        // caller per replay.  `C3A_HOIST=0` at build time disables the
+        // pass (classification, retained slots, and skips), restoring
+        // the pre-hoist plan exactly.
+        let mut hoisted = vec![false; nn];
+        if !train && env::hoist_enabled() {
+            let mut varying = vec![false; nn];
+            let mut ids: Vec<V> = Vec::new();
+            for &g in &gathers {
+                varying[g] = true;
+            }
+            for v in 0..nn {
+                match tape.leaf_tag(v) {
+                    Some(LeafTag::DataX | LeafTag::MaskEncPad | LeafTag::MaskDecCausal) => {
+                        varying[v] = true;
+                    }
+                    Some(LeafTag::Input | LeafTag::Const) => {}
+                    None => {
+                        if varying[v] {
+                            continue; // a gather, forced above
+                        }
+                        ids.clear();
+                        tape.op_input_ids(v, &mut ids);
+                        varying[v] = ids.iter().any(|&u| varying[u]);
+                    }
+                }
+            }
+            for v in 0..nn {
+                hoisted[v] = !tape.is_leaf(v) && !varying[v] && v != logits;
+            }
+        }
+        let hoisted_ops = hoisted.iter().filter(|&&h| h).count();
+        // Trainable leaves feeding the hoisted set carry the hoist
+        // fingerprint.  Every op ancestor of a hoisted op is itself
+        // hoisted (invariance is closed over inputs), so the feeding
+        // leaves are exactly those read *directly* by a hoisted op.  A
+        // feeding leaf with no non-hoisted consumer is refill-skippable
+        // on valid replays: nothing reads its buffer then.
+        let mut feeds = vec![false; nn];
+        let mut varying_consumer = vec![false; nn];
+        {
+            let mut ids: Vec<V> = Vec::new();
+            for v in 0..nn {
+                if tape.is_leaf(v) {
+                    continue;
+                }
+                ids.clear();
+                tape.op_input_ids(v, &mut ids);
+                for &u in &ids {
+                    if hoisted[v] {
+                        feeds[u] = true;
+                    } else {
+                        varying_consumer[u] = true;
+                    }
+                }
+            }
+        }
+        let mut hoist_feed = Vec::new();
+        for (i, &t) in t_ids.iter().enumerate() {
+            if feeds[t] {
+                hoist_feed.push((t, t_pos[i]));
+            }
+        }
+        let hoist_only: Vec<bool> = (0..nn).map(|v| feeds[v] && !varying_consumer[v]).collect();
+
         // per-node replay actions; eval plans additionally share buffers
         // (train plans retain every buffer for the backward pass, so
         // their arena is simply the full op set)
@@ -321,7 +437,7 @@ impl Plan {
                 .sum();
             (vec![None; nn], 0, bytes)
         } else {
-            assign_slots(&tape, logits)
+            assign_slots(&tape, logits, &hoisted)
         };
         let mut leaves = 0usize;
         let mut actions = Vec::with_capacity(nn);
@@ -367,6 +483,9 @@ impl Plan {
             replay_fallbacks: 0,
             shared_buffers: shared,
             arena_bytes,
+            hoisted_ops,
+            hoist_skips: 0,
+            hoist_invalidations: 0,
         };
         Ok(Plan {
             tape,
@@ -376,6 +495,9 @@ impl Plan {
             actions,
             shapes,
             gathers,
+            hoisted,
+            hoist_feed,
+            hoist_only,
             c3as,
             expected_len,
             expected_dtype,
@@ -439,18 +561,52 @@ impl Plan {
     /// Phase 1 of a replay: refill every variable leaf from the request's
     /// literals, re-id the token gathers, refresh C3A spectra through the
     /// session cache.  Frozen parses and constants are untouched.
+    ///
+    /// Returns whether this replay may skip the hoisted (version-
+    /// invariant) ops: true iff the plan hoisted anything, `C3A_HOIST`
+    /// is on, and every trainable leaf feeding the hoisted set still
+    /// holds the incoming literal's exact bits.  A mismatch bumps the
+    /// invalidation counter and recomputes everything; the full refill
+    /// then makes the leaf bits a truthful fingerprint again, so a
+    /// hot-swap / train-step / re-upload is detected with no explicit
+    /// epoch plumbing from the session layer (the same bitwise
+    /// equality-invalidation rule the spectra and upload caches use).
     fn fill(
         &mut self,
         spec: &ArtifactSpec,
         cache: &RefCell<InterpCache>,
         inputs: &[&xla::Literal],
-    ) -> Result<()> {
+    ) -> Result<bool> {
         self.validate(spec, inputs)?;
+        let mut skip_hoisted = false;
+        if self.stats.hoisted_ops > 0 {
+            let mut same = true;
+            for &(leaf, pos) in &self.hoist_feed {
+                let data = inputs[pos]
+                    .f32_slice()
+                    .with_context(|| format!("{}: hoist-feed input is not f32", spec.name))?;
+                if !self.tape.leaf_bits_match(leaf, data) {
+                    same = false;
+                    break;
+                }
+            }
+            if !same {
+                self.stats.hoist_invalidations += 1;
+            } else if env::hoist_enabled() {
+                skip_hoisted = true;
+            }
+            // same bits with `C3A_HOIST=0`: full recompute from equal
+            // inputs — identical bits, no invalidation to count
+        }
         let (b, s) = (spec.batch, spec.seq);
         for v in 0..self.actions.len() {
             match self.actions[v] {
                 Action::Skip | Action::Compute { .. } => {}
                 Action::FillTrainable(i) => {
+                    if skip_hoisted && self.hoist_only[v] {
+                        // fed only into skipped ops; bits already match
+                        continue;
+                    }
                     let lit = inputs[self.t_pos[i]];
                     let data = lit
                         .f32_slice()
@@ -511,13 +667,20 @@ impl Plan {
             let spectra = cache.borrow_mut().spectra_for(name, self.tape.val(*w));
             self.tape.refresh_c3a_spectra(*op, spectra);
         }
-        Ok(())
+        Ok(skip_hoisted)
     }
 
     /// Phase 2: straight-line recompute of every op into its arena slot.
-    fn compute(&mut self) {
+    /// With `skip_hoisted`, version-invariant ops keep their retained
+    /// buffers — they would have recomputed identical bits from
+    /// identical inputs (no hoisted node ever steals or donates, so the
+    /// skip cannot interact with the circular chains).
+    fn compute(&mut self, skip_hoisted: bool) {
         for v in 0..self.actions.len() {
             if let Action::Compute { steal } = self.actions[v] {
+                if skip_hoisted && self.hoisted[v] {
+                    continue;
+                }
                 if let Some(d) = steal {
                     self.tape.steal_buffer(d, v);
                 }
@@ -534,8 +697,11 @@ impl Plan {
         inputs: &[&xla::Literal],
     ) -> Result<xla::Literal> {
         debug_assert!(!self.train, "replay_eval on a train plan");
-        self.fill(spec, cache, inputs)?;
-        self.compute();
+        let skip_hoisted = self.fill(spec, cache, inputs)?;
+        self.compute(skip_hoisted);
+        if skip_hoisted {
+            self.stats.hoist_skips += self.stats.hoisted_ops as u64;
+        }
         let out = self.tape.take_val(self.logits);
         self.stats.replays += 1;
         Ok(xla::Literal::from_f32(&out.shape, out.data))
@@ -551,8 +717,10 @@ impl Plan {
         inputs: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
         debug_assert!(self.train, "replay_train on an eval plan");
+        // train plans never hoist (hoisted_ops == 0), so fill's skip
+        // decision is always false here
         self.fill(spec, cache, inputs)?;
-        self.compute();
+        self.compute(false);
 
         let view = LossView {
             tokens: self.tokens_pos.map(|p| inputs[p].i32_slice()).transpose()?,
@@ -624,7 +792,7 @@ mod tests {
         let b = t.scale(a, 3.0); // node 2: last use of a
         let c = t.scale(b, 4.0); // node 3: can reuse a's buffer
         let d = t.scale(c, 5.0); // node 4 (logits): excluded
-        let (steal, shared, bytes) = assign_slots(&t, d);
+        let (steal, shared, bytes) = assign_slots(&t, d, &vec![false; t.node_count()]);
         assert_eq!(steal[c], Some(a), "c must steal a's dead buffer");
         assert_eq!(shared, 1);
         // circular closure: a re-steals the chain's final owner (c)
@@ -645,8 +813,29 @@ mod tests {
         let a = t.transpose2(x); // [3,2], 6 elems
         let s = t.sum_axis0(a); // [2]: last use of a, but 2 != 6
         let out = t.scale(s, 1.0);
-        let (steal, shared, _) = assign_slots(&t, out);
+        let (steal, shared, _) = assign_slots(&t, out, &vec![false; t.node_count()]);
         assert_eq!(shared, 0);
         assert!(steal.iter().all(|s| s.is_none()));
+    }
+
+    /// A retained (hoisted) node must neither donate its buffer into a
+    /// steal chain nor steal one — its value is read on replays where it
+    /// is skipped, long after its liveness window closes.
+    #[test]
+    fn retained_nodes_are_exempt_from_steal_chains() {
+        let mut t = Tape::new();
+        let x = t.leaf(Arr::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]), false);
+        let a = t.scale(x, 2.0); // node 1: would donate to c, but retained
+        let b = t.scale(a, 3.0); // node 2: last use of a
+        let c = t.scale(b, 4.0); // node 3: would steal a's buffer
+        let d = t.scale(c, 5.0); // node 4 (logits): excluded
+        let mut retained = vec![false; t.node_count()];
+        retained[a] = true;
+        let (steal, shared, bytes) = assign_slots(&t, d, &retained);
+        assert_eq!(shared, 0, "retained donor must break the steal");
+        assert!(steal.iter().all(|s| s.is_none()));
+        // all three op buffers (a, b, c) are now sole-owned arena bytes
+        assert_eq!(bytes, 3 * 4 * std::mem::size_of::<f32>());
+        let _ = (b, c);
     }
 }

@@ -93,6 +93,8 @@ struct CarriedCounters {
     spectra_hits: u64,
     spectra_misses: u64,
     plan_replays: u64,
+    hoist_skips: u64,
+    hoist_invalidations: u64,
 }
 
 struct Tenant {
@@ -182,6 +184,10 @@ impl AdapterRegistry {
     /// start evicted — their first request is a cold start — so
     /// registering far more tenants than `max_resident` is cheap.
     pub fn set_residency(&mut self, policy: ResidentPolicy, store: AdapterStore) -> Result<()> {
+        // sweep temp files orphaned by a crash mid-save in a previous
+        // incarnation of this store dir (age-guarded, so a concurrent
+        // shard's in-flight save is never touched)
+        store.gc()?;
         self.store = Some(store);
         self.policy = policy;
         // persist + evict down to policy (oldest first; all-zero
@@ -329,7 +335,11 @@ impl AdapterRegistry {
                 t.carried.spectra_hits += cs.spectra_hits;
                 t.carried.spectra_misses += cs.spectra_misses;
             }
-            t.carried.plan_replays += session.plan_stats().map(|p| p.replays).unwrap_or(0);
+            if let Some(ps) = session.plan_stats() {
+                t.carried.plan_replays += ps.replays;
+                t.carried.hoist_skips += ps.hoist_skips;
+                t.carried.hoist_invalidations += ps.hoist_invalidations;
+            }
             // session drops here: arena, uploads, and the parse ref go
         }
         t.evictions += 1;
@@ -411,7 +421,27 @@ impl AdapterRegistry {
         let t = self.tenants.get(name)?;
         let mut ps = t.session().and_then(|s| s.plan_stats())?;
         ps.replays += t.carried.plan_replays;
+        ps.hoist_skips += t.carried.hoist_skips;
+        ps.hoist_invalidations += t.carried.hoist_invalidations;
         Some(ps)
+    }
+
+    /// Hoisting accounting for `name` across all incarnations:
+    /// `(hoisted_ops, hoist_skips, hoist_invalidations)`.  The op count
+    /// is the live plan's (0 while evicted or before the first request);
+    /// skips and invalidations are cumulative and survive eviction, like
+    /// [`plan_replays`](Self::plan_replays).
+    pub fn hoist_stats(&self, name: &str) -> (usize, u64, u64) {
+        let t = match self.tenants.get(name) {
+            Some(t) => t,
+            None => return (0, 0, 0),
+        };
+        let live = t.session().and_then(|s| s.plan_stats()).unwrap_or_default();
+        (
+            live.hoisted_ops,
+            t.carried.hoist_skips + live.hoist_skips,
+            t.carried.hoist_invalidations + live.hoist_invalidations,
+        )
     }
 
     /// Total plan replays for `name` across all incarnations (survives

@@ -93,6 +93,16 @@ pub struct TenantStats {
     /// the one recording call, under the steady-state serving pattern;
     /// 0 when plans are disabled via `C3A_PLAN=0`)
     pub plan_replays: u64,
+    /// plan ops classified version-invariant by the hoisting pass (0
+    /// before the first request, with `C3A_HOIST=0` at record time, or
+    /// for methods whose adapter math stays on the request side)
+    pub hoisted_ops: usize,
+    /// op recomputations skipped by hoisting across this tenant's
+    /// replays (survives eviction)
+    pub hoist_skips: u64,
+    /// replays that recomputed the hoisted prefix because the adapter
+    /// version fingerprint changed (hot-swap / cold-start re-upload)
+    pub hoist_invalidations: u64,
     /// `try_submit` rejections for this tenant at the admission layer
     /// (its shard's bounded queue was full) — filled in at merge time
     pub sheds: u64,
@@ -270,6 +280,9 @@ mod tests {
             spectra_hits: 0,
             spectra_misses: 0,
             plan_replays: 0,
+            hoisted_ops: 0,
+            hoist_skips: 0,
+            hoist_invalidations: 0,
             sheds: 0,
             resident: true,
             evictions: 0,

@@ -36,6 +36,7 @@ use crate::substrate::tensor::{DType, Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
 
 const STORE_MAGIC: &[u8; 4] = b"C3AS";
 const STORE_FORMAT: u32 = 1;
@@ -195,6 +196,58 @@ impl AdapterStore {
         Ok((out, version))
     }
 
+    /// Minimum orphan age for [`gc`](Self::gc): long enough that any
+    /// `.tmp` this old cannot be a concurrent shard's in-flight save
+    /// (saves are one buffered write + rename, milliseconds at most).
+    pub const GC_MIN_AGE: Duration = Duration::from_secs(60);
+
+    /// Sweep orphaned temp files at the default age guard
+    /// ([`Self::GC_MIN_AGE`]); returns how many were removed.  A crash
+    /// between temp-file create and rename leaks the temp forever —
+    /// nothing else ever touches it — so the registry runs this sweep
+    /// when a store is installed for tiering.
+    pub fn gc(&self) -> Result<usize> {
+        self.gc_older_than(Self::GC_MIN_AGE)
+    }
+
+    /// Sweep `.tmp` files in the store dir whose mtime is at least `age`
+    /// old.  Snapshot files (`.c3aa`) are never touched; a temp younger
+    /// than `age` is presumed to be another process's in-flight save and
+    /// left alone.  Losing a remove race is fine (the other sweeper won).
+    pub fn gc_older_than(&self, age: Duration) -> Result<usize> {
+        let now = SystemTime::now();
+        let mut swept = 0usize;
+        let entries = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("adapter store: listing {}", self.dir.display()))?;
+        for entry in entries {
+            let entry = entry
+                .with_context(|| format!("adapter store: reading {}", self.dir.display()))?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("tmp") {
+                continue;
+            }
+            let old_enough = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|mtime| now.duration_since(mtime).ok())
+                .is_some_and(|elapsed| elapsed >= age);
+            if !old_enough {
+                continue;
+            }
+            match std::fs::remove_file(&path) {
+                Ok(()) => swept += 1,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("adapter store: sweeping orphan {}", path.display())
+                    });
+                }
+            }
+        }
+        Ok(swept)
+    }
+
     /// Delete `tenant`'s snapshot (missing is fine).
     pub fn remove(&self, tenant: &str) -> Result<()> {
         let path = self.path_for(tenant);
@@ -292,5 +345,32 @@ mod tests {
         store.remove("gone").unwrap();
         assert!(!store.contains("gone"));
         store.remove("gone").unwrap();
+    }
+
+    #[test]
+    fn gc_sweeps_orphaned_temps_and_spares_snapshots() {
+        let store = tmp_store("gc");
+        store.save("alive", 4, &sample_map()).unwrap();
+        // plant the artifact of a crash between create and rename
+        let orphan = store.path_for("crashed").with_extension("tmp");
+        std::fs::write(&orphan, b"partial write before the crash").unwrap();
+        // zero age guard: sweep regardless of mtime
+        assert_eq!(store.gc_older_than(Duration::ZERO).unwrap(), 1);
+        assert!(!orphan.exists(), "orphaned temp must be swept");
+        let (back, version) = store.load("alive").unwrap();
+        assert_eq!(version, 4);
+        assert_eq!(back, sample_map(), "snapshots must survive the sweep bitwise");
+        // nothing left to sweep
+        assert_eq!(store.gc_older_than(Duration::ZERO).unwrap(), 0);
+    }
+
+    #[test]
+    fn gc_age_guard_protects_fresh_temps() {
+        let store = tmp_store("gc_age");
+        let fresh = store.path_for("inflight").with_extension("tmp");
+        std::fs::write(&fresh, b"another shard is mid-save").unwrap();
+        // the default guard treats a just-written temp as in-flight
+        assert_eq!(store.gc().unwrap(), 0);
+        assert!(fresh.exists(), "a fresh temp must be presumed in-flight");
     }
 }

@@ -123,6 +123,7 @@ pub(super) fn shard_loop(
     let mut tenants = Vec::new();
     for name in registry.tenant_names() {
         let cs = registry.cache_stats(&name).unwrap_or_default();
+        let (hoisted_ops, hoist_skips, hoist_invalidations) = registry.hoist_stats(&name);
         tenants.push(TenantStats {
             shard,
             requests: tenant_served.get(&name).copied().unwrap_or(0),
@@ -131,6 +132,9 @@ pub(super) fn shard_loop(
             spectra_hits: cs.spectra_hits,
             spectra_misses: cs.spectra_misses,
             plan_replays: registry.plan_replays(&name),
+            hoisted_ops,
+            hoist_skips,
+            hoist_invalidations,
             sheds: 0, // admission-side count, filled in at merge
             resident: registry.is_resident(&name).unwrap_or(false),
             evictions: registry.evictions(&name).unwrap_or(0),
@@ -158,7 +162,7 @@ fn run_batch(
     }
     let data = vec![Tensor::from_i32(vec![b, s], &toks)];
     match registry.infer(&tenant, &data) {
-        Ok((logits, _shape, version)) => {
+        Ok((mut logits, _shape, version)) => {
             let row_w = logits.len() / b.max(1);
             let now = Instant::now();
             let n_batch = batch.len();
@@ -166,7 +170,18 @@ fn run_batch(
             stats.batches += 1;
             stats.batch_size_sum += n_batch as u64;
             for (slot, r) in batch.into_iter().enumerate() {
-                let row = logits[slot * row_w..(slot + 1) * row_w].to_vec();
+                // earlier requests copy their row out; the final one is
+                // handed the batch buffer itself, trimmed to its row, so
+                // one reply per batch moves instead of copying
+                let row = if slot + 1 == n_batch {
+                    logits.truncate((slot + 1) * row_w);
+                    if slot > 0 {
+                        logits.drain(..slot * row_w);
+                    }
+                    std::mem::take(&mut logits)
+                } else {
+                    logits[slot * row_w..(slot + 1) * row_w].to_vec()
+                };
                 let pred = crate::substrate::linalg::argmax(&row);
                 let latency_ms = now.duration_since(r.submitted).as_secs_f64() * 1e3;
                 push_sample(&mut stats.latencies_ms, stats.served, latency_ms);

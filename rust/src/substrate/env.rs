@@ -38,6 +38,12 @@ pub const PLAN: &str = "C3A_PLAN";
 /// Default on; a no-op in scalar builds.  Wall-clock only.
 pub const SIMD: &str = "C3A_SIMD";
 
+/// `C3A_HOIST` — version-invariant prefix hoisting in plan replay (see
+/// `runtime/plan`).  Default on; `0` recomputes every op on every
+/// replay.  A skipped op would have recomputed identical bits from
+/// identical inputs, so this is wall-clock only.
+pub const HOIST: &str = "C3A_HOIST";
+
 /// `C3A_DIFF_FULL` — widens `tests/differential.rs` from the tiny
 /// catalog to the full small-model sweep.  Default off.
 pub const DIFF_FULL: &str = "C3A_DIFF_FULL";
@@ -98,6 +104,12 @@ pub fn plan_enabled() -> bool {
 /// start (default yes; only consulted when built with the feature).
 pub fn simd_enabled() -> bool {
     truthy(SIMD, true)
+}
+
+/// [`HOIST`]: whether eval-plan replay skips version-invariant ops
+/// whose inputs have not changed bitwise (default yes).
+pub fn hoist_enabled() -> bool {
+    truthy(HOIST, true)
 }
 
 /// [`DIFF_FULL`]: whether the differential suite runs the widened

@@ -16,7 +16,7 @@ use c3a::substrate::env;
 use c3a::substrate::parallel;
 use c3a::substrate::prng::Rng;
 use c3a::substrate::simd;
-use c3a::substrate::tensor::Tensor;
+use c3a::substrate::tensor::{Tensor, TensorMap};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -156,6 +156,64 @@ fn replayed_calls_are_near_allocation_free() {
             simd_pc <= scalar_pc,
             "SIMD kernels must not allocate in steady state: \
              {simd_pc} allocs/call vs scalar {scalar_pc}"
+        );
+    }
+
+    // ---- hoisting: skipped prefixes must add ZERO steady-state allocs ----
+    // BOFT is the hoist-rich method (its rotation chain reads only
+    // adapter + frozen leaves).  After the first post-invalidation replay
+    // the skipping path must sit inside the same per-call budget, and
+    // skipping must never allocate more than recomputing: both paths work
+    // entirely in the plan's retained arena slots.
+    {
+        let _hoist_on = env::ScopedSet::set(env::HOIST, "1");
+        let hspec = manifest.artifact("enc_tiny__boft__cls__eval").unwrap().clone();
+        let hinit =
+            build_init(&hspec, &base, None, &mut Rng::seed(5), C3aScheme::Xavier).unwrap();
+        let hsession = EvalSession::new(&engine, &hspec, &hinit).unwrap();
+        let mut swapped = TensorMap::new();
+        for (name, t) in &hinit.trainable {
+            let mut vals = t.as_f32();
+            for (e, v) in vals.iter_mut().enumerate() {
+                *v += 0.01 * ((e + 1) as f32).sin();
+            }
+            swapped.insert(name.clone(), Tensor::from_f32(t.shape.clone(), &vals));
+        }
+        for _ in 0..3 {
+            hsession.logits(&hinit.trainable, &batch).unwrap(); // record + skips
+        }
+        hsession.logits(&swapped, &batch).unwrap(); // invalidation: full recompute
+        hsession.logits(&swapped, &batch).unwrap(); // first skip: settle upload
+        let before = snapshot();
+        for _ in 0..n {
+            hsession.logits(&swapped, &batch).unwrap();
+        }
+        let hoist_pc = delta(before).0 / n;
+        // same session, same plan: disable skipping at replay time only
+        let full_pc = {
+            let _hoist_off = env::ScopedSet::set(env::HOIST, "0");
+            for _ in 0..2 {
+                hsession.logits(&swapped, &batch).unwrap();
+            }
+            let before = snapshot();
+            for _ in 0..n {
+                hsession.logits(&swapped, &batch).unwrap();
+            }
+            delta(before).0 / n
+        };
+        let stats = hsession.plan_stats().unwrap();
+        assert!(stats.hoisted_ops > 0, "boft eval plan must hoist ops: {stats:?}");
+        assert!(stats.hoist_invalidations >= 1, "adapter change must invalidate: {stats:?}");
+        println!("eval replay (boft): hoist-on {hoist_pc} vs hoist-off {full_pc} allocs/call");
+        assert!(
+            hoist_pc <= EVAL_ALLOCS_PER_CALL,
+            "hoisted replay allocates too much after the invalidation settles: \
+             {hoist_pc} allocs/call (budget {EVAL_ALLOCS_PER_CALL})"
+        );
+        assert!(
+            hoist_pc <= full_pc,
+            "skipping the hoisted prefix must not allocate more than recomputing it: \
+             {hoist_pc} vs {full_pc} allocs/call"
         );
     }
 

@@ -498,6 +498,87 @@ fn serving_registry_oracle_matches_substrate_across_hot_swaps() {
     report.finish();
 }
 
+/// Perturb every trainable tensor (not just c3a kernels): the hoisting
+/// leg runs on BOFT, whose adapter is a skew bank.
+fn nudge_all(adapter: &BTreeMap<String, Tensor>, seed: u64, eps: f32) -> BTreeMap<String, Tensor> {
+    let mut rng = Rng::seed(0xB0F7_5EED ^ seed);
+    let mut out = BTreeMap::new();
+    for (name, t) in adapter {
+        let mut vals = t.as_f32();
+        for v in vals.iter_mut() {
+            *v += eps * rng.normal() as f32;
+        }
+        out.insert(name.clone(), Tensor::from_f32(t.shape.clone(), &vals));
+    }
+    out
+}
+
+/// Hoisting leg: a hoisted eval → hot-swap → eval sequence on a BOFT
+/// tenant (the hoist-rich method: its rotation prefix reads only adapter
+/// + frozen leaves) must stay inside the forward budget against the f64
+/// oracle — which rebuilds from scratch every call and hoists nothing —
+/// and the substrate must replay bitwise-deterministically while its
+/// skip/invalidation counters confirm the prefix was actually skipped,
+/// then recomputed after each swap.
+#[test]
+fn hoisted_replay_matches_oracle_across_hot_swaps() {
+    let manifest = catalog::synthesize(&manifest_dir()).unwrap();
+    let spec = manifest.artifact("enc_tiny__boft__cls__eval").unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(21), C3aScheme::Xavier).unwrap();
+    let engine_sub = Engine::for_manifest(&manifest).unwrap();
+    let engine_orc =
+        Engine::for_manifest_with_backend(&manifest, Box::new(RefBackend)).unwrap();
+    let mut reg_sub = AdapterRegistry::new(&engine_sub, &spec, &init).unwrap();
+    let mut reg_orc = AdapterRegistry::new(&engine_orc, &spec, &init).unwrap();
+    reg_sub.register("t", init.trainable.clone()).unwrap();
+    reg_orc.register("t", init.trainable.clone()).unwrap();
+    let (b, s) = (spec.batch, spec.seq);
+    let toks: Vec<i32> =
+        (0..b * s).map(|i| if i % 7 == 0 { 1 } else { 2 + (i as i32 % 38) }).collect();
+    let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+
+    let mut report = Report::new("hoisted_replay_oracle");
+    let check = |report: &mut Report,
+                 tag: &str,
+                 reg_sub: &mut AdapterRegistry,
+                 reg_orc: &mut AdapterRegistry| {
+        let (l0, _, _) = reg_sub.infer("t", &batch).unwrap();
+        let (l1, _, _) = reg_sub.infer("t", &batch).unwrap();
+        assert_eq!(l0, l1, "{tag}: hoisted replay must be bitwise deterministic");
+        let (lo, _, _) = reg_orc.infer("t", &batch).unwrap();
+        if let Some((i, a, b, tol)) = first_divergent(&l0, &lo, LOGITS_REL) {
+            report.diverge(format!(
+                "{tag}: logits[{i}]: substrate {a:.6e} vs oracle {b:.6e} (tol {tol:.2e})"
+            ));
+        }
+    };
+    check(&mut report, "pre-swap", &mut reg_sub, &mut reg_orc);
+
+    let swapped = nudge_all(&init.trainable, 1, 0.05);
+    assert_eq!(reg_sub.hot_swap("t", swapped.clone()).unwrap(), 2);
+    assert_eq!(reg_orc.hot_swap("t", swapped).unwrap(), 2);
+    check(&mut report, "post-swap", &mut reg_sub, &mut reg_orc);
+
+    // swap back: the original version's bits must recompute, not be
+    // served from a stale retained prefix
+    assert_eq!(reg_sub.hot_swap("t", init.trainable.clone()).unwrap(), 3);
+    assert_eq!(reg_orc.hot_swap("t", init.trainable.clone()).unwrap(), 3);
+    check(&mut report, "swap-back", &mut reg_sub, &mut reg_orc);
+
+    // counter pins only apply when the ambient env has hoisting on (the
+    // CI hoist-off cross runs this leg purely as an equivalence check)
+    if env::hoist_enabled() {
+        let (hoisted, skips, invals) = reg_sub.hoist_stats("t");
+        assert!(hoisted > 0, "boft eval plan must hoist its rotation prefix");
+        // per phase: first infer records or invalidates, second skips
+        assert_eq!(skips, 3 * hoisted as u64, "three skipping replays expected");
+        assert_eq!(invals, 2, "each hot-swap must invalidate the prefix once");
+    }
+    report.finish();
+}
+
 /// Widened sweep over every artifact of the small models — run with
 /// `C3A_DIFF_FULL=1` (CI does, in release, at C3A_THREADS=1 and 4).
 #[test]

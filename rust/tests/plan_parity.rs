@@ -2,17 +2,19 @@
 //! step must be bit-for-bit identical to the legacy rebuild path — for
 //! every enc_tiny/mlp artifact, across repeated calls, across adapter
 //! swaps mid-stream, and at any thread count (the C3A_THREADS=1/4 CI
-//! matrix runs this whole file).
+//! matrix runs this whole file, additionally crossed with C3A_HOIST=0/1).
+//! The hoisting tests pin `C3A_HOIST` skip/invalidation semantics against
+//! the full-replay path for every eval artifact of the same slice.
 
 use c3a::peft::init::C3aScheme;
 use c3a::runtime::catalog;
 use c3a::runtime::interp::InterpExecutable;
 use c3a::runtime::manifest::{Manifest, Role};
-use c3a::runtime::session::{build_init, EvalSession};
+use c3a::runtime::session::{build_init, EvalSession, TrainSession};
 use c3a::runtime::Engine;
 use c3a::substrate::env;
 use c3a::substrate::prng::Rng;
-use c3a::substrate::tensor::Tensor;
+use c3a::substrate::tensor::{Tensor, TensorMap};
 use c3a::xla;
 
 /// Serializes the tests in this binary: the kill-switch test toggles the
@@ -193,4 +195,182 @@ fn plan_kill_switch_falls_back_to_rebuild() {
         assert_eq!(got, want);
     }
     assert!(state.plan_stats().is_none(), "C3A_PLAN=0 must not record a plan");
+}
+
+/// Hoisting (`C3A_HOIST`, default on): version-invariant prefix ops are
+/// computed on the first replay after a (re)record or adapter change and
+/// skipped on later eval replays.  For every eval artifact of the tiny
+/// slice, a hoist-on state must stay bit-identical to a `C3A_HOIST=0`
+/// full-replay state — on the recording call, across replays, after an
+/// adapter perturbation (the invalidation must recompute), and after
+/// reverting to the original adapter.  BOFT (rotation built from
+/// `boft.skew` + a constant eye) and DoRA (normalized-weight chain) must
+/// actually hoist ops; methods that keep `x` inside every adapter op
+/// hoist none and must say so.
+#[test]
+fn hoisted_eval_replay_matches_full_replay_across_tiny_catalog() {
+    let _env = env_lock();
+    // explicit, not ambient: CI crosses this binary with C3A_HOIST=0,
+    // and this test is specifically about the hoist-on/off pair
+    let _hoist_on = env::ScopedSet::set(env::HOIST, "1");
+    let manifest = manifest();
+    const MODELS: [&str; 4] = ["enc_tiny", "mlp", "dec_small", "vit_base"];
+    let mut covered = 0usize;
+    let mut hoist_rich = 0usize;
+    for (name, spec) in &manifest.artifacts {
+        if spec.kind != "eval" || !MODELS.contains(&spec.model.as_str()) {
+            continue;
+        }
+        let meta = manifest.model(&spec.model).unwrap().clone();
+        let exe = InterpExecutable::new(spec, &meta).unwrap();
+        let mut lits = catalog::synth_inputs(spec, &meta);
+        let frozen = frozen_lits(spec, &lits);
+        let mut on = exe.prepare(&frozen).unwrap();
+        let mut off = exe.prepare(&frozen).unwrap();
+        let t_idx: Vec<usize> =
+            (0..spec.inputs.len()).filter(|&i| spec.inputs[i].role == Role::Trainable).collect();
+        let orig: Vec<xla::Literal> = t_idx.iter().map(|&i| lits[i].clone()).collect();
+        // three adapter epochs: init bits, perturbed bits (a hot-swap /
+        // post-train-step version), then back to the init bits
+        for epoch in 0..3usize {
+            match epoch {
+                1 => {
+                    for &i in &t_idx {
+                        let shape = spec.inputs[i].shape.clone();
+                        let mut v = lits[i].to_vec::<f32>().unwrap();
+                        for (e, x) in v.iter_mut().enumerate() {
+                            *x += 0.02 * ((e + 1) as f32).sin();
+                        }
+                        lits[i] = xla::Literal::from_f32(&shape, v);
+                    }
+                }
+                2 => {
+                    for (k, &i) in t_idx.iter().enumerate() {
+                        lits[i] = orig[k].clone();
+                    }
+                }
+                _ => {}
+            }
+            let refs: Vec<&xla::Literal> = lits.iter().collect();
+            for call in 0..3 {
+                let got = lits_to_f32(&exe.execute_stateful(&mut on, &refs).unwrap());
+                let want = {
+                    let _off = env::ScopedSet::set(env::HOIST, "0");
+                    lits_to_f32(&exe.execute_stateful(&mut off, &refs).unwrap())
+                };
+                assert_eq!(got, want, "{name}: epoch {epoch} call {call} hoist-on vs hoist-off");
+            }
+        }
+        let stats = on.plan_stats().expect("plan recorded");
+        assert_eq!(stats.replays, 8, "{name}: replay count");
+        assert_eq!(
+            off.plan_stats().unwrap().hoisted_ops,
+            0,
+            "{name}: C3A_HOIST=0 at record time must hoist nothing"
+        );
+        if stats.hoisted_ops > 0 {
+            // per epoch: call 0 records or invalidates, calls 1-2 skip
+            assert_eq!(
+                stats.hoist_skips,
+                6 * stats.hoisted_ops as u64,
+                "{name}: six skipping replays expected: {stats:?}"
+            );
+            assert_eq!(
+                stats.hoist_invalidations, 2,
+                "{name}: each adapter-bit change must invalidate once: {stats:?}"
+            );
+            hoist_rich += 1;
+        } else {
+            assert_eq!(stats.hoist_skips, 0, "{name}: skips without hoisted ops");
+        }
+        covered += 1;
+    }
+    // 16 enc_tiny + mlp slice + 4 dec_small + 4 vit_base eval artifacts
+    assert!(covered >= 25, "expected the eval slice of the tiny catalog, got {covered}");
+    // boft carries a hoistable rotation prefix on both enc_tiny heads and
+    // dora a normalized-weight chain on dec_small
+    assert!(hoist_rich >= 3, "expected boft/dora to hoist ops, got {hoist_rich} artifacts");
+}
+
+/// A real train step between eval calls must invalidate the hoisted
+/// prefix: serving freshly-trained BOFT weights recomputes the rotation
+/// exactly once, later replays with the same snapshot skip again, and a
+/// swap back to the original adapter invalidates once more — all
+/// bit-identical to a `C3A_HOIST=0` session fed the same snapshots.
+#[test]
+fn hoist_invalidation_recomputes_after_train_steps_and_swaps() {
+    let _env = env_lock();
+    let _hoist_on = env::ScopedSet::set(env::HOIST, "1");
+    let manifest = manifest();
+    let engine = Engine::for_manifest(&manifest).unwrap();
+    let spec = manifest.artifact("enc_tiny__boft__cls__eval").unwrap().clone();
+    let meta = manifest.model("enc_tiny").unwrap().clone();
+    let base = catalog::init_base_params(&meta);
+    let init = build_init(&spec, &base, None, &mut Rng::seed(11), C3aScheme::Xavier).unwrap();
+    let on = EvalSession::new(&engine, &spec, &init).unwrap();
+    let off = EvalSession::new(&engine, &spec, &init).unwrap();
+    let (b, s) = (spec.batch, spec.seq);
+    let toks: Vec<i32> =
+        (0..b * s).map(|i| if i % 4 == 0 { 1 } else { 2 + (i as i32 % 41) }).collect();
+    let batch = vec![Tensor::from_i32(vec![b, s], &toks)];
+
+    // the off session records its plan under C3A_HOIST=0 (build-time
+    // gate), so every later off call is a full replay regardless of env
+    let check = |tag: &str, adapter: &TensorMap| {
+        let (got, _) = on.logits(adapter, &batch).unwrap();
+        let want = {
+            let _off = env::ScopedSet::set(env::HOIST, "0");
+            off.logits(adapter, &batch).unwrap().0
+        };
+        assert_eq!(got, want, "{tag}: hoist-on diverged from the full replay");
+    };
+
+    let a0 = init.trainable.clone();
+    check("record", &a0);
+    check("replay-1", &a0);
+    check("replay-2", &a0);
+
+    // drive real optimizer steps on the matching train artifact and serve
+    // each snapshot: new bits must recompute the rotation exactly once
+    let tspec = manifest.artifact("enc_tiny__boft__cls__train").unwrap().clone();
+    let tinit = build_init(&tspec, &base, None, &mut Rng::seed(12), C3aScheme::Xavier).unwrap();
+    let mut train = TrainSession::new(&engine, &tspec, &tinit).unwrap();
+    let tlits = catalog::synth_inputs(&tspec, &meta);
+    let tbatch: Vec<Tensor> = tspec
+        .data_order
+        .iter()
+        .map(|name| {
+            let idx = tspec.inputs.iter().position(|i| &i.name == name).unwrap();
+            let inp = &tspec.inputs[idx];
+            if inp.i32_dtype {
+                Tensor::from_i32(inp.shape.clone(), &tlits[idx].to_vec::<i32>().unwrap())
+            } else {
+                Tensor::from_f32(inp.shape.clone(), &tlits[idx].to_vec::<f32>().unwrap())
+            }
+        })
+        .collect();
+    train.step(&tbatch, 0.05, 0.0).unwrap();
+    let t1 = train.trainable_tensors().unwrap();
+    check("post-step-1", &t1);
+    check("post-step-1-replay", &t1);
+    train.step(&tbatch, 0.05, 0.0).unwrap();
+    let t2 = train.trainable_tensors().unwrap();
+    check("post-step-2", &t2);
+    // hot-swap back to the original adapter mid-stream
+    check("swap-back", &a0);
+    check("swap-back-replay", &a0);
+
+    let stats = on.plan_stats().unwrap();
+    assert!(stats.hoisted_ops > 0, "boft eval plan must hoist its rotation prefix: {stats:?}");
+    assert_eq!(stats.replays, 7, "replay count: {stats:?}");
+    assert_eq!(
+        stats.hoist_invalidations, 3,
+        "t1, t2 and the swap back must each invalidate once: {stats:?}"
+    );
+    assert_eq!(
+        stats.hoist_skips,
+        4 * stats.hoisted_ops as u64,
+        "four skipping replays expected: {stats:?}"
+    );
+    assert_eq!(off.plan_stats().unwrap().hoisted_ops, 0, "off session must not hoist");
 }
